@@ -1,0 +1,70 @@
+//! Quickstart: launch a single DisCEdge node with the real AOT-compiled
+//! model (PJRT) and hold a short conversation.
+//!
+//! ```sh
+//! make artifacts            # once: AOT model + tokenizer
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Falls back to the mock engine when artifacts are missing so the example
+//! always runs.
+
+use discedge::client::{Client, MobilityPolicy};
+use discedge::config::{ClusterConfig, ContextMode, EngineKind};
+use discedge::server::EdgeCluster;
+
+fn main() -> discedge::Result<()> {
+    let mut cfg = ClusterConfig::two_node_testbed();
+    cfg.nodes.truncate(1); // one edge node is enough here
+    if !cfg.artifacts_dir.join("model_meta.json").exists() {
+        eprintln!("[quickstart] no artifacts found -> using the mock engine");
+        cfg.engine = EngineKind::Mock {
+            prefill_ns_per_token: 2_000,
+            decode_ns_per_token: 200_000,
+        };
+    }
+
+    eprintln!("[quickstart] launching edge node (compiling model)...");
+    let cluster = EdgeCluster::launch(cfg)?;
+    let (name, addr) = &cluster.endpoints()[0];
+    println!("edge node `{name}` serving at http://{addr}\n");
+
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_max_tokens(48);
+
+    for prompt in [
+        "What are the fundamental components of an autonomous mobile robot?",
+        "You mentioned sensors. What are the most common types for obstacle avoidance?",
+        "Can you explain the concept of a PID controller?",
+    ] {
+        println!("user> {prompt}");
+        let r = client.chat(prompt)?;
+        println!(
+            "assistant ({} tok, {:.2}s, ctx {} tok)> {}\n",
+            r.response.tokens_generated,
+            r.e2e_s,
+            r.response.prefill_tokens,
+            preview(&r.response.text, 120),
+        );
+    }
+
+    let (user, session) = client.session();
+    println!(
+        "session {} for user {} stored pre-tokenized on the edge node \
+         ({} KV entries)",
+        session.unwrap_or("?"),
+        user.unwrap_or("?"),
+        cluster.nodes[0].kv.len()
+    );
+    Ok(())
+}
+
+fn preview(s: &str, n: usize) -> String {
+    let clean: String = s.chars().take(n).collect();
+    if s.chars().count() > n {
+        format!("{clean}…")
+    } else {
+        clean
+    }
+}

@@ -1,0 +1,111 @@
+"""AOT export: lower the JAX/Pallas model to HLO text artifacts.
+
+Run once by ``make artifacts``; Python never runs on the serving path.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ``artifacts/``):
+
+- ``model_meta.json``         — the shape contract consumed by
+                                ``rust/src/runtime/mod.rs``
+- ``init.hlo.txt``            — () -> weights tuple
+- ``generate_{L}.hlo.txt``    — one per prefill bucket L
+
+Usage: ``python -m compile.aot [--out-dir DIR] [--tiny]``
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, TINY, make_generate_fn, make_init_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_init(cfg: ModelConfig) -> str:
+    return to_hlo_text(jax.jit(make_init_fn(cfg)).lower())
+
+
+def lower_generate(cfg: ModelConfig, bucket: int) -> str:
+    fn = make_generate_fn(cfg)
+    weight_specs = [
+        jax.ShapeDtypeStruct(w.shape, w.dtype) for w in jax.eval_shape(make_init_fn(cfg))
+    ]
+    args = weight_specs + [
+        jax.ShapeDtypeStruct((bucket,), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((), jnp.int32),  # length
+        jax.ShapeDtypeStruct((), jnp.int32),  # max_new
+        jax.ShapeDtypeStruct((), jnp.int32),  # stop_id
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def write_meta(cfg: ModelConfig, out_dir: str) -> None:
+    meta = {
+        "vocab_size": cfg.vocab_size,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim,
+        "ffn": cfg.ffn,
+        "max_new": cfg.max_new,
+        "seed": cfg.seed,
+        "buckets": list(cfg.buckets),
+    }
+    with open(os.path.join(out_dir, "model_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def export(cfg: ModelConfig, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    write_meta(cfg, out_dir)
+
+    t = time.time()
+    path = os.path.join(out_dir, "init.hlo.txt")
+    text = lower_init(cfg)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text) / 1e6:.2f} MB, {time.time() - t:.1f}s)")
+
+    for bucket in cfg.buckets:
+        t = time.time()
+        path = os.path.join(out_dir, f"generate_{bucket}.hlo.txt")
+        text = lower_generate(cfg, bucket)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB, {time.time() - t:.1f}s)")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    p.add_argument(
+        "--tiny",
+        action="store_true",
+        help="export the test-scale model instead of the serving model",
+    )
+    args = p.parse_args(argv)
+    cfg = TINY if args.tiny else ModelConfig()
+    export(cfg, args.out_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,163 @@
+"""Layer-1 Pallas attention kernels.
+
+The paper's LLM service (llama.cpp) runs its attention in hand-written
+C/C++/Metal kernels; here the same hot-spot is expressed as Pallas kernels
+designed TPU-first and executed in ``interpret=True`` mode so they lower to
+plain HLO runnable on the CPU PJRT client (real-TPU lowering would emit a
+Mosaic custom-call the CPU plugin cannot execute; see DESIGN.md
+§Hardware-Adaptation).
+
+Two kernels cover the serving pipeline:
+
+``flash_prefill``
+    Causal attention over the (padded) context. Grid is ``(heads,
+    L // BLOCK_Q)``; each program holds one query tile plus that head's
+    full K/V panels in VMEM and runs an online-softmax (flash) recurrence
+    over K/V tiles — scores never materialize beyond one
+    ``BLOCK_Q x BLOCK_K`` tile. On TPU the ``q_tile @ k_tile.T``
+    contraction maps onto the MXU; tiles are multiples of the 8x128
+    vector-lane shape.
+
+``decode_attend``
+    Single-query attention against the KV cache, masked by the true cache
+    length. Grid is ``(heads,)``; one cache panel per head stays in VMEM
+    (cache_len x head_dim f32 = 2176 x 32 x 4B = 278 KiB, comfortably
+    under the ~16 MiB VMEM budget).
+
+Both are checked against the pure-jnp oracle in ``ref.py`` by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes and dtypes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Query/KV tile sizes for the prefill kernel. 128 matches the TPU lane
+# width; smaller contexts fall back to a single tile.
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    """One (head, q-tile) program of causal flash attention.
+
+    q_ref: [BQ, 1, D]   this head's query tile
+    k_ref: [L, 1, D]    this head's full key panel
+    v_ref: [L, 1, D]    this head's full value panel
+    o_ref: [BQ, 1, D]   output tile
+    """
+    bq, _, d = q_ref.shape
+    q_tile_idx = pl.program_id(1)
+    q_pos = q_tile_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    q = q_ref[:, 0, :] * (1.0 / (d**0.5))
+
+    def body(kt, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = k_ref[pl.ds(kt * block_k, block_k), 0, :]
+        v_tile = v_ref[pl.ds(kt * block_k, block_k), 0, :]
+        s = q @ k_tile.T  # [BQ, BK] -> MXU contraction on TPU
+        k_pos = kt * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)  # causal mask
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * alpha + p @ v_tile
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+    # Causality: query tile t only needs KV tiles 0..t (bq == bk).
+    n_k_tiles = q_tile_idx + 1
+    m, l_sum, acc = jax.lax.fori_loop(0, n_k_tiles, body, (m0, l0, acc0))
+    o_ref[:, 0, :] = acc / jnp.maximum(l_sum, 1e-30)
+
+
+def flash_prefill(q, k, v):
+    """Causal attention. q, k, v: [L, H, D] -> [L, H, D].
+
+    L must be a multiple of BLOCK_Q (the AOT pipeline pads contexts to
+    bucket sizes that are).
+    """
+    l, h, d = q.shape
+    bq = min(BLOCK_Q, l)
+    bk = min(BLOCK_K, l)
+    assert l % bq == 0, f"L={l} not a multiple of the query tile {bq}"
+    assert bq == bk, "causal tile skipping assumes bq == bk"
+    grid = (h, l // bq)
+    return pl.pallas_call(
+        functools.partial(_prefill_kernel, block_k=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, 1, d), lambda hh, i: (i, hh, 0)),
+            pl.BlockSpec((l, 1, d), lambda hh, i: (0, hh, 0)),
+            pl.BlockSpec((l, 1, d), lambda hh, i: (0, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, 1, d), lambda hh, i: (i, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, h, d), q.dtype),
+        interpret=True,
+    )(
+        q, k, v
+    )
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref):
+    """One head's single-query attention over the cache.
+
+    len_ref: [1, 1]     number of valid cache slots (positions < len attend)
+    q_ref:   [1, 1, D]
+    k_ref:   [CL, 1, D]
+    v_ref:   [CL, 1, D]
+    o_ref:   [1, 1, D]
+    """
+    cl, _, d = k_ref.shape
+    cur_len = len_ref[0, 0]
+    q = q_ref[:, 0, :] * (1.0 / (d**0.5))  # [1, D]
+    s = (k_ref[:, 0, :] @ q.T).T  # [1, CL]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, cl), 1)
+    s = jnp.where(pos < cur_len, s, NEG_INF)
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.maximum(jnp.sum(p, axis=1, keepdims=True), 1e-30)
+    o_ref[:, 0, :] = (p @ v_ref[:, 0, :]) / denom
+
+
+def decode_attend(q, k_cache, v_cache, cur_len):
+    """Single-token attention. q: [H, D]; caches: [CL, H, D]; cur_len:
+    scalar i32 count of valid slots. Returns [H, D]."""
+    h, d = q.shape
+    cl = k_cache.shape[0]
+    len_arr = jnp.reshape(cur_len.astype(jnp.int32), (1, 1))
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda hh: (0, 0)),
+            pl.BlockSpec((1, 1, d), lambda hh: (0, hh, 0)),
+            pl.BlockSpec((cl, 1, d), lambda hh: (0, hh, 0)),
+            pl.BlockSpec((cl, 1, d), lambda hh: (0, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda hh: (0, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, h, d), q.dtype),
+        interpret=True,
+    )(len_arr, q[None, :, :], k_cache, v_cache)
+    return out[0]
+
+
+def vmem_bytes_prefill(l: int, d: int) -> int:
+    """Analytic VMEM footprint of one prefill program (perf estimate)."""
+    bq = min(BLOCK_Q, l)
+    bk = min(BLOCK_K, l)
+    # q tile + K panel + V panel + score tile + softmax stats + acc
+    return 4 * (bq * d + 2 * l * d + bq * bk + 2 * bq + bq * d)
+
+
+def vmem_bytes_decode(cl: int, d: int) -> int:
+    """Analytic VMEM footprint of one decode program."""
+    return 4 * (d + 2 * cl * d + cl + d)

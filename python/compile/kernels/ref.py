@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Everything here is deliberately naive: full score matrices, no tiling, no
+numerical tricks beyond the standard max-subtraction softmax. The pytest
+suite asserts the Pallas kernels match these to tight tolerances across
+shape/dtype sweeps.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_prefill_ref(q, k, v):
+    """Causal attention, full-matrix reference. q, k, v: [L, H, D]."""
+    l, h, d = q.shape
+    scale = 1.0 / (d**0.5)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale  # [H, L, L]
+    qpos = jnp.arange(l)[None, :, None]
+    kpos = jnp.arange(l)[None, None, :]
+    scores = jnp.where(kpos <= qpos, scores, NEG_INF)
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / jnp.maximum(weights.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hqk,khd->qhd", weights, v)
+
+
+def attention_decode_ref(q, k_cache, v_cache, cur_len):
+    """Single-query attention over a masked cache.
+
+    q: [H, D]; caches: [CL, H, D]; cur_len: scalar count of valid slots.
+    """
+    cl, h, d = k_cache.shape
+    scale = 1.0 / (d**0.5)
+    scores = jnp.einsum("hd,khd->hk", q, k_cache) * scale  # [H, CL]
+    mask = jnp.arange(cl)[None, :] < cur_len
+    scores = jnp.where(mask, scores, NEG_INF)
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / jnp.maximum(weights.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hk,khd->hd", weights, v_cache)

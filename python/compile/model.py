@@ -1,0 +1,266 @@
+"""Layer-2 JAX model: a Qwen-style decoder-only transformer.
+
+Stands in for the paper's Qwen1.5-0.5B-Chat running under llama.cpp (the
+paper measures context management, not model quality — §4.2: "we focus not
+on the model's output"). Architecture mirrors the Qwen/Llama family at
+reproduction scale: RMSNorm, rotary position embeddings, SwiGLU MLP,
+multi-head attention with a KV cache. Weights are deterministic random
+(seed 123, the paper's seed); generation is greedy (temperature 0).
+
+The attention hot-spot calls the Layer-1 Pallas kernels
+(``kernels.attention``). Entry points, all AOT-lowered by ``aot.py``:
+
+``init_weights``      -> the weights tuple (run once at node startup)
+``prefill``           -> context pass; fills the KV cache
+``decode_step``       -> one cached decode step
+``generate``          -> full turn: prefill + greedy while-loop decode,
+                         KV cache never leaves the device
+
+Static-shape contract (mirrored in ``rust/src/runtime``): contexts are
+padded to bucket sizes and masked by true ``length``; the KV cache holds
+``bucket + max_new`` slots.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attend, flash_prefill
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters; the values here are the artifact contract."""
+
+    vocab_size: int = 4096
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    head_dim: int = 32
+    ffn: int = 352
+    max_new: int = 128
+    rope_base: float = 10000.0
+    seed: int = 123
+    buckets: tuple = (128, 256, 512, 1024, 2048)
+
+    @property
+    def qkv_dim(self):
+        return self.n_heads * self.head_dim
+
+    def weights_per_layer(self):
+        return 9  # ln1, wq, wk, wv, wo, ln2, w_gate, w_up, w_down
+
+    def n_weights(self):
+        return 1 + self.n_layers * self.weights_per_layer() + 2  # embed .. final_ln, lm_head
+
+
+# Test-scale config: one layer, small dims (keeps pytest fast).
+TINY = ModelConfig(
+    vocab_size=64,
+    d_model=16,
+    n_layers=1,
+    n_heads=2,
+    head_dim=8,
+    ffn=32,
+    max_new=8,
+    buckets=(16, 32),
+)
+
+
+def init_weights(cfg: ModelConfig):
+    """Deterministic weight tuple (flat, fixed order)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    scale = 0.02
+    ws = []
+    key, k = jax.random.split(key)
+    ws.append(jax.random.normal(k, (cfg.vocab_size, cfg.d_model)) * scale)  # embed
+    for _ in range(cfg.n_layers):
+        key, k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 8)
+        ws.append(jnp.ones((cfg.d_model,)))  # ln1
+        ws.append(jax.random.normal(k1, (cfg.d_model, cfg.qkv_dim)) * scale)  # wq
+        ws.append(jax.random.normal(k2, (cfg.d_model, cfg.qkv_dim)) * scale)  # wk
+        ws.append(jax.random.normal(k3, (cfg.d_model, cfg.qkv_dim)) * scale)  # wv
+        ws.append(jax.random.normal(k4, (cfg.qkv_dim, cfg.d_model)) * scale)  # wo
+        ws.append(jnp.ones((cfg.d_model,)))  # ln2
+        ws.append(jax.random.normal(k5, (cfg.d_model, cfg.ffn)) * scale)  # w_gate
+        ws.append(jax.random.normal(k6, (cfg.d_model, cfg.ffn)) * scale)  # w_up
+        ws.append(jax.random.normal(k7, (cfg.ffn, cfg.d_model)) * scale)  # w_down
+    key, k1, k2 = jax.random.split(key, 3)
+    ws.append(jnp.ones((cfg.d_model,)))  # final_ln
+    ws.append(jax.random.normal(k2, (cfg.d_model, cfg.vocab_size)) * scale)  # lm_head
+    return tuple(ws)
+
+
+def _layer_weights(cfg: ModelConfig, weights, layer: int):
+    base = 1 + layer * cfg.weights_per_layer()
+    (ln1, wq, wk, wv, wo, ln2, w_gate, w_up, w_down) = weights[
+        base : base + cfg.weights_per_layer()
+    ]
+    return ln1, wq, wk, wv, wo, ln2, w_gate, w_up, w_down
+
+
+def rmsnorm(x, w, eps=1e-6):
+    """Root-mean-square layer norm over the last axis."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: (silu(x @ Wg) * (x @ Wu)) @ Wd."""
+    g = x @ w_gate
+    return (jax.nn.silu(g) * (x @ w_up)) @ w_down
+
+
+def rope(x, positions, base: float):
+    """Rotary embedding. x: [..., H, D]; positions broadcastable to x's
+    leading axes."""
+    d = x.shape[-1]
+    half = d // 2
+    inv_freq = 1.0 / (base ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [..., half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def prefill(cfg: ModelConfig, weights, tokens, length):
+    """Context pass over padded ``tokens`` [L].
+
+    Returns ``(k_cache, v_cache, last_logits)`` with caches
+    [n_layers, L + max_new, H, D]; rows past ``length`` are garbage and
+    masked out by every later attention (decode masks by current length;
+    prefill is causal and only the ``length-1`` logit row is used).
+    """
+    l = tokens.shape[0]
+    cl = l + cfg.max_new
+    embed, final_ln, lm_head = weights[0], weights[-2], weights[-1]
+    x = embed[tokens]  # [L, d]
+    positions = jnp.arange(l)
+    k_caches, v_caches = [], []
+    for layer in range(cfg.n_layers):
+        ln1, wq, wk, wv, wo, ln2, w_gate, w_up, w_down = _layer_weights(cfg, weights, layer)
+        h = rmsnorm(x, ln1)
+        q = (h @ wq).reshape(l, cfg.n_heads, cfg.head_dim)
+        k = (h @ wk).reshape(l, cfg.n_heads, cfg.head_dim)
+        v = (h @ wv).reshape(l, cfg.n_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_base)
+        k = rope(k, positions, cfg.rope_base)
+        attn = flash_prefill(q, k, v)  # L1 Pallas kernel
+        x = x + attn.reshape(l, cfg.qkv_dim) @ wo
+        x = x + swiglu(rmsnorm(x, ln2), w_gate, w_up, w_down)
+        pad = ((0, cl - l), (0, 0), (0, 0))
+        k_caches.append(jnp.pad(k, pad))
+        v_caches.append(jnp.pad(v, pad))
+    x_last = jax.lax.dynamic_index_in_dim(x, length - 1, axis=0, keepdims=False)
+    logits = rmsnorm(x_last, final_ln) @ lm_head  # [V]
+    return jnp.stack(k_caches), jnp.stack(v_caches), logits
+
+
+def decode_step(cfg: ModelConfig, weights, k_cache, v_cache, token, pos):
+    """One decode step for ``token`` at position ``pos``.
+
+    Writes the token's K/V into cache slot ``pos`` and attends over slots
+    ``[0, pos]``. Returns updated caches and the next-token logits.
+    """
+    embed, final_ln, lm_head = weights[0], weights[-2], weights[-1]
+    x = embed[token]  # [d]
+    pos_arr = jnp.asarray(pos, dtype=jnp.int32)
+    for layer in range(cfg.n_layers):
+        ln1, wq, wk, wv, wo, ln2, w_gate, w_up, w_down = _layer_weights(cfg, weights, layer)
+        h = rmsnorm(x, ln1)
+        q = (h @ wq).reshape(cfg.n_heads, cfg.head_dim)
+        k = (h @ wk).reshape(cfg.n_heads, cfg.head_dim)
+        v = (h @ wv).reshape(cfg.n_heads, cfg.head_dim)
+        q = rope(q, pos_arr, cfg.rope_base)
+        k = rope(k, pos_arr, cfg.rope_base)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None, None], (layer, pos_arr, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None, None], (layer, pos_arr, 0, 0)
+        )
+        attn = decode_attend(q, k_cache[layer], v_cache[layer], pos_arr + 1)  # L1 kernel
+        x = x + attn.reshape(cfg.qkv_dim) @ wo
+        x = x + swiglu(rmsnorm(x, ln2), w_gate, w_up, w_down)
+    logits = rmsnorm(x, final_ln) @ lm_head
+    return k_cache, v_cache, logits
+
+
+def generate(cfg: ModelConfig, weights, tokens, length, max_new, stop_id):
+    """Full turn: prefill + greedy decode loop, all on device.
+
+    Returns ``(out_ids [cfg.max_new], n_generated)``; ids past
+    ``n_generated`` are zero. Decoding stops early when the model emits
+    ``stop_id`` (not included in the output) or after ``max_new`` tokens.
+    """
+    k_cache, v_cache, logits = prefill(cfg, weights, tokens, length)
+    first = jnp.argmax(logits).astype(jnp.int32)
+    out0 = jnp.zeros((cfg.max_new,), dtype=jnp.int32)
+    limit = jnp.minimum(max_new, cfg.max_new).astype(jnp.int32)
+
+    def cond(carry):
+        _, _, _, cur, i, done = carry
+        return jnp.logical_and(i < limit, jnp.logical_not(done))
+
+    def body(carry):
+        k_cache, v_cache, out, cur, i, _ = carry
+        out = jax.lax.dynamic_update_slice(out, cur[None], (i,))
+        k_cache, v_cache, logits = decode_step(
+            cfg, weights, k_cache, v_cache, cur, length + i
+        )
+        nxt = jnp.argmax(logits).astype(jnp.int32)
+        done = nxt == stop_id
+        return k_cache, v_cache, out, nxt, i + 1, done
+
+    init = (k_cache, v_cache, out0, first, jnp.int32(0), first == stop_id)
+    _, _, out, _, n, _ = jax.lax.while_loop(cond, body, init)
+    return out, n
+
+
+def generate_ref(cfg: ModelConfig, weights, tokens, length, max_new, stop_id):
+    """Reference generation that re-runs ``decode_step`` eagerly in Python
+    (no while_loop) — used by tests to pin down ``generate``."""
+    k_cache, v_cache, logits = prefill(cfg, weights, tokens, length)
+    cur = int(jnp.argmax(logits))
+    out = []
+    for i in range(int(max_new)):
+        if cur == stop_id:
+            break
+        out.append(cur)
+        k_cache, v_cache, logits = decode_step(
+            cfg, weights, k_cache, v_cache, jnp.int32(cur), jnp.int32(length + i)
+        )
+        cur = int(jnp.argmax(logits))
+    return out
+
+
+def make_generate_fn(cfg: ModelConfig):
+    """The AOT entry point: flat positional signature
+    ``(w_0..w_{n-1}, tokens, length, max_new, stop_id)``."""
+    n = cfg.n_weights()
+
+    def fn(*args):
+        weights = args[:n]
+        tokens, length, max_new, stop_id = args[n:]
+        out, count = generate(cfg, weights, tokens, length, max_new, stop_id)
+        return out, count
+
+    return fn
+
+
+def make_init_fn(cfg: ModelConfig):
+    """AOT entry point producing the weights tuple."""
+
+    def fn():
+        return init_weights(cfg)
+
+    return fn
+
+
+@functools.lru_cache(maxsize=4)
+def cached_weights(cfg: ModelConfig):
+    """Memoized weights for tests."""
+    return init_weights(cfg)

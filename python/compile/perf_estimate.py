@@ -1,0 +1,130 @@
+"""Analytic TPU performance estimates for the L1 Pallas kernels.
+
+``interpret=True`` gives CPU-numpy semantics only, so real-TPU efficiency
+is *estimated* from the kernel structure (DESIGN.md §Perf): VMEM
+footprints from the BlockSpecs, MXU utilization from the contraction
+shapes, and an HBM-bandwidth roofline for the bandwidth-bound decode
+kernel. Reference chip: TPU v4 lite-ish numbers (275 TFLOP/s bf16 MXU,
+1.2 TB/s HBM, 16 MiB VMEM/core) — the point is the *ratio* analysis, not
+absolute TFLOPs.
+
+Run: ``python -m compile.perf_estimate``
+"""
+
+import dataclasses
+
+from .kernels.attention import BLOCK_K, BLOCK_Q, vmem_bytes_decode, vmem_bytes_prefill
+from .model import ModelConfig
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128  # systolic array edge
+HBM_BPS = 1.2e12
+MXU_FLOPS = 275e12  # bf16
+
+
+@dataclasses.dataclass
+class KernelEstimate:
+    """Static performance model of one kernel launch."""
+
+    name: str
+    vmem_bytes: int
+    flops: float
+    hbm_bytes: float
+    mxu_utilization: float  # fraction of MXU lanes busy during matmuls
+
+    @property
+    def vmem_ok(self):
+        return self.vmem_bytes < VMEM_BYTES
+
+    @property
+    def compute_s(self):
+        return self.flops / (MXU_FLOPS * max(self.mxu_utilization, 1e-9))
+
+    @property
+    def memory_s(self):
+        return self.hbm_bytes / HBM_BPS
+
+    @property
+    def bound(self):
+        return "compute" if self.compute_s > self.memory_s else "memory"
+
+    @property
+    def roofline_efficiency(self):
+        """Achievable fraction of the MXU peak given the memory roofline."""
+        t = max(self.compute_s, self.memory_s)
+        return (self.flops / MXU_FLOPS) / t if t > 0 else 0.0
+
+
+def mxu_util(m: int, n: int, k: int) -> float:
+    """Lane occupancy of an (m×k)@(k×n) contraction on a 128×128 MXU."""
+
+    def occ(d):
+        full, rem = divmod(d, MXU_DIM)
+        tiles = full + (1 if rem else 0)
+        return d / (tiles * MXU_DIM) if tiles else 0.0
+
+    return occ(m) * occ(n)
+
+
+def prefill_estimate(cfg: ModelConfig, l: int) -> KernelEstimate:
+    """One (head, q-tile) flash-prefill program, aggregated over the grid."""
+    d = cfg.head_dim
+    bq, bk = min(BLOCK_Q, l), min(BLOCK_K, l)
+    n_q_tiles = l // bq
+    # Causal: tile t sees t+1 KV tiles.
+    kv_tiles_total = n_q_tiles * (n_q_tiles + 1) // 2
+    # Per (q-tile, kv-tile): QK^T (bq×d @ d×bk) + PV (bq×bk @ bk×d).
+    flops = cfg.n_heads * kv_tiles_total * (2 * bq * bk * d + 2 * bq * bk * d)
+    # HBM: Q,K,V read once per head (K/V panels resident per program), O written.
+    hbm = 4 * (3 * l * cfg.n_heads * d + l * cfg.n_heads * d)
+    return KernelEstimate(
+        name=f"flash_prefill L={l}",
+        vmem_bytes=vmem_bytes_prefill(l, d),
+        flops=flops,
+        hbm_bytes=hbm,
+        # Contractions are (bq×d)@(d×bk): m=bq=128 n=bk=128 full lanes,
+        # but k=d=32 pipelines at depth 32/128 on the systolic array.
+        mxu_utilization=mxu_util(bq, bk, d) * (d / MXU_DIM),
+    )
+
+
+def decode_estimate(cfg: ModelConfig, cache_len: int) -> KernelEstimate:
+    """One decode_attend launch (all heads)."""
+    d = cfg.head_dim
+    # scores: CL×d @ d×1; out: 1×CL @ CL×d  per head.
+    flops = cfg.n_heads * (2 * cache_len * d + 2 * cache_len * d)
+    hbm = 4 * cfg.n_heads * (2 * cache_len * d + d + d)
+    return KernelEstimate(
+        name=f"decode_attend CL={cache_len}",
+        vmem_bytes=vmem_bytes_decode(cache_len, d),
+        flops=flops,
+        hbm_bytes=hbm,
+        # Matrix-vector: one output column -> 1/128 of MXU width; on real
+        # TPU this runs on the VPU instead, which is the right choice for
+        # a memory-bound kernel.
+        mxu_utilization=mxu_util(cache_len, 1, d),
+    )
+
+
+def report(cfg: ModelConfig = None) -> str:
+    cfg = cfg or ModelConfig()
+    lines = [
+        f"kernel                     VMEM      fit  bound    roofline-eff",
+    ]
+    for l in cfg.buckets:
+        e = prefill_estimate(cfg, l)
+        lines.append(
+            f"{e.name:<24} {e.vmem_bytes/2**20:7.2f}MiB  {str(e.vmem_ok):<5}"
+            f"{e.bound:<8} {e.roofline_efficiency*100:6.1f}%"
+        )
+    for cl in [cfg.buckets[0] + cfg.max_new, cfg.buckets[-1] + cfg.max_new]:
+        e = decode_estimate(cfg, cl)
+        lines.append(
+            f"{e.name:<24} {e.vmem_bytes/2**20:7.2f}MiB  {str(e.vmem_ok):<5}"
+            f"{e.bound:<8} {e.roofline_efficiency*100:6.1f}% (memory-bound by design)"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

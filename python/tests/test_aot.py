@@ -1,0 +1,98 @@
+"""AOT export sanity: the HLO-text pipeline produces loadable, complete
+artifacts whose declared contract matches the Rust side's expectations."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile.model import TINY, ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def tiny_dir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tiny_artifacts")
+    aot.export(TINY, str(d))
+    return d
+
+
+def test_export_writes_all_artifacts(tiny_dir):
+    names = os.listdir(tiny_dir)
+    assert "model_meta.json" in names
+    assert "init.hlo.txt" in names
+    for b in TINY.buckets:
+        assert f"generate_{b}.hlo.txt" in names
+
+
+def test_meta_contract(tiny_dir):
+    meta = json.load(open(tiny_dir / "model_meta.json"))
+    for key in (
+        "vocab_size",
+        "d_model",
+        "n_layers",
+        "n_heads",
+        "head_dim",
+        "ffn",
+        "max_new",
+        "seed",
+        "buckets",
+    ):
+        assert key in meta, key
+    assert meta["buckets"] == sorted(meta["buckets"])
+    assert meta["vocab_size"] == TINY.vocab_size
+
+
+def test_hlo_text_is_parseable_hlo(tiny_dir):
+    text = (tiny_dir / "init.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Bucket shapes must appear in the generate modules.
+    for b in TINY.buckets:
+        gtext = (tiny_dir / f"generate_{b}.hlo.txt").read_text()
+        assert f"s32[{b}]" in gtext, f"tokens arg shape missing for bucket {b}"
+        assert f"s32[{TINY.max_new}]" in gtext, "output ids shape missing"
+
+
+def test_hlo_has_no_64bit_id_issue(tiny_dir):
+    # The interchange contract: text must round-trip through the XLA text
+    # parser (which reassigns ids). Smoke-check by re-parsing with the
+    # local xla_client.
+    from jax._src.lib import xla_client as xc
+
+    text = (tiny_dir / f"generate_{TINY.buckets[0]}.hlo.txt").read_text()
+    # jaxlib's client can't parse HLO text directly; assert the known-bad
+    # pattern (proto serialization) was not used instead.
+    assert not text.startswith(b"\x08".decode("latin1")), "binary proto, not text"
+    assert "f32[" in text
+    _ = xc  # imported to pin the dependency the AOT path relies on
+
+
+def test_generate_signature_arity(tiny_dir):
+    # weights + tokens + length + max_new + stop_id parameters.
+    text = (tiny_dir / f"generate_{TINY.buckets[0]}.hlo.txt").read_text()
+    entry = [l for l in text.splitlines() if "ENTRY" in l or "entry_computation_layout" in l]
+    assert entry, "no entry computation found"
+    expected_args = TINY.n_weights() + 4
+    header = entry[0]
+    assert header.count("f32[") + header.count("s32[") >= expected_args
+
+
+def test_export_is_deterministic(tmp_path):
+    d1, d2 = tmp_path / "a", tmp_path / "b"
+    aot.export(TINY, str(d1))
+    aot.export(TINY, str(d2))
+    a = (d1 / "init.hlo.txt").read_text()
+    b = (d2 / "init.hlo.txt").read_text()
+    assert a == b
+
+
+def test_production_config_contract():
+    cfg = ModelConfig()
+    assert cfg.vocab_size == 4096
+    assert cfg.buckets == (128, 256, 512, 1024, 2048)
+    assert cfg.max_new == 128
+    assert cfg.seed == 123  # the paper's seed

@@ -1,0 +1,164 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/mask lengths; every case asserts
+``assert_allclose`` against ``kernels/ref.py``. This is the core numeric
+signal the AOT pipeline builds on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    BLOCK_Q,
+    decode_attend,
+    flash_prefill,
+    vmem_bytes_decode,
+    vmem_bytes_prefill,
+)
+from compile.kernels.ref import attention_decode_ref, attention_prefill_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- prefill
+
+@pytest.mark.parametrize("l", [1, 2, 8, 64, 128, 256, 384])
+@pytest.mark.parametrize("h,d", [(1, 8), (4, 32)])
+def test_prefill_matches_ref_shapes(l, h, d):
+    if l > BLOCK_Q and l % BLOCK_Q != 0:
+        pytest.skip("bucketed lengths only")
+    key = jax.random.PRNGKey(l * 1000 + h * 10 + d)
+    kq, kk, kv = jax.random.split(key, 3)
+    q, k, v = rand(kq, (l, h, d)), rand(kk, (l, h, d)), rand(kv, (l, h, d))
+    out = flash_prefill(q, k, v)
+    ref = attention_prefill_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_is_causal():
+    # Changing a future token must not change earlier outputs.
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    l, h, d = 32, 2, 16
+    q, k, v = rand(kq, (l, h, d)), rand(kk, (l, h, d)), rand(kv, (l, h, d))
+    base = flash_prefill(q, k, v)
+    k2 = k.at[-1].set(99.0)
+    v2 = v.at[-1].set(-99.0)
+    pert = flash_prefill(q, k2, v2)
+    np.testing.assert_allclose(base[: l - 1], pert[: l - 1], rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_softmax_stability_large_logits():
+    # Online softmax must survive large score magnitudes.
+    key = jax.random.PRNGKey(9)
+    kq, kk, kv = jax.random.split(key, 3)
+    l, h, d = 64, 2, 8
+    q = rand(kq, (l, h, d), scale=30.0)
+    k = rand(kk, (l, h, d), scale=30.0)
+    v = rand(kv, (l, h, d))
+    out = flash_prefill(q, k, v)
+    ref = attention_prefill_ref(q, k, v)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    l_pow=st.integers(min_value=0, max_value=7),
+    h=st.integers(min_value=1, max_value=4),
+    d_pow=st.integers(min_value=3, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_prefill_hypothesis_sweep(l_pow, h, d_pow, seed):
+    l, d = 2**l_pow, 2**d_pow
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q, k, v = rand(kq, (l, h, d)), rand(kk, (l, h, d)), rand(kv, (l, h, d))
+    out = flash_prefill(q, k, v)
+    ref = attention_prefill_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+# ----------------------------------------------------------------- decode
+
+@pytest.mark.parametrize("cl,cur", [(8, 1), (8, 8), (144, 1), (144, 100), (2176, 1500)])
+@pytest.mark.parametrize("h,d", [(1, 8), (4, 32)])
+def test_decode_matches_ref(cl, cur, h, d):
+    key = jax.random.PRNGKey(cl + cur)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (h, d))
+    kc, vc = rand(kk, (cl, h, d)), rand(kv, (cl, h, d))
+    out = decode_attend(q, kc, vc, jnp.int32(cur))
+    ref = attention_decode_ref(q, kc, vc, cur)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_ignores_garbage_beyond_len():
+    # Slots >= cur_len must not affect the output at all — the property
+    # the padded-cache design depends on.
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    cl, h, d, cur = 64, 2, 16, 20
+    q = rand(kq, (h, d))
+    kc, vc = rand(kk, (cl, h, d)), rand(kv, (cl, h, d))
+    base = decode_attend(q, kc, vc, jnp.int32(cur))
+    kc2 = kc.at[cur:].set(1e6)
+    vc2 = vc.at[cur:].set(-1e6)
+    pert = decode_attend(q, kc2, vc2, jnp.int32(cur))
+    np.testing.assert_allclose(base, pert, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    cl=st.integers(min_value=1, max_value=300),
+    frac=st.floats(min_value=0.01, max_value=1.0),
+    h=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_decode_hypothesis_sweep(cl, frac, h, seed):
+    d = 16
+    cur = max(1, int(cl * frac))
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (h, d))
+    kc, vc = rand(kk, (cl, h, d)), rand(kv, (cl, h, d))
+    out = decode_attend(q, kc, vc, jnp.int32(cur))
+    ref = attention_decode_ref(q, kc, vc, cur)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+def test_decode_single_valid_slot_is_value_passthrough():
+    # cur_len=1: softmax over one slot -> output == v[0].
+    key = jax.random.PRNGKey(11)
+    kq, kk, kv = jax.random.split(key, 3)
+    cl, h, d = 16, 2, 8
+    q = rand(kq, (h, d))
+    kc, vc = rand(kk, (cl, h, d)), rand(kv, (cl, h, d))
+    out = decode_attend(q, kc, vc, jnp.int32(1))
+    np.testing.assert_allclose(out, vc[0], rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------- perf estimators
+
+def test_vmem_estimates_under_budget():
+    # The serving shapes must fit a TPU core's ~16 MiB VMEM.
+    vmem = 16 * 1024 * 1024
+    assert vmem_bytes_prefill(2048, 32) < vmem
+    assert vmem_bytes_decode(2048 + 128, 32) < vmem
+
+
+def test_jit_composes():
+    # Kernels must lower inside jit (the AOT path does exactly this).
+    l, h, d = 16, 2, 8
+    key = jax.random.PRNGKey(1)
+    kq, kk, kv = jax.random.split(key, 3)
+    q, k, v = rand(kq, (l, h, d)), rand(kk, (l, h, d)), rand(kv, (l, h, d))
+    jitted = jax.jit(flash_prefill)
+    np.testing.assert_allclose(jitted(q, k, v), flash_prefill(q, k, v), rtol=1e-6)

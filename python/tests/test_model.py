@@ -1,0 +1,148 @@
+"""Layer-2 correctness: transformer shapes, prefill/decode agreement, and
+the fused ``generate`` against its eager reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.TINY
+STOP = CFG.vocab_size - 1
+
+
+def weights():
+    return M.cached_weights(CFG)
+
+
+def rand_tokens(seed, l):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (l,), 0, CFG.vocab_size, dtype=jnp.int32
+    )
+
+
+def test_weight_inventory():
+    w = weights()
+    assert len(w) == CFG.n_weights()
+    assert w[0].shape == (CFG.vocab_size, CFG.d_model)
+    assert w[-1].shape == (CFG.d_model, CFG.vocab_size)
+
+
+def test_weights_deterministic():
+    a = M.init_weights(CFG)
+    b = M.init_weights(CFG)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_prefill_shapes():
+    l = CFG.buckets[0]
+    kc, vc, logits = M.prefill(CFG, weights(), rand_tokens(0, l), jnp.int32(l - 3))
+    cl = l + CFG.max_new
+    assert kc.shape == (CFG.n_layers, cl, CFG.n_heads, CFG.head_dim)
+    assert vc.shape == kc.shape
+    assert logits.shape == (CFG.vocab_size,)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_padding_does_not_change_logits():
+    # The static-shape contract: padding tokens beyond `length` must not
+    # affect the last-valid-position logits.
+    l = CFG.buckets[0]
+    length = l - 5
+    t1 = rand_tokens(1, l)
+    t2 = t1.at[length:].set(7)  # different garbage in the pad region
+    _, _, lg1 = M.prefill(CFG, weights(), t1, jnp.int32(length))
+    _, _, lg2 = M.prefill(CFG, weights(), t2, jnp.int32(length))
+    np.testing.assert_allclose(lg1, lg2, rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_decode_agree():
+    # Next-token logits from (prefill of n+1 tokens) must equal
+    # (prefill of n tokens, then one decode_step).
+    l = CFG.buckets[0]
+    length = l - 4
+    tokens = rand_tokens(2, l)
+    kc, vc, lg = M.prefill(CFG, weights(), tokens, jnp.int32(length))
+    nxt = jnp.argmax(lg).astype(jnp.int32)
+
+    extended = tokens.at[length].set(nxt)
+    _, _, lg_prefill = M.prefill(CFG, weights(), extended, jnp.int32(length + 1))
+    _, _, lg_decode = M.decode_step(CFG, weights(), kc, vc, nxt, jnp.int32(length))
+    np.testing.assert_allclose(lg_prefill, lg_decode, rtol=2e-4, atol=2e-4)
+
+
+def test_generate_matches_reference():
+    l = CFG.buckets[0]
+    length = l - 6
+    tokens = rand_tokens(3, l)
+    ref = M.generate_ref(CFG, weights(), tokens, length, CFG.max_new, STOP)
+    out, n = M.generate(
+        CFG, weights(), tokens, jnp.int32(length), jnp.int32(CFG.max_new), jnp.int32(STOP)
+    )
+    assert list(np.asarray(out[: int(n)])) == ref
+    # Slots past n are zero.
+    assert (np.asarray(out[int(n):]) == 0).all()
+
+
+def test_generate_respects_max_new():
+    l = CFG.buckets[0]
+    tokens = rand_tokens(4, l)
+    out, n = M.generate(
+        CFG, weights(), tokens, jnp.int32(l - 2), jnp.int32(3), jnp.int32(STOP)
+    )
+    assert int(n) <= 3
+
+
+def test_generate_stops_on_stop_id():
+    # Force the stop id to be whatever the model would emit first; then
+    # generation must stop immediately with n == 0.
+    l = CFG.buckets[0]
+    length = l - 2
+    tokens = rand_tokens(5, l)
+    _, _, lg = M.prefill(CFG, weights(), tokens, jnp.int32(length))
+    first = int(jnp.argmax(lg))
+    out, n = M.generate(
+        CFG, weights(), tokens, jnp.int32(length), jnp.int32(8), jnp.int32(first)
+    )
+    assert int(n) == 0
+
+
+def test_rope_position_sensitivity():
+    # The same token at different positions must produce different K.
+    x = jnp.ones((1, CFG.n_heads, CFG.head_dim))
+    a = M.rope(x, jnp.array([1]), CFG.rope_base)
+    b = M.rope(x, jnp.array([2]), CFG.rope_base)
+    assert float(jnp.abs(a - b).max()) > 1e-3
+    # Position 0 is identity (cos=1, sin=0).
+    z = M.rope(x, jnp.array([0]), CFG.rope_base)
+    np.testing.assert_allclose(z, x, rtol=1e-6)
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.array([[3.0, -4.0]])
+    out = M.rmsnorm(x, jnp.ones((2,)))
+    # RMS of [3,-4] is sqrt(12.5); output RMS must be ~1.
+    rms = float(jnp.sqrt(jnp.mean(out * out)))
+    assert abs(rms - 1.0) < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    length_frac=st.floats(min_value=0.2, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_generate_hypothesis_never_overflows(length_frac, seed):
+    l = CFG.buckets[0]
+    length = max(1, int(l * length_frac))
+    tokens = rand_tokens(seed, l)
+    out, n = M.generate(
+        CFG, weights(), tokens, jnp.int32(length), jnp.int32(CFG.max_new), jnp.int32(STOP)
+    )
+    assert 0 <= int(n) <= CFG.max_new
+    ids = np.asarray(out)
+    assert (ids >= 0).all() and (ids < CFG.vocab_size).all()

@@ -1,0 +1,44 @@
+"""Sanity checks for the analytic TPU performance model (§Perf)."""
+
+from compile.model import ModelConfig
+from compile.perf_estimate import (
+    decode_estimate,
+    mxu_util,
+    prefill_estimate,
+    report,
+    VMEM_BYTES,
+)
+
+
+def test_all_serving_shapes_fit_vmem():
+    cfg = ModelConfig()
+    for l in cfg.buckets:
+        assert prefill_estimate(cfg, l).vmem_bytes < VMEM_BYTES
+    assert decode_estimate(cfg, cfg.buckets[-1] + cfg.max_new).vmem_bytes < VMEM_BYTES
+
+
+def test_mxu_util_bounds():
+    assert mxu_util(128, 128, 32) == 1.0
+    assert 0.0 < mxu_util(100, 128, 32) < 1.0
+    assert mxu_util(1, 1, 32) < 0.01
+
+
+def test_decode_is_memory_bound():
+    cfg = ModelConfig()
+    e = decode_estimate(cfg, 2176)
+    assert e.bound == "memory"
+    assert e.memory_s > 0
+
+
+def test_prefill_efficiency_grows_then_saturates():
+    cfg = ModelConfig()
+    effs = [prefill_estimate(cfg, l).roofline_efficiency for l in cfg.buckets]
+    assert effs[0] <= effs[-1] + 1e-9
+    # Saturation: limited by head_dim / MXU depth = 32/128 = 25%.
+    assert abs(effs[-1] - 0.25) < 0.02
+
+
+def test_report_renders():
+    r = report()
+    assert "flash_prefill L=2048" in r
+    assert "decode_attend" in r

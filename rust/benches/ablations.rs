@@ -1,0 +1,268 @@
+//! Ablation benchmarks for the design choices DESIGN.md calls out:
+//!
+//! - `binary-tokens` (A1): token wire framing — JSON int arrays vs
+//!   base64(u16) — on sync traffic; quantifies the optimization the
+//!   paper left on the table.
+//! - `retry-sweep` (A2): consistency retry budget × replication delay →
+//!   handover failure rate and added latency.
+//! - `context-scaling` (A3): tokenized-vs-raw speedup as the conversation
+//!   grows (synthetic scenarios, 4–24 turns).
+//! - `bucket-sweep` (A4): prefill bucket padding waste vs executable
+//!   count (PJRT latency per bucket at several true lengths).
+//! - `native-profiles` (A5): Fig-3 with *unscaled* tokenizer profiles —
+//!   the honest-ratio result for our Rust BPE (see profile.rs docs).
+//!
+//! Run all: `cargo bench --bench ablations`
+//! Run one: `cargo bench --bench ablations -- retry-sweep`
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Duration;
+
+use discedge::benchkit::emit;
+use discedge::client::{Client, MobilityPolicy};
+use discedge::config::{ClusterConfig, ConsistencyPolicy, ContextMode, EngineKind};
+use discedge::context::{StoredContext, TokenCodec};
+use discedge::metrics::{pct_speedup, Series, Table};
+use discedge::netsim::LinkModel;
+use discedge::profile::NodeProfile;
+use discedge::server::EdgeCluster;
+use discedge::workload::Scenario;
+
+fn mock_cfg() -> ClusterConfig {
+    let mut cfg = ClusterConfig::two_node_testbed();
+    cfg.engine = EngineKind::Mock {
+        prefill_ns_per_token: 300_000,
+        decode_ns_per_token: 2_000_000,
+    };
+    cfg.peer_link = LinkModel::lan();
+    cfg.client_link = LinkModel::lan();
+    cfg
+}
+
+/// A1: wire framing of the stored token context.
+fn binary_tokens() {
+    let mut table = Table::new(
+        "A1 — stored-context bytes per turn by codec",
+        &["raw_text", "json_ints", "binary_u16"],
+    );
+    // Build a representative conversation offline via the tokenizer.
+    let tok = std::sync::Arc::new(
+        discedge::tokenizer::Tokenizer::load(std::path::Path::new("artifacts/tokenizer.json"))
+            .unwrap_or_else(|_| {
+                discedge::tokenizer::Tokenizer::from_vocab(discedge::tokenizer::train(
+                    &discedge::workload::corpus_with_size(123, 60_000),
+                    &discedge::tokenizer::TrainConfig::default(),
+                ))
+            }),
+    );
+    let template = discedge::llm::ChatTemplate::new(tok.clone()).unwrap();
+    let scenario = Scenario::robotics_9turn();
+    let mut transcript = template.preamble_text();
+    for (i, turn) in scenario.turns().enumerate() {
+        transcript.push_str(&template.user_turn_text(&turn.prompt));
+        // Synthetic 128-token answer drawn from the corpus.
+        let answer = discedge::workload::corpus_with_size(i as u64, 600);
+        transcript.push_str(&template.close_text(&answer[..500.min(answer.len())]));
+        let ids = template.encode_transcript(&transcript);
+        let raw = StoredContext::Text(transcript.clone()).to_kv(i as u64 + 1, TokenCodec::JsonInts);
+        let json_ints = StoredContext::Tokens(ids.clone()).to_kv(i as u64 + 1, TokenCodec::JsonInts);
+        let bin = StoredContext::Tokens(ids).to_kv(i as u64 + 1, TokenCodec::BinaryU16);
+        table.row(
+            &format!("turn {}", i + 1),
+            &[raw.len() as f64, json_ints.len() as f64, bin.len() as f64],
+        );
+    }
+    emit(&table, "ablation_a1_codec.csv");
+    if let Some(last) = table.rows.last() {
+        let (raw, ji, bin) = (last.values[0], last.values[1], last.values[2]);
+        println!(
+            "turn-9 doc: raw {raw:.0} B; json-ints {ji:.0} B ({:+.1}% vs raw); \
+             binary-u16 {bin:.0} B ({:+.1}% vs raw)",
+            (ji - raw) / raw * 100.0,
+            (bin - raw) / raw * 100.0
+        );
+        println!(
+            "(the paper's -13..15% sits between these: 150k-vocab ids in 4-byte \
+             frames ≈ our binary case with wider ids)"
+        );
+    }
+}
+
+/// A2: retry budget × replication delay.
+fn retry_sweep() {
+    let mut table = Table::new(
+        "A2 — handover outcome vs retry budget and replication delay",
+        &["delay_ms", "retries_used", "failed", "handover_latency_ms"],
+    );
+    for &delay_ms in &[0u64, 5, 15, 30, 60] {
+        for &budget in &[0u32, 1, 3, 6] {
+            let mut cfg = mock_cfg();
+            cfg.engine = EngineKind::Mock {
+                prefill_ns_per_token: 0,
+                decode_ns_per_token: 0,
+            };
+            for n in &mut cfg.nodes {
+                n.profile = NodeProfile::m2_native();
+            }
+            cfg.peer_link = LinkModel::ideal();
+            cfg.client_link = LinkModel::ideal();
+            cfg.replication.delay = Duration::from_millis(delay_ms);
+            cfg.consistency.retries = budget;
+            cfg.consistency.policy = ConsistencyPolicy::Strict;
+            let cluster = EdgeCluster::launch(cfg).unwrap();
+            let mut client = Client::connect(
+                cluster.endpoints(),
+                MobilityPolicy::Schedule(vec![0, 1]),
+            )
+            .with_mode(ContextMode::Tokenized)
+            .with_max_tokens(8);
+            client.chat("first").unwrap();
+            let t = std::time::Instant::now();
+            match client.chat("second") {
+                Ok(r) => table.row(
+                    &format!("delay{delay_ms}ms_budget{budget}"),
+                    &[
+                        delay_ms as f64,
+                        r.response.timings.retries as f64,
+                        0.0,
+                        t.elapsed().as_secs_f64() * 1000.0,
+                    ],
+                ),
+                Err(_) => table.row(
+                    &format!("delay{delay_ms}ms_budget{budget}"),
+                    &[delay_ms as f64, budget as f64, 1.0, f64::NAN],
+                ),
+            }
+        }
+    }
+    emit(&table, "ablation_a2_retry.csv");
+    println!("(paper config: budget 3 x 10 ms; it never needed more than 2 retries)");
+}
+
+/// A3: speedup vs conversation length (mock engine for tractable sweeps).
+fn context_scaling() {
+    let cluster = EdgeCluster::launch(mock_cfg()).unwrap();
+    let mut table = Table::new(
+        "A3 — tokenized vs raw median response time by conversation length",
+        &["raw_s", "tokenized_s", "speedup_pct"],
+    );
+    for &turns in &[4usize, 8, 16, 24] {
+        let scenario = Scenario::synthetic(42, turns, 12);
+        let mut medians = Vec::new();
+        for mode in [ContextMode::Raw, ContextMode::Tokenized] {
+            let results = common::run_scenario(
+                &cluster,
+                MobilityPolicy::Sticky(1), // TX2 profile: the pronounced case
+                mode,
+                &scenario,
+            );
+            medians.push(Series::from(common::e2e_seconds(&results)).median());
+        }
+        table.row(
+            &format!("{turns} turns"),
+            &[
+                medians[0],
+                medians[1],
+                pct_speedup(medians[0], medians[1]),
+            ],
+        );
+    }
+    emit(&table, "ablation_a3_scaling.csv");
+    println!("(the paper §4.2.2: \"greater benefits as the context grows larger\")");
+}
+
+/// A4: bucket padding waste (PJRT; needs artifacts).
+fn bucket_sweep() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("model_meta.json").exists() {
+        eprintln!("skipping bucket-sweep: no artifacts");
+        return;
+    }
+    let rt = discedge::runtime::ModelRuntime::load(dir).unwrap();
+    let meta = rt.meta().clone();
+    let mut table = Table::new(
+        "A4 — generation latency vs true length (bucket padding waste)",
+        &["bucket", "latency_s", "pad_fraction"],
+    );
+    for &len in &[100usize, 129, 250, 400, 513, 900, 1500, 2000] {
+        let input: Vec<u32> = (0..len).map(|i| (i as u32 * 11) % 4096).collect();
+        let t = std::time::Instant::now();
+        let g = rt.generate(&input, 32, u32::MAX).unwrap();
+        let s = t.elapsed().as_secs_f64();
+        table.row(
+            &format!("len {len}"),
+            &[
+                g.bucket as f64,
+                s,
+                1.0 - len as f64 / g.bucket as f64,
+            ],
+        );
+    }
+    emit(&table, "ablation_a4_buckets.csv");
+    let _ = meta;
+}
+
+/// A5: Fig-3 with native (unscaled) tokenizer profiles.
+fn native_profiles() {
+    let mut cfg = ClusterConfig::two_node_testbed();
+    cfg.client_link = LinkModel::lan();
+    cfg.nodes[0].profile = NodeProfile::m2_native();
+    cfg.nodes[1].profile = NodeProfile::tx2_native();
+    if std::env::var("DISCEDGE_BENCH_ENGINE").as_deref() == Ok("mock") {
+        cfg.engine = EngineKind::Mock {
+            prefill_ns_per_token: 300_000,
+            decode_ns_per_token: 2_000_000,
+        };
+    }
+    let cluster = EdgeCluster::launch(cfg).expect("artifacts needed (or mock engine)");
+    let scenario = Scenario::robotics_9turn();
+    let mut table = Table::new(
+        "A5 — native-ratio Fig 3 (unscaled Rust-BPE tokenizer)",
+        &["raw_median_s", "tokenized_median_s", "speedup_pct"],
+    );
+    for (idx, name) in [(0usize, "m2_native"), (1usize, "tx2_native")] {
+        let mut medians = Vec::new();
+        for mode in [ContextMode::Raw, ContextMode::Tokenized] {
+            let turns =
+                common::run_scenario(&cluster, MobilityPolicy::Sticky(idx), mode, &scenario);
+            medians.push(Series::from(common::e2e_seconds(&turns)).median());
+        }
+        table.row(
+            name,
+            &[
+                medians[0],
+                medians[1],
+                pct_speedup(medians[0], medians[1]),
+            ],
+        );
+    }
+    emit(&table, "ablation_a5_native.csv");
+    println!(
+        "(our BPE at ~110 MB/s makes re-tokenization nearly free relative to \
+         inference — the paper's gap needs its llama.cpp cost ratio, cf. profile.rs)"
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let run_all = args.is_empty();
+    let want = |name: &str| run_all || args.iter().any(|a| a == name);
+
+    if want("binary-tokens") {
+        binary_tokens();
+    }
+    if want("retry-sweep") {
+        retry_sweep();
+    }
+    if want("context-scaling") {
+        context_scaling();
+    }
+    if want("bucket-sweep") {
+        bucket_sweep();
+    }
+    if want("native-profiles") {
+        native_profiles();
+    }
+}

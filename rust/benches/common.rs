@@ -1,0 +1,155 @@
+//! Shared harness for the paper-figure benchmarks.
+//!
+//! Every bench drives the real stack: PJRT engine (AOT JAX/Pallas model),
+//! HTTP servers, KV replication over TCP, LAN link models, and the
+//! calibrated M2/TX2 node profiles (see `profile.rs` for the calibration
+//! derivation). The paper's measurement protocol is mirrored: one warmup,
+//! three recorded repetitions, per-turn means with 95 % CIs, medians
+//! aggregated over turns.
+
+#![allow(dead_code)] // each bench binary uses a different subset
+
+use discedge::client::{Client, MobilityPolicy, TurnResult};
+use discedge::config::{ClusterConfig, ContextMode, EngineKind};
+use discedge::netsim::LinkModel;
+use discedge::server::EdgeCluster;
+use discedge::workload::Scenario;
+
+/// The model served by the testbed.
+pub const MODEL: &str = "discedge/tiny-chat";
+
+/// Paper generation settings.
+pub const MAX_TOKENS: usize = 128;
+
+/// Launch the paper's two-node testbed (edge-m2 + edge-tx2) with the PJRT
+/// engine, or the mock engine when `DISCEDGE_BENCH_ENGINE=mock` (CI runs
+/// without artifacts).
+pub fn testbed() -> EdgeCluster {
+    let mut cfg = ClusterConfig::two_node_testbed();
+    cfg.client_link = LinkModel::lan();
+    if std::env::var("DISCEDGE_BENCH_ENGINE").as_deref() == Ok("mock") {
+        cfg.engine = EngineKind::Mock {
+            // Rough emulation of the PJRT engine's measured per-token costs
+            // so protocol-level effects keep realistic proportions.
+            prefill_ns_per_token: 300_000,
+            decode_ns_per_token: 2_000_000,
+        };
+    }
+    eprintln!("[bench] launching testbed (engine compile ~15 s)...");
+    EdgeCluster::launch(cfg).expect("testbed launch (run `make artifacts` first)")
+}
+
+/// Run the 9-turn robotics scenario once with a fresh session.
+/// Returns one `TurnResult` per turn; quiesces between turns (the paper's
+/// client is sequential and the async update is off the measured path).
+pub fn run_scenario(
+    cluster: &EdgeCluster,
+    policy: MobilityPolicy,
+    mode: ContextMode,
+    scenario: &Scenario,
+) -> Vec<TurnResult> {
+    let mut client = Client::connect(cluster.endpoints(), policy)
+        .with_mode(mode)
+        .with_model(MODEL)
+        .with_link(LinkModel::lan())
+        .with_max_tokens(MAX_TOKENS);
+    let mut out = Vec::with_capacity(scenario.len());
+    for turn in scenario.turns() {
+        let r = client
+            .chat(&turn.prompt)
+            .unwrap_or_else(|e| panic!("turn {} failed: {e}", turn.number));
+        out.push(r);
+        cluster.quiesce();
+    }
+    out
+}
+
+/// Repetition count for figure benches (`DISCEDGE_BENCH_REPS`, default 5;
+/// the paper used 3 but had a dedicated testbed — this host shares one
+/// core between client, servers, and XLA, so paired medians over a couple
+/// more repetitions keep the single-core noise below the effect sizes).
+pub fn repetitions() -> usize {
+    std::env::var("DISCEDGE_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5)
+}
+
+/// Run `variants` interleaved within each repetition (paired design:
+/// slow drift of the shared host affects all variants of a repetition
+/// equally). Returns one `PerTurn` per variant, in order.
+pub fn interleaved_per_turn<K: Copy>(
+    reps: usize,
+    warmup: usize,
+    variants: &[K],
+    mut run: impl FnMut(K) -> Vec<f64>,
+) -> Vec<discedge::benchkit::PerTurn> {
+    use discedge::benchkit::PerTurn;
+    use discedge::metrics::Series;
+    let mut out: Vec<PerTurn> = variants
+        .iter()
+        .map(|_| PerTurn { turns: Vec::new() })
+        .collect();
+    for rep in 0..warmup + reps {
+        for (vi, &v) in variants.iter().enumerate() {
+            let samples = run(v);
+            if rep < warmup {
+                continue;
+            }
+            let pt = &mut out[vi];
+            if pt.turns.len() < samples.len() {
+                pt.turns.resize_with(samples.len(), Series::new);
+            }
+            for (i, s) in samples.iter().enumerate() {
+                pt.turns[i].push(*s);
+            }
+        }
+    }
+    out
+}
+
+/// Extract client-observed end-to-end seconds per turn.
+pub fn e2e_seconds(turns: &[TurnResult]) -> Vec<f64> {
+    turns.iter().map(|t| t.e2e_s).collect()
+}
+
+/// Tokens/second per turn: generated tokens over server processing time
+/// (tokenize + engine), the paper's Fig 4 metric.
+pub fn tps(turns: &[TurnResult]) -> Vec<f64> {
+    turns
+        .iter()
+        .map(|t| {
+            let server_s =
+                t.response.timings.tokenize_s + t.response.timings.prefill_s + t.response.timings.decode_s;
+            t.response.tokens_generated as f64 / server_s.max(1e-9)
+        })
+        .collect()
+}
+
+/// Print the headline comparison the paper reports: median speedup of
+/// `new` over `base` (lower-is-better series).
+pub fn print_median_speedup(label: &str, base: &discedge::metrics::Series, new: &discedge::metrics::Series) {
+    let s = discedge::metrics::pct_speedup(base.median(), new.median());
+    println!(
+        "{label}: median base {:.3} -> new {:.3}  ({s:+.2}% speedup)",
+        base.median(),
+        new.median()
+    );
+}
+
+/// Median of *paired* per-(turn, repetition) speedups — the robust
+/// headline statistic: each pair shares the turn's context length and the
+/// repetition's host state, so the estimate is insensitive to the growth
+/// curve and to host drift.
+pub fn paired_median_speedup(
+    base: &discedge::benchkit::PerTurn,
+    new: &discedge::benchkit::PerTurn,
+) -> f64 {
+    let mut speedups = discedge::metrics::Series::new();
+    for (b_turn, n_turn) in base.turns.iter().zip(new.turns.iter()) {
+        for (b, n) in b_turn.samples().iter().zip(n_turn.samples().iter()) {
+            speedups.push((b - n) / b * 100.0);
+        }
+    }
+    speedups.median()
+}

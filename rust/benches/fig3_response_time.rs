@@ -1,0 +1,76 @@
+//! **Figure 3**: client-observable response time per turn, tokenized vs
+//! raw context storage, on the M2-profile and TX2-profile nodes.
+//!
+//! Paper result: tokenized wins — median speedup 14.46 % (TX2) and
+//! 8.75 % (M2); error bars are 95 % CIs over the repetitions. Modes are
+//! interleaved within each repetition (paired design) to cancel the
+//! shared-host drift of this single-core testbed.
+//!
+//! Run: `cargo bench --bench fig3_response_time`
+//! Output: per-turn table + headline medians; CSV in `results/fig3.csv`.
+
+#[path = "common.rs"]
+mod common;
+
+use discedge::benchkit::{emit, per_turn_table};
+use discedge::client::MobilityPolicy;
+use discedge::config::ContextMode;
+use discedge::workload::Scenario;
+
+fn main() {
+    let cluster = common::testbed();
+    let scenario = Scenario::robotics_9turn();
+    let reps = common::repetitions();
+
+    // node 0 = edge-m2, node 1 = edge-tx2 (ClusterConfig::two_node_testbed)
+    let mut results = Vec::new();
+    for (node_idx, node_name) in [(0usize, "m2"), (1usize, "tx2")] {
+        eprintln!("[fig3] node {node_name}, {reps} paired reps");
+        let modes = [ContextMode::Raw, ContextMode::Tokenized];
+        let per_mode = common::interleaved_per_turn(reps, 1, &modes, |mode| {
+            let turns = common::run_scenario(
+                &cluster,
+                MobilityPolicy::Sticky(node_idx),
+                mode,
+                &scenario,
+            );
+            common::e2e_seconds(&turns)
+        });
+        for (mode, pt) in modes.iter().zip(per_mode) {
+            results.push((format!("{node_name}/{}", mode.as_str()), pt));
+        }
+    }
+
+    let variants: Vec<(&str, &discedge::benchkit::PerTurn)> = results
+        .iter()
+        .map(|(name, pt)| (name.as_str(), pt))
+        .collect();
+    let table = per_turn_table(
+        "Fig 3 — response time per turn (s), tokenized vs raw",
+        &variants,
+    );
+    emit(&table, "fig3.csv");
+
+    println!("\nHeadline (paper: TX2 14.46%, M2 8.75% median speedup):");
+    for node in ["m2", "tx2"] {
+        let raw = &results
+            .iter()
+            .find(|(n, _)| n == &format!("{node}/raw"))
+            .unwrap()
+            .1;
+        let tok = &results
+            .iter()
+            .find(|(n, _)| n == &format!("{node}/tokenized"))
+            .unwrap()
+            .1;
+        common::print_median_speedup(
+            &format!("  {node} tokenized vs raw (all-sample medians)"),
+            &raw.all(),
+            &tok.all(),
+        );
+        println!(
+            "  {node} paired per-turn median speedup: {:+.2}%",
+            common::paired_median_speedup(raw, tok)
+        );
+    }
+}

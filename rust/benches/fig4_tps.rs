@@ -1,0 +1,82 @@
+//! **Figure 4**: tokens generated per second (TPS) per turn, tokenized vs
+//! raw context storage, on both node profiles.
+//!
+//! Paper result: a modest TPS gain for tokenized storage (+2.85 % TX2,
+//! +1.41 % M2), more pronounced on the resource-constrained node; TPS
+//! decreases as the context grows.
+//!
+//! Run: `cargo bench --bench fig4_tps` — CSV in `results/fig4.csv`.
+
+#[path = "common.rs"]
+mod common;
+
+use discedge::benchkit::{emit, per_turn_table};
+use discedge::client::MobilityPolicy;
+use discedge::config::ContextMode;
+use discedge::metrics::pct_change;
+use discedge::workload::Scenario;
+
+fn main() {
+    let cluster = common::testbed();
+    let scenario = Scenario::robotics_9turn();
+    let reps = common::repetitions();
+
+    let mut results = Vec::new();
+    for (node_idx, node_name) in [(0usize, "m2"), (1usize, "tx2")] {
+        eprintln!("[fig4] node {node_name}, {reps} paired reps");
+        let modes = [ContextMode::Raw, ContextMode::Tokenized];
+        let per_mode = common::interleaved_per_turn(reps, 1, &modes, |mode| {
+            let turns = common::run_scenario(
+                &cluster,
+                MobilityPolicy::Sticky(node_idx),
+                mode,
+                &scenario,
+            );
+            common::tps(&turns)
+        });
+        for (mode, pt) in modes.iter().zip(per_mode) {
+            results.push((format!("{node_name}/{}", mode.as_str()), pt));
+        }
+    }
+
+    let variants: Vec<(&str, &discedge::benchkit::PerTurn)> = results
+        .iter()
+        .map(|(name, pt)| (name.as_str(), pt))
+        .collect();
+    let table = per_turn_table("Fig 4 — tokens per second per turn", &variants);
+    emit(&table, "fig4.csv");
+
+    println!("\nHeadline (paper: +2.85% TX2, +1.41% M2 TPS for tokenized):");
+    for node in ["m2", "tx2"] {
+        let raw = results
+            .iter()
+            .find(|(n, _)| n == &format!("{node}/raw"))
+            .unwrap()
+            .1
+            .all();
+        let tok = results
+            .iter()
+            .find(|(n, _)| n == &format!("{node}/tokenized"))
+            .unwrap()
+            .1
+            .all();
+        println!(
+            "  {node}: raw {:.2} tps -> tokenized {:.2} tps ({:+.2}%)",
+            raw.median(),
+            tok.median(),
+            pct_change(raw.median(), tok.median())
+        );
+    }
+    // TPS decay with context growth (the paper's secondary observation).
+    let tok_m2 = &results
+        .iter()
+        .find(|(n, _)| n == "m2/tokenized")
+        .unwrap()
+        .1;
+    let means = tok_m2.means();
+    println!(
+        "  m2 tokenized TPS decay: turn1 {:.2} -> turn9 {:.2}",
+        means.first().unwrap_or(&f64::NAN),
+        means.last().unwrap_or(&f64::NAN)
+    );
+}

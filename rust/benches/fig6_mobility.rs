@@ -1,0 +1,85 @@
+//! **Figure 6**: client-observable response time per turn in the mobile
+//! scenario — the client switches edge nodes on turns 3, 5 and 7 —
+//! DisCEdge (edge-side tokenized) vs client-side context management.
+//!
+//! Paper result: DisCEdge wins despite handover synchronization — median
+//! speedup 5.93 % overall (2.51 % on M2 turns, 6.29 % on TX2 turns).
+//!
+//! Run: `cargo bench --bench fig6_mobility` — CSV `results/fig6.csv`.
+
+#[path = "common.rs"]
+mod common;
+
+use discedge::benchkit::{emit, per_turn_table, PerTurn};
+use discedge::client::MobilityPolicy;
+use discedge::config::ContextMode;
+use discedge::metrics::Series;
+use discedge::workload::Scenario;
+
+fn main() {
+    let cluster = common::testbed();
+    let scenario = Scenario::robotics_9turn();
+    let reps = common::repetitions();
+
+    let mut retries_seen = 0u64;
+    let modes = [ContextMode::ClientSide, ContextMode::Tokenized];
+    eprintln!("[fig6] {reps} paired reps");
+    let per_mode = common::interleaved_per_turn(reps, 1, &modes, |mode| {
+        let turns = common::run_scenario(
+            &cluster,
+            MobilityPolicy::paper_alternate(),
+            mode,
+            &scenario,
+        );
+        retries_seen += turns
+            .iter()
+            .map(|t| t.response.timings.retries)
+            .sum::<u64>();
+        common::e2e_seconds(&turns)
+    });
+    let results: Vec<(String, PerTurn)> = modes
+        .iter()
+        .zip(per_mode)
+        .map(|(m, p)| (m.as_str().to_string(), p))
+        .collect();
+
+    let variants: Vec<(&str, &PerTurn)> =
+        results.iter().map(|(n, p)| (n.as_str(), p)).collect();
+    let table = per_turn_table(
+        "Fig 6 — mobile client response time per turn (switches at 3/5/7)",
+        &variants,
+    );
+    emit(&table, "fig6.csv");
+
+    let client_side = &results[0].1;
+    let edge = &results[1].1;
+    println!("\nHeadline (paper: 5.93% overall; 2.51% M2, 6.29% TX2):");
+    common::print_median_speedup("  overall edge vs client-side", &client_side.all(), &edge.all());
+    println!(
+        "  paired per-turn median speedup: {:+.2}%",
+        common::paired_median_speedup(client_side, edge)
+    );
+
+    // Per-node split: the paper schedule serves turns 1,2,5,6 on M2 and
+    // 3,4,7,8,9 on TX2.
+    let split = |pt: &PerTurn, idxs: &[usize]| -> Series {
+        let mut s = Series::new();
+        for &i in idxs {
+            s.extend(&pt.turns[i]);
+        }
+        s
+    };
+    let m2_turns = [0usize, 1, 4, 5];
+    let tx2_turns = [2usize, 3, 6, 7, 8];
+    common::print_median_speedup(
+        "  M2-served turns",
+        &split(client_side, &m2_turns),
+        &split(edge, &m2_turns),
+    );
+    common::print_median_speedup(
+        "  TX2-served turns",
+        &split(client_side, &tx2_turns),
+        &split(edge, &tx2_turns),
+    );
+    println!("  consistency retries observed across runs: {retries_seen}");
+}

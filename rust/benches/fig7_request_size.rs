@@ -1,0 +1,66 @@
+//! **Figure 7**: client-to-server network usage (request bytes) per turn
+//! in the mobile scenario — DisCEdge vs client-side context management.
+//!
+//! Paper result: client-side requests grow linearly (full history shipped
+//! every turn); DisCEdge requests stay constant at prompt size — a median
+//! 90 % reduction.
+//!
+//! Run: `cargo bench --bench fig7_request_size` — CSV `results/fig7.csv`.
+
+#[path = "common.rs"]
+mod common;
+
+use discedge::benchkit::{emit, per_turn_table, Bench, PerTurn};
+use discedge::client::MobilityPolicy;
+use discedge::config::ContextMode;
+use discedge::metrics::Series;
+use discedge::workload::Scenario;
+
+fn main() {
+    let cluster = common::testbed();
+    let scenario = Scenario::robotics_9turn();
+    // Request sizes are deterministic given the scenario; repetitions
+    // only confirm that (CI collapses to ~0).
+    let bench = Bench::new("fig7").repetitions(3).warmup(0);
+
+    let mut results: Vec<(String, PerTurn)> = Vec::new();
+    for mode in [ContextMode::ClientSide, ContextMode::Tokenized] {
+        eprintln!("[fig7] {}", mode.as_str());
+        let per_turn = bench.run_per_turn(|_rep| {
+            common::run_scenario(
+                &cluster,
+                MobilityPolicy::paper_alternate(),
+                mode,
+                &scenario,
+            )
+            .iter()
+            .map(|t| t.request_bytes as f64)
+            .collect()
+        });
+        results.push((mode.as_str().to_string(), per_turn));
+    }
+
+    let variants: Vec<(&str, &PerTurn)> =
+        results.iter().map(|(n, p)| (n.as_str(), p)).collect();
+    let table = per_turn_table("Fig 7 — client request bytes per turn", &variants);
+    emit(&table, "fig7.csv");
+
+    // Median per-turn reduction (the paper's "median of 90%").
+    let client_side = results[0].1.means();
+    let edge = results[1].1.means();
+    let mut reductions = Series::new();
+    for (c, e) in client_side.iter().zip(edge.iter()) {
+        reductions.push((c - e) / c * 100.0);
+    }
+    println!(
+        "\nHeadline (paper: median 90% request-size reduction):\n  \
+         per-turn reduction median {:.1}% (min {:.1}%, max {:.1}%)\n  \
+         client-side growth: turn1 {:.0} B -> turn9 {:.0} B; edge stays ~{:.0} B",
+        reductions.median(),
+        reductions.min(),
+        reductions.max(),
+        client_side.first().unwrap(),
+        client_side.last().unwrap(),
+        edge.iter().sum::<f64>() / edge.len() as f64,
+    );
+}

@@ -1,0 +1,191 @@
+//! Microbenchmarks for the L3 hot paths (the perf-pass instrument):
+//! tokenizer encode, JSON codec on token arrays, context codecs, KV store
+//! ops, replication round-trip, HTTP round-trip, CM overhead with a
+//! zero-cost engine, and per-bucket PJRT generation latency.
+//!
+//! Run: `cargo bench --bench micro` — CSV `results/micro.csv`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use discedge::benchkit::{emit, results_dir, Bench};
+use discedge::context::{StoredContext, TokenCodec};
+use discedge::http::{Connection, Request, Response, Server};
+use discedge::json;
+use discedge::kvstore::{KvConfig, KvNode};
+use discedge::metrics::Table;
+use discedge::netsim::{LinkModel, TrafficMeter};
+use discedge::tokenizer::Tokenizer;
+use discedge::workload;
+
+fn time_per_op(iters: usize, mut f: impl FnMut()) -> f64 {
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let mut table = Table::new("Microbenchmarks", &["per_op_us", "ops_per_s"]);
+    let mut add = |name: &str, per_op_s: f64| {
+        println!("{name:<44} {:>10.2} us {:>14.0} op/s", per_op_s * 1e6, 1.0 / per_op_s);
+        table.row(name, &[per_op_s * 1e6, 1.0 / per_op_s]);
+    };
+
+    // Tokenizer encode at several context sizes.
+    let tok = match Tokenizer::load(std::path::Path::new("artifacts/tokenizer.json")) {
+        Ok(t) => Arc::new(t),
+        Err(_) => {
+            eprintln!("no tokenizer artifact; training a fallback");
+            Arc::new(Tokenizer::from_vocab(discedge::tokenizer::train(
+                &workload::corpus_with_size(123, 60_000),
+                &discedge::tokenizer::TrainConfig::default(),
+            )))
+        }
+    };
+    let text = workload::corpus_with_size(7, 64 * 1024);
+    for size in [256usize, 2048, 8192, 65536] {
+        let s = &text[..size];
+        add(
+            &format!("tokenizer_encode_{size}B"),
+            time_per_op(100, || {
+                std::hint::black_box(tok.encode(s));
+            }),
+        );
+    }
+
+    // JSON codec on a 1500-token array (late-turn context size).
+    let ids: Vec<u32> = (0..1500u32).map(|i| (i * 37) % 4096).collect();
+    let tok_doc = StoredContext::Tokens(ids.clone()).to_kv(9, TokenCodec::JsonInts);
+    add(
+        "json_serialize_1500_tokens",
+        time_per_op(1000, || {
+            std::hint::black_box(StoredContext::Tokens(ids.clone()).to_kv(9, TokenCodec::JsonInts));
+        }),
+    );
+    add(
+        "json_parse_1500_tokens",
+        time_per_op(1000, || {
+            std::hint::black_box(json::parse(&tok_doc).unwrap());
+        }),
+    );
+    add(
+        "binary_codec_1500_tokens_roundtrip",
+        time_per_op(1000, || {
+            let doc = StoredContext::Tokens(ids.clone()).to_kv(9, TokenCodec::BinaryU16);
+            std::hint::black_box(StoredContext::from_kv(&doc).unwrap());
+        }),
+    );
+
+    // KV store local ops.
+    let kv = KvNode::start(
+        "bench",
+        KvConfig {
+            peer_link: LinkModel::ideal(),
+            ..KvConfig::default()
+        },
+    )
+    .unwrap();
+    kv.create_keygroup("m");
+    let doc = tok_doc.clone();
+    let mut version = 0u64;
+    add(
+        "kv_put_5KB",
+        time_per_op(2000, || {
+            version += 1;
+            kv.put("m", "bench-key", doc.clone(), version).unwrap();
+        }),
+    );
+    add(
+        "kv_get_5KB",
+        time_per_op(2000, || {
+            std::hint::black_box(kv.get("m", "bench-key"));
+        }),
+    );
+
+    // Replication round-trip (local TCP, ideal link).
+    let peer = KvNode::start(
+        "peer",
+        KvConfig {
+            peer_link: LinkModel::ideal(),
+            ..KvConfig::default()
+        },
+    )
+    .unwrap();
+    peer.create_keygroup("m");
+    kv.add_peer("m", peer.replication_addr());
+    add(
+        "kv_replicate_5KB_roundtrip",
+        time_per_op(200, || {
+            version += 1;
+            kv.put("m", "bench-key", doc.clone(), version).unwrap();
+            kv.quiesce();
+        }),
+    );
+
+    // HTTP round-trip (loopback, ideal link).
+    let server = Server::serve(
+        0,
+        LinkModel::ideal(),
+        Arc::new(|_req: &Request| Response::json("{\"ok\":true}")),
+    )
+    .unwrap();
+    let mut conn = Connection::open(server.addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+    let req = Request::post_json("/x", &doc);
+    add(
+        "http_roundtrip_5KB",
+        time_per_op(500, || {
+            std::hint::black_box(conn.round_trip(&req).unwrap());
+        }),
+    );
+
+    // Full /completion turn with a zero-cost engine = pure CM + HTTP +
+    // KV overhead (what L3 adds on top of inference).
+    {
+        use discedge::client::{Client, MobilityPolicy};
+        use discedge::config::{ClusterConfig, ContextMode, EngineKind};
+        let mut cfg = ClusterConfig::single_node_mock();
+        cfg.engine = EngineKind::Mock {
+            prefill_ns_per_token: 0,
+            decode_ns_per_token: 0,
+        };
+        cfg.nodes[0].profile = discedge::profile::NodeProfile::m2_native();
+        let cluster = discedge::server::EdgeCluster::launch(cfg).unwrap();
+        let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+            .with_mode(ContextMode::Tokenized)
+            .with_max_tokens(16);
+        // Session warm (turn 1 creates it).
+        client.chat("warmup question").unwrap();
+        cluster.quiesce();
+        let mut turn = 0u64;
+        add(
+            "cm_turn_overhead_zero_cost_engine",
+            time_per_op(100, || {
+                turn += 1;
+                client.chat("another question about robots").unwrap();
+                cluster.quiesce();
+            }),
+        );
+    }
+
+    // PJRT generation per bucket (needs artifacts).
+    if std::path::Path::new("artifacts/model_meta.json").exists() {
+        let rt = discedge::runtime::ModelRuntime::load(std::path::Path::new("artifacts")).unwrap();
+        let meta = rt.meta().clone();
+        for &bucket in &meta.buckets {
+            let input: Vec<u32> = (0..bucket - 4).map(|i| (i as u32 * 7) % 4096).collect();
+            let b = Bench::new("gen").repetitions(3).warmup(1);
+            let s = b.run_timed(|| {
+                std::hint::black_box(rt.generate(&input, 128, u32::MAX).unwrap());
+            });
+            add(&format!("pjrt_generate_bucket_{bucket}_128new"), s.median());
+        }
+    } else {
+        eprintln!("skipping PJRT per-bucket bench (no artifacts)");
+    }
+
+    let dir = results_dir();
+    emit(&table, "micro.csv");
+    let _ = dir;
+}

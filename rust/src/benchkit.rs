@@ -1,0 +1,211 @@
+//! Benchmark harness (criterion substitute): warmup + timed repetitions,
+//! per-repetition series, figure-style result tables, and CSV export to
+//! `results/`.
+//!
+//! Every `cargo bench` target in `rust/benches/` is a `harness = false`
+//! binary built on this module; each regenerates one of the paper's
+//! figures (see DESIGN.md §6).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::metrics::{Series, Table};
+
+/// A benchmark run description.
+pub struct Bench {
+    /// Name used in output and CSV files.
+    pub name: String,
+    /// Number of measured repetitions (paper: 3).
+    pub repetitions: usize,
+    /// Number of warmup runs (not recorded).
+    pub warmup: usize,
+}
+
+impl Bench {
+    /// New benchmark with the paper's 3-repetition convention.
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            repetitions: 3,
+            warmup: 1,
+        }
+    }
+
+    /// Override repetition count.
+    pub fn repetitions(mut self, n: usize) -> Bench {
+        self.repetitions = n;
+        self
+    }
+
+    /// Override warmup count.
+    pub fn warmup(mut self, n: usize) -> Bench {
+        self.warmup = n;
+        self
+    }
+
+    /// Run `f` warmup+repetition times. `f` receives the repetition index
+    /// and returns one *series of per-turn samples*; the result collects,
+    /// per turn, the repetition samples (matching the paper's per-turn
+    /// error bars over 3 runs).
+    pub fn run_per_turn(&self, mut f: impl FnMut(usize) -> Vec<f64>) -> PerTurn {
+        for w in 0..self.warmup {
+            let _ = f(w);
+        }
+        let mut turns: Vec<Series> = Vec::new();
+        for rep in 0..self.repetitions {
+            let samples = f(rep);
+            if turns.len() < samples.len() {
+                turns.resize_with(samples.len(), Series::new);
+            }
+            for (i, s) in samples.iter().enumerate() {
+                turns[i].push(*s);
+            }
+        }
+        PerTurn { turns }
+    }
+
+    /// Time a closure `repetitions` times, returning seconds per run.
+    pub fn run_timed(&self, mut f: impl FnMut()) -> Series {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut out = Series::new();
+        for _ in 0..self.repetitions {
+            let t = Instant::now();
+            f();
+            out.push(t.elapsed().as_secs_f64());
+        }
+        out
+    }
+}
+
+/// Per-turn samples across repetitions.
+#[derive(Debug, Clone)]
+pub struct PerTurn {
+    /// One series per turn; each holds `repetitions` samples.
+    pub turns: Vec<Series>,
+}
+
+impl PerTurn {
+    /// Per-turn means.
+    pub fn means(&self) -> Vec<f64> {
+        self.turns.iter().map(|s| s.mean()).collect()
+    }
+
+    /// Per-turn 95% CI half-widths.
+    pub fn ci95s(&self) -> Vec<f64> {
+        self.turns.iter().map(|s| s.ci95()).collect()
+    }
+
+    /// All samples across turns and repetitions flattened (the paper's
+    /// "median response time" aggregates over turns).
+    pub fn all(&self) -> Series {
+        let mut s = Series::new();
+        for t in &self.turns {
+            s.extend(t);
+        }
+        s
+    }
+}
+
+/// Where CSVs/markdown land (`$DISCEDGE_RESULTS` or `./results`).
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("DISCEDGE_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// Print a table to stdout and save its CSV into the results dir.
+pub fn emit(table: &Table, csv_name: &str) {
+    println!("\n{}", table.markdown());
+    let dir = results_dir();
+    match table.write_csv(&dir, csv_name) {
+        Ok(()) => println!("[saved {}]", dir.join(csv_name).display()),
+        Err(e) => eprintln!("[warn: could not save {csv_name}: {e}]"),
+    }
+}
+
+/// Build the standard per-turn figure table: turn label, then
+/// (mean, ci95) column pairs per variant.
+pub fn per_turn_table(
+    title: &str,
+    variants: &[(&str, &PerTurn)],
+) -> Table {
+    let mut cols: Vec<String> = Vec::new();
+    for (name, _) in variants {
+        cols.push(format!("{name}_mean"));
+        cols.push(format!("{name}_ci95"));
+    }
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &col_refs);
+    let n_turns = variants
+        .iter()
+        .map(|(_, p)| p.turns.len())
+        .max()
+        .unwrap_or(0);
+    for turn in 0..n_turns {
+        let mut row = Vec::new();
+        for (_, p) in variants {
+            let (m, c) = p
+                .turns
+                .get(turn)
+                .map(|s| (s.mean(), s.ci95()))
+                .unwrap_or((f64::NAN, f64::NAN));
+            row.push(m);
+            row.push(c);
+        }
+        t.row(&format!("turn {}", turn + 1), &row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_turn_collects_by_turn() {
+        let b = Bench::new("t").repetitions(3).warmup(0);
+        let mut rep_no = 0;
+        let pt = b.run_per_turn(|_| {
+            rep_no += 1;
+            vec![rep_no as f64, 10.0 * rep_no as f64]
+        });
+        assert_eq!(pt.turns.len(), 2);
+        assert_eq!(pt.turns[0].samples(), &[1.0, 2.0, 3.0]);
+        assert_eq!(pt.turns[1].samples(), &[10.0, 20.0, 30.0]);
+        assert_eq!(pt.means()[0], 2.0);
+        assert_eq!(pt.all().len(), 6);
+    }
+
+    #[test]
+    fn warmup_not_recorded() {
+        let b = Bench::new("t").repetitions(2).warmup(3);
+        let mut calls = 0;
+        let pt = b.run_per_turn(|_| {
+            calls += 1;
+            vec![1.0]
+        });
+        assert_eq!(calls, 5);
+        assert_eq!(pt.turns[0].len(), 2);
+    }
+
+    #[test]
+    fn timed_runs() {
+        let b = Bench::new("t").repetitions(4).warmup(0);
+        let s = b.run_timed(|| std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(s.len(), 4);
+        assert!(s.min() >= 0.001);
+    }
+
+    #[test]
+    fn figure_table_shape() {
+        let a = PerTurn {
+            turns: vec![Series::from([1.0, 1.1, 0.9]), Series::from([2.0, 2.1, 1.9])],
+        };
+        let t = per_turn_table("fig", &[("raw", &a), ("tok", &a)]);
+        assert_eq!(t.columns.len(), 4);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0].label, "turn 1");
+    }
+}

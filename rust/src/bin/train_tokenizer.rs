@@ -1,0 +1,27 @@
+//! `train_tokenizer` — trains the production BPE vocabulary on the
+//! deterministic corpus and writes `artifacts/tokenizer.json`.
+//! Invoked by `make artifacts`.
+
+use discedge::cli::Args;
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let dir = std::path::PathBuf::from(args.opt_or("out-dir", "artifacts"));
+    let vocab_size: usize = args.opt_parse_or("vocab-size", 4096).unwrap_or(4096);
+    let t = std::time::Instant::now();
+    match discedge::server::train_production_tokenizer(&dir, vocab_size) {
+        Ok(vocab) => {
+            println!(
+                "trained tokenizer: {} merges, vocab {}, {:.2}s -> {}",
+                vocab.merges().len(),
+                vocab.size(),
+                t.elapsed().as_secs_f64(),
+                dir.join("tokenizer.json").display()
+            );
+        }
+        Err(e) => {
+            eprintln!("tokenizer training failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

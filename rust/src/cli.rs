@@ -1,0 +1,137 @@
+//! Tiny command-line argument parser (clap substitute) for the `discedge`
+//! launcher and the benchmark binaries.
+//!
+//! Supports `command [--flag] [--key value] [positional...]` with typed
+//! accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// `--flag` booleans.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("empty flag `--`".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map_or(false, |next| !next.starts_with("--"))
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Option value as string.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Option value with default.
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    /// Typed option value.
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("invalid value for --{name}: {s}"))),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn opt_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    /// Whether a boolean flag is present.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --port 8080 --profile m2 --verbose");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.opt("port"), Some("8080"));
+        assert_eq!(a.opt("profile"), Some("m2"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --reps=5 --mode=tokenized");
+        assert_eq!(a.opt("reps"), Some("5"));
+        assert_eq!(a.opt("mode"), Some("tokenized"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = parse("x --n 42");
+        assert_eq!(a.opt_parse::<u32>("n").unwrap(), Some(42));
+        assert_eq!(a.opt_parse_or("missing", 7u32).unwrap(), 7);
+        let bad = parse("x --n nope");
+        assert!(bad.opt_parse::<u32>("n").is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("run one two --k v three");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["one", "two", "three"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --verbose");
+        assert!(a.flag("verbose"));
+    }
+}

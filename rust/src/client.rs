@@ -1,0 +1,258 @@
+//! LLM client (paper §3.4): same request format as a centralized service
+//! plus the DisCEdge extensions (ids, turn counter), with mobility
+//! policies for the roaming experiments.
+//!
+//! In `client_side` mode the client keeps the full conversation history and
+//! ships it with every request — the baseline of §4.2.2. In the edge-side
+//! modes it only tracks ids + turn counter. Per-turn request/response byte
+//! counts come from the connection meter (Fig 7).
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::ContextMode;
+use crate::context::{CompletionRequest, CompletionResponse};
+use crate::http::{Connection, Request};
+use crate::llm::Message;
+use crate::netsim::{LinkModel, TrafficMeter};
+use crate::{Error, Result};
+
+/// Which node serves which turn (paper §4.2.2 mobility).
+#[derive(Debug, Clone)]
+pub enum MobilityPolicy {
+    /// Always the same node index.
+    Sticky(usize),
+    /// Switch to the next node every `every` turns over `nodes` — the
+    /// paper's scenario is `alternate(2)` over two nodes: switches happen
+    /// on turns 3, 5, 7 (after two turns, then every other turn...).
+    Alternate {
+        /// Node indices to cycle through.
+        nodes: Vec<usize>,
+        /// Turns spent on a node before moving on.
+        every: u32,
+    },
+    /// Explicit node index per turn (1-based turn -> index into vec).
+    Schedule(Vec<usize>),
+}
+
+impl MobilityPolicy {
+    /// The paper's mobile scenario: two nodes, switch after every 2 turns
+    /// until turn 7 (switch turns 3, 5, 7).
+    pub fn paper_alternate() -> MobilityPolicy {
+        // Turn:   1 2 3 4 5 6 7 8 9
+        // Node:   0 0 1 1 0 0 1 1 1   (switches at 3, 5, 7)
+        MobilityPolicy::Schedule(vec![0, 0, 1, 1, 0, 0, 1, 1, 1])
+    }
+
+    /// Node index for a 1-based turn.
+    pub fn node_for_turn(&self, turn: u64) -> usize {
+        match self {
+            MobilityPolicy::Sticky(i) => *i,
+            MobilityPolicy::Alternate { nodes, every } => {
+                let hop = ((turn - 1) / *every as u64) as usize;
+                nodes[hop % nodes.len()]
+            }
+            MobilityPolicy::Schedule(s) => {
+                let idx = (turn as usize - 1).min(s.len().saturating_sub(1));
+                s[idx]
+            }
+        }
+    }
+}
+
+/// Result of one client turn, including wire-level accounting.
+#[derive(Debug, Clone)]
+pub struct TurnResult {
+    /// Server response.
+    pub response: CompletionResponse,
+    /// End-to-end client-observed seconds.
+    pub e2e_s: f64,
+    /// Request bytes on the wire (HTTP head + body).
+    pub request_bytes: u64,
+    /// Response bytes on the wire.
+    pub response_bytes: u64,
+    /// Node name that served the turn.
+    pub node: String,
+}
+
+/// A chat client with a turn counter and optional client-side history.
+pub struct Client {
+    endpoints: Vec<(String, SocketAddr)>,
+    policy: MobilityPolicy,
+    link: LinkModel,
+    conns: HashMap<usize, Connection>,
+    meters: HashMap<usize, Arc<TrafficMeter>>,
+    /// Context mode for all requests.
+    pub mode: ContextMode,
+    /// Target model.
+    pub model: String,
+    user_id: Option<String>,
+    session_id: Option<String>,
+    turn: u64,
+    history: Vec<Message>,
+    max_tokens: Option<usize>,
+}
+
+impl Client {
+    /// New client over the cluster endpoints with a mobility policy.
+    pub fn connect(endpoints: Vec<(String, SocketAddr)>, policy: MobilityPolicy) -> Client {
+        Client {
+            endpoints,
+            policy,
+            link: LinkModel::ideal(),
+            conns: HashMap::new(),
+            meters: HashMap::new(),
+            mode: ContextMode::Tokenized,
+            model: "discedge/tiny-chat".into(),
+            user_id: None,
+            session_id: None,
+            turn: 0,
+            history: Vec::new(),
+            max_tokens: None,
+        }
+    }
+
+    /// Builder: client uplink model (e.g. [`LinkModel::mobile_uplink`]).
+    pub fn with_link(mut self, link: LinkModel) -> Client {
+        self.link = link;
+        self
+    }
+
+    /// Builder: context mode.
+    pub fn with_mode(mut self, mode: ContextMode) -> Client {
+        self.mode = mode;
+        self
+    }
+
+    /// Builder: model name.
+    pub fn with_model(mut self, model: &str) -> Client {
+        self.model = model.into();
+        self
+    }
+
+    /// Builder: max tokens per response.
+    pub fn with_max_tokens(mut self, n: usize) -> Client {
+        self.max_tokens = Some(n);
+        self
+    }
+
+    /// Current turn counter (turns completed).
+    pub fn turns_done(&self) -> u64 {
+        self.turn
+    }
+
+    /// Session identifiers once assigned.
+    pub fn session(&self) -> (Option<&str>, Option<&str>) {
+        (self.user_id.as_deref(), self.session_id.as_deref())
+    }
+
+    /// Send the next turn.
+    pub fn chat(&mut self, prompt: &str) -> Result<TurnResult> {
+        let turn = self.turn + 1;
+        let node_idx = self.policy.node_for_turn(turn);
+        let (node_name, addr) = self
+            .endpoints
+            .get(node_idx)
+            .cloned()
+            .ok_or_else(|| Error::Config(format!("mobility chose node {node_idx}, none such")))?;
+
+        let mut req = CompletionRequest::new(&self.model, prompt, turn, self.mode);
+        req.user_id = self.user_id.clone();
+        req.session_id = self.session_id.clone();
+        req.max_tokens = self.max_tokens;
+        if self.mode == ContextMode::ClientSide {
+            req.messages = self.history.clone();
+        }
+
+        let meter = self
+            .meters
+            .entry(node_idx)
+            .or_insert_with(TrafficMeter::new)
+            .clone();
+        let link = self.link.clone();
+        let conn = match self.conns.entry(node_idx) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(Connection::open(addr, meter.clone(), link)?)
+            }
+        };
+
+        let tx0 = meter.tx.get();
+        let rx0 = meter.rx.get();
+        let t = Instant::now();
+        let http_resp = conn.round_trip(&Request::post_json("/completion", &req.to_json()))?;
+        let e2e_s = t.elapsed().as_secs_f64();
+        if http_resp.status != 200 {
+            return Err(Error::Http(format!(
+                "node {node_name} returned {}: {}",
+                http_resp.status,
+                http_resp.body_str().unwrap_or("?")
+            )));
+        }
+        let response = CompletionResponse::from_json(http_resp.body_str()?)?;
+
+        // Commit client state only on success (failed turns are retried by
+        // the caller with the same counter — the client stays the source
+        // of truth for the interaction sequence).
+        self.turn = turn;
+        self.user_id = Some(response.user_id.clone());
+        self.session_id = Some(response.session_id.clone());
+        if self.mode == ContextMode::ClientSide {
+            self.history.push(Message::new("user", prompt));
+            self.history
+                .push(Message::new("assistant", &response.text));
+        }
+
+        Ok(TurnResult {
+            e2e_s,
+            request_bytes: meter.tx.get() - tx0,
+            response_bytes: meter.rx.get() - rx0,
+            node: node_name,
+            response,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_schedule_switches_on_3_5_7() {
+        let p = MobilityPolicy::paper_alternate();
+        let nodes: Vec<usize> = (1..=9).map(|t| p.node_for_turn(t)).collect();
+        assert_eq!(nodes, vec![0, 0, 1, 1, 0, 0, 1, 1, 1]);
+        // Switch turns are exactly 3, 5, 7.
+        let switches: Vec<u64> = (2..=9)
+            .filter(|&t| p.node_for_turn(t) != p.node_for_turn(t - 1))
+            .collect();
+        assert_eq!(switches, vec![3, 5, 7]);
+    }
+
+    #[test]
+    fn alternate_policy() {
+        let p = MobilityPolicy::Alternate {
+            nodes: vec![0, 1],
+            every: 2,
+        };
+        let nodes: Vec<usize> = (1..=8).map(|t| p.node_for_turn(t)).collect();
+        assert_eq!(nodes, vec![0, 0, 1, 1, 0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn sticky_policy() {
+        let p = MobilityPolicy::Sticky(1);
+        assert_eq!(p.node_for_turn(1), 1);
+        assert_eq!(p.node_for_turn(99), 1);
+    }
+
+    #[test]
+    fn schedule_clamps_past_end() {
+        let p = MobilityPolicy::Schedule(vec![0, 1]);
+        assert_eq!(p.node_for_turn(1), 0);
+        assert_eq!(p.node_for_turn(2), 1);
+        assert_eq!(p.node_for_turn(10), 1);
+    }
+}

@@ -1,0 +1,390 @@
+//! Configuration system: cluster topology, node profiles, links, model and
+//! consistency settings — loadable from JSON files and constructible in
+//! code for tests/benches.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::json::{self, Value};
+use crate::kvstore::ReplicationConfig;
+use crate::netsim::LinkModel;
+use crate::profile::NodeProfile;
+use crate::{Error, Result};
+
+/// Context storage mode (paper §4.1: raw / tokenized / client-side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ContextMode {
+    /// Server stores raw text; re-tokenizes the full history every turn.
+    Raw,
+    /// Server stores token ids; tokenizes only the new prompt (DisCEdge).
+    Tokenized,
+    /// Client ships the full history each request; server stores nothing.
+    ClientSide,
+}
+
+impl ContextMode {
+    /// Parse from the wire/config string.
+    pub fn parse(s: &str) -> Result<ContextMode> {
+        match s {
+            "raw" => Ok(ContextMode::Raw),
+            "tokenized" => Ok(ContextMode::Tokenized),
+            "client_side" | "client-side" => Ok(ContextMode::ClientSide),
+            _ => Err(Error::Config(format!("unknown context mode {s}"))),
+        }
+    }
+
+    /// Wire/config string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ContextMode::Raw => "raw",
+            ContextMode::Tokenized => "tokenized",
+            ContextMode::ClientSide => "client_side",
+        }
+    }
+}
+
+/// Consistency policy when the local replica is stale after retries
+/// (paper §3.3: strong by default, availability as an option).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConsistencyPolicy {
+    /// Fail the request (paper default).
+    Strict,
+    /// Proceed with the stale context.
+    Available,
+}
+
+impl ConsistencyPolicy {
+    /// Parse from the wire/config string.
+    pub fn parse(s: &str) -> Result<ConsistencyPolicy> {
+        match s {
+            "strict" => Ok(ConsistencyPolicy::Strict),
+            "available" => Ok(ConsistencyPolicy::Available),
+            _ => Err(Error::Config(format!("unknown consistency policy {s}"))),
+        }
+    }
+}
+
+/// Turn-counter consistency protocol tuning (paper §4.2: 3 retries,
+/// 10 ms backoff).
+#[derive(Debug, Clone)]
+pub struct ConsistencyConfig {
+    /// Max re-reads of the local replica when stale.
+    pub retries: u32,
+    /// Backoff between re-reads.
+    pub backoff: Duration,
+    /// Behaviour on exhaustion.
+    pub policy: ConsistencyPolicy,
+}
+
+impl Default for ConsistencyConfig {
+    fn default() -> ConsistencyConfig {
+        ConsistencyConfig {
+            retries: 3,
+            backoff: Duration::from_millis(10),
+            policy: ConsistencyPolicy::Strict,
+        }
+    }
+}
+
+/// Generation settings (paper §4.2: temp 0, seed 123, max 128 tokens).
+#[derive(Debug, Clone)]
+pub struct GenerationConfig {
+    /// Maximum new tokens per turn.
+    pub max_tokens: usize,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f64,
+    /// Sampling seed (unused at temperature 0, kept for fidelity).
+    pub seed: u64,
+}
+
+impl Default for GenerationConfig {
+    fn default() -> GenerationConfig {
+        GenerationConfig {
+            max_tokens: 128,
+            temperature: 0.0,
+            seed: 123,
+        }
+    }
+}
+
+/// Per-node configuration.
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    /// Node name (e.g. "edge-m2").
+    pub name: String,
+    /// Hardware profile.
+    pub profile: NodeProfile,
+    /// API port (0 = ephemeral).
+    pub api_port: u16,
+    /// KV replication port (0 = ephemeral).
+    pub kv_port: u16,
+    /// Models served by this node (keygroups joined).
+    pub models: Vec<String>,
+}
+
+/// Engine selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineKind {
+    /// AOT-compiled transformer via PJRT (the real stack).
+    Pjrt,
+    /// Deterministic mock engine (tests and protocol-only benches).
+    Mock {
+        /// Emulated per-context-token prefill cost.
+        prefill_ns_per_token: u64,
+        /// Emulated per-generated-token decode cost.
+        decode_ns_per_token: u64,
+    },
+}
+
+/// Whole-cluster configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Edge nodes.
+    pub nodes: Vec<NodeConfig>,
+    /// Inter-node link (replication traffic).
+    pub peer_link: LinkModel,
+    /// Client uplink (client -> edge API traffic).
+    pub client_link: LinkModel,
+    /// Replication behaviour.
+    pub replication: ReplicationConfig,
+    /// Turn-counter protocol settings.
+    pub consistency: ConsistencyConfig,
+    /// Generation settings.
+    pub generation: GenerationConfig,
+    /// Engine to run.
+    pub engine: EngineKind,
+    /// Directory with AOT artifacts (tokenizer.json, *.hlo.txt).
+    pub artifacts_dir: PathBuf,
+    /// Session TTL in the KV store.
+    pub session_ttl: Duration,
+}
+
+impl ClusterConfig {
+    /// The paper's two-node testbed: one M2-profile node, one TX2-profile
+    /// node, LAN peer link, mobile client uplink, PJRT engine.
+    pub fn two_node_testbed() -> ClusterConfig {
+        ClusterConfig {
+            nodes: vec![
+                NodeConfig {
+                    name: "edge-m2".into(),
+                    profile: NodeProfile::m2(),
+                    api_port: 0,
+                    kv_port: 0,
+                    models: vec!["discedge/tiny-chat".into()],
+                },
+                NodeConfig {
+                    name: "edge-tx2".into(),
+                    profile: NodeProfile::tx2(),
+                    api_port: 0,
+                    kv_port: 0,
+                    models: vec!["discedge/tiny-chat".into()],
+                },
+            ],
+            peer_link: LinkModel::lan(),
+            client_link: LinkModel::mobile_uplink(),
+            replication: ReplicationConfig::default(),
+            consistency: ConsistencyConfig::default(),
+            generation: GenerationConfig::default(),
+            engine: EngineKind::Pjrt,
+            artifacts_dir: default_artifacts_dir(),
+            session_ttl: Duration::from_secs(3600),
+        }
+    }
+
+    /// Single-node config for quick tests (mock engine, ideal links).
+    pub fn single_node_mock() -> ClusterConfig {
+        let mut cfg = ClusterConfig::two_node_testbed();
+        cfg.nodes.truncate(1);
+        cfg.peer_link = LinkModel::ideal();
+        cfg.client_link = LinkModel::ideal();
+        cfg.engine = EngineKind::Mock {
+            prefill_ns_per_token: 0,
+            decode_ns_per_token: 0,
+        };
+        cfg
+    }
+
+    /// Load from a JSON config file. Unspecified fields keep testbed
+    /// defaults.
+    pub fn load(path: &Path) -> Result<ClusterConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("read {}: {e}", path.display())))?;
+        ClusterConfig::from_json(&text)
+    }
+
+    /// Parse from a JSON string.
+    pub fn from_json(text: &str) -> Result<ClusterConfig> {
+        let v = json::parse(text)?;
+        let mut cfg = ClusterConfig::two_node_testbed();
+        if let Some(nodes) = v.get("nodes").and_then(|n| n.as_array()) {
+            cfg.nodes = nodes
+                .iter()
+                .map(parse_node)
+                .collect::<Result<Vec<NodeConfig>>>()?;
+        }
+        if let Some(e) = v.get("engine").and_then(|e| e.as_str()) {
+            cfg.engine = match e {
+                "pjrt" => EngineKind::Pjrt,
+                "mock" => EngineKind::Mock {
+                    prefill_ns_per_token: 1000,
+                    decode_ns_per_token: 100_000,
+                },
+                other => return Err(Error::Config(format!("unknown engine {other}"))),
+            };
+        }
+        if let Some(d) = v.get("artifacts_dir").and_then(|d| d.as_str()) {
+            cfg.artifacts_dir = PathBuf::from(d);
+        }
+        if let Some(c) = v.get("consistency") {
+            if let Some(r) = c.get("retries").and_then(|x| x.as_u64()) {
+                cfg.consistency.retries = r as u32;
+            }
+            if let Some(b) = c.get("backoff_ms").and_then(|x| x.as_u64()) {
+                cfg.consistency.backoff = Duration::from_millis(b);
+            }
+            if let Some(p) = c.get("policy").and_then(|x| x.as_str()) {
+                cfg.consistency.policy = ConsistencyPolicy::parse(p)?;
+            }
+        }
+        if let Some(g) = v.get("generation") {
+            if let Some(m) = g.get("max_tokens").and_then(|x| x.as_u64()) {
+                cfg.generation.max_tokens = m as usize;
+            }
+            if let Some(t) = g.get("temperature").and_then(|x| x.as_f64()) {
+                cfg.generation.temperature = t;
+            }
+            if let Some(s) = g.get("seed").and_then(|x| x.as_u64()) {
+                cfg.generation.seed = s;
+            }
+        }
+        if let Some(r) = v.get("replication") {
+            if let Some(d) = r.get("delay_ms").and_then(|x| x.as_u64()) {
+                cfg.replication.delay = Duration::from_millis(d);
+            }
+        }
+        if let Some(t) = v.get("session_ttl_s").and_then(|x| x.as_u64()) {
+            cfg.session_ttl = Duration::from_secs(t);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check the configuration.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes.is_empty() {
+            return Err(Error::Config("no nodes configured".into()));
+        }
+        let mut names: Vec<&str> = self.nodes.iter().map(|n| n.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.nodes.len() {
+            return Err(Error::Config("duplicate node names".into()));
+        }
+        for n in &self.nodes {
+            if n.models.is_empty() {
+                return Err(Error::Config(format!("node {} serves no models", n.name)));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_node(v: &Value) -> Result<NodeConfig> {
+    let name = v.req_str("name")?;
+    let profile_name = v.req_str("profile")?;
+    let profile = NodeProfile::by_name(&profile_name)
+        .ok_or_else(|| Error::Config(format!("unknown profile {profile_name}")))?;
+    let models = match v.get("models").and_then(|m| m.as_array()) {
+        Some(ms) => ms
+            .iter()
+            .map(|m| {
+                m.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| Error::Config("model name must be a string".into()))
+            })
+            .collect::<Result<Vec<String>>>()?,
+        None => vec!["discedge/tiny-chat".into()],
+    };
+    Ok(NodeConfig {
+        name,
+        profile,
+        api_port: v.get("api_port").and_then(|p| p.as_u64()).unwrap_or(0) as u16,
+        kv_port: v.get("kv_port").and_then(|p| p.as_u64()).unwrap_or(0) as u16,
+        models,
+    })
+}
+
+/// Default artifacts directory: `$DISCEDGE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("DISCEDGE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testbed_defaults() {
+        let cfg = ClusterConfig::two_node_testbed();
+        assert_eq!(cfg.nodes.len(), 2);
+        assert_eq!(cfg.consistency.retries, 3);
+        assert_eq!(cfg.consistency.backoff, Duration::from_millis(10));
+        assert_eq!(cfg.generation.max_tokens, 128);
+        assert_eq!(cfg.generation.seed, 123);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(ContextMode::parse("raw").unwrap(), ContextMode::Raw);
+        assert_eq!(
+            ContextMode::parse("tokenized").unwrap(),
+            ContextMode::Tokenized
+        );
+        assert_eq!(
+            ContextMode::parse("client_side").unwrap(),
+            ContextMode::ClientSide
+        );
+        assert!(ContextMode::parse("nope").is_err());
+        assert_eq!(ContextMode::Tokenized.as_str(), "tokenized");
+    }
+
+    #[test]
+    fn json_config_roundtrip() {
+        let cfg = ClusterConfig::from_json(
+            r#"{
+              "nodes": [
+                {"name": "a", "profile": "m2", "models": ["m"]},
+                {"name": "b", "profile": "tx2", "models": ["m"]}
+              ],
+              "engine": "mock",
+              "consistency": {"retries": 5, "backoff_ms": 20, "policy": "available"},
+              "generation": {"max_tokens": 64},
+              "replication": {"delay_ms": 15}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.nodes[1].profile.name, "tx2");
+        assert_eq!(cfg.consistency.retries, 5);
+        assert_eq!(cfg.consistency.policy, ConsistencyPolicy::Available);
+        assert_eq!(cfg.generation.max_tokens, 64);
+        assert_eq!(cfg.replication.delay, Duration::from_millis(15));
+        assert!(matches!(cfg.engine, EngineKind::Mock { .. }));
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(ClusterConfig::from_json(r#"{"nodes": []}"#).is_err());
+        assert!(ClusterConfig::from_json(
+            r#"{"nodes": [{"name":"a","profile":"warp9"}]}"#
+        )
+        .is_err());
+        assert!(ClusterConfig::from_json(
+            r#"{"nodes": [{"name":"a","profile":"m2"},{"name":"a","profile":"m2"}]}"#
+        )
+        .is_err());
+        assert!(ClusterConfig::from_json(r#"{"engine": "quantum"}"#).is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! Stored-context representations and their KV serialization.
+//!
+//! The paper stores context either as **raw text** or as **token ids**
+//! (DisCEdge). Token ids go on the wire as a JSON int array — which is why
+//! the paper's sync savings are a modest 13–15 %: JSON ints cost ~5–6
+//! bytes/token vs ~4–6 bytes/token for text. A denser base64(u16-LE)
+//! framing is implemented as well and evaluated in ablation A1 (the paper
+//! leaves this optimization on the table).
+
+use crate::json::{self, Value};
+use crate::{Error, Result};
+
+/// How token ids are framed inside the stored JSON document.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenCodec {
+    /// JSON array of integers (paper-faithful).
+    JsonInts,
+    /// base64-encoded little-endian u16 ids (ablation A1).
+    BinaryU16,
+}
+
+/// A session context as stored in the KV store.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoredContext {
+    /// Pre-tokenized history (DisCEdge mode).
+    Tokens(Vec<u32>),
+    /// Raw ChatML transcript text (baseline mode).
+    Text(String),
+}
+
+impl StoredContext {
+    /// Serialize to the KV document. `turns` is the version stamp kept in
+    /// the document for debuggability (the KV entry version is
+    /// authoritative).
+    pub fn to_kv(&self, turns: u64, codec: TokenCodec) -> String {
+        match self {
+            StoredContext::Tokens(ids) => match codec {
+                TokenCodec::JsonInts => Value::obj()
+                    .set("fmt", "tok")
+                    .set("turns", turns)
+                    .set("ids", ids.clone())
+                    .to_json(),
+                TokenCodec::BinaryU16 => Value::obj()
+                    .set("fmt", "tokb")
+                    .set("turns", turns)
+                    .set("ids", base64_encode(&ids_to_u16_le(ids)))
+                    .to_json(),
+            },
+            StoredContext::Text(text) => Value::obj()
+                .set("fmt", "raw")
+                .set("turns", turns)
+                .set("text", text.as_str())
+                .to_json(),
+        }
+    }
+
+    /// Parse back from the KV document.
+    pub fn from_kv(doc: &str) -> Result<(StoredContext, u64)> {
+        let v = json::parse(doc)?;
+        let turns = v.req_u64("turns")?;
+        let fmt = v.req_str("fmt")?;
+        let ctx = match fmt.as_str() {
+            "tok" => {
+                let ids = v
+                    .get("ids")
+                    .and_then(|i| i.as_int_array())
+                    .ok_or_else(|| Error::Context("tok doc missing ids".into()))?;
+                StoredContext::Tokens(ids)
+            }
+            "tokb" => {
+                let b64 = v.req_str("ids")?;
+                let bytes = base64_decode(&b64)
+                    .ok_or_else(|| Error::Context("bad base64 ids".into()))?;
+                StoredContext::Tokens(u16_le_to_ids(&bytes)?)
+            }
+            "raw" => StoredContext::Text(v.req_str("text")?),
+            other => return Err(Error::Context(format!("unknown context fmt {other}"))),
+        };
+        Ok((ctx, turns))
+    }
+
+    /// Length in tokens (tokens) or bytes (text) — for metrics.
+    pub fn size_units(&self) -> usize {
+        match self {
+            StoredContext::Tokens(ids) => ids.len(),
+            StoredContext::Text(t) => t.len(),
+        }
+    }
+}
+
+fn ids_to_u16_le(ids: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ids.len() * 2);
+    for &id in ids {
+        // Vocab is < 65536 by construction; saturate defensively.
+        let v = id.min(u16::MAX as u32) as u16;
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn u16_le_to_ids(bytes: &[u8]) -> Result<Vec<u32>> {
+    if bytes.len() % 2 != 0 {
+        return Err(Error::Context("odd u16 payload".into()));
+    }
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]) as u32)
+        .collect())
+}
+
+const B64: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 with padding.
+pub fn base64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity((data.len() + 2) / 3 * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        out.push(B64[(n >> 18) as usize & 63] as char);
+        out.push(B64[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            B64[(n >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            B64[n as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+/// Decode standard base64 (with padding). None on malformed input.
+pub fn base64_decode(s: &str) -> Option<Vec<u8>> {
+    fn val(c: u8) -> Option<u32> {
+        match c {
+            b'A'..=b'Z' => Some((c - b'A') as u32),
+            b'a'..=b'z' => Some((c - b'a' + 26) as u32),
+            b'0'..=b'9' => Some((c - b'0' + 52) as u32),
+            b'+' => Some(62),
+            b'/' => Some(63),
+            _ => None,
+        }
+    }
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for chunk in bytes.chunks(4) {
+        let pad = chunk.iter().filter(|&&c| c == b'=').count();
+        if pad > 2 {
+            return None;
+        }
+        let mut n = 0u32;
+        for (i, &c) in chunk.iter().enumerate() {
+            let v = if c == b'=' {
+                if i < 2 {
+                    return None; // padding only in last two slots
+                }
+                0
+            } else {
+                val(c)?
+            };
+            n = (n << 6) | v;
+        }
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn tokens_json_roundtrip() {
+        let c = StoredContext::Tokens(vec![1, 2, 300, 4095]);
+        let doc = c.to_kv(7, TokenCodec::JsonInts);
+        let (back, turns) = StoredContext::from_kv(&doc).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(turns, 7);
+    }
+
+    #[test]
+    fn tokens_binary_roundtrip() {
+        let c = StoredContext::Tokens(vec![0, 65535, 42, 4095]);
+        let doc = c.to_kv(3, TokenCodec::BinaryU16);
+        let (back, turns) = StoredContext::from_kv(&doc).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(turns, 3);
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let c = StoredContext::Text("<|im_start|>user\nhi ü<|im_end|>\n".into());
+        let (back, _) = StoredContext::from_kv(&c.to_kv(1, TokenCodec::JsonInts)).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn binary_is_smaller_than_json() {
+        let ids: Vec<u32> = (0..500).map(|i| (i * 7) % 4096).collect();
+        let c = StoredContext::Tokens(ids);
+        let json_len = c.to_kv(1, TokenCodec::JsonInts).len();
+        let bin_len = c.to_kv(1, TokenCodec::BinaryU16).len();
+        assert!(
+            (bin_len as f64) < 0.7 * json_len as f64,
+            "binary {bin_len} vs json {json_len}"
+        );
+    }
+
+    #[test]
+    fn base64_known_vectors() {
+        assert_eq!(base64_encode(b""), "");
+        assert_eq!(base64_encode(b"f"), "Zg==");
+        assert_eq!(base64_encode(b"fo"), "Zm8=");
+        assert_eq!(base64_encode(b"foo"), "Zm9v");
+        assert_eq!(base64_encode(b"foobar"), "Zm9vYmFy");
+        assert_eq!(base64_decode("Zm9vYmFy").unwrap(), b"foobar");
+        assert_eq!(base64_decode("Zg==").unwrap(), b"f");
+        assert!(base64_decode("Zg=").is_none());
+        assert!(base64_decode("@@@@").is_none());
+    }
+
+    #[test]
+    fn prop_base64_roundtrip() {
+        testkit::property(200, |rng| {
+            let data = rng.bytes(300);
+            let enc = base64_encode(&data);
+            assert_eq!(base64_decode(&enc).unwrap(), data);
+        });
+    }
+
+    #[test]
+    fn rejects_malformed_docs() {
+        assert!(StoredContext::from_kv("{}").is_err());
+        assert!(StoredContext::from_kv(r#"{"fmt":"tok","turns":1}"#).is_err());
+        assert!(StoredContext::from_kv(r#"{"fmt":"zzz","turns":1}"#).is_err());
+        assert!(StoredContext::from_kv(r#"{"fmt":"tokb","turns":1,"ids":"!!"}"#).is_err());
+        assert!(StoredContext::from_kv("not json").is_err());
+    }
+}

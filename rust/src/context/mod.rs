@@ -1,0 +1,741 @@
+//! The Context Manager (paper §3.1) — DisCEdge's core contribution.
+//!
+//! An intelligent middleware between the client and the LLM Service on
+//! each edge node. Responsibilities, mirroring the paper:
+//!
+//! - assign `user_id` / `session_id` on first contact;
+//! - enforce the **client-driven turn-counter consistency protocol** on
+//!   top of the KV store's eventual consistency: the local replica must
+//!   hold the session at version `turn - 1`; if stale, re-read with
+//!   bounded backoff (default 3 × 10 ms), then fail (`Strict`, default) or
+//!   proceed with stale context (`Available`);
+//! - maintain session context **pre-tokenized** so each turn only
+//!   tokenizes the new prompt (tokenized mode), or as raw text that is
+//!   re-tokenized wholesale every turn (raw baseline), or not at all
+//!   (client-side baseline);
+//! - after responding, **asynchronously** tokenize the new turn fragment
+//!   and append it to the stored context (the paper's async update step,
+//!   off the client-observable path);
+//! - stamp each KV write with the turn number as its version and the
+//!   session TTL.
+
+mod codec;
+mod protocol;
+
+pub use codec::{base64_decode, base64_encode, StoredContext, TokenCodec};
+pub use protocol::{CompletionRequest, CompletionResponse, Timings};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::{ConsistencyConfig, ConsistencyPolicy, ContextMode, GenerationConfig};
+use crate::kvstore::KvNode;
+use crate::llm::{ChatTemplate, Engine};
+use crate::metrics::Registry;
+use crate::profile::NodeProfile;
+use crate::testkit::Rng;
+use crate::{Error, Result};
+
+/// The per-node context manager.
+pub struct ContextManager {
+    node: String,
+    profile: NodeProfile,
+    template: ChatTemplate,
+    kv: Arc<KvNode>,
+    consistency: ConsistencyConfig,
+    generation: GenerationConfig,
+    session_ttl: Duration,
+    codec: TokenCodec,
+    id_gen: Mutex<(Rng, u64)>,
+    updates_queued: Arc<AtomicU64>,
+    updates_done: Arc<AtomicU64>,
+    /// session key -> highest context version queued for async write on
+    /// *this* node. Gives read-your-writes to a client that stays on the
+    /// same node (its next turn may arrive before the async update has
+    /// committed); cross-node staleness still goes through the paper's
+    /// retry protocol.
+    pending_updates: Arc<Mutex<HashMap<String, u64>>>,
+    /// Node metric registry (request counts, retry counts, latencies).
+    pub registry: Arc<Registry>,
+}
+
+impl ContextManager {
+    /// Build a context manager for one edge node.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        node: &str,
+        profile: NodeProfile,
+        template: ChatTemplate,
+        kv: Arc<KvNode>,
+        consistency: ConsistencyConfig,
+        generation: GenerationConfig,
+        session_ttl: Duration,
+        codec: TokenCodec,
+    ) -> ContextManager {
+        ContextManager {
+            node: node.to_string(),
+            profile,
+            template,
+            kv,
+            consistency,
+            generation,
+            session_ttl,
+            codec,
+            id_gen: Mutex::new((Rng::new(fxhash(node)), 0)),
+            updates_queued: Arc::new(AtomicU64::new(0)),
+            updates_done: Arc::new(AtomicU64::new(0)),
+            pending_updates: Arc::new(Mutex::new(HashMap::new())),
+            registry: Arc::new(Registry::new()),
+        }
+    }
+
+    /// The node name.
+    pub fn node_name(&self) -> &str {
+        &self.node
+    }
+
+    /// The chat template in use.
+    pub fn template(&self) -> &ChatTemplate {
+        &self.template
+    }
+
+    /// Handle one `/completion` request against `engine`.
+    pub fn handle(&self, req: &CompletionRequest, engine: &dyn Engine) -> Result<CompletionResponse> {
+        let start = Instant::now();
+        if req.model != engine.model_name() {
+            return Err(Error::BadRequest(format!(
+                "model {} not served by this engine",
+                req.model
+            )));
+        }
+        let (user_id, session_id) = self.assign_ids(req);
+        let key = session_key(&user_id, &session_id);
+        self.registry.incr("cm_requests_total", 1);
+
+        let mut timings = Timings::default();
+        let max_tokens = req.max_tokens.unwrap_or(self.generation.max_tokens);
+        let policy = req.consistency.unwrap_or(self.consistency.policy);
+
+        let (input_ids, history) = match req.mode {
+            ContextMode::ClientSide => {
+                // Stateless: render + tokenize everything, store nothing.
+                let text = self.template.render_messages(&req.messages, &req.prompt);
+                let t = Instant::now();
+                let ids = self
+                    .profile
+                    .tokenize_emulated(text.len(), || self.template.encode_transcript(&text));
+                timings.tokenize_s = t.elapsed().as_secs_f64();
+                (ids, None)
+            }
+            ContextMode::Tokenized => {
+                let (ctx, fetch) = self.fetch_context(req, &key, policy, ContextMode::Tokenized)?;
+                timings.fetch_s = fetch.0;
+                timings.retries = fetch.1;
+                let history_ids = match ctx {
+                    Some(StoredContext::Tokens(ids)) => ids,
+                    Some(StoredContext::Text(_)) => {
+                        return Err(Error::Context(
+                            "session stored as raw text; mode mismatch".into(),
+                        ))
+                    }
+                    // Fresh session: preamble is assembled (tokenized) now.
+                    None => {
+                        let t = Instant::now();
+                        let preamble_len = self.template.preamble_text().len();
+                        let ids = self
+                            .profile
+                            .tokenize_emulated(preamble_len, || self.template.preamble_ids());
+                        timings.tokenize_s += t.elapsed().as_secs_f64();
+                        ids
+                    }
+                };
+                // Only the *new prompt* is tokenized on the request path —
+                // the paper's core optimization.
+                let t = Instant::now();
+                let turn_text_len = self.template.user_turn_text(&req.prompt).len();
+                let new_ids = self
+                    .profile
+                    .tokenize_emulated(turn_text_len, || self.template.user_turn_ids(&req.prompt));
+                timings.tokenize_s += t.elapsed().as_secs_f64();
+                let mut input = history_ids.clone();
+                input.extend_from_slice(&new_ids);
+                (input, Some(StoredContext::Tokens(history_ids)))
+            }
+            ContextMode::Raw => {
+                let (ctx, fetch) = self.fetch_context(req, &key, policy, ContextMode::Raw)?;
+                timings.fetch_s = fetch.0;
+                timings.retries = fetch.1;
+                let history_text = match ctx {
+                    Some(StoredContext::Text(t)) => t,
+                    Some(StoredContext::Tokens(_)) => {
+                        return Err(Error::Context(
+                            "session stored tokenized; mode mismatch".into(),
+                        ))
+                    }
+                    None => self.template.preamble_text(),
+                };
+                // Baseline: the whole transcript is re-tokenized each turn.
+                let full_text = format!(
+                    "{history_text}{}",
+                    self.template.user_turn_text(&req.prompt)
+                );
+                let t = Instant::now();
+                let ids = self
+                    .profile
+                    .tokenize_emulated(full_text.len(), || {
+                        self.template.encode_transcript(&full_text)
+                    });
+                timings.tokenize_s = t.elapsed().as_secs_f64();
+                (ids, Some(StoredContext::Text(history_text)))
+            }
+        };
+
+        // Context-window guard (paper §2.1.2): drop oldest content, keep
+        // the preamble, when the input would overflow the model.
+        let budget = engine.max_context().saturating_sub(max_tokens);
+        let input_ids = self.truncate_to_budget(input_ids, budget);
+
+        // Inference. The engine reports its CPU cost; the profile extends
+        // wall time to the emulated device class and the timings expose
+        // the device-perceived cost (what the paper's TPS metric divides
+        // by).
+        let gen = engine.generate(&input_ids, max_tokens, self.template.stop_id())?;
+        self.profile.extend_inference(gen.prefill_s + gen.decode_s);
+        timings.prefill_s = self.profile.scaled_inference_s(gen.prefill_s);
+        timings.decode_s = self.profile.scaled_inference_s(gen.decode_s);
+        let response_text = self.template.decode(&gen.ids);
+
+        // Asynchronous context update (tokenized + raw modes).
+        if let Some(history) = history {
+            self.spawn_update(
+                req.model.clone(),
+                key,
+                req.turn,
+                history,
+                req.prompt.clone(),
+                response_text.clone(),
+            );
+        }
+
+        timings.total_s = start.elapsed().as_secs_f64();
+        self.registry.observe("cm_request_s", timings.total_s);
+        self.registry
+            .incr("cm_retries_total", timings.retries);
+        Ok(CompletionResponse {
+            text: response_text,
+            user_id,
+            session_id,
+            turn: req.turn,
+            tokens_generated: gen.ids.len(),
+            prefill_tokens: gen.prefill_tokens,
+            node: self.node.clone(),
+            timings,
+        })
+    }
+
+    /// Assign user/session ids when absent (paper §3.1).
+    fn assign_ids(&self, req: &CompletionRequest) -> (String, String) {
+        let mut gen = self.id_gen.lock().unwrap();
+        let user = req.user_id.clone().unwrap_or_else(|| {
+            gen.1 += 1;
+            format!("u-{:08x}-{}", gen.0.next_u64() as u32, gen.1)
+        });
+        let session = req.session_id.clone().unwrap_or_else(|| {
+            gen.1 += 1;
+            format!("s-{:08x}-{}", gen.0.next_u64() as u32, gen.1)
+        });
+        (user, session)
+    }
+
+    /// The turn-counter consistency protocol (paper §3.1/§3.3): read the
+    /// local replica; expect version `turn - 1`; retry on staleness.
+    ///
+    /// Returns the context (None for a fresh session) and
+    /// `(fetch_seconds, retries)`.
+    fn fetch_context(
+        &self,
+        req: &CompletionRequest,
+        key: &str,
+        policy: ConsistencyPolicy,
+        mode: ContextMode,
+    ) -> Result<(Option<StoredContext>, (f64, u64))> {
+        let t = Instant::now();
+        let expected = req.turn - 1;
+        if expected == 0 {
+            // New session. A leftover entry (e.g. expired client restart)
+            // is superseded; turn 1 always starts fresh.
+            return Ok((None, (t.elapsed().as_secs_f64(), 0)));
+        }
+        let mut retries = 0u64;
+        // Local read-your-writes: if this node itself queued the update
+        // the client is waiting on, poll briefly instead of burning
+        // protocol retries (bounded in case the update thread died).
+        let local_deadline = Instant::now() + Duration::from_millis(250);
+        loop {
+            match self.kv.get(&req.model, key) {
+                Some(entry) if entry.version >= req.turn => {
+                    return Err(Error::BadRequest(format!(
+                        "turn {} is behind stored version {} (counter reset?)",
+                        req.turn, entry.version
+                    )));
+                }
+                Some(entry) if entry.version == expected => {
+                    let (ctx, _) = StoredContext::from_kv(&entry.value)?;
+                    self.check_mode(&ctx, mode)?;
+                    return Ok((Some(ctx), (t.elapsed().as_secs_f64(), retries)));
+                }
+                stale => {
+                    if self.has_pending_local_update(key, expected)
+                        && Instant::now() < local_deadline
+                    {
+                        std::thread::sleep(Duration::from_micros(500));
+                        continue;
+                    }
+                    // Missing or behind: replication from the previous
+                    // node has not landed yet.
+                    if retries >= self.consistency.retries as u64 {
+                        return match policy {
+                            ConsistencyPolicy::Strict => Err(Error::Consistency(format!(
+                                "context for {key} stale after {retries} retries \
+                                 (have v{}, need v{expected})",
+                                stale.map(|e| e.version).unwrap_or(0),
+                            ))),
+                            ConsistencyPolicy::Available => {
+                                self.registry.incr("cm_stale_served_total", 1);
+                                let ctx = match stale {
+                                    Some(e) => Some(StoredContext::from_kv(&e.value)?.0),
+                                    None => None,
+                                };
+                                Ok((ctx, (t.elapsed().as_secs_f64(), retries)))
+                            }
+                        };
+                    }
+                    retries += 1;
+                    std::thread::sleep(self.consistency.backoff);
+                }
+            }
+        }
+    }
+
+    /// Whether this node has queued (but not yet committed) an async
+    /// update that would satisfy `expected`.
+    fn has_pending_local_update(&self, key: &str, expected: u64) -> bool {
+        self.pending_updates
+            .lock()
+            .unwrap()
+            .get(key)
+            .map_or(false, |&v| v >= expected)
+    }
+
+    fn check_mode(&self, ctx: &StoredContext, mode: ContextMode) -> Result<()> {
+        match (ctx, mode) {
+            (StoredContext::Tokens(_), ContextMode::Tokenized)
+            | (StoredContext::Text(_), ContextMode::Raw) => Ok(()),
+            _ => Err(Error::Context("stored context mode mismatch".into())),
+        }
+    }
+
+    /// Keep the tail within `budget` tokens, preserving the preamble.
+    fn truncate_to_budget(&self, ids: Vec<u32>, budget: usize) -> Vec<u32> {
+        if ids.len() <= budget {
+            return ids;
+        }
+        let preamble_len = self.template.preamble_ids().len().min(budget);
+        let tail_budget = budget - preamble_len;
+        let mut out = ids[..preamble_len].to_vec();
+        out.extend_from_slice(&ids[ids.len() - tail_budget..]);
+        self.registry.incr("cm_truncations_total", 1);
+        out
+    }
+
+    /// Background context update: tokenize the new turn fragment (the
+    /// paper's async tokenization step), append, and write to the KV
+    /// store with the turn number as version.
+    fn spawn_update(
+        &self,
+        model: String,
+        key: String,
+        turn: u64,
+        history: StoredContext,
+        prompt: String,
+        response: String,
+    ) {
+        self.updates_queued.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut pending = self.pending_updates.lock().unwrap();
+            let e = pending.entry(key.clone()).or_insert(0);
+            *e = (*e).max(turn);
+        }
+        let kv = self.kv.clone();
+        let template = self.template.clone();
+        let profile = self.profile.clone();
+        let ttl = self.session_ttl;
+        let codec = self.codec;
+        let done = self.updates_done.clone();
+        let pending_map = self.pending_updates.clone();
+        let registry = self.registry.clone();
+        let _ = std::thread::Builder::new()
+            .name("cm-update".into())
+            .spawn(move || {
+                let t = Instant::now();
+                let doc = match history {
+                    StoredContext::Tokens(mut ids) => {
+                        // Async tokenization of the new fragment only.
+                        let fragment = format!(
+                            "{}{}",
+                            template.user_turn_text(&prompt),
+                            template.close_text(&response)
+                        );
+                        let frag_ids = profile
+                            .update_tokenize_emulated(fragment.len(), || {
+                                template.encode_transcript(&fragment)
+                            });
+                        ids.extend(frag_ids);
+                        StoredContext::Tokens(ids).to_kv(turn, codec)
+                    }
+                    StoredContext::Text(mut text) => {
+                        // Raw mode: plain string append, no tokenization.
+                        text.push_str(&template.user_turn_text(&prompt));
+                        text.push_str(&template.close_text(&response));
+                        StoredContext::Text(text).to_kv(turn, codec)
+                    }
+                };
+                registry.observe("cm_async_update_s", t.elapsed().as_secs_f64());
+                if let Err(e) = kv.put_ttl(&model, &key, doc, turn, Some(ttl)) {
+                    // Benign when an out-of-order update lost the LWW race.
+                    registry.incr("cm_update_conflicts_total", 1);
+                    let _ = e;
+                }
+                {
+                    // Clear the read-your-writes marker unless a newer
+                    // update for this session has been queued since.
+                    let mut pending = pending_map.lock().unwrap();
+                    if pending.get(&key) == Some(&turn) {
+                        pending.remove(&key);
+                    }
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+    }
+
+    /// Wait for queued async updates to be written locally, then for the
+    /// KV replicator to drain. Used at turn boundaries in tests/benches.
+    pub fn quiesce(&self) {
+        while self.updates_done.load(Ordering::SeqCst) < self.updates_queued.load(Ordering::SeqCst)
+        {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        self.kv.quiesce();
+    }
+}
+
+/// Session KV key.
+pub fn session_key(user_id: &str, session_id: &str) -> String {
+    format!("{user_id}/{session_id}")
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::KvConfig;
+    use crate::llm::MockEngine;
+    use crate::netsim::LinkModel;
+    use crate::tokenizer::{train, Tokenizer, TrainConfig};
+
+    const MODEL: &str = "discedge/tiny-chat";
+
+    fn make_cm(kv: Arc<KvNode>) -> ContextManager {
+        let corpus = crate::workload::corpus_with_size(1, 30_000);
+        let tok = Tokenizer::from_vocab(train(
+            &corpus,
+            &TrainConfig {
+                vocab_size: 512,
+                ..TrainConfig::default()
+            },
+        ));
+        let template = ChatTemplate::new(Arc::new(tok)).unwrap();
+        ContextManager::new(
+            "test-node",
+            NodeProfile::m2_native(),
+            template,
+            kv,
+            ConsistencyConfig::default(),
+            GenerationConfig::default(),
+            Duration::from_secs(60),
+            TokenCodec::BinaryU16,
+        )
+    }
+
+    fn make_kv() -> Arc<KvNode> {
+        let kv = KvNode::start(
+            "test",
+            KvConfig {
+                peer_link: LinkModel::ideal(),
+                ..KvConfig::default()
+            },
+        )
+        .unwrap();
+        kv.create_keygroup(MODEL);
+        Arc::new(kv)
+    }
+
+    fn engine() -> MockEngine {
+        MockEngine::new(MODEL, 512).with_fixed_len(16)
+    }
+
+    #[test]
+    fn first_turn_assigns_ids() {
+        let cm = make_cm(make_kv());
+        let req = CompletionRequest::new(MODEL, "hello robot", 1, ContextMode::Tokenized);
+        let resp = cm.handle(&req, &engine()).unwrap();
+        assert!(resp.user_id.starts_with("u-"));
+        assert!(resp.session_id.starts_with("s-"));
+        assert_eq!(resp.turn, 1);
+        assert_eq!(resp.tokens_generated, 16);
+    }
+
+    #[test]
+    fn tokenized_session_grows_context() {
+        let kv = make_kv();
+        let cm = make_cm(kv.clone());
+        let e = engine();
+        let mut req = CompletionRequest::new(MODEL, "What is SLAM?", 1, ContextMode::Tokenized);
+        let r1 = cm.handle(&req, &e).unwrap();
+        cm.quiesce();
+        // Stored context now at version 1.
+        let key = session_key(&r1.user_id, &r1.session_id);
+        let entry = kv.get(MODEL, &key).unwrap();
+        assert_eq!(entry.version, 1);
+
+        req.user_id = Some(r1.user_id.clone());
+        req.session_id = Some(r1.session_id.clone());
+        req.turn = 2;
+        req.prompt = "Tell me more".into();
+        let r2 = cm.handle(&req, &e).unwrap();
+        assert!(
+            r2.prefill_tokens > r1.prefill_tokens,
+            "turn 2 must see a longer context ({} vs {})",
+            r2.prefill_tokens,
+            r1.prefill_tokens
+        );
+    }
+
+    #[test]
+    fn tokenized_and_raw_feed_identical_ids_to_engine() {
+        // The central correctness property across modes (paper Fig 2):
+        // prefill length must be identical turn by turn.
+        let kv = make_kv();
+        let cm = make_cm(kv);
+        let e = engine();
+        let prompts = ["What is SLAM?", "Tell me more", "And the challenges?"];
+
+        let run = |mode: ContextMode| -> Vec<usize> {
+            let mut out = Vec::new();
+            let mut user = None;
+            let mut session = None;
+            for (i, p) in prompts.iter().enumerate() {
+                let mut req = CompletionRequest::new(MODEL, p, (i + 1) as u64, mode);
+                req.user_id = user.clone();
+                req.session_id = session.clone();
+                let r = cm.handle(&req, &e).unwrap();
+                cm.quiesce();
+                user = Some(r.user_id.clone());
+                session = Some(r.session_id.clone());
+                out.push(r.prefill_tokens);
+            }
+            out
+        };
+
+        let tok = run(ContextMode::Tokenized);
+        let raw = run(ContextMode::Raw);
+        assert_eq!(tok, raw, "modes must present identical inputs");
+    }
+
+    #[test]
+    fn raw_mode_tokenizes_more_each_turn() {
+        let cm = make_cm(make_kv());
+        let e = engine();
+        let mut user = None;
+        let mut session = None;
+        let mut tok_times = Vec::new();
+        for i in 1..=4u64 {
+            let mut req = CompletionRequest::new(
+                MODEL,
+                "Explain the particle filter in detail please",
+                i,
+                ContextMode::Raw,
+            );
+            req.user_id = user.clone();
+            req.session_id = session.clone();
+            let r = cm.handle(&req, &e).unwrap();
+            cm.quiesce();
+            user = Some(r.user_id.clone());
+            session = Some(r.session_id.clone());
+            tok_times.push(r.prefill_tokens);
+        }
+        // Prefill tokens grow strictly: the raw mode re-tokenizes an
+        // ever-larger transcript.
+        assert!(tok_times.windows(2).all(|w| w[1] > w[0]), "{tok_times:?}");
+    }
+
+    #[test]
+    fn stale_context_strict_fails_then_available_serves() {
+        let kv = make_kv();
+        let mut cm = make_cm(kv);
+        cm.consistency.retries = 1;
+        cm.consistency.backoff = Duration::from_millis(1);
+        let e = engine();
+        // Claim turn 5 of a session that has no stored context at all.
+        let mut req = CompletionRequest::new(MODEL, "hi", 5, ContextMode::Tokenized);
+        req.user_id = Some("u1".into());
+        req.session_id = Some("s1".into());
+        let err = cm.handle(&req, &e).unwrap_err();
+        assert!(matches!(err, Error::Consistency(_)), "{err}");
+        // Available policy proceeds with a fresh context instead.
+        req.consistency = Some(ConsistencyPolicy::Available);
+        let resp = cm.handle(&req, &e).unwrap();
+        assert_eq!(resp.turn, 5);
+        assert_eq!(resp.timings.retries, 1);
+    }
+
+    #[test]
+    fn retry_succeeds_when_replication_lands_midway() {
+        let kv = make_kv();
+        let cm = Arc::new(make_cm(kv.clone()));
+        let e = engine();
+        // Seed a session at version 1 *after* a delay, while the request
+        // for turn 2 is already waiting in the retry loop.
+        let doc = StoredContext::Tokens(vec![60, 61, 62]).to_kv(1, TokenCodec::BinaryU16);
+        let kv2 = kv.clone();
+        let writer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(12));
+            kv2.put("discedge/tiny-chat", "u1/s1", doc, 1).unwrap();
+        });
+        let mut req = CompletionRequest::new(MODEL, "go on", 2, ContextMode::Tokenized);
+        req.user_id = Some("u1".into());
+        req.session_id = Some("s1".into());
+        let resp = cm.handle(&req, &e).unwrap();
+        writer.join().unwrap();
+        assert!(resp.timings.retries >= 1, "must have retried");
+        assert!(resp.timings.retries <= 3);
+    }
+
+    #[test]
+    fn same_node_consecutive_turns_read_own_writes() {
+        // Even with ZERO protocol retries, a client that stays on the
+        // same node must never see its own async update as staleness.
+        let kv = make_kv();
+        let mut cm = make_cm(kv);
+        cm.consistency.retries = 0;
+        let e = engine();
+        let mut user = None;
+        let mut session = None;
+        for i in 1..=5u64 {
+            let mut req =
+                CompletionRequest::new(MODEL, "keep going", i, ContextMode::Tokenized);
+            req.user_id = user.clone();
+            req.session_id = session.clone();
+            // Deliberately NO quiesce between turns.
+            let r = cm.handle(&req, &e).unwrap_or_else(|err| {
+                panic!("turn {i} failed despite local pending update: {err}")
+            });
+            user = Some(r.user_id);
+            session = Some(r.session_id);
+            assert_eq!(r.timings.retries, 0, "local RYW must not burn retries");
+        }
+    }
+
+    #[test]
+    fn turn_behind_server_rejected() {
+        let kv = make_kv();
+        let cm = make_cm(kv.clone());
+        let doc = StoredContext::Tokens(vec![60]).to_kv(4, TokenCodec::BinaryU16);
+        kv.put(MODEL, "u1/s1", doc, 4).unwrap();
+        let mut req = CompletionRequest::new(MODEL, "hi", 3, ContextMode::Tokenized);
+        req.user_id = Some("u1".into());
+        req.session_id = Some("s1".into());
+        let err = cm.handle(&req, &engine()).unwrap_err();
+        assert!(matches!(err, Error::BadRequest(_)), "{err}");
+    }
+
+    #[test]
+    fn client_side_mode_stores_nothing() {
+        let kv = make_kv();
+        let cm = make_cm(kv.clone());
+        let mut req = CompletionRequest::new(MODEL, "hi", 1, ContextMode::ClientSide);
+        req.messages = vec![crate::llm::Message::new("user", "earlier q")];
+        let resp = cm.handle(&req, &engine()).unwrap();
+        cm.quiesce();
+        assert!(kv.is_empty(), "client-side mode must not persist context");
+        assert!(resp.tokens_generated > 0);
+    }
+
+    #[test]
+    fn mode_mismatch_detected() {
+        let kv = make_kv();
+        let cm = make_cm(kv.clone());
+        let doc = StoredContext::Text("history".into()).to_kv(1, TokenCodec::BinaryU16);
+        kv.put(MODEL, "u1/s1", doc, 1).unwrap();
+        let mut req = CompletionRequest::new(MODEL, "hi", 2, ContextMode::Tokenized);
+        req.user_id = Some("u1".into());
+        req.session_id = Some("s1".into());
+        assert!(cm.handle(&req, &engine()).is_err());
+    }
+
+    #[test]
+    fn truncation_respects_budget_and_preamble() {
+        let kv = make_kv();
+        let cm = make_cm(kv);
+        let preamble = cm.template.preamble_ids();
+        let mut ids = preamble.clone();
+        ids.extend(std::iter::repeat(70u32).take(5000));
+        let out = cm.truncate_to_budget(ids, 100);
+        assert_eq!(out.len(), 100);
+        assert_eq!(&out[..preamble.len()], &preamble[..]);
+        assert_eq!(out[99], 70);
+    }
+
+    #[test]
+    fn wrong_model_rejected() {
+        let cm = make_cm(make_kv());
+        let req = CompletionRequest::new("other/model", "hi", 1, ContextMode::Tokenized);
+        assert!(cm.handle(&req, &engine()).is_err());
+    }
+
+    #[test]
+    fn async_update_equals_sync_assembly() {
+        // After quiesce, the stored tokenized context must equal what the
+        // raw transcript would tokenize to — the invariant that lets a
+        // *different* node continue the session.
+        let kv = make_kv();
+        let cm = make_cm(kv.clone());
+        let e = engine();
+        let req = CompletionRequest::new(MODEL, "What is SLAM?", 1, ContextMode::Tokenized);
+        let r = cm.handle(&req, &e).unwrap();
+        cm.quiesce();
+        let key = session_key(&r.user_id, &r.session_id);
+        let entry = kv.get(MODEL, &key).unwrap();
+        let (StoredContext::Tokens(stored), _) = StoredContext::from_kv(&entry.value).unwrap()
+        else {
+            panic!("expected tokens")
+        };
+        let transcript = format!(
+            "{}{}{}",
+            cm.template.preamble_text(),
+            cm.template.user_turn_text("What is SLAM?"),
+            cm.template.close_text(&r.text),
+        );
+        assert_eq!(stored, cm.template.encode_transcript(&transcript));
+    }
+}

@@ -1,0 +1,314 @@
+//! Wire protocol of the extended `/completion` API (paper §3.4, §4.1).
+//!
+//! Clients use the same request format as a centralized LLM service plus
+//! the DisCEdge extensions: `user_id` / `session_id` (assigned by the
+//! Context Manager on first contact), the client-maintained `turn`
+//! counter, and the context `mode`. In `client_side` mode the request
+//! additionally carries the full message history — the linear-growth
+//! payload that Fig 7 measures.
+
+use crate::config::{ConsistencyPolicy, ContextMode};
+use crate::json::{self, Value};
+use crate::llm::Message;
+use crate::{Error, Result};
+
+/// A `/completion` request.
+#[derive(Debug, Clone)]
+pub struct CompletionRequest {
+    /// Target model (selects the KV keygroup and the engine).
+    pub model: String,
+    /// The new user prompt.
+    pub prompt: String,
+    /// User identifier (None on first contact; CM assigns).
+    pub user_id: Option<String>,
+    /// Session identifier (None on first contact; CM assigns).
+    pub session_id: Option<String>,
+    /// Client-driven turn counter, 1-based.
+    pub turn: u64,
+    /// Context storage mode.
+    pub mode: ContextMode,
+    /// Full history (client-side mode only).
+    pub messages: Vec<Message>,
+    /// Max new tokens (None = server default).
+    pub max_tokens: Option<usize>,
+    /// Per-request consistency override.
+    pub consistency: Option<ConsistencyPolicy>,
+}
+
+impl CompletionRequest {
+    /// Minimal request for a given mode.
+    pub fn new(model: &str, prompt: &str, turn: u64, mode: ContextMode) -> CompletionRequest {
+        CompletionRequest {
+            model: model.into(),
+            prompt: prompt.into(),
+            user_id: None,
+            session_id: None,
+            turn,
+            mode,
+            messages: Vec::new(),
+            max_tokens: None,
+            consistency: None,
+        }
+    }
+
+    /// Serialize to the JSON body.
+    pub fn to_json(&self) -> String {
+        let mut v = Value::obj()
+            .set("model", self.model.as_str())
+            .set("prompt", self.prompt.as_str())
+            .set("turn", self.turn)
+            .set("mode", self.mode.as_str());
+        if let Some(u) = &self.user_id {
+            v = v.set("user_id", u.as_str());
+        }
+        if let Some(s) = &self.session_id {
+            v = v.set("session_id", s.as_str());
+        }
+        if let Some(m) = self.max_tokens {
+            v = v.set("max_tokens", m);
+        }
+        if let Some(c) = self.consistency {
+            v = v.set(
+                "consistency",
+                match c {
+                    ConsistencyPolicy::Strict => "strict",
+                    ConsistencyPolicy::Available => "available",
+                },
+            );
+        }
+        if !self.messages.is_empty() {
+            let msgs: Vec<Value> = self
+                .messages
+                .iter()
+                .map(|m| {
+                    Value::obj()
+                        .set("role", m.role.as_str())
+                        .set("content", m.content.as_str())
+                })
+                .collect();
+            v = v.set("messages", msgs);
+        }
+        v.to_json()
+    }
+
+    /// Parse from the JSON body.
+    pub fn from_json(body: &str) -> Result<CompletionRequest> {
+        let v = json::parse(body)?;
+        let model = v.req_str("model")?;
+        let prompt = v.req_str("prompt")?;
+        let turn = v.req_u64("turn")?;
+        if turn == 0 {
+            return Err(Error::BadRequest("turn counter must be >= 1".into()));
+        }
+        let mode = ContextMode::parse(&v.req_str("mode")?)?;
+        let messages = match v.get("messages").and_then(|m| m.as_array()) {
+            Some(arr) => arr
+                .iter()
+                .map(|m| {
+                    Ok(Message {
+                        role: m.req_str("role")?,
+                        content: m.req_str("content")?,
+                    })
+                })
+                .collect::<Result<Vec<Message>>>()?,
+            None => Vec::new(),
+        };
+        Ok(CompletionRequest {
+            model,
+            prompt,
+            user_id: v.get("user_id").and_then(|x| x.as_str()).map(String::from),
+            session_id: v
+                .get("session_id")
+                .and_then(|x| x.as_str())
+                .map(String::from),
+            turn,
+            mode,
+            messages,
+            max_tokens: v
+                .get("max_tokens")
+                .and_then(|x| x.as_u64())
+                .map(|x| x as usize),
+            consistency: match v.get("consistency").and_then(|x| x.as_str()) {
+                Some(s) => Some(ConsistencyPolicy::parse(s)?),
+                None => None,
+            },
+        })
+    }
+}
+
+/// Server-side timing breakdown returned with each response (drives the
+/// paper's TPS and latency decomposition).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Timings {
+    /// Seconds tokenizing on the request path.
+    pub tokenize_s: f64,
+    /// Seconds in engine prefill.
+    pub prefill_s: f64,
+    /// Seconds in engine decode.
+    pub decode_s: f64,
+    /// Seconds fetching context from the KV replica (incl. retries).
+    pub fetch_s: f64,
+    /// Stale-context re-reads performed.
+    pub retries: u64,
+    /// Total server-side handling time.
+    pub total_s: f64,
+}
+
+/// A `/completion` response.
+#[derive(Debug, Clone)]
+pub struct CompletionResponse {
+    /// Generated text.
+    pub text: String,
+    /// Assigned/echoed user id.
+    pub user_id: String,
+    /// Assigned/echoed session id.
+    pub session_id: String,
+    /// Echoed turn counter.
+    pub turn: u64,
+    /// Number of generated tokens.
+    pub tokens_generated: usize,
+    /// Context tokens processed in prefill.
+    pub prefill_tokens: usize,
+    /// Name of the serving node.
+    pub node: String,
+    /// Timing breakdown.
+    pub timings: Timings,
+}
+
+impl CompletionResponse {
+    /// Serialize to the JSON body.
+    pub fn to_json(&self) -> String {
+        let timings = Value::obj()
+            .set("tokenize_s", self.timings.tokenize_s)
+            .set("prefill_s", self.timings.prefill_s)
+            .set("decode_s", self.timings.decode_s)
+            .set("fetch_s", self.timings.fetch_s)
+            .set("retries", self.timings.retries)
+            .set("total_s", self.timings.total_s);
+        Value::obj()
+            .set("text", self.text.as_str())
+            .set("user_id", self.user_id.as_str())
+            .set("session_id", self.session_id.as_str())
+            .set("turn", self.turn)
+            .set("tokens_generated", self.tokens_generated)
+            .set("prefill_tokens", self.prefill_tokens)
+            .set("node", self.node.as_str())
+            .set("timings", timings)
+            .to_json()
+    }
+
+    /// Parse from the JSON body.
+    pub fn from_json(body: &str) -> Result<CompletionResponse> {
+        let v = json::parse(body)?;
+        let t = v
+            .get("timings")
+            .cloned()
+            .unwrap_or_else(Value::obj);
+        let f = |k: &str| t.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+        Ok(CompletionResponse {
+            text: v.req_str("text")?,
+            user_id: v.req_str("user_id")?,
+            session_id: v.req_str("session_id")?,
+            turn: v.req_u64("turn")?,
+            tokens_generated: v.req_u64("tokens_generated")? as usize,
+            prefill_tokens: v.req_u64("prefill_tokens")? as usize,
+            node: v.req_str("node")?,
+            timings: Timings {
+                tokenize_s: f("tokenize_s"),
+                prefill_s: f("prefill_s"),
+                decode_s: f("decode_s"),
+                fetch_s: f("fetch_s"),
+                retries: t.get("retries").and_then(|x| x.as_u64()).unwrap_or(0),
+                total_s: f("total_s"),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_minimal() {
+        let r = CompletionRequest::new("m", "hello", 1, ContextMode::Tokenized);
+        let back = CompletionRequest::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.model, "m");
+        assert_eq!(back.prompt, "hello");
+        assert_eq!(back.turn, 1);
+        assert_eq!(back.mode, ContextMode::Tokenized);
+        assert!(back.user_id.is_none());
+    }
+
+    #[test]
+    fn request_roundtrip_full() {
+        let mut r = CompletionRequest::new("m", "p", 3, ContextMode::ClientSide);
+        r.user_id = Some("u1".into());
+        r.session_id = Some("s1".into());
+        r.max_tokens = Some(64);
+        r.consistency = Some(ConsistencyPolicy::Available);
+        r.messages = vec![
+            Message::new("user", "hi"),
+            Message::new("assistant", "hello!"),
+        ];
+        let back = CompletionRequest::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.user_id.as_deref(), Some("u1"));
+        assert_eq!(back.messages.len(), 2);
+        assert_eq!(back.messages[1].content, "hello!");
+        assert_eq!(back.max_tokens, Some(64));
+        assert_eq!(back.consistency, Some(ConsistencyPolicy::Available));
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(CompletionRequest::from_json("{}").is_err());
+        assert!(CompletionRequest::from_json(
+            r#"{"model":"m","prompt":"p","turn":0,"mode":"raw"}"#
+        )
+        .is_err());
+        assert!(CompletionRequest::from_json(
+            r#"{"model":"m","prompt":"p","turn":1,"mode":"warp"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = CompletionResponse {
+            text: "hi there".into(),
+            user_id: "u".into(),
+            session_id: "s".into(),
+            turn: 2,
+            tokens_generated: 42,
+            prefill_tokens: 310,
+            node: "edge-m2".into(),
+            timings: Timings {
+                tokenize_s: 0.001,
+                prefill_s: 0.2,
+                decode_s: 1.5,
+                fetch_s: 0.0001,
+                retries: 1,
+                total_s: 1.71,
+            },
+        };
+        let back = CompletionResponse::from_json(&resp.to_json()).unwrap();
+        assert_eq!(back.text, "hi there");
+        assert_eq!(back.timings, resp.timings);
+        assert_eq!(back.prefill_tokens, 310);
+    }
+
+    #[test]
+    fn client_side_request_grows_with_history() {
+        // Fig 7's mechanism: client-side payload grows linearly.
+        let mut small = CompletionRequest::new("m", "p", 3, ContextMode::ClientSide);
+        small.messages = vec![Message::new("user", "hi")];
+        let mut big = small.clone();
+        for i in 0..20 {
+            big.messages.push(Message::new(
+                if i % 2 == 0 { "assistant" } else { "user" },
+                &"long answer text ".repeat(30),
+            ));
+        }
+        assert!(big.to_json().len() > small.to_json().len() + 8000);
+    }
+}

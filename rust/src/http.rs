@@ -1,0 +1,435 @@
+//! Minimal HTTP/1.1 implementation over std TCP (hyper/axum substitute).
+//!
+//! Supports what the DisCEdge API needs: `POST`/`GET` with
+//! `Content-Length` bodies, a threaded server with graceful shutdown, and
+//! keep-alive client connections. Each request/response is serialized into
+//! a single `write` call so the [`crate::netsim::LinkModel`] charges exactly
+//! one message per HTTP message.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::netsim::{LinkModel, MeteredStream, TrafficMeter};
+use crate::{Error, Result};
+
+/// Maximum accepted body size (guards the parser against hostile peers).
+pub const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// An HTTP request (server-side view and client-side builder).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Method, e.g. `GET` / `POST`.
+    pub method: String,
+    /// Path with no query parsing (the API uses plain paths).
+    pub path: String,
+    /// Lower-cased header map.
+    pub headers: BTreeMap<String, String>,
+    /// Raw body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Build a POST request with a JSON body.
+    pub fn post_json(path: &str, json: &str) -> Request {
+        let mut headers = BTreeMap::new();
+        headers.insert("content-type".into(), "application/json".into());
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            headers,
+            body: json.as_bytes().to_vec(),
+        }
+    }
+
+    /// Build a GET request.
+    pub fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            headers: BTreeMap::new(),
+            body: Vec::new(),
+        }
+    }
+
+    /// Serialize into a single wire buffer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut head = format!("{} {} HTTP/1.1\r\n", self.method, self.path);
+        for (k, v) in &self.headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\n\r\n", self.body.len()));
+        let mut out = head.into_bytes();
+        out.extend_from_slice(&self.body);
+        out
+    }
+
+    /// Body as UTF-8.
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|_| Error::Http("body is not utf-8".into()))
+    }
+}
+
+/// An HTTP response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Status code.
+    pub status: u16,
+    /// Lower-cased header map.
+    pub headers: BTreeMap<String, String>,
+    /// Raw body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// 200 with a JSON body.
+    pub fn json(json: &str) -> Response {
+        let mut headers = BTreeMap::new();
+        headers.insert("content-type".into(), "application/json".into());
+        Response {
+            status: 200,
+            headers,
+            body: json.as_bytes().to_vec(),
+        }
+    }
+
+    /// 200 with a plain-text body.
+    pub fn text(text: &str) -> Response {
+        let mut headers = BTreeMap::new();
+        headers.insert("content-type".into(), "text/plain".into());
+        Response {
+            status: 200,
+            headers,
+            body: text.as_bytes().to_vec(),
+        }
+    }
+
+    /// Error response with a JSON `{"error": ...}` body.
+    pub fn error(status: u16, message: &str) -> Response {
+        let body = crate::json::Value::obj().set("error", message).to_json();
+        let mut headers = BTreeMap::new();
+        headers.insert("content-type".into(), "application/json".into());
+        Response {
+            status,
+            headers,
+            body: body.into_bytes(),
+        }
+    }
+
+    /// Serialize into a single wire buffer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let reason = match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            409 => "Conflict",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Status",
+        };
+        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, reason);
+        for (k, v) in &self.headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\n\r\n", self.body.len()));
+        let mut out = head.into_bytes();
+        out.extend_from_slice(&self.body);
+        out
+    }
+
+    /// Body as UTF-8.
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|_| Error::Http("body is not utf-8".into()))
+    }
+}
+
+fn read_head<R: BufRead>(r: &mut R) -> Result<(String, BTreeMap<String, String>)> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Err(Error::Http("connection closed".into()));
+    }
+    let start = line.trim_end().to_string();
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            return Err(Error::Http("eof in headers".into()));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h
+            .split_once(':')
+            .ok_or_else(|| Error::Http(format!("bad header line {h:?}")))?;
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+    Ok((start, headers))
+}
+
+fn read_body<R: BufRead>(r: &mut R, headers: &BTreeMap<String, String>) -> Result<Vec<u8>> {
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse().map_err(|_| Error::Http("bad content-length".into())))
+        .transpose()?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        return Err(Error::Http(format!("body too large: {len}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Parse one request from a buffered stream.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request> {
+    let (start, headers) = read_head(r)?;
+    let mut parts = start.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| Error::Http("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| Error::Http("missing path".into()))?
+        .to_string();
+    let body = read_body(r, &headers)?;
+    Ok(Request {
+        method,
+        path,
+        headers,
+        body,
+    })
+}
+
+/// Parse one response from a buffered stream.
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response> {
+    let (start, headers) = read_head(r)?;
+    let status: u16 = start
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Http(format!("bad status line {start:?}")))?;
+    let body = read_body(r, &headers)?;
+    Ok(Response {
+        status,
+        headers,
+        body,
+    })
+}
+
+/// A persistent client connection with per-connection metering and link
+/// model (the emulated client uplink or LAN hop).
+pub struct Connection {
+    stream: BufReader<MeteredStream<TcpStream>>,
+    /// Peer address.
+    pub addr: SocketAddr,
+}
+
+impl Connection {
+    /// Open a connection to `addr` over the given link.
+    pub fn open(addr: SocketAddr, meter: Arc<TrafficMeter>, link: LinkModel) -> Result<Connection> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Connection {
+            stream: BufReader::new(MeteredStream::new(stream, meter, link)),
+            addr,
+        })
+    }
+
+    /// Send a request and wait for the response (single in-flight request,
+    /// as in the paper's single-client experiments).
+    pub fn round_trip(&mut self, req: &Request) -> Result<Response> {
+        let bytes = req.to_bytes();
+        self.stream.get_mut().write_all(&bytes)?;
+        self.stream.get_mut().flush()?;
+        read_response(&mut self.stream)
+    }
+}
+
+/// Handler signature for the threaded server.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A small threaded HTTP server: one thread per connection, keep-alive,
+/// graceful stop.
+pub struct Server {
+    /// Bound local address.
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Meter counting all bytes through this server's accepted sockets.
+    pub meter: Arc<TrafficMeter>,
+}
+
+impl Server {
+    /// Bind to `127.0.0.1:port` (0 = ephemeral) and serve `handler` on a
+    /// background accept loop. Accepted sockets are wrapped with `link`.
+    pub fn serve(port: u16, link: LinkModel, handler: Handler) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let meter = TrafficMeter::new();
+        let accept_stop = stop.clone();
+        let accept_meter = meter.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("http-accept-{}", addr.port()))
+            .spawn(move || {
+                accept_loop(listener, accept_stop, accept_meter, link, handler);
+            })?;
+        Ok(Server {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            meter,
+        })
+    }
+
+    /// Stop accepting and join the accept loop. Existing connection
+    /// threads exit when their peers disconnect.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    meter: Arc<TrafficMeter>,
+    link: LinkModel,
+    handler: Handler,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                let meter = meter.clone();
+                let link = link.clone();
+                let handler = handler.clone();
+                let stop = stop.clone();
+                let _ = std::thread::Builder::new()
+                    .name("http-conn".into())
+                    .spawn(move || {
+                        let metered = MeteredStream::new(stream, meter, link);
+                        let mut reader = BufReader::new(metered);
+                        loop {
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            match read_request(&mut reader) {
+                                Ok(req) => {
+                                    let resp = handler(&req);
+                                    let bytes = resp.to_bytes();
+                                    if reader.get_mut().write_all(&bytes).is_err() {
+                                        break;
+                                    }
+                                    let _ = reader.get_mut().flush();
+                                }
+                                Err(_) => break, // peer closed or bad request
+                            }
+                        }
+                    });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> Server {
+        Server::serve(
+            0,
+            LinkModel::ideal(),
+            Arc::new(|req: &Request| {
+                if req.path == "/echo" {
+                    Response::json(req.body_str().unwrap_or("{}"))
+                } else {
+                    Response::error(404, "not found")
+                }
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn round_trip_json() {
+        let server = echo_server();
+        let meter = TrafficMeter::new();
+        let mut conn = Connection::open(server.addr, meter.clone(), LinkModel::ideal()).unwrap();
+        let resp = conn
+            .round_trip(&Request::post_json("/echo", r#"{"x":1}"#))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body_str().unwrap(), r#"{"x":1}"#);
+        assert!(meter.tx.get() > 0);
+        assert!(meter.rx.get() > 0);
+    }
+
+    #[test]
+    fn keep_alive_multiple_requests() {
+        let server = echo_server();
+        let meter = TrafficMeter::new();
+        let mut conn = Connection::open(server.addr, meter, LinkModel::ideal()).unwrap();
+        for i in 0..5 {
+            let body = format!(r#"{{"i":{i}}}"#);
+            let resp = conn.round_trip(&Request::post_json("/echo", &body)).unwrap();
+            assert_eq!(resp.body_str().unwrap(), body);
+        }
+    }
+
+    #[test]
+    fn not_found() {
+        let server = echo_server();
+        let mut conn =
+            Connection::open(server.addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+        let resp = conn.round_trip(&Request::get("/nope")).unwrap();
+        assert_eq!(resp.status, 404);
+        assert!(resp.body_str().unwrap().contains("error"));
+    }
+
+    #[test]
+    fn request_wire_size_matches_meter() {
+        // Fig 7 relies on exact request byte accounting.
+        let server = echo_server();
+        let meter = TrafficMeter::new();
+        let mut conn = Connection::open(server.addr, meter.clone(), LinkModel::ideal()).unwrap();
+        let req = Request::post_json("/echo", r#"{"prompt":"hello"}"#);
+        let expected = req.to_bytes().len() as u64;
+        conn.round_trip(&req).unwrap();
+        assert_eq!(meter.tx.get(), expected);
+    }
+
+    #[test]
+    fn parse_rejects_bad_requests() {
+        let mut r = std::io::BufReader::new(std::io::Cursor::new(b"GARBAGE\r\n\r\n".to_vec()));
+        assert!(read_request(&mut r).is_err());
+        let mut r = std::io::BufReader::new(std::io::Cursor::new(
+            b"POST /x HTTP/1.1\r\ncontent-length: nope\r\n\r\n".to_vec(),
+        ));
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn shutdown_joins() {
+        let mut server = echo_server();
+        server.shutdown();
+    }
+}

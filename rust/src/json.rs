@@ -1,0 +1,708 @@
+//! Minimal-but-complete JSON implementation (serde_json substitute).
+//!
+//! The offline crate registry only vendors the `xla` closure, so wire
+//! serialization for the `/completion` API, the KV replication protocol, and
+//! config files is built on this module. It implements the full JSON grammar
+//! (RFC 8259): objects, arrays, strings with escapes (including `\uXXXX`
+//! surrogate pairs), integer and floating-point numbers, booleans, null.
+//!
+//! Token-id arrays dominate DisCEdge payloads, so [`Value::IntArray`] keeps a
+//! dedicated compact representation that serializes identically to a JSON
+//! array of integers but avoids boxing every id as a `Value`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::{Error, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Integral number (fits in i64).
+    Int(i64),
+    /// Floating-point number.
+    Float(f64),
+    /// String.
+    Str(String),
+    /// Array of values.
+    Array(Vec<Value>),
+    /// Compact array of integers (token ids). Serializes as a JSON array.
+    IntArray(Vec<u32>),
+    /// Object with deterministic (sorted) key order.
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Build an empty object.
+    pub fn obj() -> Value {
+        Value::Object(BTreeMap::new())
+    }
+
+    /// Insert into an object value (panics if not an object; builder-style).
+    pub fn set(mut self, key: &str, val: impl Into<Value>) -> Value {
+        match &mut self {
+            Value::Object(m) => {
+                m.insert(key.to_string(), val.into());
+            }
+            _ => panic!("Value::set on non-object"),
+        }
+        self
+    }
+
+    /// Get a field of an object.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Object(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// String content, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Integer content (also truncates floats that are integral).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    /// u64 convenience accessor.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|v| u64::try_from(v).ok())
+    }
+
+    /// Float content (ints widen).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// Bool content.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array items, if this is an array.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Token-id array view: accepts both `IntArray` and plain arrays of ints.
+    pub fn as_int_array(&self) -> Option<Vec<u32>> {
+        match self {
+            Value::IntArray(v) => Some(v.clone()),
+            Value::Array(v) => v
+                .iter()
+                .map(|x| x.as_i64().and_then(|i| u32::try_from(i).ok()))
+                .collect::<Option<Vec<u32>>>(),
+            _ => None,
+        }
+    }
+
+    /// Object map, if this is an object.
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Required string field of an object.
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .ok_or_else(|| Error::Json(format!("missing string field `{key}`")))
+    }
+
+    /// Required integer field of an object.
+    pub fn req_u64(&self, key: &str) -> Result<u64> {
+        self.get(key)
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| Error::Json(format!("missing integer field `{key}`")))
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(self.estimate_len());
+        self.write_json(&mut out);
+        out
+    }
+
+    fn estimate_len(&self) -> usize {
+        match self {
+            Value::Null => 4,
+            Value::Bool(_) => 5,
+            Value::Int(_) => 12,
+            Value::Float(_) => 18,
+            Value::Str(s) => s.len() + 2,
+            Value::Array(v) => 2 + v.iter().map(|x| x.estimate_len() + 1).sum::<usize>(),
+            Value::IntArray(v) => 2 + v.len() * 6,
+            Value::Object(m) => {
+                2 + m
+                    .iter()
+                    .map(|(k, v)| k.len() + 4 + v.estimate_len())
+                    .sum::<usize>()
+            }
+        }
+    }
+
+    fn write_json(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(true) => out.push_str("true"),
+            Value::Bool(false) => out.push_str("false"),
+            Value::Int(i) => {
+                let mut buf = itoa_buf();
+                out.push_str(write_i64(*i, &mut buf));
+            }
+            Value::Float(f) => {
+                if f.is_finite() {
+                    // Shortest round-trip representation Rust provides.
+                    let s = format!("{f}");
+                    // Ensure it parses back as a float, not an int ("1" -> "1.0").
+                    if s.bytes().all(|b| b.is_ascii_digit() || b == b'-') {
+                        out.push_str(&s);
+                        out.push_str(".0");
+                    } else {
+                        out.push_str(&s);
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Value::Str(s) => write_escaped(s, out),
+            Value::Array(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write_json(out);
+                }
+                out.push(']');
+            }
+            Value::IntArray(v) => {
+                out.push('[');
+                let mut buf = itoa_buf();
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(write_i64(*x as i64, &mut buf));
+                }
+                out.push(']');
+            }
+            Value::Object(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write_json(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Fixed buffer for integer formatting without heap allocation.
+fn itoa_buf() -> [u8; 20] {
+    [0u8; 20]
+}
+
+/// Format an i64 into the buffer, returning the string slice.
+fn write_i64(mut v: i64, buf: &mut [u8; 20]) -> &str {
+    if v == 0 {
+        return "0";
+    }
+    let neg = v < 0;
+    let mut i = buf.len();
+    // Work with negative magnitudes to handle i64::MIN.
+    if !neg {
+        v = -v;
+    }
+    while v != 0 {
+        i -= 1;
+        buf[i] = b'0' - (v % 10) as u8 as u8;
+        // (v % 10) is <= 0 here
+        let digit = (-(v % 10)) as u8;
+        buf[i] = b'0' + digit;
+        v /= 10;
+    }
+    if neg {
+        i -= 1;
+        buf[i] = b'-';
+    }
+    std::str::from_utf8(&buf[i..]).unwrap()
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{08}' => out.push_str("\\b"),
+            '\u{0c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Value {
+        Value::Int(v)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::Int(v as i64)
+    }
+}
+impl From<u32> for Value {
+    fn from(v: u32) -> Value {
+        Value::Int(v as i64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::Int(v as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::Float(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Value {
+        Value::Bool(v)
+    }
+}
+impl From<Vec<u32>> for Value {
+    fn from(v: Vec<u32>) -> Value {
+        Value::IntArray(v)
+    }
+}
+impl From<&[u32]> for Value {
+    fn from(v: &[u32]) -> Value {
+        Value::IntArray(v.to_vec())
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(v: Vec<Value>) -> Value {
+        Value::Array(v)
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_json())
+    }
+}
+
+/// Parse a JSON document from a string.
+pub fn parse(input: &str) -> Result<Value> {
+    let mut p = Parser {
+        bytes: input.as_bytes(),
+        pos: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(Error::Json(format!(
+            "trailing garbage at byte {} of {}",
+            p.pos,
+            p.bytes.len()
+        )));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> Error {
+        Error::Json(format!("{msg} at byte {}", self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.peek() {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.bump() == Some(b) {
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", b as char)))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Value) -> Result<Value> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{lit}`")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.literal("true", Value::Bool(true)),
+            b'f' => self.literal("false", Value::Bool(false)),
+            b'n' => self.literal("null", Value::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(self.err(&format!("unexpected byte `{}`", c as char))),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Object(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            m.insert(key, val);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Value::Object(m)),
+                _ => return Err(self.err("expected `,` or `}`")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Array(Vec::new()));
+        }
+        // Fast path: arrays of non-negative integers parse into IntArray.
+        let mut ints: Option<Vec<u32>> = Some(Vec::new());
+        let mut vals: Vec<Value> = Vec::new();
+        loop {
+            self.skip_ws();
+            let v = self.value()?;
+            match (&mut ints, &v) {
+                (Some(arr), Value::Int(i)) if *i >= 0 && *i <= u32::MAX as i64 => {
+                    arr.push(*i as u32);
+                }
+                (Some(arr), _) => {
+                    // Demote accumulated ints into generic values.
+                    vals = arr.iter().map(|&x| Value::Int(x as i64)).collect();
+                    vals.push(v);
+                    ints = None;
+                }
+                (None, _) => vals.push(v),
+            }
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => {
+                    return Ok(match ints {
+                        Some(arr) => Value::IntArray(arr),
+                        None => Value::Array(vals),
+                    });
+                }
+                _ => return Err(self.err("expected `,` or `]`")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump().ok_or_else(|| self.err("unterminated string"))? {
+                b'"' => return Ok(s),
+                b'\\' => match self.bump().ok_or_else(|| self.err("bad escape"))? {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'n' => s.push('\n'),
+                    b't' => s.push('\t'),
+                    b'r' => s.push('\r'),
+                    b'b' => s.push('\u{08}'),
+                    b'f' => s.push('\u{0c}'),
+                    b'u' => {
+                        let cp = self.hex4()?;
+                        if (0xD800..0xDC00).contains(&cp) {
+                            // High surrogate: must be followed by \uDCxx.
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("lone high surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            s.push(
+                                char::from_u32(c).ok_or_else(|| self.err("bad surrogate pair"))?,
+                            );
+                        } else if (0xDC00..0xE000).contains(&cp) {
+                            return Err(self.err("lone low surrogate"));
+                        } else {
+                            s.push(char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?);
+                        }
+                    }
+                    c => return Err(self.err(&format!("bad escape `\\{}`", c as char))),
+                },
+                c if c < 0x20 => return Err(self.err("raw control char in string")),
+                c if c < 0x80 => s.push(c as char),
+                c => {
+                    // Multi-byte UTF-8: validate by re-decoding the slice.
+                    let start = self.pos - 1;
+                    let width = utf8_width(c).ok_or_else(|| self.err("invalid utf-8"))?;
+                    let end = start + width;
+                    if end > self.bytes.len() {
+                        return Err(self.err("truncated utf-8"));
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    s.push_str(chunk);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("bad hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        let mut is_float = false;
+        if self.peek() == Some(b'.') {
+            is_float = true;
+            self.pos += 1;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            is_float = true;
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
+        if is_float {
+            text.parse::<f64>()
+                .map(Value::Float)
+                .map_err(|_| self.err("bad float"))
+        } else {
+            match text.parse::<i64>() {
+                Ok(i) => Ok(Value::Int(i)),
+                // Overflow: fall back to float like other parsers do.
+                Err(_) => text
+                    .parse::<f64>()
+                    .map(Value::Float)
+                    .map_err(|_| self.err("bad int")),
+            }
+        }
+    }
+}
+
+fn utf8_width(first: u8) -> Option<usize> {
+    match first {
+        0xC0..=0xDF => Some(2),
+        0xE0..=0xEF => Some(3),
+        0xF0..=0xF7 => Some(4),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("false").unwrap(), Value::Bool(false));
+        assert_eq!(parse("42").unwrap(), Value::Int(42));
+        assert_eq!(parse("-7").unwrap(), Value::Int(-7));
+        assert_eq!(parse("3.5").unwrap(), Value::Float(3.5));
+        assert_eq!(parse("1e3").unwrap(), Value::Float(1000.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
+        let a = v.get("a").unwrap().as_array().unwrap();
+        assert_eq!(a[0].as_i64().unwrap(), 1);
+        assert_eq!(a[2].get("b").unwrap(), &Value::Null);
+    }
+
+    #[test]
+    fn int_array_fast_path() {
+        let v = parse("[1,2,3,65535]").unwrap();
+        assert_eq!(v, Value::IntArray(vec![1, 2, 3, 65535]));
+        assert_eq!(v.as_int_array().unwrap(), vec![1, 2, 3, 65535]);
+        // Mixed arrays demote.
+        let v = parse("[1, \"x\"]").unwrap();
+        assert!(matches!(v, Value::Array(_)));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#""a\nb\t\"c\" \\ A 😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\nb\t\"c\" \\ A 😀");
+    }
+
+    #[test]
+    fn roundtrip() {
+        let cases = [
+            r#"{"messages":[{"content":"hi","role":"user"}],"turn":3}"#,
+            r#"[0,1,2,3]"#,
+            r#"{"a":-1,"b":true,"c":null,"d":"x\ny"}"#,
+            "1.5",
+            "\"héllo wörld 日本語\"",
+        ];
+        for c in cases {
+            let v = parse(c).unwrap();
+            assert_eq!(parse(&v.to_json()).unwrap(), v, "case {c}");
+        }
+    }
+
+    #[test]
+    fn serialize_escapes_control() {
+        let v = Value::Str("a\u{01}b".into());
+        assert_eq!(v.to_json(), "\"a\\u0001b\"");
+        assert_eq!(parse(&v.to_json()).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for bad in ["{", "[1,", "\"", "tru", "{\"a\" 1}", "1 2", "[01x]", "\x01"] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn i64_extremes() {
+        assert_eq!(parse("9223372036854775807").unwrap(), Value::Int(i64::MAX));
+        assert_eq!(parse("-9223372036854775808").unwrap(), Value::Int(i64::MIN));
+        let v = Value::Int(i64::MIN);
+        assert_eq!(parse(&v.to_json()).unwrap(), v);
+    }
+
+    #[test]
+    fn builder() {
+        let v = Value::obj()
+            .set("prompt", "hello")
+            .set("turn", 4u64)
+            .set("context", vec![1u32, 2, 3]);
+        let j = v.to_json();
+        assert_eq!(j, r#"{"context":[1,2,3],"prompt":"hello","turn":4}"#);
+    }
+
+    #[test]
+    fn float_format_roundtrips_as_float() {
+        let v = Value::Float(2.0);
+        assert_eq!(v.to_json(), "2.0");
+        assert!(matches!(parse("2.0").unwrap(), Value::Float(_)));
+    }
+}

@@ -1,0 +1,504 @@
+//! FReD-like geo-distributed in-memory key-value store (paper §3.3).
+//!
+//! Each edge node runs one [`KvNode`]: a local replica plus a replication
+//! engine. Mirroring FReD's design:
+//!
+//! - keys are grouped into **keygroups** (DisCEdge uses one per language
+//!   model) with independent replication membership;
+//! - nodes exchange data **peer-to-peer** (push replication over a
+//!   dedicated TCP port, which is where the paper pointed tcpdump);
+//! - consistency between replicas is **eventual**; entries carry a
+//!   monotonically increasing `version` (the session turn) and conflicts
+//!   resolve last-writer-wins by version;
+//! - entries carry a **TTL** and are lazily evicted on read plus swept by a
+//!   background janitor;
+//! - all reads/writes are served from memory (FReD persists asynchronously;
+//!   the paper's evaluation is memory-only, and so are we).
+//!
+//! The session-level consistency that DisCEdge needs (read-your-writes as
+//! the user roams) is *not* provided here — exactly as in the paper, it is
+//! layered on top by the Context Manager's turn-counter protocol.
+
+mod replication;
+
+pub use replication::{ReplicationConfig, Replicator};
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::http::{Handler, Request, Response, Server};
+use crate::json::{self, Value};
+use crate::netsim::LinkModel;
+use crate::{Error, Result};
+
+/// A versioned value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    /// Stored payload (DisCEdge stores JSON documents here).
+    pub value: String,
+    /// Monotonic version; DisCEdge uses the session turn counter.
+    pub version: u64,
+    /// Absolute expiry instant (None = no TTL).
+    pub expires_at: Option<Instant>,
+}
+
+impl Entry {
+    fn is_expired(&self, now: Instant) -> bool {
+        self.expires_at.map_or(false, |e| e <= now)
+    }
+}
+
+/// In-memory replica state shared between the public API, the replication
+/// receiver, and the janitor.
+#[derive(Debug, Default)]
+pub struct Store {
+    /// keygroup -> key -> entry
+    data: RwLock<HashMap<String, BTreeMap<String, Entry>>>,
+    /// known keygroups
+    keygroups: RwLock<HashSet<String>>,
+}
+
+impl Store {
+    fn new() -> Arc<Store> {
+        Arc::new(Store::default())
+    }
+
+    /// Apply a write if it is newer than what we have. Returns true when
+    /// the write was applied (or equal-version idempotent re-apply).
+    fn apply(
+        &self,
+        keygroup: &str,
+        key: &str,
+        value: String,
+        version: u64,
+        ttl: Option<Duration>,
+    ) -> bool {
+        let mut data = self.data.write().unwrap();
+        let kg = data.entry(keygroup.to_string()).or_default();
+        match kg.get(key) {
+            Some(existing) if existing.version > version => false,
+            _ => {
+                kg.insert(
+                    key.to_string(),
+                    Entry {
+                        value,
+                        version,
+                        expires_at: ttl.map(|t| Instant::now() + t),
+                    },
+                );
+                true
+            }
+        }
+    }
+
+    fn read(&self, keygroup: &str, key: &str) -> Option<Entry> {
+        let now = Instant::now();
+        let data = self.data.read().unwrap();
+        data.get(keygroup)
+            .and_then(|kg| kg.get(key))
+            .filter(|e| !e.is_expired(now))
+            .cloned()
+    }
+
+    fn remove(&self, keygroup: &str, key: &str) -> bool {
+        let mut data = self.data.write().unwrap();
+        data.get_mut(keygroup).map_or(false, |kg| kg.remove(key).is_some())
+    }
+
+    /// Sweep expired entries; returns the number evicted.
+    fn sweep(&self) -> usize {
+        let now = Instant::now();
+        let mut data = self.data.write().unwrap();
+        let mut evicted = 0;
+        for kg in data.values_mut() {
+            let before = kg.len();
+            kg.retain(|_, e| !e.is_expired(now));
+            evicted += before - kg.len();
+        }
+        evicted
+    }
+
+    fn len(&self) -> usize {
+        self.data.read().unwrap().values().map(|kg| kg.len()).sum()
+    }
+}
+
+/// Configuration of one KV node.
+#[derive(Debug, Clone)]
+pub struct KvConfig {
+    /// Port for the replication listener (0 = ephemeral).
+    pub port: u16,
+    /// Link model for the inter-node replication hops.
+    pub peer_link: LinkModel,
+    /// Replication behaviour.
+    pub replication: ReplicationConfig,
+    /// Default TTL applied when the writer does not specify one.
+    pub default_ttl: Option<Duration>,
+    /// Janitor sweep interval.
+    pub sweep_interval: Duration,
+}
+
+impl Default for KvConfig {
+    fn default() -> KvConfig {
+        KvConfig {
+            port: 0,
+            peer_link: LinkModel::lan(),
+            replication: ReplicationConfig::default(),
+            default_ttl: Some(Duration::from_secs(3600)),
+            sweep_interval: Duration::from_millis(500),
+        }
+    }
+}
+
+/// One node's replica of the distributed KV store.
+pub struct KvNode {
+    /// Node name (for logs/metrics).
+    pub name: String,
+    store: Arc<Store>,
+    replicator: Replicator,
+    server: Server,
+    /// keygroup -> peers receiving its updates
+    peers: Arc<Mutex<HashMap<String, Vec<SocketAddr>>>>,
+    config: KvConfig,
+    janitor_stop: Arc<std::sync::atomic::AtomicBool>,
+    janitor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl KvNode {
+    /// Start a node: replication listener + sender + janitor.
+    pub fn start(name: &str, config: KvConfig) -> Result<KvNode> {
+        let store = Store::new();
+        let handler_store = store.clone();
+        let handler: Handler = Arc::new(move |req: &Request| {
+            replication_endpoint(&handler_store, req)
+        });
+        let server = Server::serve(config.port, config.peer_link.clone(), handler)?;
+        let replicator = Replicator::start(
+            name.to_string(),
+            config.replication.clone(),
+            config.peer_link.clone(),
+        );
+        let janitor_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let jstop = janitor_stop.clone();
+        let jstore = store.clone();
+        let interval = config.sweep_interval;
+        let janitor = std::thread::Builder::new()
+            .name(format!("kv-janitor-{name}"))
+            .spawn(move || {
+                while !jstop.load(std::sync::atomic::Ordering::SeqCst) {
+                    std::thread::sleep(interval);
+                    jstore.sweep();
+                }
+            })?;
+        Ok(KvNode {
+            name: name.to_string(),
+            store,
+            replicator,
+            server,
+            peers: Arc::new(Mutex::new(HashMap::new())),
+            config,
+            janitor_stop,
+            janitor: Some(janitor),
+        })
+    }
+
+    /// Address of this node's replication listener.
+    pub fn replication_addr(&self) -> SocketAddr {
+        self.server.addr
+    }
+
+    /// Register a keygroup on this node (idempotent).
+    pub fn create_keygroup(&self, keygroup: &str) {
+        self.store
+            .keygroups
+            .write()
+            .unwrap()
+            .insert(keygroup.to_string());
+    }
+
+    /// Whether the keygroup exists on this node.
+    pub fn has_keygroup(&self, keygroup: &str) -> bool {
+        self.store.keygroups.read().unwrap().contains(keygroup)
+    }
+
+    /// Subscribe `peer` to updates of `keygroup` (push replication,
+    /// FReD-style: only nodes serving the same model share the keygroup).
+    pub fn add_peer(&self, keygroup: &str, peer: SocketAddr) {
+        self.peers
+            .lock()
+            .unwrap()
+            .entry(keygroup.to_string())
+            .or_default()
+            .push(peer);
+    }
+
+    /// Write locally and asynchronously push to keygroup peers.
+    pub fn put(&self, keygroup: &str, key: &str, value: String, version: u64) -> Result<()> {
+        self.put_ttl(keygroup, key, value, version, self.config.default_ttl)
+    }
+
+    /// Write with an explicit TTL.
+    pub fn put_ttl(
+        &self,
+        keygroup: &str,
+        key: &str,
+        value: String,
+        version: u64,
+        ttl: Option<Duration>,
+    ) -> Result<()> {
+        if !self.has_keygroup(keygroup) {
+            return Err(Error::KvStore(format!("unknown keygroup {keygroup}")));
+        }
+        let applied = self
+            .store
+            .apply(keygroup, key, value.clone(), version, ttl);
+        if !applied {
+            return Err(Error::KvStore(format!(
+                "stale write to {keygroup}/{key} v{version}"
+            )));
+        }
+        let peers = self
+            .peers
+            .lock()
+            .unwrap()
+            .get(keygroup)
+            .cloned()
+            .unwrap_or_default();
+        if !peers.is_empty() {
+            self.replicator
+                .push(peers, keygroup, key, &value, version, ttl);
+        }
+        Ok(())
+    }
+
+    /// Read from the local replica only (DisCEdge's CM always reads local;
+    /// waiting for replication is the CM's retry loop, not a remote read).
+    pub fn get(&self, keygroup: &str, key: &str) -> Option<Entry> {
+        self.store.read(keygroup, key)
+    }
+
+    /// Delete locally (client's explicit request, §3.3). Not replicated as
+    /// a tombstone in the prototype; TTL handles remote cleanup — matching
+    /// the paper's prototype scope.
+    pub fn delete(&self, keygroup: &str, key: &str) -> bool {
+        self.store.remove(keygroup, key)
+    }
+
+    /// Total live entries on this replica.
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// True when the replica holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes received on this node's replication port (inbound sync).
+    pub fn sync_rx_bytes(&self) -> u64 {
+        self.server.meter.rx.get() + self.server.meter.tx.get()
+    }
+
+    /// Bytes sent by this node's replicator (outbound sync, incl. acks).
+    pub fn sync_tx_bytes(&self) -> u64 {
+        self.replicator.meter().tx.get() + self.replicator.meter().rx.get()
+    }
+
+    /// Wait until the replicator's queue is drained (test/benchmark sync).
+    pub fn quiesce(&self) {
+        self.replicator.quiesce();
+    }
+
+    /// Stop all background machinery.
+    pub fn shutdown(&mut self) {
+        self.janitor_stop
+            .store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(j) = self.janitor.take() {
+            let _ = j.join();
+        }
+        self.replicator.shutdown();
+        self.server.shutdown();
+    }
+}
+
+impl Drop for KvNode {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Inbound replication endpoint: applies pushed writes to the local store.
+fn replication_endpoint(store: &Arc<Store>, req: &Request) -> Response {
+    if req.method != "POST" || req.path != "/replicate" {
+        return Response::error(404, "not found");
+    }
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(_) => return Response::error(400, "body not utf-8"),
+    };
+    let v = match json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &format!("bad json: {e}")),
+    };
+    let (kg, key, val, ver) = match (
+        v.req_str("kg"),
+        v.req_str("key"),
+        v.req_str("val"),
+        v.req_u64("ver"),
+    ) {
+        (Ok(kg), Ok(key), Ok(val), Ok(ver)) => (kg, key, val, ver),
+        _ => return Response::error(400, "missing fields"),
+    };
+    let ttl = v
+        .get("ttl_ms")
+        .and_then(|t| t.as_u64())
+        .map(Duration::from_millis);
+    // Keygroups auto-create on receive: membership was already checked on
+    // the sending side (only subscribed peers get pushes).
+    store
+        .keygroups
+        .write()
+        .unwrap()
+        .insert(kg.clone());
+    let applied = store.apply(&kg, &key, val, ver, ttl);
+    Response::json(&Value::obj().set("applied", applied).to_json())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(name: &str) -> KvNode {
+        let cfg = KvConfig {
+            peer_link: LinkModel::ideal(),
+            ..KvConfig::default()
+        };
+        KvNode::start(name, cfg).unwrap()
+    }
+
+    #[test]
+    fn local_put_get() {
+        let n = node("a");
+        n.create_keygroup("m");
+        n.put("m", "s1", "v1".into(), 1).unwrap();
+        assert_eq!(n.get("m", "s1").unwrap().value, "v1");
+        assert_eq!(n.get("m", "s1").unwrap().version, 1);
+        assert!(n.get("m", "nope").is_none());
+        assert!(n.get("other", "s1").is_none());
+    }
+
+    #[test]
+    fn unknown_keygroup_rejected() {
+        let n = node("a");
+        assert!(n.put("nope", "k", "v".into(), 1).is_err());
+    }
+
+    #[test]
+    fn version_conflicts_lww() {
+        let n = node("a");
+        n.create_keygroup("m");
+        n.put("m", "k", "v2".into(), 2).unwrap();
+        // Older write rejected.
+        assert!(n.put("m", "k", "v1".into(), 1).is_err());
+        assert_eq!(n.get("m", "k").unwrap().value, "v2");
+        // Newer write wins.
+        n.put("m", "k", "v3".into(), 3).unwrap();
+        assert_eq!(n.get("m", "k").unwrap().value, "v3");
+    }
+
+    #[test]
+    fn replication_two_nodes() {
+        let a = node("a");
+        let b = node("b");
+        a.create_keygroup("m");
+        b.create_keygroup("m");
+        a.add_peer("m", b.replication_addr());
+        a.put("m", "sess", "ctx-v1".into(), 1).unwrap();
+        a.quiesce();
+        let got = wait_for(|| b.get("m", "sess"), Duration::from_secs(2));
+        let e = got.expect("replication should deliver");
+        assert_eq!(e.value, "ctx-v1");
+        assert_eq!(e.version, 1);
+        // Sync traffic was metered on both ends.
+        assert!(a.sync_tx_bytes() > 0);
+        assert!(b.sync_rx_bytes() > 0);
+    }
+
+    #[test]
+    fn replication_only_for_subscribed_keygroup() {
+        let a = node("a");
+        let b = node("b");
+        a.create_keygroup("m1");
+        a.create_keygroup("m2");
+        b.create_keygroup("m1");
+        a.add_peer("m1", b.replication_addr());
+        a.put("m2", "x", "secret".into(), 1).unwrap();
+        a.quiesce();
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(b.get("m2", "x").is_none(), "m2 must not replicate");
+    }
+
+    #[test]
+    fn ttl_expiry() {
+        let n = node("a");
+        n.create_keygroup("m");
+        n.put_ttl("m", "k", "v".into(), 1, Some(Duration::from_millis(30)))
+            .unwrap();
+        assert!(n.get("m", "k").is_some());
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(n.get("m", "k").is_none(), "expired entry visible");
+    }
+
+    #[test]
+    fn delete_local() {
+        let n = node("a");
+        n.create_keygroup("m");
+        n.put("m", "k", "v".into(), 1).unwrap();
+        assert!(n.delete("m", "k"));
+        assert!(!n.delete("m", "k"));
+        assert!(n.get("m", "k").is_none());
+    }
+
+    #[test]
+    fn sweep_evicts() {
+        let s = Store::new();
+        s.apply("m", "k", "v".into(), 1, Some(Duration::from_millis(1)));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(s.sweep(), 1);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn bidirectional_replication_converges() {
+        let a = node("a");
+        let b = node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        a.add_peer("m", b.replication_addr());
+        b.add_peer("m", a.replication_addr());
+        a.put("m", "k", "from-a".into(), 1).unwrap();
+        a.quiesce();
+        wait_for(|| b.get("m", "k"), Duration::from_secs(2)).unwrap();
+        b.put("m", "k", "from-b".into(), 2).unwrap();
+        b.quiesce();
+        let got = wait_for(
+            || a.get("m", "k").filter(|e| e.version == 2),
+            Duration::from_secs(2),
+        );
+        assert_eq!(got.unwrap().value, "from-b");
+    }
+
+    fn wait_for<T>(mut f: impl FnMut() -> Option<T>, timeout: Duration) -> Option<T> {
+        let start = Instant::now();
+        while start.elapsed() < timeout {
+            if let Some(v) = f() {
+                return Some(v);
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        None
+    }
+}

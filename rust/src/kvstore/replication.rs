@@ -1,0 +1,250 @@
+//! Asynchronous push replication between KV nodes (FReD peer protocol
+//! substitute).
+//!
+//! A background sender thread drains a queue of writes and POSTs each one
+//! to every subscribed peer over keep-alive HTTP connections on the peer
+//! replication port. An optional artificial delay models replication lag
+//! (used by the consistency ablation to force the Context Manager's retry
+//! path, which the paper observed "never needs more than two retries").
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::http::{Connection, Request};
+use crate::json::Value;
+use crate::netsim::{LinkModel, TrafficMeter};
+
+/// Replication engine configuration.
+#[derive(Debug, Clone)]
+pub struct ReplicationConfig {
+    /// Artificial delay before each push (models replication lag / FReD's
+    /// async pipeline). Default: none.
+    pub delay: Duration,
+    /// Per-push connect/retry attempts before dropping the update.
+    pub max_attempts: u32,
+    /// Probability in [0,1] of dropping a push (failure injection).
+    pub drop_probability: f64,
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> ReplicationConfig {
+        ReplicationConfig {
+            delay: Duration::ZERO,
+            max_attempts: 3,
+            drop_probability: 0.0,
+        }
+    }
+}
+
+struct Job {
+    peers: Vec<SocketAddr>,
+    payload: String,
+}
+
+/// Handle to the background replication sender.
+pub struct Replicator {
+    tx: Option<Sender<Job>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    meter: Arc<TrafficMeter>,
+    queued: Arc<AtomicU64>,
+    done: Arc<AtomicU64>,
+    /// Pushes dropped after exhausting attempts (or by failure injection).
+    pub dropped: Arc<AtomicU64>,
+}
+
+impl Replicator {
+    /// Spawn the sender thread.
+    pub fn start(name: String, config: ReplicationConfig, link: LinkModel) -> Replicator {
+        let (tx, rx) = channel::<Job>();
+        let meter = TrafficMeter::new();
+        let queued = Arc::new(AtomicU64::new(0));
+        let done = Arc::new(AtomicU64::new(0));
+        let dropped = Arc::new(AtomicU64::new(0));
+        let t_meter = meter.clone();
+        let t_done = done.clone();
+        let t_dropped = dropped.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("kv-repl-{name}"))
+            .spawn(move || {
+                let mut rng = crate::testkit::Rng::new(0x5EED ^ name.len() as u64);
+                let mut conns: HashMap<SocketAddr, Connection> = HashMap::new();
+                while let Ok(job) = rx.recv() {
+                    if !config.delay.is_zero() {
+                        std::thread::sleep(config.delay);
+                    }
+                    for peer in &job.peers {
+                        if config.drop_probability > 0.0 && rng.chance(config.drop_probability) {
+                            t_dropped.fetch_add(1, Ordering::SeqCst);
+                            continue;
+                        }
+                        let req = Request::post_json("/replicate", &job.payload);
+                        let mut ok = false;
+                        for _ in 0..config.max_attempts {
+                            // Reuse a cached connection; reconnect on error.
+                            let conn = match conns.entry(*peer) {
+                                std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                                std::collections::hash_map::Entry::Vacant(e) => {
+                                    match Connection::open(*peer, t_meter.clone(), link.clone()) {
+                                        Ok(c) => e.insert(c),
+                                        Err(_) => continue,
+                                    }
+                                }
+                            };
+                            match conn.round_trip(&req) {
+                                Ok(resp) if resp.status == 200 => {
+                                    ok = true;
+                                    break;
+                                }
+                                _ => {
+                                    conns.remove(peer);
+                                }
+                            }
+                        }
+                        if !ok {
+                            t_dropped.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    t_done.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .expect("spawn replicator");
+        Replicator {
+            tx: Some(tx),
+            thread: Some(thread),
+            meter,
+            queued,
+            done,
+            dropped,
+        }
+    }
+
+    /// Enqueue a write for async push to `peers`.
+    pub fn push(
+        &self,
+        peers: Vec<SocketAddr>,
+        keygroup: &str,
+        key: &str,
+        value: &str,
+        version: u64,
+        ttl: Option<Duration>,
+    ) {
+        let mut payload = Value::obj()
+            .set("kg", keygroup)
+            .set("key", key)
+            .set("val", value)
+            .set("ver", version);
+        if let Some(t) = ttl {
+            payload = payload.set("ttl_ms", t.as_millis() as u64);
+        }
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Job {
+                peers,
+                payload: payload.to_json(),
+            });
+        }
+    }
+
+    /// Bytes moved by this node's outbound replication.
+    pub fn meter(&self) -> &Arc<TrafficMeter> {
+        &self.meter
+    }
+
+    /// Block until every queued push has been processed.
+    pub fn quiesce(&self) {
+        while self.done.load(Ordering::SeqCst) < self.queued.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Stop the sender thread (drains remaining queue first).
+    pub fn shutdown(&mut self) {
+        self.tx.take(); // closes the channel; thread exits after drain
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Replicator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::{Response, Server};
+    use std::sync::Mutex;
+
+    #[test]
+    fn pushes_reach_peer() {
+        let received = Arc::new(Mutex::new(Vec::<String>::new()));
+        let r2 = received.clone();
+        let server = Server::serve(
+            0,
+            LinkModel::ideal(),
+            Arc::new(move |req: &Request| {
+                r2.lock().unwrap().push(req.body_str().unwrap().to_string());
+                Response::json("{\"applied\":true}")
+            }),
+        )
+        .unwrap();
+        let repl = Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal());
+        repl.push(vec![server.addr], "kg", "k", "v", 1, None);
+        repl.quiesce();
+        let msgs = received.lock().unwrap();
+        assert_eq!(msgs.len(), 1);
+        assert!(msgs[0].contains("\"ver\":1"));
+        assert!(repl.meter().tx.get() > 0);
+    }
+
+    #[test]
+    fn drop_injection_counts() {
+        let cfg = ReplicationConfig {
+            drop_probability: 1.0,
+            ..ReplicationConfig::default()
+        };
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal());
+        // Peer doesn't even need to exist: drop happens first.
+        repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
+        repl.quiesce();
+        assert_eq!(repl.dropped.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn unreachable_peer_drops_after_attempts() {
+        let cfg = ReplicationConfig {
+            max_attempts: 2,
+            ..ReplicationConfig::default()
+        };
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal());
+        repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
+        repl.quiesce();
+        assert_eq!(repl.dropped.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn delay_is_applied() {
+        let server = Server::serve(
+            0,
+            LinkModel::ideal(),
+            Arc::new(|_req: &Request| Response::json("{\"applied\":true}")),
+        )
+        .unwrap();
+        let cfg = ReplicationConfig {
+            delay: Duration::from_millis(30),
+            ..ReplicationConfig::default()
+        };
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal());
+        let t = std::time::Instant::now();
+        repl.push(vec![server.addr], "kg", "k", "v", 1, None);
+        repl.quiesce();
+        assert!(t.elapsed() >= Duration::from_millis(30));
+    }
+}

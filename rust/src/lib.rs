@@ -1,0 +1,84 @@
+//! # DisCEdge — Distributed Context Management for LLMs at the Edge
+//!
+//! A from-scratch reproduction of *DisCEdge* (Malekabbasi, Wang, Bermbach;
+//! CS.DC 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's contribution: a per-edge-node
+//!   [`context::ContextManager`] that stores session context *pre-tokenized*,
+//!   a FReD-like geo-distributed [`kvstore`] with keygroups and asynchronous
+//!   peer replication, an [`llm`] service that accepts pre-tokenized context,
+//!   and an HTTP [`server`] / [`client`] pair implementing the paper's
+//!   extended `/completion` API with a client-driven turn-counter
+//!   consistency protocol.
+//! - **Layer 2 (build time, `python/compile/model.py`)** — a Qwen-style
+//!   decoder-only transformer in JAX, AOT-lowered to HLO text.
+//! - **Layer 1 (build time, `python/compile/kernels/`)** — Pallas attention
+//!   kernels (flash prefill + cached decode) called from the L2 graph.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT; Python never
+//! runs on the request path.
+
+pub mod benchkit;
+pub mod cli;
+pub mod client;
+pub mod config;
+pub mod context;
+pub mod http;
+pub mod json;
+pub mod kvstore;
+pub mod llm;
+pub mod metrics;
+pub mod netsim;
+pub mod profile;
+pub mod runtime;
+pub mod server;
+pub mod testkit;
+pub mod tokenizer;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// I/O failure (sockets, files).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    /// JSON parse/encode failure.
+    #[error("json: {0}")]
+    Json(String),
+    /// HTTP protocol violation.
+    #[error("http: {0}")]
+    Http(String),
+    /// Tokenizer failure (unknown id, bad vocab file...).
+    #[error("tokenizer: {0}")]
+    Tokenizer(String),
+    /// KV store failure.
+    #[error("kvstore: {0}")]
+    KvStore(String),
+    /// Consistency protocol gave up (stale context after retries).
+    #[error("consistency: {0}")]
+    Consistency(String),
+    /// Context manager / session failure.
+    #[error("context: {0}")]
+    Context(String),
+    /// Inference engine failure.
+    #[error("engine: {0}")]
+    Engine(String),
+    /// XLA/PJRT runtime failure.
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// Configuration error.
+    #[error("config: {0}")]
+    Config(String),
+    /// Invalid client request.
+    #[error("bad request: {0}")]
+    BadRequest(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,177 @@
+//! Deterministic mock engine: emulates inference cost without XLA.
+//!
+//! Used by protocol tests and by coordination-layer benchmarks that
+//! isolate the context-management cost from model compute. Generation is
+//! a pure function of the input ids, so repeated runs (and runs on
+//! different "nodes") agree — mirroring the paper's fixed seed /
+//! temperature-0 configuration where both edge nodes produce identical
+//! outputs for identical context.
+
+use std::time::Duration;
+
+use super::{Engine, GenOutput};
+use crate::testkit::Rng;
+use crate::Result;
+
+/// Configurable deterministic engine.
+pub struct MockEngine {
+    model: String,
+    vocab_size: u32,
+    max_context: usize,
+    /// Emulated prefill cost per context token.
+    pub prefill_ns_per_token: u64,
+    /// Emulated decode cost per generated token.
+    pub decode_ns_per_token: u64,
+    /// Fixed number of tokens to generate (None = input-dependent).
+    pub fixed_len: Option<usize>,
+}
+
+impl MockEngine {
+    /// New mock for `model` with the given vocab size.
+    pub fn new(model: &str, vocab_size: u32) -> MockEngine {
+        MockEngine {
+            model: model.into(),
+            vocab_size,
+            max_context: 1024,
+            prefill_ns_per_token: 0,
+            decode_ns_per_token: 0,
+            fixed_len: None,
+        }
+    }
+
+    /// Builder: emulated costs.
+    pub fn with_costs(mut self, prefill_ns: u64, decode_ns: u64) -> MockEngine {
+        self.prefill_ns_per_token = prefill_ns;
+        self.decode_ns_per_token = decode_ns;
+        self
+    }
+
+    /// Builder: fixed generation length.
+    pub fn with_fixed_len(mut self, len: usize) -> MockEngine {
+        self.fixed_len = Some(len);
+        self
+    }
+
+    /// Builder: max context.
+    pub fn with_max_context(mut self, n: usize) -> MockEngine {
+        self.max_context = n;
+        self
+    }
+}
+
+/// FNV-1a over token ids: the deterministic "model state".
+fn hash_ids(ids: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &id in ids {
+        for b in id.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+impl Engine for MockEngine {
+    fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    fn max_context(&self) -> usize {
+        self.max_context
+    }
+
+    fn generate(&self, input_ids: &[u32], max_tokens: usize, stop_id: u32) -> Result<GenOutput> {
+        let t0 = std::time::Instant::now();
+        if self.prefill_ns_per_token > 0 {
+            std::thread::sleep(Duration::from_nanos(
+                self.prefill_ns_per_token * input_ids.len() as u64,
+            ));
+        }
+        let prefill_s = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let mut rng = Rng::new(hash_ids(input_ids));
+        let len = self
+            .fixed_len
+            .unwrap_or_else(|| 40 + (rng.below(89)) as usize)
+            .min(max_tokens);
+        let mut ids = Vec::with_capacity(len);
+        // Generate "text-like" ids: byte tokens for printable ASCII so the
+        // decoded response is harmless text; avoid the stop id.
+        for _ in 0..len {
+            let id = loop {
+                let candidate = if rng.chance(0.15) {
+                    b' ' as u32
+                } else {
+                    // Printable ASCII byte tokens -> valid UTF-8 output.
+                    (32 + rng.below(95) as u32).min(self.vocab_size - 1)
+                };
+                if candidate != stop_id {
+                    break candidate;
+                }
+            };
+            ids.push(id);
+        }
+        if self.decode_ns_per_token > 0 {
+            std::thread::sleep(Duration::from_nanos(
+                self.decode_ns_per_token * ids.len() as u64,
+            ));
+        }
+        Ok(GenOutput {
+            prefill_tokens: input_ids.len(),
+            prefill_s,
+            decode_s: t1.elapsed().as_secs_f64(),
+            ids,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_input() {
+        let e = MockEngine::new("m", 512);
+        let a = e.generate(&[1, 2, 3], 128, 509).unwrap();
+        let b = e.generate(&[1, 2, 3], 128, 509).unwrap();
+        assert_eq!(a.ids, b.ids);
+        let c = e.generate(&[1, 2, 4], 128, 509).unwrap();
+        assert_ne!(a.ids, c.ids, "different context, different output");
+    }
+
+    #[test]
+    fn respects_max_tokens_and_stop() {
+        let e = MockEngine::new("m", 512);
+        let out = e.generate(&[5, 6], 10, 509).unwrap();
+        assert!(out.ids.len() <= 10);
+        assert!(!out.ids.contains(&509));
+    }
+
+    #[test]
+    fn fixed_len() {
+        let e = MockEngine::new("m", 512).with_fixed_len(17);
+        assert_eq!(e.generate(&[1], 128, 509).unwrap().ids.len(), 17);
+    }
+
+    #[test]
+    fn emulated_costs_scale_with_tokens() {
+        let e = MockEngine::new("m", 512)
+            .with_costs(10_000, 0)
+            .with_fixed_len(5);
+        let short = e.generate(&[0; 10], 128, 509).unwrap();
+        let long = e.generate(&[0; 1000], 128, 509).unwrap();
+        assert!(long.prefill_s > short.prefill_s);
+        assert_eq!(short.prefill_tokens, 10);
+        assert_eq!(long.prefill_tokens, 1000);
+    }
+
+    #[test]
+    fn decoded_output_is_text() {
+        let e = MockEngine::new("m", 512).with_fixed_len(64);
+        let out = e.generate(&[9, 9, 9], 128, 509).unwrap();
+        for &id in &out.ids {
+            assert!((32..127).contains(&id), "id {id} not a printable byte token");
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! LLM Service (paper §3.2): the inference framework behind each edge node.
+//!
+//! Mirrors the paper's modified llama.cpp: the `/completion` path accepts a
+//! **pre-tokenized context** plus the raw prompt, tokenizes only the new
+//! prompt, concatenates, and generates. The engine is runtime-agnostic
+//! behind the [`Engine`] trait:
+//!
+//! - [`PjrtEngine`] (in [`crate::llm::pjrt`]) runs the AOT-compiled JAX/
+//!   Pallas transformer through PJRT — the production path;
+//! - [`MockEngine`] emulates inference cost deterministically for protocol
+//!   tests and coordination-only benchmarks.
+//!
+//! The ChatML prompt template (Qwen-style, matching the paper's
+//! Qwen1.5-0.5B-Chat) lives here too, in both its token-level and raw-text
+//! forms — the three context modes must produce *identical* inference
+//! inputs, which the tests pin down.
+
+mod mock;
+pub mod pjrt;
+
+pub use mock::MockEngine;
+pub use pjrt::PjrtEngine;
+
+use std::sync::Arc;
+
+use crate::tokenizer::Tokenizer;
+use crate::Result;
+
+/// Default system prompt for chat sessions.
+pub const SYSTEM_PROMPT: &str = "You are a helpful assistant.";
+
+/// A chat message (client-side context mode ships these verbatim).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    /// `system`, `user`, or `assistant`.
+    pub role: String,
+    /// Message content.
+    pub content: String,
+}
+
+impl Message {
+    /// Convenience constructor.
+    pub fn new(role: &str, content: &str) -> Message {
+        Message {
+            role: role.into(),
+            content: content.into(),
+        }
+    }
+}
+
+/// Output of one generation call.
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    /// Generated token ids (without the trailing end marker).
+    pub ids: Vec<u32>,
+    /// Number of context tokens processed (prefill length).
+    pub prefill_tokens: usize,
+    /// Seconds spent in prefill.
+    pub prefill_s: f64,
+    /// Seconds spent decoding.
+    pub decode_s: f64,
+}
+
+/// An inference engine serving one model.
+pub trait Engine: Send + Sync {
+    /// Model identifier (the KV keygroup name).
+    fn model_name(&self) -> &str;
+    /// Generate up to `max_tokens` continuation tokens for `input_ids`,
+    /// stopping early on `stop_id`.
+    fn generate(&self, input_ids: &[u32], max_tokens: usize, stop_id: u32) -> Result<GenOutput>;
+    /// Longest context (in tokens) the engine accepts.
+    fn max_context(&self) -> usize;
+}
+
+/// ChatML template in token and text forms.
+///
+/// Token layout per session:
+/// ```text
+/// <|im_start|>system\n{SYSTEM_PROMPT}<|im_end|>\n        <- preamble
+/// <|im_start|>user\n{prompt}<|im_end|>\n<|im_start|>assistant\n   <- per turn
+/// {response}<|im_end|>\n                                  <- per turn close
+/// ```
+#[derive(Clone)]
+pub struct ChatTemplate {
+    tokenizer: Arc<Tokenizer>,
+    im_start: u32,
+    im_end: u32,
+}
+
+impl ChatTemplate {
+    /// Build for a tokenizer.
+    pub fn new(tokenizer: Arc<Tokenizer>) -> Result<ChatTemplate> {
+        let im_start = tokenizer.special("<|im_start|>")?;
+        let im_end = tokenizer.special("<|im_end|>")?;
+        Ok(ChatTemplate {
+            tokenizer,
+            im_start,
+            im_end,
+        })
+    }
+
+    /// The tokenizer behind this template.
+    pub fn tokenizer(&self) -> &Arc<Tokenizer> {
+        &self.tokenizer
+    }
+
+    /// End-of-message id (generation stop token).
+    pub fn stop_id(&self) -> u32 {
+        self.im_end
+    }
+
+    // ---- token-level assembly (tokenized mode: only new text encoded) ----
+
+    /// Session preamble ids (system message).
+    pub fn preamble_ids(&self) -> Vec<u32> {
+        let mut ids = vec![self.im_start];
+        ids.extend(self.tokenizer.encode(&format!("system\n{SYSTEM_PROMPT}")));
+        ids.push(self.im_end);
+        ids.extend(self.tokenizer.encode("\n"));
+        ids
+    }
+
+    /// Ids for a new user turn, ending with the assistant header so the
+    /// model continues as the assistant.
+    pub fn user_turn_ids(&self, prompt: &str) -> Vec<u32> {
+        let mut ids = vec![self.im_start];
+        ids.extend(self.tokenizer.encode(&format!("user\n{prompt}")));
+        ids.push(self.im_end);
+        ids.extend(self.tokenizer.encode("\n"));
+        ids.push(self.im_start);
+        ids.extend(self.tokenizer.encode("assistant\n"));
+        ids
+    }
+
+    /// Ids closing an assistant turn (append after the generated ids).
+    pub fn close_ids(&self) -> Vec<u32> {
+        let mut ids = vec![self.im_end];
+        ids.extend(self.tokenizer.encode("\n"));
+        ids
+    }
+
+    // ---- text assembly (raw + client-side modes) ----
+
+    /// Text preamble.
+    pub fn preamble_text(&self) -> String {
+        format!("<|im_start|>system\n{SYSTEM_PROMPT}<|im_end|>\n")
+    }
+
+    /// Text for a new user turn (ends with the assistant header).
+    pub fn user_turn_text(&self, prompt: &str) -> String {
+        format!("<|im_start|>user\n{prompt}<|im_end|>\n<|im_start|>assistant\n")
+    }
+
+    /// Text closing an assistant turn.
+    pub fn close_text(&self, response: &str) -> String {
+        format!("{response}<|im_end|>\n")
+    }
+
+    /// Render a full message history (client-side mode) into transcript
+    /// text ending with the assistant header.
+    pub fn render_messages(&self, messages: &[Message], new_prompt: &str) -> String {
+        let mut text = self.preamble_text();
+        for m in messages {
+            text.push_str(&format!(
+                "<|im_start|>{}\n{}<|im_end|>\n",
+                m.role, m.content
+            ));
+        }
+        text.push_str(&self.user_turn_text(new_prompt));
+        text
+    }
+
+    /// Tokenize transcript text with special-literal mapping (raw and
+    /// client-side modes re-tokenize everything through this).
+    pub fn encode_transcript(&self, text: &str) -> Vec<u32> {
+        self.tokenizer.encode_with_specials(text)
+    }
+
+    /// Decode generated ids to response text.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        self.tokenizer.decode(ids)
+    }
+}
+
+/// Greedy/temperature sampling over a logits slice. Temperature 0 = argmax
+/// (the paper's setting); otherwise softmax sampling with the given rng.
+pub fn sample(logits: &[f32], temperature: f64, rng: &mut crate::testkit::Rng) -> u32 {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Softmax with temperature, numerically stabilized.
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - max) as f64) / temperature).exp())
+        .collect();
+    let sum: f64 = exps.iter().sum();
+    let mut target = rng.f64() * sum;
+    for (i, e) in exps.iter().enumerate() {
+        target -= e;
+        if target <= 0.0 {
+            return i as u32;
+        }
+    }
+    (logits.len() - 1) as u32
+}
+
+/// Index of the maximum logit (first on ties — deterministic).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+    use crate::tokenizer::{train, TrainConfig};
+
+    fn template() -> ChatTemplate {
+        let corpus = crate::workload::corpus_with_size(1, 30_000);
+        let tok = Tokenizer::from_vocab(train(
+            &corpus,
+            &TrainConfig {
+                vocab_size: 512,
+                ..TrainConfig::default()
+            },
+        ));
+        ChatTemplate::new(Arc::new(tok)).unwrap()
+    }
+
+    #[test]
+    fn token_and_text_assembly_agree() {
+        // The core invariant behind the paper's Fig 3: all three modes
+        // must feed the model the same ids, so the only cost difference
+        // is *where tokenization happens*.
+        let t = template();
+        let prompt = "What is SLAM?";
+        // Tokenized mode: programmatic assembly.
+        let mut tok_ids = t.preamble_ids();
+        tok_ids.extend(t.user_turn_ids(prompt));
+        // Raw mode: text transcript re-tokenized.
+        let text = format!("{}{}", t.preamble_text(), t.user_turn_text(prompt));
+        let raw_ids = t.encode_transcript(&text);
+        assert_eq!(tok_ids, raw_ids);
+    }
+
+    #[test]
+    fn multi_turn_assembly_agrees() {
+        let t = template();
+        let response = "A robot maps while localizing.";
+        let resp_ids = t.tokenizer().encode(response);
+        // Tokenized: turn 1 + close + turn 2.
+        let mut tok_ids = t.preamble_ids();
+        tok_ids.extend(t.user_turn_ids("What is SLAM?"));
+        tok_ids.extend(resp_ids.clone());
+        tok_ids.extend(t.close_ids());
+        tok_ids.extend(t.user_turn_ids("Tell me more"));
+        // Raw: full transcript.
+        let text = format!(
+            "{}{}{}{}",
+            t.preamble_text(),
+            t.user_turn_text("What is SLAM?"),
+            t.close_text(response),
+            t.user_turn_text("Tell me more"),
+        );
+        assert_eq!(t.encode_transcript(&text), tok_ids);
+    }
+
+    #[test]
+    fn client_side_render_matches_raw() {
+        let t = template();
+        let messages = vec![
+            Message::new("user", "What is SLAM?"),
+            Message::new("assistant", "A mapping method."),
+        ];
+        let rendered = t.render_messages(&messages, "Tell me more");
+        let expected = format!(
+            "{}<|im_start|>user\nWhat is SLAM?<|im_end|>\n<|im_start|>assistant\nA mapping method.<|im_end|>\n{}",
+            t.preamble_text(),
+            t.user_turn_text("Tell me more"),
+        );
+        assert_eq!(rendered, expected);
+    }
+
+    #[test]
+    fn argmax_deterministic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[0.5, 0.5]), 0, "ties break to first");
+    }
+
+    #[test]
+    fn sample_temperature_zero_is_argmax() {
+        let mut rng = Rng::new(1);
+        assert_eq!(sample(&[0.0, 3.0, 1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_temperature_respects_distribution() {
+        // With a dominant logit, sampling should pick it most of the time.
+        let mut rng = Rng::new(2);
+        let logits = [0.0f32, 8.0, 0.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample(&logits, 1.0, &mut rng) == 1)
+            .count();
+        assert!(hits > 180, "hits {hits}");
+    }
+}

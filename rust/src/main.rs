@@ -1,0 +1,165 @@
+//! `discedge` — launcher CLI for the DisCEdge edge-LLM serving stack.
+//!
+//! Subcommands:
+//! - `cluster [--config cfg.json] [--engine mock|pjrt]` — launch the
+//!   (default two-node) cluster in-process and serve until Ctrl-C;
+//! - `run-scenario [--mode tokenized|raw|client_side] [--mobility sticky|paper]
+//!   [--engine mock|pjrt]` — drive the paper's 9-turn robotics scenario
+//!   against a fresh cluster and print per-turn results;
+//! - `profiles` — print the simulated hardware profile table (Table 1).
+
+use discedge::cli::Args;
+use discedge::client::{Client, MobilityPolicy};
+use discedge::config::{ClusterConfig, ContextMode, EngineKind};
+use discedge::profile::NodeProfile;
+use discedge::server::EdgeCluster;
+use discedge::workload::Scenario;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("cluster") => cmd_cluster(&args),
+        Some("run-scenario") => cmd_run_scenario(&args),
+        Some("profiles") => {
+            println!("{}", NodeProfile::table_markdown());
+            0
+        }
+        _ => {
+            eprintln!(
+                "usage: discedge <cluster|run-scenario|profiles> [options]\n\
+                 \n\
+                 cluster       --config <file> | defaults to the paper's two-node testbed\n\
+                 \u{20}             --engine mock|pjrt (default pjrt)\n\
+                 run-scenario  --mode tokenized|raw|client_side (default tokenized)\n\
+                 \u{20}             --mobility sticky|paper (default sticky)\n\
+                 \u{20}             --engine mock|pjrt (default pjrt)\n\
+                 \u{20}             --max-tokens N (default 128)\n\
+                 profiles      print the hardware profile table"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(args: &Args) -> Result<ClusterConfig, String> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => ClusterConfig::load(std::path::Path::new(path)).map_err(|e| e.to_string())?,
+        None => ClusterConfig::two_node_testbed(),
+    };
+    match args.opt("engine") {
+        Some("mock") => {
+            cfg.engine = EngineKind::Mock {
+                prefill_ns_per_token: 2_000,
+                decode_ns_per_token: 1_000_000,
+            }
+        }
+        Some("pjrt") | None => {}
+        Some(other) => return Err(format!("unknown engine {other}")),
+    }
+    Ok(cfg)
+}
+
+fn cmd_cluster(args: &Args) -> i32 {
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let cluster = match EdgeCluster::launch(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("launch failed: {e}");
+            return 1;
+        }
+    };
+    println!("DisCEdge cluster up:");
+    for (name, addr) in cluster.endpoints() {
+        println!("  {name}  http://{addr}  (POST /completion, GET /health, GET /metrics)");
+    }
+    println!("serving; Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_run_scenario(args: &Args) -> i32 {
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let mode = match ContextMode::parse(args.opt_or("mode", "tokenized")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mobility = match args.opt_or("mobility", "sticky") {
+        "sticky" => MobilityPolicy::Sticky(0),
+        "paper" => MobilityPolicy::paper_alternate(),
+        other => {
+            eprintln!("unknown mobility {other}");
+            return 2;
+        }
+    };
+    let max_tokens = args.opt_parse_or("max-tokens", 128usize).unwrap_or(128);
+
+    let scenario = Scenario::robotics_9turn();
+    let model = cfg.nodes[0].models[0].clone();
+    let client_link = cfg.client_link.clone();
+    eprintln!("launching cluster ({} nodes)...", cfg.nodes.len());
+    let cluster = match EdgeCluster::launch(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("launch failed: {e}");
+            return 1;
+        }
+    };
+    let mut client = Client::connect(cluster.endpoints(), mobility)
+        .with_mode(mode)
+        .with_model(&model)
+        .with_link(client_link)
+        .with_max_tokens(max_tokens);
+
+    println!("turn | node      | e2e_s   | tok_s   | infer_s | req_B  | gen");
+    for turn in scenario.turns() {
+        match client.chat(&turn.prompt) {
+            Ok(r) => println!(
+                "{:>4} | {:<9} | {:>7.3} | {:>7.4} | {:>7.3} | {:>6} | {}",
+                turn.number,
+                r.node,
+                r.e2e_s,
+                r.response.timings.tokenize_s,
+                r.response.timings.prefill_s + r.response.timings.decode_s,
+                r.request_bytes,
+                r.response.tokens_generated,
+            ),
+            Err(e) => {
+                eprintln!("turn {} failed: {e}", turn.number);
+                return 1;
+            }
+        }
+    }
+    cluster.quiesce();
+    for node in &cluster.nodes {
+        println!(
+            "node {}: sync_bytes={} requests={}",
+            node.name,
+            node.sync_bytes(),
+            node.cm.registry.counter("cm_requests_total"),
+        );
+    }
+    0
+}

@@ -1,0 +1,453 @@
+//! Measurement utilities: series statistics (median, percentiles, mean,
+//! 95 % confidence intervals), latency recorders, byte counters, and
+//! table/CSV export used by the benchmark harness.
+//!
+//! The paper reports per-turn medians with 95 % confidence intervals over
+//! three repetitions; [`Series`] reproduces exactly those aggregates.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A sample series (latencies in seconds, byte counts, token rates...).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<f64>,
+}
+
+impl Series {
+    /// Empty series.
+    pub fn new() -> Series {
+        Series::default()
+    }
+
+    /// From raw samples.
+    pub fn from(samples: impl IntoIterator<Item = f64>) -> Series {
+        Series {
+            samples: samples.into_iter().collect(),
+        }
+    }
+
+    /// Add one sample.
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Raw samples.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Arithmetic mean (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (NaN for < 2 samples).
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return f64::NAN;
+        }
+        let m = self.mean();
+        let ss: f64 = self.samples.iter().map(|x| (x - m) * (x - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = p / 100.0 * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let w = rank - lo as f64;
+            sorted[lo] * (1.0 - w) + sorted[hi] * w
+        }
+    }
+
+    /// Median.
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Min sample.
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NAN, f64::min)
+    }
+
+    /// Max sample.
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NAN, f64::max)
+    }
+
+    /// Half-width of the 95 % confidence interval of the mean
+    /// (t-distribution critical values for small n, matching the paper's
+    /// 3-repetition error bars).
+    pub fn ci95(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return f64::NAN;
+        }
+        let t = t_crit_95(n - 1);
+        t * self.stddev() / (n as f64).sqrt()
+    }
+
+    /// Merge another series into this one.
+    pub fn extend(&mut self, other: &Series) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+/// Two-sided 95 % t-distribution critical value for `df` degrees of freedom.
+fn t_crit_95(df: usize) -> f64 {
+    // Table for small df (the common case: 3 repetitions -> df = 2),
+    // asymptote 1.96 beyond.
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        f64::NAN
+    } else if df <= TABLE.len() {
+        TABLE[df - 1]
+    } else {
+        1.96
+    }
+}
+
+/// Relative change of `new` vs `base` in percent; negative = improvement
+/// when lower-is-better.
+pub fn pct_change(base: f64, new: f64) -> f64 {
+    (new - base) / base * 100.0
+}
+
+/// Speedup of `new` vs `base` in percent (paper convention: how much faster
+/// the new median is): `(base - new) / base * 100`.
+pub fn pct_speedup(base: f64, new: f64) -> f64 {
+    (base - new) / base * 100.0
+}
+
+/// A wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing.
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed duration.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Thread-safe monotonically-increasing byte/ops counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Zeroed counter.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero, returning the previous value.
+    pub fn take(&self) -> u64 {
+        self.value.swap(0, Ordering::Relaxed)
+    }
+}
+
+/// Named metric registry exposed by each edge node at `/metrics`.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    series: Mutex<BTreeMap<String, Series>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Increment a named counter.
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut m = self.counters.lock().unwrap();
+        *m.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Record a sample into a named series.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut m = self.series.lock().unwrap();
+        m.entry(name.to_string()).or_default().push(v);
+    }
+
+    /// Read a counter (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Snapshot of a named series.
+    pub fn series(&self, name: &str) -> Series {
+        self.series
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Flat text dump (Prometheus-ish) for the `/metrics` endpoint.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, s) in self.series.lock().unwrap().iter() {
+            if !s.is_empty() {
+                out.push_str(&format!(
+                    "{k}_count {}\n{k}_mean {:.6}\n{k}_p50 {:.6}\n{k}_p99 {:.6}\n",
+                    s.len(),
+                    s.mean(),
+                    s.median(),
+                    s.percentile(99.0)
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// One row of a result table: label -> per-column values.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Row label (e.g. "turn 3" or "tokenized/m2").
+    pub label: String,
+    /// Column values in `Table::columns` order.
+    pub values: Vec<f64>,
+}
+
+/// Simple result table with markdown and CSV rendering, used by every bench
+/// to print the series the paper's figures plot.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Table title.
+    pub title: String,
+    /// Column headers (value columns; the first column is the row label).
+    pub columns: Vec<String>,
+    /// Rows.
+    pub rows: Vec<Row>,
+}
+
+impl Table {
+    /// New empty table.
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, label: &str, values: &[f64]) {
+        assert_eq!(values.len(), self.columns.len(), "column arity mismatch");
+        self.rows.push(Row {
+            label: label.to_string(),
+            values: values.to_vec(),
+        });
+    }
+
+    /// Render as github markdown.
+    pub fn markdown(&self) -> String {
+        let mut out = format!("### {}\n\n| |", self.title);
+        for c in &self.columns {
+            out.push_str(&format!(" {c} |"));
+        }
+        out.push_str("\n|---|");
+        for _ in &self.columns {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&format!("| {} |", r.label));
+            for v in &r.values {
+                out.push_str(&format!(" {} |", fmt_sig(*v)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (header row uses `label` for the first column).
+    pub fn csv(&self) -> String {
+        let mut out = String::from("label");
+        for c in &self.columns {
+            out.push(',');
+            out.push_str(c);
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.label);
+            for v in &r.values {
+                out.push_str(&format!(",{v}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV next to the given results dir, creating it if needed.
+    pub fn write_csv(&self, dir: &std::path::Path, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(name), self.csv())
+    }
+}
+
+/// Format with ~4 significant digits for human-readable tables.
+fn fmt_sig(v: f64) -> String {
+    if v.is_nan() {
+        return "-".into();
+    }
+    let a = v.abs();
+    if a == 0.0 {
+        "0".into()
+    } else if a >= 1000.0 {
+        format!("{v:.0}")
+    } else if a >= 10.0 {
+        format!("{v:.1}")
+    } else if a >= 0.1 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.5}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let s = Series::from([1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.stddev() - 1.5811388).abs() < 1e-6);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert_eq!(s.percentile(25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = Series::from([0.0, 10.0]);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(75.0), 7.5);
+    }
+
+    #[test]
+    fn ci95_three_reps() {
+        // Paper setup: 3 repetitions -> df=2 -> t = 4.303.
+        let s = Series::from([10.0, 12.0, 11.0]);
+        let expected = 4.303 * s.stddev() / 3f64.sqrt();
+        assert!((s.ci95() - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_series_nan() {
+        let s = Series::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+        assert!(s.ci95().is_nan());
+    }
+
+    #[test]
+    fn speedup_convention() {
+        // Paper: raw median 1.0s -> tokenized 0.8554s = 14.46% speedup.
+        let v = pct_speedup(1.0, 0.8554);
+        assert!((v - 14.46).abs() < 1e-9);
+        assert!((pct_change(1.0, 0.85) + 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counter_ops() {
+        let c = Counter::new();
+        c.add(5);
+        c.add(7);
+        assert_eq!(c.get(), 12);
+        assert_eq!(c.take(), 12);
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let r = Registry::new();
+        r.incr("requests_total", 1);
+        r.incr("requests_total", 2);
+        r.observe("latency_s", 0.5);
+        r.observe("latency_s", 1.5);
+        assert_eq!(r.counter("requests_total"), 3);
+        assert_eq!(r.series("latency_s").mean(), 1.0);
+        let dump = r.dump();
+        assert!(dump.contains("requests_total 3"));
+        assert!(dump.contains("latency_s_count 2"));
+    }
+
+    #[test]
+    fn table_render() {
+        let mut t = Table::new("Fig X", &["raw", "tokenized"]);
+        t.row("turn 1", &[1.25, 1.0]);
+        let md = t.markdown();
+        assert!(md.contains("| turn 1 | 1.250 | 1.000 |"));
+        let csv = t.csv();
+        assert!(csv.starts_with("label,raw,tokenized\n"));
+        assert!(csv.contains("turn 1,1.25,1\n"));
+    }
+}

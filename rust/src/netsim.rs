@@ -1,0 +1,212 @@
+//! Network simulation: link models (propagation latency + bandwidth +
+//! jitter) and metered byte-accounting stream wrappers.
+//!
+//! The paper measures (a) inter-node synchronization traffic with
+//! tcpdump/tshark on the FReD peer port and (b) client→server request sizes.
+//! Here every socket is wrapped in a [`MeteredStream`]; byte counters give
+//! exact on-wire payload sizes, and the [`LinkModel`] injects the latency /
+//! bandwidth characteristics of the emulated links (local testbed LAN,
+//! client uplink), replacing the physical network of the paper's testbed.
+//!
+//! Delay is applied on the *write* side, once per `write` call: the HTTP
+//! and replication layers send each message with a single write so the
+//! model charges one propagation delay plus `bytes / bandwidth`
+//! serialization per message, which is how the paper's LAN behaves.
+
+use std::io::{Read, Write};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::metrics::Counter;
+use crate::testkit::Rng;
+
+/// Characteristics of an emulated network link.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    /// One-way propagation delay.
+    pub latency: Duration,
+    /// Bandwidth in bytes/second (`None` = unconstrained).
+    pub bandwidth_bps: Option<u64>,
+    /// Uniform jitter added on top of latency, in `[0, jitter]`.
+    pub jitter: Duration,
+}
+
+impl LinkModel {
+    /// A link with no delay at all (pure byte accounting).
+    pub fn ideal() -> LinkModel {
+        LinkModel {
+            latency: Duration::ZERO,
+            bandwidth_bps: None,
+            jitter: Duration::ZERO,
+        }
+    }
+
+    /// Local-testbed LAN as in the paper's setup (§4.2): same-switch
+    /// gigabit Ethernet, sub-millisecond RTT.
+    pub fn lan() -> LinkModel {
+        LinkModel {
+            latency: Duration::from_micros(200),
+            bandwidth_bps: Some(125_000_000), // 1 Gbit/s
+            jitter: Duration::from_micros(50),
+        }
+    }
+
+    /// A constrained mobile-client uplink (the paper motivates DisCEdge
+    /// with bandwidth-limited mobile clients, §1): ~20 Mbit/s, 2 ms.
+    pub fn mobile_uplink() -> LinkModel {
+        LinkModel {
+            latency: Duration::from_millis(2),
+            bandwidth_bps: Some(2_500_000), // 20 Mbit/s
+            jitter: Duration::from_micros(300),
+        }
+    }
+
+    /// Wide-area link between distant edge sites (used by ablations).
+    pub fn wan(rtt_ms: u64) -> LinkModel {
+        LinkModel {
+            latency: Duration::from_millis(rtt_ms / 2),
+            bandwidth_bps: Some(12_500_000), // 100 Mbit/s
+            jitter: Duration::from_millis(1),
+        }
+    }
+
+    /// Transmission delay for a message of `bytes` (excluding jitter).
+    pub fn delay_for(&self, bytes: usize) -> Duration {
+        let ser = match self.bandwidth_bps {
+            Some(bps) if bps > 0 => Duration::from_secs_f64(bytes as f64 / bps as f64),
+            _ => Duration::ZERO,
+        };
+        self.latency + ser
+    }
+}
+
+/// Shared tx/rx byte counters for one logical link.
+#[derive(Debug, Default)]
+pub struct TrafficMeter {
+    /// Bytes written through streams carrying this meter.
+    pub tx: Counter,
+    /// Bytes read through streams carrying this meter.
+    pub rx: Counter,
+    /// Number of messages (write calls).
+    pub messages: Counter,
+}
+
+impl TrafficMeter {
+    /// Fresh zeroed meter.
+    pub fn new() -> Arc<TrafficMeter> {
+        Arc::new(TrafficMeter::default())
+    }
+
+    /// Total bytes in both directions.
+    pub fn total(&self) -> u64 {
+        self.tx.get() + self.rx.get()
+    }
+}
+
+/// A `Read + Write` wrapper that meters bytes and injects link delay.
+pub struct MeteredStream<S> {
+    inner: S,
+    meter: Arc<TrafficMeter>,
+    link: LinkModel,
+    jitter_rng: Arc<Mutex<Rng>>,
+}
+
+impl<S> MeteredStream<S> {
+    /// Wrap a stream with a meter and a link model.
+    pub fn new(inner: S, meter: Arc<TrafficMeter>, link: LinkModel) -> MeteredStream<S> {
+        MeteredStream {
+            inner,
+            meter,
+            link,
+            jitter_rng: Arc::new(Mutex::new(Rng::new(0x1E77E4))),
+        }
+    }
+
+    /// The underlying stream.
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    /// The meter attached to this stream.
+    pub fn meter(&self) -> &Arc<TrafficMeter> {
+        &self.meter
+    }
+}
+
+impl<S: Read> Read for MeteredStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.meter.rx.add(n as u64);
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for MeteredStream<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let mut delay = self.link.delay_for(buf.len());
+        if !self.link.jitter.is_zero() {
+            let j = self.jitter_rng.lock().unwrap().f64();
+            delay += self.link.jitter.mul_f64(j);
+        }
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        let n = self.inner.write(buf)?;
+        self.meter.tx.add(n as u64);
+        self.meter.messages.add(1);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn delay_model() {
+        let l = LinkModel {
+            latency: Duration::from_millis(1),
+            bandwidth_bps: Some(1000),
+            jitter: Duration::ZERO,
+        };
+        // 500 bytes at 1000 B/s = 500 ms + 1 ms latency.
+        assert_eq!(l.delay_for(500), Duration::from_millis(501));
+        assert_eq!(LinkModel::ideal().delay_for(1_000_000), Duration::ZERO);
+    }
+
+    #[test]
+    fn metered_counts_reads_and_writes() {
+        let meter = TrafficMeter::new();
+        let buf = Cursor::new(Vec::new());
+        let mut s = MeteredStream::new(buf, meter.clone(), LinkModel::ideal());
+        s.write_all(b"hello world").unwrap();
+        assert_eq!(meter.tx.get(), 11);
+        assert_eq!(meter.messages.get(), 1);
+
+        let data = Cursor::new(b"abcdef".to_vec());
+        let mut r = MeteredStream::new(data, meter.clone(), LinkModel::ideal());
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, b"abcdef");
+        assert_eq!(meter.rx.get(), 6);
+    }
+
+    #[test]
+    fn write_applies_latency() {
+        let meter = TrafficMeter::new();
+        let link = LinkModel {
+            latency: Duration::from_millis(5),
+            bandwidth_bps: None,
+            jitter: Duration::ZERO,
+        };
+        let mut s = MeteredStream::new(Cursor::new(Vec::new()), meter, link);
+        let t = std::time::Instant::now();
+        s.write_all(b"x").unwrap();
+        assert!(t.elapsed() >= Duration::from_millis(5));
+    }
+}

@@ -1,0 +1,313 @@
+//! Simulated hardware profiles (paper Table 1 substitute).
+//!
+//! The paper's testbed pairs a fast edge node (Apple M2, hardware-
+//! accelerated llama.cpp) with a slow one (Jetson TX2); the client is a
+//! Raspberry Pi 4. We run every node on the same host, so device
+//! heterogeneity is emulated per work type:
+//!
+//! **Inference** uses *measured-work scaling*: the node measures how long
+//! the real PJRT execution took and deterministically extends it to
+//! `inference_scale ×` that duration (TX2 ≈ 6× the M2, the ratio the
+//! paper observed for identical input/output). Extending measured work
+//! preserves the real shape — inference cost keeps growing with context
+//! length exactly as the XLA executables do.
+//!
+//! **Text processing (tokenization)** uses an *emulated throughput*
+//! model: processing `n` bytes costs `n / tokenizer_kBps` seconds
+//! (the real Rust-BPE work runs first; the remainder is slept). A
+//! throughput model is used instead of work scaling because our
+//! from-scratch BPE is orders of magnitude faster relative to our
+//! model's inference (~110 MB/s) than llama.cpp's raw-text path is
+//! relative to llama.cpp inference — and because wall-clock work scaling
+//! is noisy on a single-core host. Calibration:
+//!
+//! - `m2`: 90 kB/s (request path), 600 kB/s (async update) — puts full-history re-tokenization at ≈ 9 % of the
+//!   response time at the median turn, the share implied by the paper's
+//!   8.75 % median speedup; the async fragment update lands ≈ 1–3 ms
+//!   (paper: < 1 ms).
+//! - `tx2`: 5 kB/s (request path), 15 kB/s (async update) — ≈ 17 % share (paper: 14.46 % median speedup) on
+//!   6×-slower inference; the async update lands at 4–50 ms, exactly the
+//!   range the paper reports for the TX2.
+//!
+//! `m2_native` / `tx2_native` disable the throughput model (the
+//! honest-ratio ablation A5: with our tokenizer, re-tokenization is
+//! nearly free and the paper's gap all but vanishes).
+
+use std::time::{Duration, Instant};
+
+/// A simulated device class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeProfile {
+    /// Profile name (e.g. "m2").
+    pub name: String,
+    /// Emulated text-processing throughput in kilobytes/second for the
+    /// *request path* (`None` = native Rust-BPE speed).
+    pub tokenizer_kbps: Option<f64>,
+    /// Emulated throughput for the *asynchronous* context update,
+    /// calibrated separately to the paper's direct measurement of that
+    /// step (< 1 ms on M2, 4–50 ms on TX2; §4.2.1). The request path and
+    /// the async path are measured quantities of their own in the paper
+    /// and are not consistent with a single throughput (the raw-mode
+    /// penalty includes more than tokenization).
+    pub update_kbps: Option<f64>,
+    /// Multiplier on inference CPU time.
+    pub inference_scale: f64,
+    /// Paper hardware this profile stands in for.
+    pub emulates: String,
+}
+
+impl NodeProfile {
+    /// Apple Mac M2 edge node (Table 1): the fast node.
+    pub fn m2() -> NodeProfile {
+        NodeProfile {
+            name: "m2".into(),
+            tokenizer_kbps: Some(90.0),
+            update_kbps: Some(600.0),
+            inference_scale: 1.0,
+            emulates: "Apple Mac M2, 8-core CPU (4P+4E), 16GB unified, 8-core GPU".into(),
+        }
+    }
+
+    /// Nvidia Jetson TX2 edge node (Table 1): older hardware, no
+    /// llama.cpp acceleration — much slower on both text and inference.
+    pub fn tx2() -> NodeProfile {
+        NodeProfile {
+            name: "tx2".into(),
+            tokenizer_kbps: Some(5.0),
+            update_kbps: Some(15.0),
+            inference_scale: 6.0,
+            emulates: "Nvidia Jetson TX2, ARM Cortex-A57 4-core, 8GB unified, Pascal GPU".into(),
+        }
+    }
+
+    /// M2 with the *native* tokenizer — honest-ratio ablation (A5).
+    pub fn m2_native() -> NodeProfile {
+        NodeProfile {
+            name: "m2_native".into(),
+            tokenizer_kbps: None,
+            update_kbps: None,
+            inference_scale: 1.0,
+            emulates: "M2 profile, native Rust-BPE speed".into(),
+        }
+    }
+
+    /// TX2 with the native tokenizer (hardware inference ratio only).
+    pub fn tx2_native() -> NodeProfile {
+        NodeProfile {
+            name: "tx2_native".into(),
+            tokenizer_kbps: None,
+            update_kbps: None,
+            inference_scale: 6.0,
+            emulates: "TX2 profile, native Rust-BPE speed".into(),
+        }
+    }
+
+    /// Raspberry Pi 4 client device (Table 1). Clients never tokenize or
+    /// infer in DisCEdge; the profile exists for Table-1 completeness and
+    /// client-side-compute extensions.
+    pub fn rpi4() -> NodeProfile {
+        NodeProfile {
+            name: "rpi4".into(),
+            tokenizer_kbps: Some(40.0),
+            update_kbps: Some(40.0),
+            inference_scale: f64::INFINITY,
+            emulates: "Raspberry Pi 4, ARM Cortex-A72 4-core, 4GB RAM".into(),
+        }
+    }
+
+    /// Look up a built-in profile by name.
+    pub fn by_name(name: &str) -> Option<NodeProfile> {
+        match name {
+            "m2" => Some(NodeProfile::m2()),
+            "tx2" => Some(NodeProfile::tx2()),
+            "m2_native" => Some(NodeProfile::m2_native()),
+            "tx2_native" => Some(NodeProfile::tx2_native()),
+            "rpi4" => Some(NodeProfile::rpi4()),
+            _ => None,
+        }
+    }
+
+    /// Run `f`, then extend its wall time to `scale ×` the measured
+    /// duration. Returns `f`'s output.
+    pub fn run_scaled<T>(scale: f64, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        if scale > 1.0 {
+            let real = start.elapsed();
+            let extra = real.mul_f64(scale - 1.0);
+            precise_sleep(extra);
+        }
+        out
+    }
+
+    /// Run request-path text processing over `bytes` input bytes under
+    /// this profile: the real work runs first, then the wall time is
+    /// extended to `bytes / tokenizer_kbps` (deterministic emulated
+    /// throughput).
+    pub fn tokenize_emulated<T>(&self, bytes: usize, f: impl FnOnce() -> T) -> T {
+        Self::throughput_emulated(self.tokenizer_kbps, bytes, f)
+    }
+
+    /// Run async-update text processing under this profile.
+    pub fn update_tokenize_emulated<T>(&self, bytes: usize, f: impl FnOnce() -> T) -> T {
+        Self::throughput_emulated(self.update_kbps, bytes, f)
+    }
+
+    fn throughput_emulated<T>(kbps: Option<f64>, bytes: usize, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        if let Some(kbps) = kbps {
+            let target = Duration::from_secs_f64(bytes as f64 / (kbps * 1000.0));
+            let real = start.elapsed();
+            if target > real {
+                precise_sleep(target - real);
+            }
+        }
+        out
+    }
+
+    /// Run inference work under this profile.
+    pub fn infer_scaled<T>(&self, f: impl FnOnce() -> T) -> T {
+        Self::run_scaled(self.inference_scale, f)
+    }
+
+    /// Extend wall time for inference work whose *CPU* cost was measured
+    /// externally (the engine reports process-CPU seconds; sleeping
+    /// `(scale-1) × measured` here is insensitive to scheduler noise,
+    /// unlike wrapping the call in [`NodeProfile::run_scaled`]).
+    pub fn extend_inference(&self, engine_cpu_s: f64) {
+        if self.inference_scale > 1.0 && engine_cpu_s > 0.0 {
+            precise_sleep(Duration::from_secs_f64(
+                engine_cpu_s * (self.inference_scale - 1.0),
+            ));
+        }
+    }
+
+    /// The engine cost as perceived on this device class.
+    pub fn scaled_inference_s(&self, engine_cpu_s: f64) -> f64 {
+        engine_cpu_s * self.inference_scale.max(1.0)
+    }
+
+    /// Markdown rendering of the built-in profile table (Table 1 analog).
+    pub fn table_markdown() -> String {
+        let mut out = String::from(
+            "| Profile | Emulates | Text throughput | Inference scale |\n|---|---|---|---|\n",
+        );
+        for p in [
+            NodeProfile::m2(),
+            NodeProfile::tx2(),
+            NodeProfile::m2_native(),
+            NodeProfile::tx2_native(),
+            NodeProfile::rpi4(),
+        ] {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} |\n",
+                p.name,
+                p.emulates,
+                match p.tokenizer_kbps {
+                    Some(k) => format!("{k} kB/s"),
+                    None => "native".into(),
+                },
+                if p.inference_scale.is_finite() {
+                    format!("{}x", p.inference_scale)
+                } else {
+                    "n/a".into()
+                }
+            ));
+        }
+        out
+    }
+}
+
+/// Sleep `d` with sub-millisecond accuracy: OS sleep for the bulk, then a
+/// short spin for the tail (plain `thread::sleep` over-shoots by up to a
+/// scheduler quantum, which would distort emulated costs).
+fn precise_sleep(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    let start = Instant::now();
+    if d > Duration::from_micros(500) {
+        std::thread::sleep(d - Duration::from_micros(300));
+    }
+    while start.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_profiles() {
+        assert_eq!(NodeProfile::by_name("m2").unwrap(), NodeProfile::m2());
+        assert_eq!(NodeProfile::by_name("tx2").unwrap().inference_scale, 6.0);
+        assert_eq!(
+            NodeProfile::by_name("tx2_native").unwrap().tokenizer_kbps,
+            None
+        );
+        assert!(NodeProfile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn scaling_extends_duration() {
+        // Real work of ~2 ms scaled 3x should take >= ~6 ms.
+        let start = Instant::now();
+        NodeProfile::run_scaled(3.0, || {
+            let t = Instant::now();
+            while t.elapsed() < Duration::from_millis(2) {
+                std::hint::spin_loop();
+            }
+        });
+        let total = start.elapsed();
+        assert!(total >= Duration::from_millis(5), "total {total:?}");
+        assert!(total < Duration::from_millis(60), "total {total:?}");
+    }
+
+    #[test]
+    fn scale_one_adds_nothing() {
+        let start = Instant::now();
+        NodeProfile::run_scaled(1.0, || {});
+        assert!(start.elapsed() < Duration::from_millis(2));
+    }
+
+    #[test]
+    fn emulated_throughput_is_deterministic() {
+        // 1 KB at 100 kB/s = 10 ms regardless of how fast f runs.
+        let p = NodeProfile {
+            name: "t".into(),
+            tokenizer_kbps: Some(100.0),
+            update_kbps: Some(100.0),
+            inference_scale: 1.0,
+            emulates: String::new(),
+        };
+        let start = Instant::now();
+        p.tokenize_emulated(1000, || {});
+        let took = start.elapsed();
+        assert!(took >= Duration::from_millis(10), "{took:?}");
+        assert!(took < Duration::from_millis(25), "{took:?}");
+    }
+
+    #[test]
+    fn native_profile_adds_nothing() {
+        let p = NodeProfile::m2_native();
+        let start = Instant::now();
+        p.tokenize_emulated(1_000_000, || {});
+        assert!(start.elapsed() < Duration::from_millis(2));
+    }
+
+    #[test]
+    fn returns_inner_value() {
+        let v = NodeProfile::m2_native().tokenize_emulated(10, || 42);
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = NodeProfile::table_markdown();
+        assert!(t.contains("Jetson TX2"));
+        assert!(t.contains("Raspberry Pi 4"));
+        assert!(t.contains("90 kB/s"));
+    }
+}

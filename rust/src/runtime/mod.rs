@@ -1,0 +1,321 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the PJRT CPU client via the `xla` crate.
+//!
+//! Python is involved only at build time (`make artifacts`): it lowers the
+//! JAX/Pallas model to **HLO text** (the interchange format this XLA build
+//! accepts — serialized protos from jax ≥ 0.5 carry 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects). At node startup this module parses
+//! and compiles:
+//!
+//! - `init.hlo.txt` — () → weights tuple (deterministic seeded init; run
+//!   once, kept as host literals and passed to every generation call);
+//! - `generate_{L}.hlo.txt` per prefill bucket `L` — one *full turn*:
+//!   Pallas flash-attention prefill over the (padded) context, then an
+//!   XLA `while`-loop greedy decode that keeps the KV cache on device —
+//!   no per-token host round-trips.
+//!
+//! Static shapes are required for AOT, so contexts are padded to bucket
+//! sizes `{128, 256, 512, 1024, 2048}` and masked by their true length.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::json;
+use crate::{Error, Result};
+
+/// Model metadata contract shared with `python/compile/aot.py`
+/// (`artifacts/model_meta.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    /// Vocabulary size (must match the tokenizer artifact).
+    pub vocab_size: usize,
+    /// Hidden width.
+    pub d_model: usize,
+    /// Transformer layers.
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+    /// SwiGLU inner width.
+    pub ffn: usize,
+    /// Maximum new tokens per call (compiled into the decode loop).
+    pub max_new: usize,
+    /// Prefill buckets, ascending.
+    pub buckets: Vec<usize>,
+    /// Weight-init seed (paper config: 123).
+    pub seed: u64,
+}
+
+impl ModelMeta {
+    /// Load from `artifacts/model_meta.json`.
+    pub fn load(dir: &Path) -> Result<ModelMeta> {
+        let path = dir.join("model_meta.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+        ModelMeta::from_json(&text)
+    }
+
+    /// Parse the metadata document.
+    pub fn from_json(text: &str) -> Result<ModelMeta> {
+        let v = json::parse(text)?;
+        let buckets = v
+            .get("buckets")
+            .and_then(|b| b.as_int_array())
+            .ok_or_else(|| Error::Runtime("meta missing buckets".into()))?
+            .into_iter()
+            .map(|x| x as usize)
+            .collect::<Vec<usize>>();
+        if buckets.is_empty() || buckets.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::Runtime("buckets must be ascending".into()));
+        }
+        Ok(ModelMeta {
+            vocab_size: v.req_u64("vocab_size")? as usize,
+            d_model: v.req_u64("d_model")? as usize,
+            n_layers: v.req_u64("n_layers")? as usize,
+            n_heads: v.req_u64("n_heads")? as usize,
+            head_dim: v.req_u64("head_dim")? as usize,
+            ffn: v.req_u64("ffn")? as usize,
+            max_new: v.req_u64("max_new")? as usize,
+            seed: v.req_u64("seed")?,
+            buckets,
+        })
+    }
+
+    /// Largest usable context (the last bucket).
+    pub fn max_context(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Smallest bucket holding `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "context of {len} tokens exceeds the largest bucket {}",
+                    self.max_context()
+                ))
+            })
+    }
+}
+
+/// Raw output of one on-device generation call.
+#[derive(Debug, Clone)]
+pub struct RawGeneration {
+    /// Generated ids (`n_generated` of them, already trimmed).
+    pub ids: Vec<u32>,
+    /// Prefill bucket used.
+    pub bucket: usize,
+    /// True context length fed to prefill.
+    pub context_len: usize,
+    /// Device-execution CPU seconds (process CPU time, robust against
+    /// scheduler preemption on shared hosts — see [`process_cpu_time`]).
+    pub execute_s: f64,
+    /// Wall-clock seconds of the same call (diagnostics).
+    pub execute_wall_s: f64,
+}
+
+/// Process CPU time in seconds. XLA's CPU client runs work on its own
+/// thread pool, so thread CPU time of the caller would miss it; process
+/// CPU time captures it and is insensitive to preemption by other
+/// processes — the property the [`crate::profile`] inference scaling
+/// needs on this single-core testbed. Engine calls are serialized, so
+/// cross-request contamination cannot occur; other in-process threads
+/// sleep during inference and contribute negligible CPU.
+pub fn process_cpu_time() -> f64 {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
+    if rc != 0 {
+        return 0.0;
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// The compiled model: PJRT client + per-bucket executables + weights.
+///
+/// NOT `Send`/`Sync` (the `xla` crate wraps `Rc` internals) — own it on a
+/// dedicated engine thread; see [`crate::llm::PjrtEngine`].
+pub struct ModelRuntime {
+    meta: ModelMeta,
+    weights: Vec<Literal>,
+    generates: BTreeMap<usize, PjRtLoadedExecutable>,
+    _client: PjRtClient,
+}
+
+impl ModelRuntime {
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<ModelRuntime> {
+        let meta = ModelMeta::load(dir)?;
+        let client = PjRtClient::cpu()?;
+
+        let init = compile(&client, &dir.join("init.hlo.txt"))?;
+        let weights = {
+            let outs = init.execute::<Literal>(&[])?;
+            let mut tuple = outs[0][0].to_literal_sync()?;
+            tuple.decompose_tuple()?
+        };
+
+        let mut generates = BTreeMap::new();
+        for &bucket in &meta.buckets {
+            let path = dir.join(format!("generate_{bucket}.hlo.txt"));
+            generates.insert(bucket, compile(&client, &path)?);
+        }
+        Ok(ModelRuntime {
+            meta,
+            weights,
+            generates,
+            _client: client,
+        })
+    }
+
+    /// Model metadata.
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Number of weight tensors (diagnostics).
+    pub fn weight_count(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Run one full turn: prefill `input_ids` (padded to the bucket) and
+    /// greedily decode up to `max_new` tokens, stopping on `stop_id`.
+    pub fn generate(
+        &self,
+        input_ids: &[u32],
+        max_new: usize,
+        stop_id: u32,
+    ) -> Result<RawGeneration> {
+        let len = input_ids.len();
+        if len == 0 {
+            return Err(Error::Runtime("empty input".into()));
+        }
+        let bucket = self.meta.bucket_for(len)?;
+        let max_new = max_new.min(self.meta.max_new);
+        let exe = self
+            .generates
+            .get(&bucket)
+            .ok_or_else(|| Error::Runtime(format!("no executable for bucket {bucket}")))?;
+
+        // Pad tokens to the bucket with zeros (masked by `length`).
+        let mut tokens = vec![0i32; bucket];
+        for (i, &id) in input_ids.iter().enumerate() {
+            tokens[i] = id as i32;
+        }
+        let tokens_lit = Literal::vec1(&tokens);
+        let len_lit = Literal::scalar(len as i32);
+        let max_new_lit = Literal::scalar(max_new as i32);
+        let stop_lit = Literal::scalar(stop_id as i32);
+
+        let mut args: Vec<&Literal> = self.weights.iter().collect();
+        args.push(&tokens_lit);
+        args.push(&len_lit);
+        args.push(&max_new_lit);
+        args.push(&stop_lit);
+
+        let t = Instant::now();
+        let cpu0 = process_cpu_time();
+        let outs = exe.execute::<&Literal>(&args)?;
+        let mut tuple = outs[0][0].to_literal_sync()?;
+        let execute_s = process_cpu_time() - cpu0;
+        let execute_wall_s = t.elapsed().as_secs_f64();
+
+        let parts = tuple.decompose_tuple()?;
+        if parts.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "generate returned {} outputs, expected 2",
+                parts.len()
+            )));
+        }
+        let out_ids = parts[0].to_vec::<i32>()?;
+        let n_gen = (parts[1].to_vec::<i32>()?[0] as usize).min(out_ids.len());
+        let ids = out_ids
+            .iter()
+            .take(n_gen)
+            .map(|&x| x as u32)
+            .collect::<Vec<u32>>();
+        Ok(RawGeneration {
+            ids,
+            bucket,
+            context_len: len,
+            execute_s,
+            execute_wall_s,
+        })
+    }
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    if !path.exists() {
+        return Err(Error::Runtime(format!(
+            "artifact missing: {} (run `make artifacts`)",
+            path.display()
+        )));
+    }
+    let proto = HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+    )?;
+    let comp = XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{
+        "vocab_size": 4096, "d_model": 128, "n_layers": 2, "n_heads": 4,
+        "head_dim": 32, "ffn": 352, "max_new": 128, "seed": 123,
+        "buckets": [128, 256, 512, 1024, 2048]
+    }"#;
+
+    #[test]
+    fn meta_parses() {
+        let m = ModelMeta::from_json(META).unwrap();
+        assert_eq!(m.vocab_size, 4096);
+        assert_eq!(m.buckets, vec![128, 256, 512, 1024, 2048]);
+        assert_eq!(m.max_context(), 2048);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = ModelMeta::from_json(META).unwrap();
+        assert_eq!(m.bucket_for(1).unwrap(), 128);
+        assert_eq!(m.bucket_for(128).unwrap(), 128);
+        assert_eq!(m.bucket_for(129).unwrap(), 256);
+        assert_eq!(m.bucket_for(2048).unwrap(), 2048);
+        assert!(m.bucket_for(2049).is_err());
+    }
+
+    #[test]
+    fn meta_rejects_bad_buckets() {
+        let bad = META.replace("[128, 256, 512, 1024, 2048]", "[256, 128]");
+        assert!(ModelMeta::from_json(&bad).is_err());
+        let empty = META.replace("[128, 256, 512, 1024, 2048]", "[]");
+        assert!(ModelMeta::from_json(&empty).is_err());
+    }
+
+    #[test]
+    fn missing_artifacts_reported() {
+        let dir = std::env::temp_dir().join("discedge_no_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = match ModelRuntime::load(&dir) {
+            Ok(_) => panic!("load must fail without artifacts"),
+            Err(e) => e,
+        };
+        let msg = err.to_string();
+        assert!(msg.contains("model_meta.json") || msg.contains("read"), "{msg}");
+    }
+
+    // End-to-end runtime tests against real artifacts live in
+    // rust/tests/pjrt_integration.rs (they require `make artifacts`).
+}

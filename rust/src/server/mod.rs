@@ -1,0 +1,451 @@
+//! Edge node and cluster assembly (paper Fig 1).
+//!
+//! An [`EdgeNode`] wires together the per-node components: HTTP API
+//! (`/completion`, `/health`, `/metrics`), [`ContextManager`], LLM engine,
+//! and the local [`KvNode`] replica. [`EdgeCluster`] launches several nodes
+//! in one process (the paper's two-node testbed), creates one keygroup per
+//! model, and subscribes peers that serve the same model to each other's
+//! updates — context only replicates where it is relevant (§3.3).
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+use crate::config::{ClusterConfig, EngineKind, NodeConfig};
+use crate::context::{CompletionRequest, ContextManager, TokenCodec};
+use crate::http::{Handler, Request, Response, Server};
+use crate::kvstore::{KvConfig, KvNode};
+use crate::llm::{ChatTemplate, Engine, MockEngine, PjrtEngine};
+use crate::profile::NodeProfile;
+use crate::tokenizer::{train, Tokenizer, TrainConfig, Vocab};
+use crate::{Error, Result};
+
+/// One running edge node.
+pub struct EdgeNode {
+    /// Node name.
+    pub name: String,
+    /// Hardware profile emulated by this node.
+    pub profile: NodeProfile,
+    /// The context manager (public for metric access in benches).
+    pub cm: Arc<ContextManager>,
+    /// The local KV replica.
+    pub kv: Arc<KvNode>,
+    api: Server,
+    engines: Arc<HashMap<String, Arc<dyn Engine>>>,
+}
+
+impl EdgeNode {
+    /// Start a node with prepared engines and template.
+    pub fn start(
+        node_cfg: &NodeConfig,
+        cluster_cfg: &ClusterConfig,
+        engines: Arc<HashMap<String, Arc<dyn Engine>>>,
+        template: ChatTemplate,
+    ) -> Result<EdgeNode> {
+        let kv = Arc::new(KvNode::start(
+            &node_cfg.name,
+            KvConfig {
+                port: node_cfg.kv_port,
+                peer_link: cluster_cfg.peer_link.clone(),
+                replication: cluster_cfg.replication.clone(),
+                default_ttl: Some(cluster_cfg.session_ttl),
+                ..KvConfig::default()
+            },
+        )?);
+        for model in &node_cfg.models {
+            kv.create_keygroup(model);
+        }
+        let cm = Arc::new(ContextManager::new(
+            &node_cfg.name,
+            node_cfg.profile.clone(),
+            template,
+            kv.clone(),
+            cluster_cfg.consistency.clone(),
+            cluster_cfg.generation.clone(),
+            cluster_cfg.session_ttl,
+            TokenCodec::BinaryU16,
+        ));
+        let h_cm = cm.clone();
+        let h_engines = engines.clone();
+        let h_kv = kv.clone();
+        let handler: Handler = Arc::new(move |req: &Request| {
+            dispatch(req, &h_cm, &h_engines, &h_kv)
+        });
+        let api = Server::serve(node_cfg.api_port, cluster_cfg.client_link.clone(), handler)?;
+        Ok(EdgeNode {
+            name: node_cfg.name.clone(),
+            profile: node_cfg.profile.clone(),
+            cm,
+            kv,
+            api,
+            engines,
+        })
+    }
+
+    /// API endpoint address.
+    pub fn api_addr(&self) -> SocketAddr {
+        self.api.addr
+    }
+
+    /// Bytes moved over this node's KV replication port (both directions),
+    /// the quantity Fig 5 plots.
+    pub fn sync_bytes(&self) -> u64 {
+        self.kv.sync_rx_bytes() + self.kv.sync_tx_bytes()
+    }
+
+    /// Models served here.
+    pub fn models(&self) -> Vec<String> {
+        self.engines.keys().cloned().collect()
+    }
+
+    /// Drain async context updates and replication (bench turn barrier).
+    pub fn quiesce(&self) {
+        self.cm.quiesce();
+    }
+}
+
+fn dispatch(
+    req: &Request,
+    cm: &Arc<ContextManager>,
+    engines: &Arc<HashMap<String, Arc<dyn Engine>>>,
+    kv: &Arc<KvNode>,
+) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/completion") => {
+            let parsed = match req
+                .body_str()
+                .and_then(CompletionRequest::from_json)
+            {
+                Ok(p) => p,
+                Err(e) => return Response::error(400, &e.to_string()),
+            };
+            let engine = match engines.get(&parsed.model) {
+                Some(e) => e,
+                None => {
+                    return Response::error(
+                        404,
+                        &format!("model {} not served here", parsed.model),
+                    )
+                }
+            };
+            match cm.handle(&parsed, engine.as_ref()) {
+                Ok(resp) => Response::json(&resp.to_json()),
+                Err(Error::BadRequest(m)) => Response::error(400, &m),
+                Err(Error::Consistency(m)) => Response::error(409, &m),
+                Err(e) => Response::error(500, &e.to_string()),
+            }
+        }
+        ("GET", "/health") => Response::json(
+            &crate::json::Value::obj()
+                .set("status", "ok")
+                .set("node", cm.node_name())
+                .to_json(),
+        ),
+        ("GET", "/metrics") => {
+            let mut dump = cm.registry.dump();
+            dump.push_str(&format!("kv_entries {}\n", kv.len()));
+            dump.push_str(&format!(
+                "kv_sync_bytes {}\n",
+                kv.sync_rx_bytes() + kv.sync_tx_bytes()
+            ));
+            Response::text(&dump)
+        }
+        _ => Response::error(404, "not found"),
+    }
+}
+
+/// A launched multi-node cluster.
+pub struct EdgeCluster {
+    /// The running nodes, in config order.
+    pub nodes: Vec<EdgeNode>,
+}
+
+impl EdgeCluster {
+    /// Launch all nodes from a config: build the tokenizer and engines,
+    /// start every node, and wire keygroup peering.
+    pub fn launch(cfg: ClusterConfig) -> Result<EdgeCluster> {
+        let tokenizer = Arc::new(load_or_train_tokenizer(&cfg)?);
+        let template = ChatTemplate::new(tokenizer.clone())?;
+        let engines = Arc::new(build_engines(&cfg, &tokenizer)?);
+        Self::launch_with(cfg, engines, template)
+    }
+
+    /// Launch with externally prepared engines/template (tests).
+    pub fn launch_with(
+        cfg: ClusterConfig,
+        engines: Arc<HashMap<String, Arc<dyn Engine>>>,
+        template: ChatTemplate,
+    ) -> Result<EdgeCluster> {
+        cfg.validate()?;
+        let mut nodes = Vec::with_capacity(cfg.nodes.len());
+        for node_cfg in &cfg.nodes {
+            for m in &node_cfg.models {
+                if !engines.contains_key(m) {
+                    return Err(Error::Config(format!(
+                        "node {} serves model {m} but no engine was built for it",
+                        node_cfg.name
+                    )));
+                }
+            }
+            nodes.push(EdgeNode::start(
+                node_cfg,
+                &cfg,
+                engines.clone(),
+                template.clone(),
+            )?);
+        }
+        // Peer wiring: nodes sharing a model replicate that keygroup to
+        // each other.
+        for (i, a) in cfg.nodes.iter().enumerate() {
+            for (j, b) in cfg.nodes.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                for model in &a.models {
+                    if b.models.contains(model) {
+                        let peer = nodes[j].kv.replication_addr();
+                        nodes[i].kv.add_peer(model, peer);
+                    }
+                }
+            }
+        }
+        Ok(EdgeCluster { nodes })
+    }
+
+    /// Named API endpoints in node order.
+    pub fn endpoints(&self) -> Vec<(String, SocketAddr)> {
+        self.nodes
+            .iter()
+            .map(|n| (n.name.clone(), n.api_addr()))
+            .collect()
+    }
+
+    /// Node by name.
+    pub fn node(&self, name: &str) -> Option<&EdgeNode> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Drain all async work on every node (bench barrier).
+    pub fn quiesce(&self) {
+        for n in &self.nodes {
+            n.quiesce();
+        }
+    }
+}
+
+/// Load `artifacts/tokenizer.json`, or train a small fallback vocabulary
+/// when artifacts are absent (mock-engine development workflows).
+pub fn load_or_train_tokenizer(cfg: &ClusterConfig) -> Result<Tokenizer> {
+    let path = cfg.artifacts_dir.join("tokenizer.json");
+    if path.exists() {
+        return Tokenizer::load(&path);
+    }
+    if matches!(cfg.engine, EngineKind::Pjrt) {
+        return Err(Error::Config(format!(
+            "tokenizer artifact missing: {} (run `make artifacts`)",
+            path.display()
+        )));
+    }
+    let corpus = crate::workload::corpus_with_size(123, 60_000);
+    Ok(Tokenizer::from_vocab(train(
+        &corpus,
+        &TrainConfig {
+            vocab_size: 1024,
+            ..TrainConfig::default()
+        },
+    )))
+}
+
+/// Build one engine per model named anywhere in the config.
+pub fn build_engines(
+    cfg: &ClusterConfig,
+    tokenizer: &Arc<Tokenizer>,
+) -> Result<HashMap<String, Arc<dyn Engine>>> {
+    let mut models: Vec<String> = cfg
+        .nodes
+        .iter()
+        .flat_map(|n| n.models.iter().cloned())
+        .collect();
+    models.sort_unstable();
+    models.dedup();
+    let mut out: HashMap<String, Arc<dyn Engine>> = HashMap::new();
+    for model in models {
+        let engine: Arc<dyn Engine> = match &cfg.engine {
+            EngineKind::Mock {
+                prefill_ns_per_token,
+                decode_ns_per_token,
+            } => Arc::new(
+                MockEngine::new(&model, tokenizer.vocab_size() as u32)
+                    .with_costs(*prefill_ns_per_token, *decode_ns_per_token)
+                    .with_max_context(2048),
+            ),
+            EngineKind::Pjrt => Arc::new(PjrtEngine::load(
+                &model,
+                &cfg.artifacts_dir,
+                cfg.generation.clone(),
+            )?),
+        };
+        out.insert(model.clone(), engine);
+    }
+    Ok(out)
+}
+
+/// Train the production tokenizer and save it to the artifacts dir
+/// (called by the `train_tokenizer` binary from `make artifacts`).
+pub fn train_production_tokenizer(dir: &std::path::Path, vocab_size: usize) -> Result<Vocab> {
+    let corpus = crate::workload::corpus();
+    let vocab = train(
+        &corpus,
+        &TrainConfig {
+            vocab_size,
+            ..TrainConfig::default()
+        },
+    );
+    vocab.save(&dir.join("tokenizer.json"))?;
+    Ok(vocab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ContextMode;
+    use crate::http::{Connection, Request as HttpRequest};
+    use crate::netsim::{LinkModel, TrafficMeter};
+
+    fn mock_cluster(n_nodes: usize) -> EdgeCluster {
+        let mut cfg = ClusterConfig::two_node_testbed();
+        cfg.engine = EngineKind::Mock {
+            prefill_ns_per_token: 0,
+            decode_ns_per_token: 0,
+        };
+        cfg.peer_link = LinkModel::ideal();
+        cfg.client_link = LinkModel::ideal();
+        cfg.nodes.truncate(n_nodes);
+        // Profiles slow tests down; neutralize them here.
+        for n in &mut cfg.nodes {
+            n.profile = NodeProfile::m2_native();
+        }
+        EdgeCluster::launch(cfg).unwrap()
+    }
+
+    fn post(addr: SocketAddr, req: &CompletionRequest) -> crate::context::CompletionResponse {
+        let mut conn = Connection::open(addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+        let resp = conn
+            .round_trip(&HttpRequest::post_json("/completion", &req.to_json()))
+            .unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body_str().unwrap_or("?"));
+        crate::context::CompletionResponse::from_json(resp.body_str().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn health_and_metrics() {
+        let cluster = mock_cluster(1);
+        let addr = cluster.nodes[0].api_addr();
+        let mut conn = Connection::open(addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+        let h = conn.round_trip(&HttpRequest::get("/health")).unwrap();
+        assert_eq!(h.status, 200);
+        assert!(h.body_str().unwrap().contains("ok"));
+        let m = conn.round_trip(&HttpRequest::get("/metrics")).unwrap();
+        assert!(m.body_str().unwrap().contains("kv_entries"));
+    }
+
+    #[test]
+    fn completion_over_http() {
+        let cluster = mock_cluster(1);
+        let req = CompletionRequest::new("discedge/tiny-chat", "hello", 1, ContextMode::Tokenized);
+        let resp = post(cluster.nodes[0].api_addr(), &req);
+        assert_eq!(resp.turn, 1);
+        assert!(!resp.text.is_empty());
+        assert_eq!(resp.node, "edge-m2");
+    }
+
+    #[test]
+    fn unknown_model_404() {
+        let cluster = mock_cluster(1);
+        let mut conn = Connection::open(
+            cluster.nodes[0].api_addr(),
+            TrafficMeter::new(),
+            LinkModel::ideal(),
+        )
+        .unwrap();
+        let req = CompletionRequest::new("ghost/model", "hi", 1, ContextMode::Raw);
+        let resp = conn
+            .round_trip(&HttpRequest::post_json("/completion", &req.to_json()))
+            .unwrap();
+        assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn session_continues_on_other_node_after_replication() {
+        // The paper's handover scenario in miniature.
+        let cluster = mock_cluster(2);
+        let model = "discedge/tiny-chat";
+        let mut req = CompletionRequest::new(model, "What is SLAM?", 1, ContextMode::Tokenized);
+        let r1 = post(cluster.nodes[0].api_addr(), &req);
+        cluster.quiesce();
+
+        req.user_id = Some(r1.user_id.clone());
+        req.session_id = Some(r1.session_id.clone());
+        req.turn = 2;
+        req.prompt = "Tell me more".into();
+        let r2 = post(cluster.nodes[1].api_addr(), &req);
+        assert_eq!(r2.node, "edge-tx2");
+        assert!(r2.prefill_tokens > r1.prefill_tokens);
+    }
+
+    #[test]
+    fn handover_without_quiesce_uses_retries() {
+        // Without an explicit barrier the CM's retry loop must absorb the
+        // replication lag (the paper: "never more than two retries").
+        let cluster = mock_cluster(2);
+        let model = "discedge/tiny-chat";
+        let mut req = CompletionRequest::new(model, "q1", 1, ContextMode::Tokenized);
+        let r1 = post(cluster.nodes[0].api_addr(), &req);
+        req.user_id = Some(r1.user_id.clone());
+        req.session_id = Some(r1.session_id.clone());
+        req.turn = 2;
+        req.prompt = "q2".into();
+        let r2 = post(cluster.nodes[1].api_addr(), &req);
+        assert_eq!(r2.turn, 2);
+        // retries may be 0 (replication won the race) but the request
+        // must succeed either way.
+    }
+
+    #[test]
+    fn consistency_conflict_maps_to_409() {
+        let mut cfg = ClusterConfig::two_node_testbed();
+        cfg.engine = EngineKind::Mock {
+            prefill_ns_per_token: 0,
+            decode_ns_per_token: 0,
+        };
+        cfg.peer_link = LinkModel::ideal();
+        cfg.client_link = LinkModel::ideal();
+        cfg.nodes.truncate(1);
+        cfg.nodes[0].profile = NodeProfile::m2_native();
+        cfg.consistency.retries = 0;
+        let cluster = EdgeCluster::launch(cfg).unwrap();
+        let mut conn = Connection::open(
+            cluster.nodes[0].api_addr(),
+            TrafficMeter::new(),
+            LinkModel::ideal(),
+        )
+        .unwrap();
+        let mut req = CompletionRequest::new("discedge/tiny-chat", "hi", 9, ContextMode::Tokenized);
+        req.user_id = Some("u".into());
+        req.session_id = Some("s".into());
+        let resp = conn
+            .round_trip(&HttpRequest::post_json("/completion", &req.to_json()))
+            .unwrap();
+        assert_eq!(resp.status, 409);
+    }
+
+    #[test]
+    fn sync_bytes_counted_after_replication() {
+        let cluster = mock_cluster(2);
+        let req =
+            CompletionRequest::new("discedge/tiny-chat", "hello", 1, ContextMode::Tokenized);
+        let _ = post(cluster.nodes[0].api_addr(), &req);
+        cluster.quiesce();
+        assert!(cluster.nodes[0].sync_bytes() > 0);
+    }
+}

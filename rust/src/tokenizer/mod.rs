@@ -1,0 +1,401 @@
+//! Byte-level BPE tokenizer (llama.cpp-tokenizer substitute), implemented
+//! from scratch: trainer, encoder, decoder, and vocabulary serialization.
+//!
+//! DisCEdge's core design choice is to store and replicate session context
+//! in *tokenized* form so that only the new prompt must be tokenized per
+//! turn. For the reproduction to be honest, tokenization must be real work
+//! whose cost grows with input length — this module provides that.
+//!
+//! Layout mirrors GPT-2/llama byte-level BPE:
+//! - ids `0..256` are the 256 raw bytes;
+//! - ids `256..` are learned merges, in rank order;
+//! - the top of the vocabulary holds special tokens (ChatML markers).
+//!
+//! Encoding never emits special tokens from user text (the chat template
+//! inserts them programmatically), which doubles as prompt-injection
+//! hygiene.
+
+mod bpe;
+mod vocab;
+
+pub use bpe::{train, TrainConfig};
+pub use vocab::Vocab;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::{Error, Result};
+
+/// Special tokens used by the ChatML chat template.
+pub const SPECIAL_TOKENS: [&str; 4] = ["<|endoftext|>", "<|im_start|>", "<|im_end|>", "<|pad|>"];
+
+/// A trained byte-level BPE tokenizer.
+///
+/// Cheap to share behind an `Arc`; `encode` uses an internal word cache
+/// guarded by a mutex (hit rate is high on natural text).
+pub struct Tokenizer {
+    vocab: Vocab,
+    /// (left id, right id) -> (rank, merged id)
+    merge_map: HashMap<(u32, u32), (u32, u32)>,
+    /// word -> encoded ids memo
+    cache: Mutex<HashMap<String, Vec<u32>>>,
+}
+
+impl std::fmt::Debug for Tokenizer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tokenizer")
+            .field("vocab_size", &self.vocab.size())
+            .finish()
+    }
+}
+
+impl Tokenizer {
+    /// Build a tokenizer from a vocabulary.
+    pub fn from_vocab(vocab: Vocab) -> Tokenizer {
+        let mut merge_map = HashMap::with_capacity(vocab.merges().len());
+        for (rank, &(a, b)) in vocab.merges().iter().enumerate() {
+            let merged = 256 + rank as u32;
+            merge_map.insert((a, b), (rank as u32, merged));
+        }
+        Tokenizer {
+            vocab,
+            merge_map,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Load from a vocabulary JSON file (see [`Vocab::load`]).
+    pub fn load(path: &std::path::Path) -> Result<Tokenizer> {
+        Ok(Tokenizer::from_vocab(Vocab::load(path)?))
+    }
+
+    /// Total vocabulary size, including byte tokens and specials.
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.size()
+    }
+
+    /// Id of a special token.
+    pub fn special(&self, name: &str) -> Result<u32> {
+        self.vocab
+            .special(name)
+            .ok_or_else(|| Error::Tokenizer(format!("unknown special token {name}")))
+    }
+
+    /// Encode text to token ids. Special-token literals in the input are
+    /// encoded as plain text, never as their special ids.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 3 + 4);
+        for word in pre_split(text) {
+            // Word cache: natural text repeats tokens heavily.
+            if word.len() <= 32 {
+                if let Some(ids) = self.cache.lock().unwrap().get(word) {
+                    out.extend_from_slice(ids);
+                    continue;
+                }
+            }
+            let ids = self.encode_word(word.as_bytes());
+            if word.len() <= 32 {
+                self.cache
+                    .lock()
+                    .unwrap()
+                    .insert(word.to_string(), ids.clone());
+            }
+            out.extend_from_slice(&ids);
+        }
+        out
+    }
+
+    /// Encode a single pre-split word by iteratively applying the
+    /// lowest-rank merge, exactly like GPT-2's BPE.
+    fn encode_word(&self, bytes: &[u8]) -> Vec<u32> {
+        let mut ids: Vec<u32> = bytes.iter().map(|&b| b as u32).collect();
+        if ids.len() < 2 {
+            return ids;
+        }
+        loop {
+            // Find the pair with the lowest merge rank.
+            let mut best: Option<(u32, usize, u32)> = None; // (rank, index, merged)
+            for i in 0..ids.len() - 1 {
+                if let Some(&(rank, merged)) = self.merge_map.get(&(ids[i], ids[i + 1])) {
+                    if best.map_or(true, |(r, _, _)| rank < r) {
+                        best = Some((rank, i, merged));
+                    }
+                }
+            }
+            match best {
+                Some((_, i, merged)) => {
+                    ids[i] = merged;
+                    ids.remove(i + 1);
+                    if ids.len() < 2 {
+                        return ids;
+                    }
+                }
+                None => return ids,
+            }
+        }
+    }
+
+    /// Encode text, mapping special-token literals (e.g. `<|im_start|>`)
+    /// to their special ids — the behaviour llama.cpp calls
+    /// `parse_special`, used by the raw context mode where the whole
+    /// ChatML transcript is stored as text and re-tokenized per turn.
+    pub fn encode_with_specials(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 3 + 8);
+        let mut rest = text;
+        'outer: while !rest.is_empty() {
+            // Find the earliest special literal.
+            let mut earliest: Option<(usize, &str, u32)> = None;
+            for name in SPECIAL_TOKENS {
+                if let Some(pos) = rest.find(name) {
+                    let id = self.vocab.special(name).expect("special registered");
+                    if earliest.map_or(true, |(p, n, _)| pos < p || (pos == p && name.len() > n.len())) {
+                        earliest = Some((pos, name, id));
+                    }
+                }
+            }
+            match earliest {
+                Some((pos, name, id)) => {
+                    if pos > 0 {
+                        out.extend(self.encode(&rest[..pos]));
+                    }
+                    out.push(id);
+                    rest = &rest[pos + name.len()..];
+                }
+                None => {
+                    out.extend(self.encode(rest));
+                    break 'outer;
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode token ids back to a string. Byte-level BPE guarantees exact
+    /// round-trip for valid UTF-8 input; invalid sequences are replaced.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len() * 3);
+        for &id in ids {
+            match self.vocab.token_bytes(id) {
+                Some(b) => bytes.extend_from_slice(b),
+                None => {
+                    // Special tokens decode to their literal text.
+                    if let Some(name) = self.vocab.special_name(id) {
+                        bytes.extend_from_slice(name.as_bytes());
+                    }
+                }
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Whether an id denotes a special token.
+    pub fn is_special(&self, id: u32) -> bool {
+        self.vocab.special_name(id).is_some()
+    }
+
+    /// Access the vocabulary.
+    pub fn vocab(&self) -> &Vocab {
+        &self.vocab
+    }
+}
+
+/// GPT-2-style pre-split: words carry their leading space; digit runs,
+/// punctuation runs, and whitespace runs are separate chunks. Merges never
+/// cross chunk boundaries, which bounds `encode_word`'s quadratic loop.
+pub fn pre_split(text: &str) -> impl Iterator<Item = &str> {
+    PreSplit { rest: text }
+}
+
+struct PreSplit<'a> {
+    rest: &'a str,
+}
+
+#[derive(PartialEq, Clone, Copy)]
+enum Class {
+    Letter,
+    Digit,
+    Space,
+    Other,
+}
+
+fn classify(c: char) -> Class {
+    if c.is_alphabetic() {
+        Class::Letter
+    } else if c.is_ascii_digit() {
+        Class::Digit
+    } else if c == ' ' {
+        Class::Space
+    } else {
+        Class::Other
+    }
+}
+
+impl<'a> Iterator for PreSplit<'a> {
+    type Item = &'a str;
+
+    fn next(&mut self) -> Option<&'a str> {
+        if self.rest.is_empty() {
+            return None;
+        }
+        let mut chars = self.rest.char_indices();
+        let (_, first) = chars.next().unwrap();
+        let mut class = classify(first);
+        let mut end = first.len_utf8();
+        let mut leading_space = class == Class::Space;
+        for (i, c) in chars {
+            let k = classify(c);
+            // A single leading space attaches to a following letter run.
+            if leading_space && i == 1 && k == Class::Letter {
+                class = Class::Letter;
+                leading_space = false;
+                end = i + c.len_utf8();
+                continue;
+            }
+            if k == class && class != Class::Other {
+                end = i + c.len_utf8();
+            } else if k == class && class == Class::Other {
+                // punctuation runs group too
+                end = i + c.len_utf8();
+            } else {
+                break;
+            }
+        }
+        let (chunk, rest) = self.rest.split_at(end);
+        self.rest = rest;
+        Some(chunk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn tiny_tokenizer() -> Tokenizer {
+        // Train a small vocab on a tiny corpus for test speed.
+        let corpus = "the robot moves the sensor reads the controller the robot \
+                      turns the wheel the sensor the robot the the"
+            .repeat(20);
+        let cfg = TrainConfig {
+            vocab_size: 320,
+            ..TrainConfig::default()
+        };
+        Tokenizer::from_vocab(train(&corpus, &cfg))
+    }
+
+    #[test]
+    fn pre_split_words() {
+        let chunks: Vec<&str> = pre_split("hello world, x2  ok!").collect();
+        assert_eq!(chunks, vec!["hello", " world", ",", " x", "2", "  ", "ok", "!"]);
+    }
+
+    #[test]
+    fn pre_split_reassembles() {
+        let s = "a b\tc\nd  e,f.1.2(x)é 日本語";
+        let joined: String = pre_split(s).collect();
+        assert_eq!(joined, s);
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        let t = tiny_tokenizer();
+        for s in ["the robot moves", "hello, WORLD 42!", "", " leading", "日本語 ok"] {
+            let ids = t.encode(s);
+            assert_eq!(t.decode(&ids), s, "roundtrip {s:?}");
+        }
+    }
+
+    #[test]
+    fn compresses_trained_words() {
+        let t = tiny_tokenizer();
+        // "the" appears constantly in the corpus -> should be few tokens.
+        let ids = t.encode("the robot the robot");
+        assert!(
+            ids.len() < "the robot the robot".len() / 2,
+            "expected compression, got {} ids",
+            ids.len()
+        );
+    }
+
+    #[test]
+    fn special_ids_at_top() {
+        let t = tiny_tokenizer();
+        let im_start = t.special("<|im_start|>").unwrap();
+        assert!(t.is_special(im_start));
+        assert!(im_start as usize >= t.vocab_size() - SPECIAL_TOKENS.len());
+        // Specials never come from plain text.
+        let ids = t.encode("<|im_start|>system");
+        assert!(!ids.iter().any(|&i| t.is_special(i)));
+        // But they decode to their literal.
+        assert!(t.decode(&[im_start]).contains("<|im_start|>"));
+    }
+
+    #[test]
+    fn encode_with_specials_maps_literals() {
+        let t = tiny_tokenizer();
+        let im_start = t.special("<|im_start|>").unwrap();
+        let im_end = t.special("<|im_end|>").unwrap();
+        let ids = t.encode_with_specials("<|im_start|>user\nhi<|im_end|>\n");
+        assert_eq!(ids[0], im_start);
+        assert!(ids.contains(&im_end));
+        // Round-trips through decode (specials decode to literals).
+        assert_eq!(t.decode(&ids), "<|im_start|>user\nhi<|im_end|>\n");
+    }
+
+    #[test]
+    fn encode_with_specials_equals_programmatic_assembly() {
+        // The invariant the raw mode depends on: re-tokenizing the text
+        // transcript yields the same ids as assembling specials + content
+        // programmatically (as the tokenized mode does).
+        let t = tiny_tokenizer();
+        let im_start = t.special("<|im_start|>").unwrap();
+        let im_end = t.special("<|im_end|>").unwrap();
+        let mut assembled = vec![im_start];
+        assembled.extend(t.encode("user\nwhat is the robot doing"));
+        assembled.push(im_end);
+        assembled.extend(t.encode("\n"));
+        let text = "<|im_start|>user\nwhat is the robot doing<|im_end|>\n";
+        assert_eq!(t.encode_with_specials(text), assembled);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_text() {
+        let t = tiny_tokenizer();
+        testkit::property(150, |rng| {
+            let s = rng.text(200);
+            let ids = t.encode(&s);
+            assert_eq!(t.decode(&ids), s, "roundtrip failed for {s:?}");
+        });
+    }
+
+    #[test]
+    fn prop_encode_concat_stable_at_chunk_boundary() {
+        // Encoding two texts separately and concatenating ids equals
+        // encoding the concatenation, provided the boundary is a chunk
+        // boundary (e.g. the second starts with a space + letter or a
+        // newline). This is the property DisCEdge relies on to append
+        // turns to a tokenized history without re-encoding it.
+        let t = tiny_tokenizer();
+        testkit::property(100, |rng| {
+            // End `a` with a letter so the "\n" starts a fresh chunk.
+            let a = format!("{}x", rng.text(80));
+            let b = rng.text(80);
+            let b = format!("\n{b}");
+            let mut sep = t.encode(&a);
+            sep.extend(t.encode(&b));
+            let joint = t.encode(&format!("{a}{b}"));
+            assert_eq!(sep, joint, "concat mismatch for {a:?} + {b:?}");
+        });
+    }
+
+    #[test]
+    fn all_ids_below_vocab_size() {
+        let t = tiny_tokenizer();
+        testkit::property(50, |rng| {
+            let s = rng.text(300);
+            for id in t.encode(&s) {
+                assert!((id as usize) < t.vocab_size());
+            }
+        });
+    }
+}

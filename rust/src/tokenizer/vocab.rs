@@ -1,0 +1,215 @@
+//! Vocabulary model + JSON (de)serialization for the BPE tokenizer.
+//!
+//! The on-disk format (`artifacts/tokenizer.json`) stores only the merge
+//! list; token byte strings are reconstructed by replaying merges, so the
+//! file stays small and canonical.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::SPECIAL_TOKENS;
+use crate::json::{self, Value};
+use crate::{Error, Result};
+
+/// A byte-level BPE vocabulary: 256 byte tokens, learned merges, and
+/// special tokens pinned to the top ids of the configured size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Vocab {
+    /// Configured vocabulary size (embedding table size on the model side).
+    size: usize,
+    /// Merge rules in rank order; rank r creates id `256 + r`.
+    merges: Vec<(u32, u32)>,
+    /// Byte expansion of every non-special token id.
+    token_bytes: Vec<Vec<u8>>,
+    /// Special name -> id.
+    specials: BTreeMap<String, u32>,
+}
+
+impl Vocab {
+    /// Build from a merge list. Specials occupy ids
+    /// `size - SPECIAL_TOKENS.len() .. size`.
+    pub fn from_merges(size: usize, merges: Vec<(u32, u32)>) -> Vocab {
+        assert!(256 + merges.len() + SPECIAL_TOKENS.len() <= size);
+        let mut token_bytes: Vec<Vec<u8>> = (0u16..256).map(|b| vec![b as u8]).collect();
+        for &(a, b) in &merges {
+            let mut bytes = token_bytes[a as usize].clone();
+            bytes.extend_from_slice(&token_bytes[b as usize]);
+            token_bytes.push(bytes);
+        }
+        let mut specials = BTreeMap::new();
+        for (i, name) in SPECIAL_TOKENS.iter().enumerate() {
+            specials.insert(
+                name.to_string(),
+                (size - SPECIAL_TOKENS.len() + i) as u32,
+            );
+        }
+        Vocab {
+            size,
+            merges,
+            token_bytes,
+            specials,
+        }
+    }
+
+    /// Configured vocabulary size.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Merge rules in rank order.
+    pub fn merges(&self) -> &[(u32, u32)] {
+        &self.merges
+    }
+
+    /// Byte expansion of a token id (None for specials / out of range).
+    pub fn token_bytes(&self, id: u32) -> Option<&[u8]> {
+        self.token_bytes.get(id as usize).map(|v| v.as_slice())
+    }
+
+    /// Special token id by name.
+    pub fn special(&self, name: &str) -> Option<u32> {
+        self.specials.get(name).copied()
+    }
+
+    /// Special token name by id.
+    pub fn special_name(&self, id: u32) -> Option<&str> {
+        self.specials
+            .iter()
+            .find(|(_, &v)| v == id)
+            .map(|(k, _)| k.as_str())
+    }
+
+    /// Serialize to canonical JSON.
+    pub fn to_json(&self) -> String {
+        let merges: Vec<Value> = self
+            .merges
+            .iter()
+            .map(|&(a, b)| Value::IntArray(vec![a, b]))
+            .collect();
+        Value::obj()
+            .set("format", "discedge-bpe-v1")
+            .set("vocab_size", self.size)
+            .set("merges", merges)
+            .to_json()
+    }
+
+    /// Parse from JSON produced by [`Vocab::to_json`].
+    pub fn from_json(text: &str) -> Result<Vocab> {
+        let v = json::parse(text)?;
+        let fmt = v.req_str("format")?;
+        if fmt != "discedge-bpe-v1" {
+            return Err(Error::Tokenizer(format!("unknown vocab format {fmt}")));
+        }
+        let size = v.req_u64("vocab_size")? as usize;
+        let merges_v = v
+            .get("merges")
+            .and_then(|m| m.as_array())
+            .ok_or_else(|| Error::Tokenizer("missing merges".into()))?;
+        let mut merges = Vec::with_capacity(merges_v.len());
+        for m in merges_v {
+            let pair = m
+                .as_int_array()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| Error::Tokenizer("bad merge entry".into()))?;
+            // Merges may only reference byte tokens or earlier merges.
+            let next_id = 256 + merges.len() as u32;
+            if pair[0] >= next_id || pair[1] >= next_id {
+                return Err(Error::Tokenizer(format!(
+                    "merge {} references future id {:?}",
+                    merges.len(),
+                    pair
+                )));
+            }
+            merges.push((pair[0], pair[1]));
+        }
+        if 256 + merges.len() + SPECIAL_TOKENS.len() > size {
+            return Err(Error::Tokenizer("vocab_size too small for merges".into()));
+        }
+        Ok(Vocab::from_merges(size, merges))
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Vocab> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Tokenizer(format!("read {}: {e}", path.display())))?;
+        Vocab::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_tokens_identity() {
+        let v = Vocab::from_merges(300, vec![]);
+        for b in 0u32..256 {
+            assert_eq!(v.token_bytes(b), Some(&[b as u8][..]));
+        }
+        assert_eq!(v.token_bytes(999), None);
+    }
+
+    #[test]
+    fn merge_expansion() {
+        // 256 = (h, i), 257 = (256, !)
+        let v = Vocab::from_merges(
+            300,
+            vec![(b'h' as u32, b'i' as u32), (256, b'!' as u32)],
+        );
+        assert_eq!(v.token_bytes(256), Some(&b"hi"[..]));
+        assert_eq!(v.token_bytes(257), Some(&b"hi!"[..]));
+    }
+
+    #[test]
+    fn specials_pinned_to_top() {
+        let v = Vocab::from_merges(1000, vec![]);
+        let ids: Vec<u32> = SPECIAL_TOKENS
+            .iter()
+            .map(|s| v.special(s).unwrap())
+            .collect();
+        assert_eq!(ids, vec![996, 997, 998, 999]);
+        assert_eq!(v.special_name(997), Some("<|im_start|>"));
+        assert_eq!(v.special("<nope>"), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let v = Vocab::from_merges(
+            512,
+            vec![(b't' as u32, b'h' as u32), (256, b'e' as u32)],
+        );
+        let v2 = Vocab::from_json(&v.to_json()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn rejects_forward_references() {
+        let bad = r#"{"format":"discedge-bpe-v1","vocab_size":512,"merges":[[300,2]]}"#;
+        assert!(Vocab::from_json(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_undersized_vocab() {
+        let bad = r#"{"format":"discedge-bpe-v1","vocab_size":257,"merges":[[1,2]]}"#;
+        assert!(Vocab::from_json(bad).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("discedge_vocab_test");
+        let path = dir.join("tok.json");
+        let v = Vocab::from_merges(400, vec![(b'a' as u32, b'b' as u32)]);
+        v.save(&path).unwrap();
+        assert_eq!(Vocab::load(&path).unwrap(), v);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,221 @@
+//! Deterministic synthetic training corpus for the BPE tokenizer.
+//!
+//! The paper's testbed tokenizer (llama.cpp / Qwen) was trained on web-scale
+//! text we do not have; the substitution is a generated technical-English
+//! corpus over the same domains the evaluation scenario covers (robotics,
+//! autonomous systems, edge computing, distributed storage) plus code-like
+//! fragments, so the learned merges compress the benchmark prompts about as
+//! well as a real tokenizer would compress natural text (~3–4 bytes/token).
+
+use crate::testkit::Rng;
+
+/// Sentence openers reused by the synthetic scenario generator.
+pub const QUESTION_OPENERS: [&str; 8] = [
+    "What is the role of",
+    "How does the system handle",
+    "Can you explain",
+    "Compare the trade-offs between",
+    "Why would an engineer choose",
+    "Describe the failure modes of",
+    "What are the main challenges of",
+    "How would you implement",
+];
+
+const SUBJECTS: [&str; 24] = [
+    "the autonomous mobile robot",
+    "the edge node",
+    "the context manager",
+    "a distributed key-value store",
+    "the inference engine",
+    "the PID controller",
+    "the SLAM module",
+    "the particle filter",
+    "the extended Kalman filter",
+    "a lidar sensor",
+    "an ultrasonic sensor",
+    "the replication protocol",
+    "the tokenizer",
+    "the language model",
+    "the session context",
+    "the mobile client",
+    "the motor driver",
+    "the path planner",
+    "a quantized model",
+    "the KV cache",
+    "the scheduler",
+    "the consistency protocol",
+    "the network stack",
+    "the battery management system",
+];
+
+const VERBS: [&str; 16] = [
+    "computes",
+    "replicates",
+    "synchronizes",
+    "estimates",
+    "controls",
+    "measures",
+    "stores",
+    "streams",
+    "predicts",
+    "localizes",
+    "navigates",
+    "tokenizes",
+    "schedules",
+    "aggregates",
+    "validates",
+    "compresses",
+];
+
+const OBJECTS: [&str; 20] = [
+    "the wheel odometry",
+    "the obstacle map",
+    "the user session",
+    "the token sequence",
+    "the sensor readings",
+    "the feedback error",
+    "the landmark positions",
+    "the replication log",
+    "the request latency",
+    "the context window",
+    "the gradient of the cost function",
+    "the pose estimate",
+    "the network bandwidth",
+    "the conversation history",
+    "the control signal",
+    "the quantization error",
+    "the turn counter",
+    "the keygroup membership",
+    "the attention scores",
+    "the prompt template",
+];
+
+const QUALIFIERS: [&str; 12] = [
+    "with low latency",
+    "under network partitions",
+    "on commodity hardware",
+    "at the edge of the network",
+    "with bounded staleness",
+    "in real time",
+    "across geo-distributed nodes",
+    "despite packet loss",
+    "with eventual consistency",
+    "using asynchronous updates",
+    "within the memory budget",
+    "while the client roams",
+];
+
+const CODE_SNIPPETS: [&str; 6] = [
+    "def p_controller(kp, error):\n    return kp * error\n",
+    "def pi_controller(kp, ki, error, integral, dt):\n    integral += error * dt\n    return kp * error + ki * integral, integral\n",
+    "for node in cluster.nodes:\n    node.replicate(keygroup, version)\n",
+    "if client.turn > local.version:\n    retry(backoff_ms=10)\n",
+    "tokens = tokenizer.encode(prompt)\n    context.extend(tokens)\n",
+    "while not converged:\n    pose = ekf.update(z, u)\n",
+];
+
+/// Technical vocabulary used by the synthetic scenario generator.
+pub fn topic_words() -> Vec<&'static str> {
+    let mut v = Vec::new();
+    for s in SUBJECTS.iter().chain(OBJECTS.iter()) {
+        v.extend(s.split(' '));
+    }
+    v.extend(VERBS);
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Default corpus (~400 KiB), deterministic for seed 123.
+pub fn corpus() -> String {
+    corpus_with_size(123, 400 * 1024)
+}
+
+/// Generate a deterministic corpus of at least `min_bytes` bytes.
+pub fn corpus_with_size(seed: u64, min_bytes: usize) -> String {
+    let mut rng = Rng::new(seed);
+    let mut out = String::with_capacity(min_bytes + 256);
+    while out.len() < min_bytes {
+        match rng.below(10) {
+            0 => {
+                // Question sentence.
+                out.push_str(QUESTION_OPENERS[rng.range(0, QUESTION_OPENERS.len())]);
+                out.push(' ');
+                out.push_str(SUBJECTS[rng.range(0, SUBJECTS.len())]);
+                out.push_str("?\n");
+            }
+            1 => {
+                // Code fragment.
+                out.push_str(CODE_SNIPPETS[rng.range(0, CODE_SNIPPETS.len())]);
+            }
+            2 => {
+                // Numbered measurement sentence.
+                out.push_str(&format!(
+                    "The {} took {} ms and used {} KB of memory.\n",
+                    ["benchmark", "request", "handover", "replication"][rng.range(0, 4)],
+                    rng.range(1, 2000),
+                    rng.range(1, 512),
+                ));
+            }
+            _ => {
+                // Declarative sentence, occasionally compound.
+                out.push_str(SUBJECTS[rng.range(0, SUBJECTS.len())]);
+                out.push(' ');
+                out.push_str(VERBS[rng.range(0, VERBS.len())]);
+                out.push(' ');
+                out.push_str(OBJECTS[rng.range(0, OBJECTS.len())]);
+                if rng.chance(0.6) {
+                    out.push(' ');
+                    out.push_str(QUALIFIERS[rng.range(0, QUALIFIERS.len())]);
+                }
+                if rng.chance(0.3) {
+                    out.push_str(", and ");
+                    out.push_str(SUBJECTS[rng.range(0, SUBJECTS.len())]);
+                    out.push(' ');
+                    out.push_str(VERBS[rng.range(0, VERBS.len())]);
+                    out.push(' ');
+                    out.push_str(OBJECTS[rng.range(0, OBJECTS.len())]);
+                }
+                out.push_str(".\n");
+            }
+        }
+        // Capitalization variety so merges learn both cases.
+        if rng.chance(0.05) {
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_deterministic() {
+        assert_eq!(corpus_with_size(1, 10_000), corpus_with_size(1, 10_000));
+        assert_ne!(corpus_with_size(1, 10_000), corpus_with_size(2, 10_000));
+    }
+
+    #[test]
+    fn corpus_size_floor() {
+        assert!(corpus_with_size(3, 50_000).len() >= 50_000);
+    }
+
+    #[test]
+    fn corpus_covers_scenario_vocabulary() {
+        let c = corpus_with_size(123, 200_000);
+        for w in ["robot", "sensor", "SLAM", "controller", "kp", "error"] {
+            assert!(c.contains(w), "corpus should mention {w}");
+        }
+    }
+
+    #[test]
+    fn topic_words_nonempty_and_deduped() {
+        let w = topic_words();
+        assert!(w.len() > 40);
+        let mut sorted = w.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), w.len());
+    }
+}

@@ -1,0 +1,133 @@
+//! Workloads: the paper's 9-turn prompt scenario (Appendix A.1), synthetic
+//! scenario generation for scaling experiments, and the deterministic
+//! training corpus for the BPE tokenizer.
+
+mod corpus;
+
+pub use corpus::{corpus, corpus_with_size};
+
+use crate::testkit::Rng;
+
+/// One user turn of a scenario.
+#[derive(Debug, Clone)]
+pub struct Turn {
+    /// 1-based turn number.
+    pub number: u32,
+    /// The user prompt text.
+    pub prompt: String,
+}
+
+/// A multi-turn conversation scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Scenario name.
+    pub name: String,
+    /// Model the scenario targets (keygroup name in the KV store).
+    pub model_name: String,
+    /// User identifier.
+    pub user_id: String,
+    /// User prompts in order.
+    pub prompts: Vec<String>,
+}
+
+impl Scenario {
+    /// The paper's 9-turn "Robotics and Autonomous Systems" scenario
+    /// (Appendix A.1, Listing 1), verbatim.
+    pub fn robotics_9turn() -> Scenario {
+        Scenario {
+            name: "Robotics_and_Autonomous_Systems_Test".into(),
+            model_name: "Qwen/Qwen1.5-0.5B-Chat".into(),
+            user_id: "robotics_dev".into(),
+            prompts: vec![
+                "What are the fundamental components of an autonomous mobile robot?".into(),
+                "You mentioned sensors. What are the most common types for obstacle avoidance?"
+                    .into(),
+                "Can you explain the concept of a PID controller in the context of motor control?"
+                    .into(),
+                "Write a simple Python function for a proportional (P) controller.".into(),
+                "In your previous code, what do the `kp` and `error` variables represent?".into(),
+                "How would you modify that function to include the integral (I) component?".into(),
+                "Now, let's talk about localization. What is SLAM?".into(),
+                "What are some of the main challenges when implementing that on a small, low-power robot?"
+                    .into(),
+                "Can you compare the EKF SLAM and Particle Filter SLAM approaches?".into(),
+            ],
+        }
+    }
+
+    /// Synthetic scenario with `turns` prompts of roughly `prompt_words`
+    /// words each, drawn deterministically from the corpus vocabulary.
+    /// Used by the context-scaling ablation (A3).
+    pub fn synthetic(seed: u64, turns: usize, prompt_words: usize) -> Scenario {
+        let mut rng = Rng::new(seed);
+        let words = corpus::topic_words();
+        let mut prompts = Vec::with_capacity(turns);
+        for t in 0..turns {
+            let n = prompt_words.max(3) + rng.range(0, prompt_words.max(3));
+            let mut p = String::new();
+            p.push_str(corpus::QUESTION_OPENERS[rng.range(0, corpus::QUESTION_OPENERS.len())]);
+            for _ in 0..n {
+                p.push(' ');
+                p.push_str(words[rng.range(0, words.len())]);
+            }
+            p.push('?');
+            prompts.push(p);
+            let _ = t;
+        }
+        Scenario {
+            name: format!("synthetic_{turns}x{prompt_words}"),
+            model_name: "discedge/tiny-chat".into(),
+            user_id: format!("synthetic_user_{seed}"),
+            prompts,
+        }
+    }
+
+    /// Iterate turns with 1-based numbering.
+    pub fn turns(&self) -> impl Iterator<Item = Turn> + '_ {
+        self.prompts.iter().enumerate().map(|(i, p)| Turn {
+            number: (i + 1) as u32,
+            prompt: p.clone(),
+        })
+    }
+
+    /// Number of turns.
+    pub fn len(&self) -> usize {
+        self.prompts.len()
+    }
+
+    /// True when the scenario has no prompts.
+    pub fn is_empty(&self) -> bool {
+        self.prompts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn robotics_matches_paper() {
+        let s = Scenario::robotics_9turn();
+        assert_eq!(s.len(), 9);
+        assert!(s.prompts[0].starts_with("What are the fundamental components"));
+        assert!(s.prompts[8].contains("EKF SLAM"));
+        assert_eq!(s.user_id, "robotics_dev");
+    }
+
+    #[test]
+    fn synthetic_deterministic() {
+        let a = Scenario::synthetic(7, 12, 10);
+        let b = Scenario::synthetic(7, 12, 10);
+        assert_eq!(a.prompts, b.prompts);
+        assert_eq!(a.len(), 12);
+        let c = Scenario::synthetic(8, 12, 10);
+        assert_ne!(a.prompts, c.prompts);
+    }
+
+    #[test]
+    fn turns_numbering() {
+        let s = Scenario::robotics_9turn();
+        let nums: Vec<u32> = s.turns().map(|t| t.number).collect();
+        assert_eq!(nums, (1..=9).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,208 @@
+//! End-to-end integration tests over a real in-process cluster: HTTP API,
+//! context modes, mobility, replication, and metric accounting. Uses the
+//! mock engine (deterministic, fast); the PJRT path is covered by
+//! `pjrt_integration.rs` and the examples.
+
+use std::sync::Arc;
+
+use discedge::client::{Client, MobilityPolicy};
+use discedge::config::{ClusterConfig, ContextMode, EngineKind};
+use discedge::netsim::LinkModel;
+use discedge::profile::NodeProfile;
+use discedge::server::EdgeCluster;
+use discedge::workload::Scenario;
+
+const MODEL: &str = "discedge/tiny-chat";
+
+fn mock_cfg() -> ClusterConfig {
+    let mut cfg = ClusterConfig::two_node_testbed();
+    cfg.engine = EngineKind::Mock {
+        prefill_ns_per_token: 500,
+        decode_ns_per_token: 2_000,
+    };
+    cfg.peer_link = LinkModel::ideal();
+    cfg.client_link = LinkModel::ideal();
+    for n in &mut cfg.nodes {
+        n.profile = NodeProfile::m2_native();
+    }
+    cfg
+}
+
+#[test]
+fn full_scenario_tokenized_sticky() {
+    let cluster = EdgeCluster::launch(mock_cfg()).unwrap();
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(32);
+    let scenario = Scenario::robotics_9turn();
+    let mut prev_prefill = 0;
+    for turn in scenario.turns() {
+        let r = client.chat(&turn.prompt).unwrap();
+        assert_eq!(r.response.turn, turn.number as u64);
+        assert!(!r.response.text.is_empty());
+        assert!(
+            r.response.prefill_tokens > prev_prefill,
+            "context must grow every turn"
+        );
+        prev_prefill = r.response.prefill_tokens;
+        cluster.quiesce(); // turn barrier, like the paper's sequential client
+    }
+    assert_eq!(client.turns_done(), 9);
+}
+
+#[test]
+fn all_modes_agree_on_prefill_lengths() {
+    // The three context modes must present identical inputs to the LLM —
+    // over the real HTTP path this time.
+    let run = |mode: ContextMode| -> Vec<usize> {
+        let cluster = EdgeCluster::launch(mock_cfg()).unwrap();
+        let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+            .with_mode(mode)
+            .with_model(MODEL)
+            .with_max_tokens(16);
+        Scenario::robotics_9turn()
+            .turns()
+            .take(5)
+            .map(|t| {
+                let r = client.chat(&t.prompt).unwrap();
+                cluster.quiesce();
+                r.response.prefill_tokens
+            })
+            .collect()
+    };
+    let tokenized = run(ContextMode::Tokenized);
+    let raw = run(ContextMode::Raw);
+    let client_side = run(ContextMode::ClientSide);
+    assert_eq!(tokenized, raw, "tokenized vs raw");
+    assert_eq!(tokenized, client_side, "tokenized vs client-side");
+}
+
+#[test]
+fn mobile_client_roams_with_consistent_context() {
+    let cluster = EdgeCluster::launch(mock_cfg()).unwrap();
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::paper_alternate())
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(16);
+    let scenario = Scenario::robotics_9turn();
+    let mut nodes_seen = Vec::new();
+    let mut prefills = Vec::new();
+    for turn in scenario.turns() {
+        let r = client.chat(&turn.prompt).unwrap();
+        nodes_seen.push(r.node.clone());
+        prefills.push(r.response.prefill_tokens);
+        cluster.quiesce();
+    }
+    // Both nodes served, in the paper's schedule.
+    assert_eq!(nodes_seen[0], "edge-m2");
+    assert_eq!(nodes_seen[2], "edge-tx2");
+    assert_eq!(nodes_seen[4], "edge-m2");
+    assert_eq!(nodes_seen[6], "edge-tx2");
+    // Context kept growing across handovers — nothing was lost.
+    assert!(prefills.windows(2).all(|w| w[1] > w[0]), "{prefills:?}");
+}
+
+#[test]
+fn client_side_requests_grow_edge_side_stay_flat() {
+    // Fig 7's mechanism, end-to-end.
+    let cluster = EdgeCluster::launch(mock_cfg()).unwrap();
+    let run = |mode: ContextMode| -> Vec<u64> {
+        let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+            .with_mode(mode)
+            .with_model(MODEL)
+            .with_max_tokens(64);
+        Scenario::robotics_9turn()
+            .turns()
+            .map(|t| {
+                let r = client.chat(&t.prompt).unwrap();
+                cluster.quiesce();
+                r.request_bytes
+            })
+            .collect()
+    };
+    let edge = run(ContextMode::Tokenized);
+    let client_side = run(ContextMode::ClientSide);
+    // Client-side grows monotonically and ends much larger.
+    assert!(client_side.last().unwrap() > &(client_side[0] * 5));
+    // Edge-side stays within a narrow band set by prompt length.
+    let max = *edge.iter().max().unwrap() as f64;
+    let min = *edge.iter().min().unwrap() as f64;
+    assert!(max / min < 3.0, "edge-side request sizes vary too much: {edge:?}");
+    assert!(client_side[8] > edge[8] * 4, "{client_side:?} vs {edge:?}");
+}
+
+#[test]
+fn sync_traffic_only_between_keygroup_peers() {
+    // Third node serving a *different* model must see no session traffic.
+    let mut cfg = mock_cfg();
+    cfg.nodes.push(discedge::config::NodeConfig {
+        name: "edge-other".into(),
+        profile: NodeProfile::m2_native(),
+        api_port: 0,
+        kv_port: 0,
+        models: vec!["other/model".into()],
+    });
+    let cluster = EdgeCluster::launch(cfg).unwrap();
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(16);
+    for t in Scenario::robotics_9turn().turns().take(3) {
+        client.chat(&t.prompt).unwrap();
+        cluster.quiesce();
+    }
+    assert!(cluster.node("edge-m2").unwrap().sync_bytes() > 0);
+    assert_eq!(
+        cluster.node("edge-other").unwrap().sync_bytes(),
+        0,
+        "other-model node must not receive session replication"
+    );
+    assert!(cluster.node("edge-other").unwrap().kv.is_empty());
+}
+
+#[test]
+fn concurrent_sessions_are_isolated() {
+    let cluster = Arc::new(EdgeCluster::launch(mock_cfg()).unwrap());
+    let mut handles = Vec::new();
+    for c in 0..4usize {
+        let endpoints = cluster.endpoints();
+        let cl = cluster.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(endpoints, MobilityPolicy::Sticky(c % 2))
+                .with_mode(ContextMode::Tokenized)
+                .with_model(MODEL)
+                .with_max_tokens(8);
+            let mut texts = Vec::new();
+            for t in Scenario::synthetic(c as u64, 4, 6).turns() {
+                let r = client.chat(&t.prompt).unwrap();
+                texts.push(r.response.text);
+                cl.quiesce();
+            }
+            (client.session().1.map(String::from), texts)
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // All sessions distinct.
+    let mut session_ids: Vec<_> = results.iter().map(|(s, _)| s.clone().unwrap()).collect();
+    session_ids.sort();
+    session_ids.dedup();
+    assert_eq!(session_ids.len(), 4);
+}
+
+#[test]
+fn metrics_endpoint_reflects_requests() {
+    let cluster = EdgeCluster::launch(mock_cfg()).unwrap();
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(8);
+    for t in Scenario::robotics_9turn().turns().take(2) {
+        client.chat(&t.prompt).unwrap();
+        cluster.quiesce();
+    }
+    let node = &cluster.nodes[0];
+    assert_eq!(node.cm.registry.counter("cm_requests_total"), 2);
+    assert!(node.cm.registry.series("cm_request_s").len() == 2);
+    assert!(node.kv.len() >= 1, "session stored");
+}
