@@ -11,6 +11,9 @@
 //!   count (PJRT latency per bucket at several true lengths).
 //! - `native-profiles` (A5): Fig-3 with *unscaled* tokenizer profiles —
 //!   the honest-ratio result for our Rust BPE (see profile.rs docs).
+//! - `shard-scaling` (A6): per-node sync traffic vs fleet size ×
+//!   replication factor (consistent-hash ring placement vs the paper's
+//!   replicate-to-all).
 //!
 //! Run all: `cargo bench --bench ablations`
 //! Run one: `cargo bench --bench ablations -- retry-sweep`
@@ -245,6 +248,31 @@ fn native_profiles() {
     );
 }
 
+/// A6: per-node sync traffic vs fleet size × replication factor.
+///
+/// Per-node session load is constant (4 sessions × 3 turns per node), so
+/// the replicate-to-all column grows with the fleet while bounded factors
+/// stay flat — the scaling property the ring placement buys.
+fn shard_scaling() {
+    let mut table = Table::new(
+        "A6 — per-node sync bytes per turn: fleet size x replication factor",
+        &["replicate_all_B", "rf1_B", "rf2_B", "rf3_B"],
+    );
+    for &n in &[2usize, 4, 6, 8] {
+        let mut row = Vec::with_capacity(4);
+        for rf in [None, Some(1), Some(2), Some(3)] {
+            let cluster = common::launch_fleet(n, rf);
+            row.push(common::per_node_sync_bytes(&cluster, 4, 3));
+        }
+        table.row(&format!("{n} nodes"), &row);
+    }
+    emit(&table, "ablation_a6_sharding.csv");
+    println!(
+        "(rf=1 is write-through only — a sticky client's writes still push \
+         to its one home replica when the serving node is not it)"
+    );
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     let run_all = args.is_empty();
@@ -264,5 +292,8 @@ fn main() {
     }
     if want("native-profiles") {
         native_profiles();
+    }
+    if want("shard-scaling") {
+        shard_scaling();
     }
 }

@@ -39,6 +39,51 @@ pub fn testbed() -> EdgeCluster {
     EdgeCluster::launch(cfg).expect("testbed launch (run `make artifacts` first)")
 }
 
+/// Launch an `n`-node mock fleet (one shared model) with the given
+/// replication factor (`None` = replicate-to-all). The tokenizer, chat
+/// template, and mock engine are built once and shared across launches so
+/// a sweep over fleet sizes doesn't retrain the BPE every time — which
+/// assumes every call in a bench binary uses `mock_fleet`'s single shared
+/// model; the first call's stack is cached for the process lifetime.
+pub fn launch_fleet(n: usize, replication_factor: Option<usize>) -> EdgeCluster {
+    use discedge::llm::{ChatTemplate, Engine};
+    use std::collections::HashMap;
+    use std::sync::{Arc, OnceLock};
+    static STACK: OnceLock<(Arc<HashMap<String, Arc<dyn Engine>>>, ChatTemplate)> =
+        OnceLock::new();
+    let cfg = ClusterConfig::mock_fleet(n, replication_factor);
+    let (engines, template) = STACK.get_or_init(|| {
+        let tok = Arc::new(discedge::server::load_or_train_tokenizer(&cfg).unwrap());
+        let template = ChatTemplate::new(tok.clone()).unwrap();
+        let engines = Arc::new(discedge::server::build_engines(&cfg, &tok).unwrap());
+        (engines, template)
+    });
+    EdgeCluster::launch_with(cfg, engines.clone(), template.clone()).expect("fleet launch")
+}
+
+/// Drive `sessions_per_node` fresh sessions per node (each sticky to its
+/// node, `turns` turns each) and return the mean per-node sync bytes per
+/// turn. Per-node load is held constant, so this is the quantity that must
+/// stay flat as the fleet grows when replication is bounded.
+pub fn per_node_sync_bytes(cluster: &EdgeCluster, sessions_per_node: usize, turns: usize) -> f64 {
+    let n = cluster.nodes.len();
+    let base: u64 = cluster.nodes.iter().map(|nd| nd.sync_bytes()).sum();
+    for s in 0..sessions_per_node * n {
+        let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(s % n))
+            .with_mode(ContextMode::Tokenized)
+            .with_model(MODEL)
+            .with_max_tokens(16);
+        for t in 0..turns {
+            client
+                .chat(&format!("turn {t} of session {s}: tell me about robots"))
+                .expect("turn");
+        }
+        cluster.quiesce();
+    }
+    let total: u64 = cluster.nodes.iter().map(|nd| nd.sync_bytes()).sum();
+    (total - base) as f64 / (n * sessions_per_node * turns) as f64
+}
+
 /// Run the 9-turn robotics scenario once with a fresh session.
 /// Returns one `TurnResult` per turn; quiesces between turns (the paper's
 /// client is sequential and the async update is off the measured path).

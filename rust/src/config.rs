@@ -107,6 +107,26 @@ impl Default for GenerationConfig {
     }
 }
 
+/// Session placement across the nodes of a keygroup (consistent-hash ring,
+/// see [`crate::kvstore::HashRing`]).
+#[derive(Debug, Clone)]
+pub struct ShardingConfig {
+    /// Replicas per session (`None` = replicate to every node serving the
+    /// model — the paper's two-node testbed behaviour, and the default).
+    pub replication_factor: Option<usize>,
+    /// Ring points per node; more points smooth the load split.
+    pub virtual_nodes: usize,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> ShardingConfig {
+        ShardingConfig {
+            replication_factor: None,
+            virtual_nodes: 128,
+        }
+    }
+}
+
 /// Per-node configuration.
 #[derive(Debug, Clone)]
 pub struct NodeConfig {
@@ -147,6 +167,8 @@ pub struct ClusterConfig {
     pub client_link: LinkModel,
     /// Replication behaviour.
     pub replication: ReplicationConfig,
+    /// Session sharding / ring placement.
+    pub sharding: ShardingConfig,
     /// Turn-counter protocol settings.
     pub consistency: ConsistencyConfig,
     /// Generation settings.
@@ -183,6 +205,7 @@ impl ClusterConfig {
             peer_link: LinkModel::lan(),
             client_link: LinkModel::mobile_uplink(),
             replication: ReplicationConfig::default(),
+            sharding: ShardingConfig::default(),
             consistency: ConsistencyConfig::default(),
             generation: GenerationConfig::default(),
             engine: EngineKind::Pjrt,
@@ -201,6 +224,25 @@ impl ClusterConfig {
             prefill_ns_per_token: 0,
             decode_ns_per_token: 0,
         };
+        cfg
+    }
+
+    /// An `n`-node fleet serving one model with the zero-cost mock engine
+    /// and ideal links — the scaffold for the sharding tests and the
+    /// sharded scaling benches. `replication_factor = None` keeps the
+    /// seed's replicate-to-all behaviour.
+    pub fn mock_fleet(n: usize, replication_factor: Option<usize>) -> ClusterConfig {
+        let mut cfg = ClusterConfig::single_node_mock();
+        cfg.nodes = (0..n)
+            .map(|i| NodeConfig {
+                name: format!("edge-{i}"),
+                profile: NodeProfile::m2_native(),
+                api_port: 0,
+                kv_port: 0,
+                models: vec!["discedge/tiny-chat".into()],
+            })
+            .collect();
+        cfg.sharding.replication_factor = replication_factor;
         cfg
     }
 
@@ -262,6 +304,14 @@ impl ClusterConfig {
                 cfg.replication.delay = Duration::from_millis(d);
             }
         }
+        if let Some(s) = v.get("sharding") {
+            if let Some(rf) = s.get("replication_factor").and_then(|x| x.as_u64()) {
+                cfg.sharding.replication_factor = Some(rf as usize);
+            }
+            if let Some(vn) = s.get("virtual_nodes").and_then(|x| x.as_u64()) {
+                cfg.sharding.virtual_nodes = vn as usize;
+            }
+        }
         if let Some(t) = v.get("session_ttl_s").and_then(|x| x.as_u64()) {
             cfg.session_ttl = Duration::from_secs(t);
         }
@@ -284,6 +334,12 @@ impl ClusterConfig {
             if n.models.is_empty() {
                 return Err(Error::Config(format!("node {} serves no models", n.name)));
             }
+        }
+        if self.sharding.replication_factor == Some(0) {
+            return Err(Error::Config("replication_factor must be >= 1".into()));
+        }
+        if self.sharding.virtual_nodes == 0 {
+            return Err(Error::Config("virtual_nodes must be >= 1".into()));
         }
         Ok(())
     }
@@ -372,6 +428,39 @@ mod tests {
         assert_eq!(cfg.generation.max_tokens, 64);
         assert_eq!(cfg.replication.delay, Duration::from_millis(15));
         assert!(matches!(cfg.engine, EngineKind::Mock { .. }));
+    }
+
+    #[test]
+    fn sharding_config_parses_and_defaults() {
+        // Default: replicate-to-all, exactly the seed behaviour.
+        let cfg = ClusterConfig::two_node_testbed();
+        assert_eq!(cfg.sharding.replication_factor, None);
+        assert_eq!(cfg.sharding.virtual_nodes, 128);
+        let cfg = ClusterConfig::from_json(
+            r#"{
+              "nodes": [
+                {"name": "a", "profile": "m2", "models": ["m"]},
+                {"name": "b", "profile": "tx2", "models": ["m"]}
+              ],
+              "engine": "mock",
+              "sharding": {"replication_factor": 2, "virtual_nodes": 64}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.sharding.replication_factor, Some(2));
+        assert_eq!(cfg.sharding.virtual_nodes, 64);
+        assert!(ClusterConfig::from_json(
+            r#"{"engine": "mock", "sharding": {"replication_factor": 0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn mock_fleet_builds_n_nodes() {
+        let cfg = ClusterConfig::mock_fleet(6, Some(2));
+        assert_eq!(cfg.nodes.len(), 6);
+        assert_eq!(cfg.sharding.replication_factor, Some(2));
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -274,7 +274,20 @@ impl ContextManager {
         // protocol retries (bounded in case the update thread died).
         let local_deadline = Instant::now() + Duration::from_millis(250);
         loop {
-            match self.kv.get(&req.model, key) {
+            // Ring-aware read: on a node outside the session's preference
+            // list this fetches from a home replica and read-repairs the
+            // entry locally; on a home replica (or without placement) it
+            // is a plain local read and staleness is absorbed by the retry
+            // loop below, exactly as in the paper. While our own async
+            // update for this session is still pending, stay local — the
+            // commit we are waiting for is in this process, and remote
+            // replicas cannot be ahead of it.
+            let entry = if self.has_pending_local_update(key, expected) {
+                self.kv.get(&req.model, key)
+            } else {
+                self.kv.get_or_fetch(&req.model, key, expected)
+            };
+            match entry {
                 Some(entry) if entry.version >= req.turn => {
                     return Err(Error::BadRequest(format!(
                         "turn {} is behind stored version {} (counter reset?)",
@@ -437,12 +450,7 @@ pub fn session_key(user_id: &str, session_id: &str) -> String {
 }
 
 fn fxhash(s: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    crate::testkit::fnv1a(s.as_bytes())
 }
 
 #[cfg(test)]

@@ -18,19 +18,29 @@
 //! The session-level consistency that DisCEdge needs (read-your-writes as
 //! the user roams) is *not* provided here — exactly as in the paper, it is
 //! layered on top by the Context Manager's turn-counter protocol.
+//!
+//! **Placement.** By default a write is pushed to every peer subscribed to
+//! the keygroup (the paper's replicate-to-all testbed behaviour). When a
+//! [`Placement`] is installed (see [`KvNode::set_placement`]), writes go
+//! only to the session's consistent-hash **preference list** of N replica
+//! nodes, and a node outside that list serves reads by fetching from a
+//! home replica and read-repairing the entry locally ([`HashRing`] docs).
 
 mod replication;
+mod ring;
 
 pub use replication::{ReplicationConfig, Replicator};
+pub use ring::{HashRing, Placement};
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::http::{Handler, Request, Response, Server};
+use crate::http::{Connection, Handler, Request, Response, Server};
 use crate::json::{self, Value};
-use crate::netsim::LinkModel;
+use crate::netsim::{LinkModel, TrafficMeter};
 use crate::{Error, Result};
 
 /// A versioned value.
@@ -159,8 +169,17 @@ pub struct KvNode {
     store: Arc<Store>,
     replicator: Replicator,
     server: Server,
-    /// keygroup -> peers receiving its updates
+    /// keygroup -> peers receiving its updates (replicate-to-all path)
     peers: Arc<Mutex<HashMap<String, Vec<SocketAddr>>>>,
+    /// Ring placement; when set, writes target preference lists instead of
+    /// the full `peers` subscription.
+    placement: RwLock<Option<Arc<Placement>>>,
+    /// Meter for outbound `/fetch` reads (mobility / read-repair traffic).
+    fetch_meter: Arc<TrafficMeter>,
+    /// Remote reads issued because the local replica missed.
+    fetches: AtomicU64,
+    /// Remote reads that repaired a newer entry into the local store.
+    read_repairs: AtomicU64,
     config: KvConfig,
     janitor_stop: Arc<std::sync::atomic::AtomicBool>,
     janitor: Option<std::thread::JoinHandle<()>>,
@@ -198,6 +217,10 @@ impl KvNode {
             replicator,
             server,
             peers: Arc::new(Mutex::new(HashMap::new())),
+            placement: RwLock::new(None),
+            fetch_meter: TrafficMeter::new(),
+            fetches: AtomicU64::new(0),
+            read_repairs: AtomicU64::new(0),
             config,
             janitor_stop,
             janitor: Some(janitor),
@@ -234,6 +257,19 @@ impl KvNode {
             .push(peer);
     }
 
+    /// Install ring placement. From then on, writes to keygroups the
+    /// placement knows about target the session's preference list instead
+    /// of every subscribed peer, and [`KvNode::get_or_fetch`] may read
+    /// through to home replicas.
+    pub fn set_placement(&self, placement: Arc<Placement>) {
+        *self.placement.write().unwrap() = Some(placement);
+    }
+
+    /// The installed placement, if any.
+    pub fn placement(&self) -> Option<Arc<Placement>> {
+        self.placement.read().unwrap().clone()
+    }
+
     /// Write locally and asynchronously push to keygroup peers.
     pub fn put(&self, keygroup: &str, key: &str, value: String, version: u64) -> Result<()> {
         self.put_ttl(keygroup, key, value, version, self.config.default_ttl)
@@ -259,13 +295,7 @@ impl KvNode {
                 "stale write to {keygroup}/{key} v{version}"
             )));
         }
-        let peers = self
-            .peers
-            .lock()
-            .unwrap()
-            .get(keygroup)
-            .cloned()
-            .unwrap_or_default();
+        let peers = self.write_targets(keygroup, key);
         if !peers.is_empty() {
             self.replicator
                 .push(peers, keygroup, key, &value, version, ttl);
@@ -273,10 +303,125 @@ impl KvNode {
         Ok(())
     }
 
+    /// Replica addresses a write to `keygroup/key` must be pushed to.
+    ///
+    /// With ring placement: the session's preference list minus this node
+    /// (a writer outside the list pushes to all N home replicas — the
+    /// write-through half of the mobility path). Without placement: every
+    /// peer subscribed to the keygroup, the seed's replicate-to-all
+    /// behaviour, byte-for-byte.
+    fn write_targets(&self, keygroup: &str, key: &str) -> Vec<SocketAddr> {
+        if let Some(placement) = self.placement() {
+            if placement.has_keygroup(keygroup) {
+                return placement
+                    .replicas(keygroup, key)
+                    .into_iter()
+                    .filter(|(name, _)| name != &self.name)
+                    .map(|(_, addr)| addr)
+                    .collect();
+            }
+        }
+        self.peers
+            .lock()
+            .unwrap()
+            .get(keygroup)
+            .cloned()
+            .unwrap_or_default()
+    }
+
     /// Read from the local replica only (DisCEdge's CM always reads local;
     /// waiting for replication is the CM's retry loop, not a remote read).
     pub fn get(&self, keygroup: &str, key: &str) -> Option<Entry> {
         self.store.read(keygroup, key)
+    }
+
+    /// Read with ring-aware read-through: serve locally when the local
+    /// entry is at least `min_version`; otherwise, if this node is *not*
+    /// one of the session's home replicas, fetch from the home replicas,
+    /// **read-repair** the best entry into the local store, and return it.
+    ///
+    /// On a home replica (or without placement) this is exactly [`Self::get`]:
+    /// waiting out replication lag stays the Context Manager's retry loop.
+    /// The returned entry may still be older than `min_version` — the
+    /// caller's consistency protocol decides what staleness means.
+    pub fn get_or_fetch(&self, keygroup: &str, key: &str, min_version: u64) -> Option<Entry> {
+        let local = self.store.read(keygroup, key);
+        if let Some(e) = &local {
+            if e.version >= min_version {
+                return local;
+            }
+        }
+        let placement = match self.placement() {
+            Some(p) if p.has_keygroup(keygroup) => p,
+            _ => return local,
+        };
+        // One ring walk: the preference list doubles as the membership
+        // check for this node.
+        let replicas = placement.replicas(keygroup, key);
+        if replicas.iter().any(|(n, _)| n == &self.name) {
+            return local;
+        }
+        let local_version = local.as_ref().map(|e| e.version);
+        let mut best = local;
+        for (_, addr) in replicas {
+            self.fetches.fetch_add(1, Ordering::SeqCst);
+            if let Ok(Some(remote)) = self.fetch_from(addr, keygroup, key) {
+                if best.as_ref().map_or(true, |b| remote.version > b.version) {
+                    best = Some(remote);
+                }
+                if best.as_ref().map_or(false, |b| b.version >= min_version) {
+                    break;
+                }
+            }
+        }
+        if let Some(e) = &best {
+            if local_version.map_or(true, |v| e.version > v) {
+                // Read-repair: cache the fetched entry locally with its
+                // remaining TTL so the node keeps serving this session
+                // without refetching every turn.
+                let ttl = e
+                    .expires_at
+                    .map(|t| t.saturating_duration_since(Instant::now()));
+                if self.store.apply(keygroup, key, e.value.clone(), e.version, ttl) {
+                    self.read_repairs.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+        best
+    }
+
+    /// One synchronous remote read from a peer's replication listener.
+    fn fetch_from(&self, addr: SocketAddr, keygroup: &str, key: &str) -> Result<Option<Entry>> {
+        let payload = Value::obj().set("kg", keygroup).set("key", key).to_json();
+        let mut conn = Connection::open(
+            addr,
+            self.fetch_meter.clone(),
+            self.config.peer_link.clone(),
+        )?;
+        let resp = conn.round_trip(&Request::post_json("/fetch", &payload))?;
+        if resp.status != 200 {
+            return Err(Error::KvStore(format!(
+                "fetch {keygroup}/{key} from {addr}: status {}",
+                resp.status
+            )));
+        }
+        let v = json::parse(resp.body_str()?)?;
+        if v.get("found").and_then(|f| f.as_bool()) != Some(true) {
+            return Ok(None);
+        }
+        let (val, ver) = match (v.req_str("val"), v.req_u64("ver")) {
+            (Ok(val), Ok(ver)) => (val, ver),
+            _ => return Err(Error::KvStore("fetch response missing fields".into())),
+        };
+        let expires_at = v
+            .get("ttl_ms")
+            .and_then(|t| t.as_u64())
+            .map(|ms| Instant::now() + Duration::from_millis(ms));
+        Ok(Some(Entry {
+            value: val,
+            version: ver,
+            expires_at,
+        }))
     }
 
     /// Delete locally (client's explicit request, §3.3). Not replicated as
@@ -301,9 +446,27 @@ impl KvNode {
         self.server.meter.rx.get() + self.server.meter.tx.get()
     }
 
-    /// Bytes sent by this node's replicator (outbound sync, incl. acks).
+    /// Bytes sent by this node's replicator (outbound sync, incl. acks)
+    /// plus outbound remote-read traffic. Zero fetches keep this identical
+    /// to the seed's accounting.
     pub fn sync_tx_bytes(&self) -> u64 {
-        self.replicator.meter().tx.get() + self.replicator.meter().rx.get()
+        self.replicator.meter().total() + self.fetch_meter.total()
+    }
+
+    /// Per-replica push targets enqueued by this node's writes (see
+    /// [`Replicator::push_targets`]).
+    pub fn push_targets(&self) -> u64 {
+        self.replicator.push_targets()
+    }
+
+    /// Remote reads issued for sessions homed elsewhere.
+    pub fn remote_fetches(&self) -> u64 {
+        self.fetches.load(Ordering::SeqCst)
+    }
+
+    /// Remote reads that repaired an entry into the local store.
+    pub fn read_repairs(&self) -> u64 {
+        self.read_repairs.load(Ordering::SeqCst)
     }
 
     /// Wait until the replicator's queue is drained (test/benchmark sync).
@@ -329,9 +492,11 @@ impl Drop for KvNode {
     }
 }
 
-/// Inbound replication endpoint: applies pushed writes to the local store.
+/// Inbound replication endpoint: applies pushed writes to the local store
+/// (`POST /replicate`) and answers remote reads from non-replica nodes
+/// (`POST /fetch`, the ring mobility path).
 fn replication_endpoint(store: &Arc<Store>, req: &Request) -> Response {
-    if req.method != "POST" || req.path != "/replicate" {
+    if req.method != "POST" || (req.path != "/replicate" && req.path != "/fetch") {
         return Response::error(404, "not found");
     }
     let body = match req.body_str() {
@@ -342,6 +507,26 @@ fn replication_endpoint(store: &Arc<Store>, req: &Request) -> Response {
         Ok(v) => v,
         Err(e) => return Response::error(400, &format!("bad json: {e}")),
     };
+    if req.path == "/fetch" {
+        let (kg, key) = match (v.req_str("kg"), v.req_str("key")) {
+            (Ok(kg), Ok(key)) => (kg, key),
+            _ => return Response::error(400, "missing fields"),
+        };
+        return match store.read(&kg, &key) {
+            Some(e) => {
+                let mut out = Value::obj()
+                    .set("found", true)
+                    .set("val", e.value.as_str())
+                    .set("ver", e.version);
+                if let Some(t) = e.expires_at {
+                    let left = t.saturating_duration_since(Instant::now());
+                    out = out.set("ttl_ms", left.as_millis() as u64);
+                }
+                Response::json(&out.to_json())
+            }
+            None => Response::json(&Value::obj().set("found", false).to_json()),
+        };
+    }
     let (kg, key, val, ver) = match (
         v.req_str("kg"),
         v.req_str("key"),
@@ -489,6 +674,113 @@ mod tests {
             Duration::from_secs(2),
         );
         assert_eq!(got.unwrap().value, "from-b");
+    }
+
+    /// Placement over already-started nodes, one keygroup "m".
+    fn placement_over(nodes: &[&KvNode], rf: usize) -> Arc<Placement> {
+        let members: Vec<(String, std::net::SocketAddr)> = nodes
+            .iter()
+            .map(|n| (n.name.clone(), n.replication_addr()))
+            .collect();
+        let mut p = Placement::new(rf);
+        p.add_keygroup("m", &members, 32);
+        let p = Arc::new(p);
+        for n in nodes {
+            n.set_placement(p.clone());
+        }
+        p
+    }
+
+    #[test]
+    fn sharded_put_reaches_only_the_preference_list() {
+        let (a, b, c) = (node("a"), node("b"), node("c"));
+        for n in [&a, &b, &c] {
+            n.create_keygroup("m");
+        }
+        let placement = placement_over(&[&a, &b, &c], 2);
+        let mut expected_targets = 0u64;
+        let keys: Vec<String> = (0..8).map(|i| format!("u{i}/s{i}")).collect();
+        for (i, key) in keys.iter().enumerate() {
+            a.put("m", key, format!("v{i}"), 1).unwrap();
+            let reps = placement.replicas("m", key);
+            assert_eq!(reps.len(), 2);
+            expected_targets += reps.iter().filter(|(n, _)| n != "a").count() as u64;
+        }
+        a.quiesce();
+        assert_eq!(a.push_targets(), expected_targets);
+        for key in &keys {
+            let reps = placement.replicas("m", key);
+            for n in [&b, &c] {
+                let is_replica = reps.iter().any(|(name, _)| name == &n.name);
+                if is_replica {
+                    let arrived =
+                        wait_for(|| n.get("m", key), Duration::from_secs(2)).is_some();
+                    assert!(arrived, "replica {} must receive {key}", n.name);
+                } else {
+                    // The sender already quiesced; any stray delivery
+                    // would be visible by now.
+                    assert!(
+                        n.get("m", key).is_none(),
+                        "non-replica {} must not receive {key}",
+                        n.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_replica_read_fetches_and_repairs() {
+        let (a, b) = (node("a"), node("b"));
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        let placement = placement_over(&[&a, &b], 1);
+        // Pick a key homed on b, so a is outside the preference list.
+        let key = (0..64)
+            .map(|i| format!("u/s{i}"))
+            .find(|k| placement.replicas("m", k)[0].0 == "b")
+            .expect("some key must hash to b");
+        b.put("m", &key, "ctx".into(), 3).unwrap();
+        b.quiesce();
+        assert!(a.get("m", &key).is_none(), "a is not a home replica");
+        let e = a.get_or_fetch("m", &key, 3).expect("fetch from home replica");
+        assert_eq!(e.value, "ctx");
+        assert_eq!(e.version, 3);
+        assert!(a.remote_fetches() >= 1);
+        assert_eq!(a.read_repairs(), 1);
+        // Read-repaired entry now serves locally without another fetch.
+        let fetches_before = a.remote_fetches();
+        assert_eq!(a.get_or_fetch("m", &key, 3).unwrap().value, "ctx");
+        assert_eq!(a.remote_fetches(), fetches_before);
+    }
+
+    #[test]
+    fn home_replica_never_fetches() {
+        let (a, b) = (node("a"), node("b"));
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        let placement = placement_over(&[&a, &b], 1);
+        let key = (0..64)
+            .map(|i| format!("u/s{i}"))
+            .find(|k| placement.replicas("m", k)[0].0 == "a")
+            .expect("some key must hash to a");
+        // a is home but has nothing yet: get_or_fetch must stay local
+        // (waiting out lag is the Context Manager's retry loop).
+        assert!(a.get_or_fetch("m", &key, 1).is_none());
+        assert_eq!(a.remote_fetches(), 0);
+    }
+
+    #[test]
+    fn without_placement_get_or_fetch_is_local_get() {
+        let n = node("a");
+        n.create_keygroup("m");
+        n.put("m", "k", "v".into(), 2).unwrap();
+        assert_eq!(n.get_or_fetch("m", "k", 2).unwrap().value, "v");
+        // Stale relative to min_version: still returned as-is, no fetch.
+        assert_eq!(n.get_or_fetch("m", "k", 5).unwrap().version, 2);
+        assert_eq!(n.remote_fetches(), 0);
     }
 
     fn wait_for<T>(mut f: impl FnMut() -> Option<T>, timeout: Duration) -> Option<T> {

@@ -52,6 +52,7 @@ pub struct Replicator {
     meter: Arc<TrafficMeter>,
     queued: Arc<AtomicU64>,
     done: Arc<AtomicU64>,
+    targets: Arc<AtomicU64>,
     /// Pushes dropped after exhausting attempts (or by failure injection).
     pub dropped: Arc<AtomicU64>,
 }
@@ -118,6 +119,7 @@ impl Replicator {
             meter,
             queued,
             done,
+            targets: Arc::new(AtomicU64::new(0)),
             dropped,
         }
     }
@@ -141,6 +143,7 @@ impl Replicator {
             payload = payload.set("ttl_ms", t.as_millis() as u64);
         }
         self.queued.fetch_add(1, Ordering::SeqCst);
+        self.targets.fetch_add(peers.len() as u64, Ordering::SeqCst);
         if let Some(tx) = &self.tx {
             let _ = tx.send(Job {
                 peers,
@@ -152,6 +155,14 @@ impl Replicator {
     /// Bytes moved by this node's outbound replication.
     pub fn meter(&self) -> &Arc<TrafficMeter> {
         &self.meter
+    }
+
+    /// Total per-peer push targets enqueued: each write counts once per
+    /// replica it is addressed to. With ring placement this is exactly
+    /// `|preference list \ {writer}|` per write; with replicate-to-all it
+    /// is the keygroup's subscriber count.
+    pub fn push_targets(&self) -> u64 {
+        self.targets.load(Ordering::SeqCst)
     }
 
     /// Block until every queued push has been processed.
@@ -202,6 +213,7 @@ mod tests {
         assert_eq!(msgs.len(), 1);
         assert!(msgs[0].contains("\"ver\":1"));
         assert!(repl.meter().tx.get() > 0);
+        assert_eq!(repl.push_targets(), 1);
     }
 
     #[test]

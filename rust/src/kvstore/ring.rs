@@ -1,0 +1,381 @@
+//! Consistent-hash session placement with virtual nodes and a bounded
+//! replication factor (Dynamo-style, cf. SNIPPETS §3 and EdgeShard).
+//!
+//! The seed prototype replicated every session in a model's keygroup to
+//! *all* peers serving that model — fine for the paper's two-node testbed,
+//! a dead end for a fleet. This module maps `(keygroup, session_key)` onto
+//! a **preference list** of `N` replica nodes so each write is pushed to
+//! exactly those replicas:
+//!
+//! - every member node is hashed onto the ring at `virtual_nodes` points,
+//!   smoothing the load split and bounding remapping when membership
+//!   changes (adding/removing one of `k` nodes moves ~`1/k` of keys);
+//! - the preference list is the first `min(N, members)` *distinct* nodes
+//!   found walking clockwise from the key's hash point;
+//! - placement is a pure function of `(members, virtual_nodes, key)` —
+//!   every node computes the same list with no coordination, which is what
+//!   lets the write path stay peer-to-peer.
+//!
+//! A node outside a session's preference list can still serve it: the KV
+//! layer fetches the entry from a home replica on demand and read-repairs
+//! it into the local store (the paper's §3.3 mobility path, generalized).
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+
+/// A consistent-hash ring over a set of named nodes.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// Ring points, sorted by hash: `(hash, index into names)`.
+    points: Vec<(u64, usize)>,
+    /// Member node names, in insertion order.
+    names: Vec<String>,
+    /// Ring points per node.
+    virtual_nodes: usize,
+}
+
+impl HashRing {
+    /// Build a ring over `names` with `virtual_nodes` points per node.
+    pub fn new<S: AsRef<str>>(names: &[S], virtual_nodes: usize) -> HashRing {
+        let mut ring = HashRing {
+            points: Vec::with_capacity(names.len() * virtual_nodes.max(1)),
+            names: Vec::with_capacity(names.len()),
+            virtual_nodes: virtual_nodes.max(1),
+        };
+        for n in names {
+            ring.add_node(n.as_ref());
+        }
+        ring
+    }
+
+    /// Member names, in insertion order.
+    pub fn nodes(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Number of member nodes.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True when the ring has no members.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Add a node (idempotent): inserts its virtual points, leaving every
+    /// other node's points untouched.
+    pub fn add_node(&mut self, name: &str) {
+        if self.names.iter().any(|n| n == name) {
+            return;
+        }
+        let idx = self.names.len();
+        self.names.push(name.to_string());
+        for v in 0..self.virtual_nodes {
+            self.points.push((point_hash(name, v), idx));
+        }
+        self.points.sort_unstable();
+    }
+
+    /// Remove a node and its virtual points. Keys whose preference list
+    /// did not include the node keep their list unchanged.
+    pub fn remove_node(&mut self, name: &str) {
+        let Some(idx) = self.names.iter().position(|n| n == name) else {
+            return;
+        };
+        self.names.remove(idx);
+        self.points.retain(|&(_, i)| i != idx);
+        // Re-index points above the removed slot.
+        for p in &mut self.points {
+            if p.1 > idx {
+                p.1 -= 1;
+            }
+        }
+    }
+
+    /// The preference list for `key`: the first `min(n, members)` distinct
+    /// nodes clockwise from the key's hash point. Deterministic; every
+    /// node computes the same list.
+    pub fn preference_list(&self, key: &str, n: usize) -> Vec<&str> {
+        let want = n.min(self.names.len());
+        let mut out: Vec<&str> = Vec::with_capacity(want);
+        if want == 0 {
+            return out;
+        }
+        let h = key_hash(key);
+        // First ring point at or after the key's hash (wrapping).
+        let start = match self.points.binary_search(&(h, 0)) {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        let mut seen = vec![false; self.names.len()];
+        for step in 0..self.points.len() {
+            let (_, node) = self.points[(start + step) % self.points.len()];
+            if !seen[node] {
+                seen[node] = true;
+                out.push(self.names[node].as_str());
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The first node on `key`'s preference list (its primary replica).
+    pub fn primary(&self, key: &str) -> Option<&str> {
+        self.preference_list(key, 1).first().copied()
+    }
+
+    /// Whether `node` is one of the first `n` replicas for `key`.
+    pub fn is_replica(&self, node: &str, key: &str, n: usize) -> bool {
+        self.preference_list(key, n).iter().any(|&r| r == node)
+    }
+}
+
+/// Cluster-wide placement: one ring per keygroup (only the nodes serving
+/// that keygroup are members), the replication factor, and the replication
+/// listener address of every node. Built once at cluster assembly and
+/// shared read-only by every [`super::KvNode`].
+#[derive(Debug)]
+pub struct Placement {
+    rings: HashMap<String, HashRing>,
+    addrs: HashMap<String, SocketAddr>,
+    replication_factor: usize,
+}
+
+impl Placement {
+    /// Create a placement with replication factor `n` (clamped to ≥ 1).
+    pub fn new(replication_factor: usize) -> Placement {
+        Placement {
+            rings: HashMap::new(),
+            addrs: HashMap::new(),
+            replication_factor: replication_factor.max(1),
+        }
+    }
+
+    /// The configured replication factor.
+    pub fn replication_factor(&self) -> usize {
+        self.replication_factor
+    }
+
+    /// Register a keygroup with its member nodes and their replication
+    /// listener addresses.
+    pub fn add_keygroup(
+        &mut self,
+        keygroup: &str,
+        members: &[(String, SocketAddr)],
+        virtual_nodes: usize,
+    ) {
+        let names: Vec<&String> = members.iter().map(|(n, _)| n).collect();
+        self.rings
+            .insert(keygroup.to_string(), HashRing::new(&names, virtual_nodes));
+        for (name, addr) in members {
+            self.addrs.insert(name.clone(), *addr);
+        }
+    }
+
+    /// Whether placement is defined for `keygroup`.
+    pub fn has_keygroup(&self, keygroup: &str) -> bool {
+        self.rings.contains_key(keygroup)
+    }
+
+    /// The ring for `keygroup`, if registered.
+    pub fn ring(&self, keygroup: &str) -> Option<&HashRing> {
+        self.rings.get(keygroup)
+    }
+
+    /// The preference list for a session: `min(N, members)` distinct
+    /// `(name, replication_addr)` pairs. Empty when the keygroup has no
+    /// registered ring.
+    pub fn replicas(&self, keygroup: &str, key: &str) -> Vec<(String, SocketAddr)> {
+        let Some(ring) = self.rings.get(keygroup) else {
+            return Vec::new();
+        };
+        ring.preference_list(&placement_key(keygroup, key), self.replication_factor)
+            .into_iter()
+            .map(|name| {
+                let addr = self.addrs[name];
+                (name.to_string(), addr)
+            })
+            .collect()
+    }
+
+    /// Whether `node` is a home replica for the session.
+    pub fn is_replica(&self, node: &str, keygroup: &str, key: &str) -> bool {
+        self.rings.get(keygroup).map_or(false, |ring| {
+            ring.is_replica(node, &placement_key(keygroup, key), self.replication_factor)
+        })
+    }
+}
+
+/// The string hashed for session placement: keygroup and session key
+/// together, so the same session id lands independently per model.
+fn placement_key(keygroup: &str, key: &str) -> String {
+    format!("{keygroup}/{key}")
+}
+
+/// Hash of one virtual point of a node.
+fn point_hash(name: &str, replica: usize) -> u64 {
+    let mut h = crate::testkit::fnv1a(name.as_bytes());
+    h ^= replica as u64;
+    mix64(h)
+}
+
+/// Hash of a session key onto the ring.
+fn key_hash(key: &str) -> u64 {
+    mix64(crate::testkit::fnv1a(key.as_bytes()))
+}
+
+/// SplitMix64 finalizer: FNV alone clusters similar strings; this gives
+/// the avalanche the ring's balance depends on.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("edge-{i}")).collect()
+    }
+
+    fn keys(k: usize) -> Vec<String> {
+        let mut rng = Rng::new(0x51E55);
+        (0..k)
+            .map(|i| format!("u-{:08x}/s-{:08x}", rng.next_u64() as u32, i))
+            .collect()
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let a = HashRing::new(&names(5), 64);
+        let b = HashRing::new(&names(5), 64);
+        for key in keys(200) {
+            assert_eq!(a.preference_list(&key, 3), b.preference_list(&key, 3));
+        }
+        // Repeated queries on the same ring are stable too.
+        let k = "u-1/s-1";
+        assert_eq!(a.preference_list(k, 2), a.preference_list(k, 2));
+    }
+
+    #[test]
+    fn preference_list_has_min_n_nodes_distinct() {
+        for nodes in [1usize, 2, 3, 5, 8] {
+            let ring = HashRing::new(&names(nodes), 32);
+            for n in [1usize, 2, 3, 10] {
+                for key in keys(100) {
+                    let list = ring.preference_list(&key, n);
+                    assert_eq!(list.len(), n.min(nodes), "n={n} nodes={nodes}");
+                    let mut dedup = list.clone();
+                    dedup.sort_unstable();
+                    dedup.dedup();
+                    assert_eq!(dedup.len(), list.len(), "replicas must be distinct");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adding_a_node_remaps_about_one_kth() {
+        let k = 2000usize;
+        let old = HashRing::new(&names(6), 128);
+        let mut new = old.clone();
+        new.add_node("edge-6");
+        let moved = keys(k)
+            .iter()
+            .filter(|key| old.primary(key) != new.primary(key))
+            .count();
+        // Expect ~K/7 primaries to move to the new node; allow generous
+        // slack for hash variance but reject broadcast-style reshuffles.
+        let expected = k / 7;
+        assert!(moved > 0, "a new node must take over some keys");
+        assert!(
+            moved < expected * 5 / 2,
+            "remapped {moved} of {k} keys; consistent hashing bounds this near {expected}"
+        );
+        // Every moved key must have moved *to* the new node.
+        for key in keys(k) {
+            if old.primary(&key) != new.primary(&key) {
+                assert_eq!(new.primary(&key), Some("edge-6"));
+            }
+        }
+    }
+
+    #[test]
+    fn removing_a_node_only_touches_its_keys() {
+        let ring = HashRing::new(&names(5), 64);
+        let mut smaller = ring.clone();
+        smaller.remove_node("edge-3");
+        for key in keys(500) {
+            let before = ring.preference_list(&key, 2);
+            let after = smaller.preference_list(&key, 2);
+            if !before.contains(&"edge-3") {
+                assert_eq!(before, after, "lists without the removed node must not change");
+            } else {
+                assert!(!after.contains(&"edge-3"));
+                assert_eq!(after.len(), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_nodes_balance_the_primary_load() {
+        let nodes = 8usize;
+        let k = 4000usize;
+        let ring = HashRing::new(&names(nodes), 128);
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        let keys = keys(k);
+        for key in &keys {
+            *counts.entry(ring.primary(key).unwrap()).or_default() += 1;
+        }
+        assert_eq!(counts.len(), nodes, "every node must own some keys");
+        let fair = k / nodes;
+        for (node, count) in counts {
+            assert!(
+                count > fair / 4 && count < fair * 3,
+                "node {node} owns {count} of {k} keys (fair share {fair})"
+            );
+        }
+    }
+
+    #[test]
+    fn placement_routes_by_keygroup_membership() {
+        let mut p = Placement::new(2);
+        let a: SocketAddr = "127.0.0.1:7001".parse().unwrap();
+        let b: SocketAddr = "127.0.0.1:7002".parse().unwrap();
+        let c: SocketAddr = "127.0.0.1:7003".parse().unwrap();
+        p.add_keygroup(
+            "model-x",
+            &[
+                ("edge-0".to_string(), a),
+                ("edge-1".to_string(), b),
+                ("edge-2".to_string(), c),
+            ],
+            32,
+        );
+        p.add_keygroup("model-y", &[("edge-2".to_string(), c)], 32);
+        let reps = p.replicas("model-x", "u1/s1");
+        assert_eq!(reps.len(), 2);
+        // model-y is only served by edge-2: lists clamp to membership.
+        assert_eq!(p.replicas("model-y", "u1/s1"), vec![("edge-2".to_string(), c)]);
+        assert!(p.is_replica("edge-2", "model-y", "u1/s1"));
+        assert!(p.replicas("model-z", "u1/s1").is_empty());
+        // The same session key may place differently per keygroup.
+        assert!(p.has_keygroup("model-x") && !p.has_keygroup("model-z"));
+    }
+
+    #[test]
+    fn single_node_ring_degenerates_cleanly() {
+        let ring = HashRing::new(&["only"], 16);
+        assert_eq!(ring.preference_list("any", 3), vec!["only"]);
+        assert_eq!(ring.primary("any"), Some("only"));
+        let empty = HashRing::new(&[] as &[&str], 16);
+        assert!(empty.preference_list("any", 2).is_empty());
+        assert!(empty.primary("any").is_none());
+    }
+}

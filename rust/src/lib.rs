@@ -5,11 +5,12 @@
 //!
 //! - **Layer 3 (this crate)** — the paper's contribution: a per-edge-node
 //!   [`context::ContextManager`] that stores session context *pre-tokenized*,
-//!   a FReD-like geo-distributed [`kvstore`] with keygroups and asynchronous
-//!   peer replication, an [`llm`] service that accepts pre-tokenized context,
-//!   and an HTTP [`server`] / [`client`] pair implementing the paper's
-//!   extended `/completion` API with a client-driven turn-counter
-//!   consistency protocol.
+//!   a FReD-like geo-distributed [`kvstore`] with keygroups, asynchronous
+//!   peer replication, and consistent-hash session sharding
+//!   ([`kvstore::HashRing`]) with a bounded replication factor, an [`llm`]
+//!   service that accepts pre-tokenized context, and an HTTP [`server`] /
+//!   [`client`] pair implementing the paper's extended `/completion` API
+//!   with a client-driven turn-counter consistency protocol.
 //! - **Layer 2 (build time, `python/compile/model.py`)** — a Qwen-style
 //!   decoder-only transformer in JAX, AOT-lowered to HLO text.
 //! - **Layer 1 (build time, `python/compile/kernels/`)** — Pallas attention
@@ -17,6 +18,10 @@
 //!
 //! The [`runtime`] module loads the AOT artifacts through PJRT; Python never
 //! runs on the request path.
+//!
+//! `README.md` covers the quickstart and the benchmark suite;
+//! `docs/ARCHITECTURE.md` walks the request path and the replication path
+//! (including ring placement) end to end.
 
 pub mod benchkit;
 pub mod cli;

@@ -36,10 +36,13 @@ fn main() {
                  \n\
                  cluster       --config <file> | defaults to the paper's two-node testbed\n\
                  \u{20}             --engine mock|pjrt (default pjrt)\n\
+                 \u{20}             --replication-factor N (default: replicate to all)\n\
+                 \u{20}             --virtual-nodes V (ring points per node, default 128)\n\
                  run-scenario  --mode tokenized|raw|client_side (default tokenized)\n\
                  \u{20}             --mobility sticky|paper (default sticky)\n\
                  \u{20}             --engine mock|pjrt (default pjrt)\n\
                  \u{20}             --max-tokens N (default 128)\n\
+                 \u{20}             --replication-factor N / --virtual-nodes V (as above)\n\
                  profiles      print the hardware profile table"
             );
             2
@@ -63,6 +66,19 @@ fn load_config(args: &Args) -> Result<ClusterConfig, String> {
         Some("pjrt") | None => {}
         Some(other) => return Err(format!("unknown engine {other}")),
     }
+    if let Some(rf) = args
+        .opt_parse::<usize>("replication-factor")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.sharding.replication_factor = Some(rf);
+    }
+    if let Some(vn) = args
+        .opt_parse::<usize>("virtual-nodes")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.sharding.virtual_nodes = vn;
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
 
@@ -155,10 +171,12 @@ fn cmd_run_scenario(args: &Args) -> i32 {
     cluster.quiesce();
     for node in &cluster.nodes {
         println!(
-            "node {}: sync_bytes={} requests={}",
+            "node {}: sync_bytes={} requests={} push_targets={} read_repairs={}",
             node.name,
             node.sync_bytes(),
             node.cm.registry.counter("cm_requests_total"),
+            node.kv.push_targets(),
+            node.kv.read_repairs(),
         );
     }
     0

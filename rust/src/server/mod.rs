@@ -4,8 +4,15 @@
 //! (`/completion`, `/health`, `/metrics`), [`ContextManager`], LLM engine,
 //! and the local [`KvNode`] replica. [`EdgeCluster`] launches several nodes
 //! in one process (the paper's two-node testbed), creates one keygroup per
-//! model, and subscribes peers that serve the same model to each other's
-//! updates — context only replicates where it is relevant (§3.3).
+//! model, and wires replication between nodes serving the same model —
+//! context only replicates where it is relevant (§3.3).
+//!
+//! With the default config every same-model peer subscribes to every
+//! update (replicate-to-all, the paper's testbed). Setting
+//! `sharding.replication_factor = Some(n)` installs a consistent-hash
+//! [`Placement`] instead: each session replicates to its `n` home nodes
+//! only, and any other node serves it via remote fetch + read-repair.
+//! See `docs/ARCHITECTURE.md` for the full request/replication walkthrough.
 
 use std::collections::HashMap;
 use std::net::SocketAddr;
@@ -14,7 +21,7 @@ use std::sync::Arc;
 use crate::config::{ClusterConfig, EngineKind, NodeConfig};
 use crate::context::{CompletionRequest, ContextManager, TokenCodec};
 use crate::http::{Handler, Request, Response, Server};
-use crate::kvstore::{KvConfig, KvNode};
+use crate::kvstore::{KvConfig, KvNode, Placement};
 use crate::llm::{ChatTemplate, Engine, MockEngine, PjrtEngine};
 use crate::profile::NodeProfile;
 use crate::tokenizer::{train, Tokenizer, TrainConfig, Vocab};
@@ -148,6 +155,9 @@ fn dispatch(
                 "kv_sync_bytes {}\n",
                 kv.sync_rx_bytes() + kv.sync_tx_bytes()
             ));
+            dump.push_str(&format!("kv_push_targets {}\n", kv.push_targets()));
+            dump.push_str(&format!("kv_remote_fetches {}\n", kv.remote_fetches()));
+            dump.push_str(&format!("kv_read_repairs {}\n", kv.read_repairs()));
             Response::text(&dump)
         }
         _ => Response::error(404, "not found"),
@@ -158,6 +168,11 @@ fn dispatch(
 pub struct EdgeCluster {
     /// The running nodes, in config order.
     pub nodes: Vec<EdgeNode>,
+    /// Ring placement installed on every node, when sharding is enabled
+    /// (`sharding.replication_factor = Some(n)`); `None` means the seed's
+    /// replicate-to-all wiring. Public so tests and benches can compute
+    /// the expected preference list of a session.
+    pub placement: Option<Arc<Placement>>,
 }
 
 impl EdgeCluster {
@@ -194,22 +209,52 @@ impl EdgeCluster {
                 template.clone(),
             )?);
         }
-        // Peer wiring: nodes sharing a model replicate that keygroup to
-        // each other.
-        for (i, a) in cfg.nodes.iter().enumerate() {
-            for (j, b) in cfg.nodes.iter().enumerate() {
-                if i == j {
-                    continue;
+        let placement = match cfg.sharding.replication_factor {
+            // Ring placement: one ring per model over the nodes serving
+            // it; every node shares the same placement table, so each
+            // computes identical preference lists with no coordination.
+            Some(rf) => {
+                let mut models: Vec<&String> =
+                    cfg.nodes.iter().flat_map(|n| n.models.iter()).collect();
+                models.sort_unstable();
+                models.dedup();
+                let mut placement = Placement::new(rf);
+                for model in models {
+                    let members: Vec<(String, SocketAddr)> = cfg
+                        .nodes
+                        .iter()
+                        .zip(&nodes)
+                        .filter(|(nc, _)| nc.models.contains(model))
+                        .map(|(nc, n)| (nc.name.clone(), n.kv.replication_addr()))
+                        .collect();
+                    placement.add_keygroup(model, &members, cfg.sharding.virtual_nodes);
                 }
-                for model in &a.models {
-                    if b.models.contains(model) {
-                        let peer = nodes[j].kv.replication_addr();
-                        nodes[i].kv.add_peer(model, peer);
+                let placement = Arc::new(placement);
+                for n in &nodes {
+                    n.kv.set_placement(placement.clone());
+                }
+                Some(placement)
+            }
+            // Replicate-to-all (seed behaviour): nodes sharing a model
+            // subscribe to each other's updates for that keygroup.
+            None => {
+                for (i, a) in cfg.nodes.iter().enumerate() {
+                    for (j, b) in cfg.nodes.iter().enumerate() {
+                        if i == j {
+                            continue;
+                        }
+                        for model in &a.models {
+                            if b.models.contains(model) {
+                                let peer = nodes[j].kv.replication_addr();
+                                nodes[i].kv.add_peer(model, peer);
+                            }
+                        }
                     }
                 }
+                None
             }
-        }
-        Ok(EdgeCluster { nodes })
+        };
+        Ok(EdgeCluster { nodes, placement })
     }
 
     /// Named API endpoints in node order.

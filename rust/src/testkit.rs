@@ -7,6 +7,18 @@
 //! [`property`] runs a closure over many generated cases and, on failure,
 //! re-runs a simple shrink loop to report a minimal failing seed.
 
+/// FNV-1a over a byte slice: the crate's shared deterministic string
+/// hash (session-id seeding, ring point placement). Stable across
+/// platforms and releases — ring placement depends on that.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// Deterministic 64-bit PRNG (SplitMix64). Small, fast, seedable, portable.
 #[derive(Debug, Clone)]
 pub struct Rng {

@@ -1,0 +1,190 @@
+//! Integration tests for consistent-hash session sharding: bounded
+//! replication pushes each write to exactly the session's preference list,
+//! the default config reproduces the seed's replicate-to-all behaviour,
+//! and a node outside the preference list serves a roaming session via
+//! remote fetch + read-repair (the mobility path).
+
+use std::net::SocketAddr;
+
+use discedge::client::{Client, MobilityPolicy};
+use discedge::config::{ClusterConfig, ContextMode};
+use discedge::context::{CompletionRequest, CompletionResponse};
+use discedge::http::{Connection, Request as HttpRequest};
+use discedge::netsim::{LinkModel, TrafficMeter};
+use discedge::server::EdgeCluster;
+
+const MODEL: &str = "discedge/tiny-chat";
+
+fn fleet(n: usize, replication_factor: Option<usize>) -> EdgeCluster {
+    // mock_fleet already selects the zero-cost mock engine + ideal links.
+    EdgeCluster::launch(ClusterConfig::mock_fleet(n, replication_factor)).unwrap()
+}
+
+fn post(addr: SocketAddr, req: &CompletionRequest) -> CompletionResponse {
+    let mut conn = Connection::open(addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+    let resp = conn
+        .round_trip(&HttpRequest::post_json("/completion", &req.to_json()))
+        .unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str().unwrap_or("?"));
+    CompletionResponse::from_json(resp.body_str().unwrap()).unwrap()
+}
+
+#[test]
+fn bounded_replication_pushes_to_exactly_n_replicas() {
+    let cluster = fleet(4, Some(2));
+    let placement = cluster.placement.clone().expect("sharded cluster has placement");
+    let mut expected_targets = 0u64;
+    let mut sessions = Vec::new();
+    for s in 0..10 {
+        let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+            .with_mode(ContextMode::Tokenized)
+            .with_model(MODEL)
+            .with_max_tokens(8);
+        client.chat(&format!("question one of session {s}")).unwrap();
+        client.chat("question two").unwrap();
+        cluster.quiesce();
+        let (user, sess) = client.session();
+        let key = format!("{}/{}", user.unwrap(), sess.unwrap());
+        let replicas = placement.replicas(MODEL, &key);
+        assert_eq!(replicas.len(), 2, "preference list must have exactly N nodes");
+        // Two writes per session; each targets the preference list minus
+        // the writer (edge-0) when the writer is itself a replica.
+        expected_targets += 2 * replicas.iter().filter(|(n, _)| n != "edge-0").count() as u64;
+        sessions.push((key, replicas));
+    }
+    assert_eq!(
+        cluster.nodes[0].kv.push_targets(),
+        expected_targets,
+        "every write must be pushed to exactly its home replicas"
+    );
+    // Entries live exactly on the preference list (plus the writer's own
+    // local replica, which doubles as a cache).
+    for (key, replicas) in &sessions {
+        assert!(cluster.nodes[0].kv.get(MODEL, key).is_some());
+        for node in cluster.nodes.iter().skip(1) {
+            let is_replica = replicas.iter().any(|(n, _)| n == &node.name);
+            assert_eq!(
+                node.kv.get(MODEL, key).is_some(),
+                is_replica,
+                "{} holding {key} (replica: {is_replica})",
+                node.name
+            );
+        }
+    }
+}
+
+#[test]
+fn default_config_replicates_to_all() {
+    let cluster = fleet(4, None);
+    assert!(cluster.placement.is_none(), "default wiring must not build a ring");
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(8);
+    client.chat("hello").unwrap();
+    client.chat("more").unwrap();
+    cluster.quiesce();
+    let (user, sess) = client.session();
+    let key = format!("{}/{}", user.unwrap(), sess.unwrap());
+    for node in &cluster.nodes {
+        assert!(node.kv.get(MODEL, &key).is_some(), "{} must hold the session", node.name);
+        assert_eq!(node.kv.remote_fetches(), 0);
+    }
+    // Two writes, each broadcast to the 3 subscribed peers.
+    assert_eq!(cluster.nodes[0].kv.push_targets(), 6);
+}
+
+#[test]
+fn replication_factor_equal_to_fleet_matches_broadcast() {
+    let cluster = fleet(4, Some(4));
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(8);
+    client.chat("hello").unwrap();
+    cluster.quiesce();
+    let (user, sess) = client.session();
+    let key = format!("{}/{}", user.unwrap(), sess.unwrap());
+    for node in &cluster.nodes {
+        assert!(node.kv.get(MODEL, &key).is_some());
+    }
+    // N = fleet size: the writer is always on the list, so one write
+    // pushes to the other 3 nodes — identical to replicate-to-all.
+    assert_eq!(cluster.nodes[0].kv.push_targets(), 3);
+}
+
+#[test]
+fn roaming_session_is_served_by_non_replica_via_read_repair() {
+    let cluster = fleet(4, Some(1));
+    let placement = cluster.placement.clone().unwrap();
+    // Choose a session homed on edge-1, then serve it from edge-0 and
+    // edge-2 — both outside the preference list.
+    let (user, sess) = (0..)
+        .map(|i| (format!("u-roam-{i}"), format!("s-roam-{i}")))
+        .find(|(u, s)| placement.replicas(MODEL, &format!("{u}/{s}"))[0].0 == "edge-1")
+        .unwrap();
+    let key = format!("{user}/{sess}");
+
+    let mut req = CompletionRequest::new(MODEL, "What is SLAM?", 1, ContextMode::Tokenized);
+    req.user_id = Some(user.clone());
+    req.session_id = Some(sess.clone());
+    let r1 = post(cluster.nodes[0].api_addr(), &req);
+    cluster.quiesce();
+    // The write-through half: the non-replica writer pushed to the home.
+    assert!(cluster.nodes[1].kv.get(MODEL, &key).is_some(), "home replica must receive the write");
+    assert!(cluster.nodes[2].kv.get(MODEL, &key).is_none());
+    assert!(cluster.nodes[3].kv.get(MODEL, &key).is_none());
+
+    // The read half: edge-2 has nothing local, fetches from the home
+    // replica, read-repairs, and continues the session.
+    req.turn = 2;
+    req.prompt = "Tell me more".into();
+    let r2 = post(cluster.nodes[2].api_addr(), &req);
+    assert_eq!(r2.turn, 2);
+    assert!(
+        r2.prefill_tokens > r1.prefill_tokens,
+        "turn 2 must see the turn-1 context ({} vs {})",
+        r2.prefill_tokens,
+        r1.prefill_tokens
+    );
+    assert!(cluster.nodes[2].kv.remote_fetches() >= 1);
+    assert!(cluster.nodes[2].kv.read_repairs() >= 1);
+    assert!(cluster.nodes[2].kv.get(MODEL, &key).is_some(), "read-repair must cache locally");
+}
+
+#[test]
+fn placement_is_identical_across_launches() {
+    // Placement must be a pure function of the membership and the knobs —
+    // that is what lets every node compute preference lists independently.
+    let a = fleet(4, Some(2));
+    let b = fleet(4, Some(2));
+    let (pa, pb) = (a.placement.clone().unwrap(), b.placement.clone().unwrap());
+    for i in 0..100 {
+        let key = format!("user-{i}/session-{i}");
+        let ra: Vec<String> = pa.replicas(MODEL, &key).into_iter().map(|(n, _)| n).collect();
+        let rb: Vec<String> = pb.replicas(MODEL, &key).into_iter().map(|(n, _)| n).collect();
+        assert_eq!(ra, rb, "placement diverged for {key}");
+    }
+}
+
+#[test]
+fn sharded_fleet_runs_the_paper_scenario() {
+    // End-to-end smoke: the 9-turn scenario with roaming across a sharded
+    // fleet still satisfies the turn-counter protocol on every turn.
+    let cluster = fleet(4, Some(2));
+    let mut client = Client::connect(
+        cluster.endpoints(),
+        MobilityPolicy::Alternate { nodes: vec![0, 1, 2, 3], every: 2 },
+    )
+    .with_mode(ContextMode::Tokenized)
+    .with_model(MODEL)
+    .with_max_tokens(8);
+    let mut prev = 0usize;
+    let scenario = discedge::workload::Scenario::robotics_9turn();
+    for turn in scenario.turns() {
+        let r = client.chat(&turn.prompt).unwrap();
+        assert!(r.response.prefill_tokens > prev, "context must grow on turn {}", turn.number);
+        prev = r.response.prefill_tokens;
+        cluster.quiesce();
+    }
+}
