@@ -179,6 +179,10 @@ fn context_scaling() {
 /// A4: bucket padding waste (PJRT; needs artifacts).
 fn bucket_sweep() {
     let dir = std::path::Path::new("artifacts");
+    if !discedge::runtime::pjrt_available() {
+        eprintln!("skipping bucket-sweep: built without the `pjrt` feature");
+        return;
+    }
     if !dir.join("model_meta.json").exists() {
         eprintln!("skipping bucket-sweep: no artifacts");
         return;

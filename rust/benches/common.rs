@@ -40,18 +40,24 @@ pub fn testbed() -> EdgeCluster {
 }
 
 /// Launch an `n`-node mock fleet (one shared model) with the given
-/// replication factor (`None` = replicate-to-all). The tokenizer, chat
-/// template, and mock engine are built once and shared across launches so
-/// a sweep over fleet sizes doesn't retrain the BPE every time — which
-/// assumes every call in a bench binary uses `mock_fleet`'s single shared
-/// model; the first call's stack is cached for the process lifetime.
+/// replication factor (`None` = replicate-to-all). See
+/// [`launch_fleet_with`] for the shared-stack caching caveat.
 pub fn launch_fleet(n: usize, replication_factor: Option<usize>) -> EdgeCluster {
+    launch_fleet_with(ClusterConfig::mock_fleet(n, replication_factor))
+}
+
+/// Launch a mock fleet from an explicit config (e.g. with `delta_sync`
+/// toggled). The tokenizer, chat template, and mock engine are built once
+/// and shared across launches so a sweep over fleet sizes doesn't retrain
+/// the BPE every time — which assumes every call in a bench binary uses
+/// `mock_fleet`'s single shared model; the first call's stack is cached
+/// for the process lifetime.
+pub fn launch_fleet_with(cfg: ClusterConfig) -> EdgeCluster {
     use discedge::llm::{ChatTemplate, Engine};
     use std::collections::HashMap;
     use std::sync::{Arc, OnceLock};
     static STACK: OnceLock<(Arc<HashMap<String, Arc<dyn Engine>>>, ChatTemplate)> =
         OnceLock::new();
-    let cfg = ClusterConfig::mock_fleet(n, replication_factor);
     let (engines, template) = STACK.get_or_init(|| {
         let tok = Arc::new(discedge::server::load_or_train_tokenizer(&cfg).unwrap());
         let template = ChatTemplate::new(tok.clone()).unwrap();

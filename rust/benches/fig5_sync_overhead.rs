@@ -14,7 +14,7 @@ mod common;
 
 use discedge::benchkit::{emit, per_turn_table, Bench, PerTurn};
 use discedge::client::{Client, MobilityPolicy};
-use discedge::config::ContextMode;
+use discedge::config::{ClusterConfig, ContextMode};
 use discedge::metrics::{pct_change, Table};
 use discedge::netsim::LinkModel;
 use discedge::workload::Scenario;
@@ -67,6 +67,7 @@ fn main() {
     );
 
     sharded_scaling();
+    delta_sync();
 }
 
 /// **Figure 5b** (beyond the paper): per-node sync bytes per turn as the
@@ -99,5 +100,64 @@ fn sharded_scaling() {
     println!(
         "(bounded replication keeps per-node sync traffic flat as the fleet \
          grows; replicate-to-all scales it with n-1 peers)"
+    );
+}
+
+/// **Figure 5c** (beyond the paper): per-turn *outbound* sync bytes as the
+/// conversation grows. Full-state replication re-ships the whole token
+/// history every turn (O(turn) per turn, O(turn²) cumulative); delta sync
+/// ships only the turn's appended fragment, so per-turn bytes stay ~flat.
+/// Mock engine, two nodes — this measures the replication layer.
+fn delta_sync() {
+    const TURNS: usize = 12;
+    let series = |delta: bool| -> Vec<f64> {
+        let mut cfg = ClusterConfig::mock_fleet(2, None);
+        cfg.replication.delta_sync = delta;
+        let cluster = common::launch_fleet_with(cfg);
+        let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+            .with_mode(ContextMode::Tokenized)
+            .with_model(common::MODEL)
+            .with_max_tokens(24);
+        let writer = &cluster.nodes[0];
+        let mut out = Vec::with_capacity(TURNS);
+        let mut last = writer.kv.sync_tx_bytes();
+        for t in 0..TURNS {
+            client
+                .chat(&format!("turn {t}: tell me more about the robot's map"))
+                .expect("turn");
+            cluster.quiesce();
+            let now = writer.kv.sync_tx_bytes();
+            out.push((now - last) as f64);
+            last = now;
+        }
+        out
+    };
+    eprintln!("[fig5c] full-state");
+    let full = series(false);
+    eprintln!("[fig5c] delta");
+    let delta = series(true);
+
+    let mut table = Table::new(
+        "Fig 5c — outbound sync bytes per turn vs conversation length (tokenized)",
+        &["full_state_B", "delta_B", "delta_vs_full_pct"],
+    );
+    for t in 0..TURNS {
+        table.row(
+            &format!("turn {}", t + 1),
+            &[full[t], delta[t], pct_change(full[t], delta[t])],
+        );
+    }
+    emit(&table, "fig5_delta.csv");
+
+    // Headline: growth of late turns over early turns. Full-state grows
+    // with the history; delta stays ~flat (fragment-sized).
+    let early = |s: &[f64]| s[1..4].iter().sum::<f64>() / 3.0;
+    let late = |s: &[f64]| s[TURNS - 3..].iter().sum::<f64>() / 3.0;
+    println!(
+        "\nHeadline: per-turn sync growth (late/early turns): \
+         full-state {:.2}x, delta {:.2}x; last-turn bytes {:+.1}% under delta",
+        late(&full) / early(&full),
+        late(&delta) / early(&delta),
+        pct_change(full[TURNS - 1], delta[TURNS - 1]),
     );
 }

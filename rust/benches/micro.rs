@@ -169,8 +169,10 @@ fn main() {
         );
     }
 
-    // PJRT generation per bucket (needs artifacts).
-    if std::path::Path::new("artifacts/model_meta.json").exists() {
+    // PJRT generation per bucket (needs artifacts + the `pjrt` feature).
+    if discedge::runtime::pjrt_available()
+        && std::path::Path::new("artifacts/model_meta.json").exists()
+    {
         let rt = discedge::runtime::ModelRuntime::load(std::path::Path::new("artifacts")).unwrap();
         let meta = rt.meta().clone();
         for &bucket in &meta.buckets {

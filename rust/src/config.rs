@@ -303,6 +303,15 @@ impl ClusterConfig {
             if let Some(d) = r.get("delay_ms").and_then(|x| x.as_u64()) {
                 cfg.replication.delay = Duration::from_millis(d);
             }
+            if let Some(a) = r.get("max_attempts").and_then(|x| x.as_u64()) {
+                cfg.replication.max_attempts = a as u32;
+            }
+            if let Some(b) = r.get("retry_backoff_ms").and_then(|x| x.as_u64()) {
+                cfg.replication.retry_backoff = Duration::from_millis(b);
+            }
+            if let Some(ds) = r.get("delta_sync").and_then(|x| x.as_bool()) {
+                cfg.replication.delta_sync = ds;
+            }
         }
         if let Some(s) = v.get("sharding") {
             if let Some(rf) = s.get("replication_factor").and_then(|x| x.as_u64()) {
@@ -418,7 +427,8 @@ mod tests {
               "engine": "mock",
               "consistency": {"retries": 5, "backoff_ms": 20, "policy": "available"},
               "generation": {"max_tokens": 64},
-              "replication": {"delay_ms": 15}
+              "replication": {"delay_ms": 15, "max_attempts": 7,
+                              "retry_backoff_ms": 9, "delta_sync": true}
             }"#,
         )
         .unwrap();
@@ -427,7 +437,18 @@ mod tests {
         assert_eq!(cfg.consistency.policy, ConsistencyPolicy::Available);
         assert_eq!(cfg.generation.max_tokens, 64);
         assert_eq!(cfg.replication.delay, Duration::from_millis(15));
+        assert_eq!(cfg.replication.max_attempts, 7);
+        assert_eq!(cfg.replication.retry_backoff, Duration::from_millis(9));
+        assert!(cfg.replication.delta_sync);
         assert!(matches!(cfg.engine, EngineKind::Mock { .. }));
+    }
+
+    #[test]
+    fn delta_sync_defaults_off() {
+        // The seed wire format must stay the default.
+        assert!(!ClusterConfig::two_node_testbed().replication.delta_sync);
+        let cfg = ClusterConfig::from_json(r#"{"engine": "mock"}"#).unwrap();
+        assert!(!cfg.replication.delta_sync);
     }
 
     #[test]

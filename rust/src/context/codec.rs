@@ -6,6 +6,15 @@
 //! bytes/token vs ~4–6 bytes/token for text. A denser base64(u16-LE)
 //! framing is implemented as well and evaluated in ablation A1 (the paper
 //! leaves this optimization on the table).
+//!
+//! **Delta fragments.** Session context is append-only per turn, so the
+//! replication layer can ship just the turn's new fragment instead of the
+//! whole document (`delta_sync`, see `kvstore`). A fragment is framed
+//! exactly like a stored document ([`StoredContext::to_fragment`]), and
+//! [`append_to_doc`] / [`concat_fragment_docs`] are the merge operations
+//! the KV store applies on receive / the replicator uses to coalesce
+//! queued deltas. The merged result is byte-for-byte identical to what a
+//! full-state write of the same history would have stored.
 
 use crate::json::{self, Value};
 use crate::{Error, Result};
@@ -56,26 +65,7 @@ impl StoredContext {
 
     /// Parse back from the KV document.
     pub fn from_kv(doc: &str) -> Result<(StoredContext, u64)> {
-        let v = json::parse(doc)?;
-        let turns = v.req_u64("turns")?;
-        let fmt = v.req_str("fmt")?;
-        let ctx = match fmt.as_str() {
-            "tok" => {
-                let ids = v
-                    .get("ids")
-                    .and_then(|i| i.as_int_array())
-                    .ok_or_else(|| Error::Context("tok doc missing ids".into()))?;
-                StoredContext::Tokens(ids)
-            }
-            "tokb" => {
-                let b64 = v.req_str("ids")?;
-                let bytes = base64_decode(&b64)
-                    .ok_or_else(|| Error::Context("bad base64 ids".into()))?;
-                StoredContext::Tokens(u16_le_to_ids(&bytes)?)
-            }
-            "raw" => StoredContext::Text(v.req_str("text")?),
-            other => return Err(Error::Context(format!("unknown context fmt {other}"))),
-        };
+        let (ctx, turns, _) = decode_doc(&json::parse(doc)?)?;
         Ok((ctx, turns))
     }
 
@@ -85,6 +75,89 @@ impl StoredContext {
             StoredContext::Tokens(ids) => ids.len(),
             StoredContext::Text(t) => t.len(),
         }
+    }
+
+    /// Serialize an append-only **delta fragment** (the new tokens / text
+    /// of one turn). Same framing as [`Self::to_kv`] so a fragment is
+    /// self-describing; its `turns` field is 0 (the KV delta record
+    /// carries the authoritative base/target versions).
+    pub fn to_fragment(&self, codec: TokenCodec) -> String {
+        self.to_kv(0, codec)
+    }
+
+    /// Parse a delta fragment produced by [`Self::to_fragment`].
+    pub fn from_fragment(doc: &str) -> Result<StoredContext> {
+        Ok(StoredContext::from_kv(doc)?.0)
+    }
+}
+
+/// Decode a parsed document into its context, `turns` stamp, and the
+/// codec it was framed with (one parse serves all three — the delta apply
+/// path runs this on O(history)-sized documents every turn). Raw-text
+/// docs report `JsonInts`; the codec only matters for token payloads.
+fn decode_doc(v: &json::Value) -> Result<(StoredContext, u64, TokenCodec)> {
+    let turns = v.req_u64("turns")?;
+    let fmt = v.req_str("fmt")?;
+    let (ctx, codec) = match fmt.as_str() {
+        "tok" => {
+            let ids = v
+                .get("ids")
+                .and_then(|i| i.as_int_array())
+                .ok_or_else(|| Error::Context("tok doc missing ids".into()))?;
+            (StoredContext::Tokens(ids), TokenCodec::JsonInts)
+        }
+        "tokb" => {
+            let b64 = v.req_str("ids")?;
+            let bytes =
+                base64_decode(&b64).ok_or_else(|| Error::Context("bad base64 ids".into()))?;
+            (
+                StoredContext::Tokens(u16_le_to_ids(&bytes)?),
+                TokenCodec::BinaryU16,
+            )
+        }
+        "raw" => (StoredContext::Text(v.req_str("text")?), TokenCodec::JsonInts),
+        other => return Err(Error::Context(format!("unknown context fmt {other}"))),
+    };
+    Ok((ctx, turns, codec))
+}
+
+/// Append a delta fragment to a stored context document, producing the
+/// document a full-state write of the same history would have produced
+/// (same codec as the base document, `turns` advanced to `new_turns`).
+///
+/// Fails when the fragment's mode (tokens vs text) does not match the
+/// base document — the caller falls back to full-state transfer.
+pub fn append_to_doc(base_doc: &str, frag_doc: &str, new_turns: u64) -> Result<String> {
+    let (base, _, codec) = decode_doc(&json::parse(base_doc)?)?;
+    let frag = StoredContext::from_fragment(frag_doc)?;
+    match (base, frag) {
+        (StoredContext::Tokens(mut ids), StoredContext::Tokens(f)) => {
+            ids.extend_from_slice(&f);
+            Ok(StoredContext::Tokens(ids).to_kv(new_turns, codec))
+        }
+        (StoredContext::Text(mut t), StoredContext::Text(f)) => {
+            t.push_str(&f);
+            Ok(StoredContext::Text(t).to_kv(new_turns, codec))
+        }
+        _ => Err(Error::Context("delta fragment mode mismatch".into())),
+    }
+}
+
+/// Concatenate two delta fragments (the replicator's per-key coalescing:
+/// turn `n`'s fragment followed by turn `n+1`'s collapses into one delta
+/// covering both turns). Keeps the first fragment's codec.
+pub fn concat_fragment_docs(a: &str, b: &str) -> Result<String> {
+    let (a_ctx, _, codec) = decode_doc(&json::parse(a)?)?;
+    match (a_ctx, StoredContext::from_fragment(b)?) {
+        (StoredContext::Tokens(mut x), StoredContext::Tokens(y)) => {
+            x.extend_from_slice(&y);
+            Ok(StoredContext::Tokens(x).to_fragment(codec))
+        }
+        (StoredContext::Text(mut x), StoredContext::Text(y)) => {
+            x.push_str(&y);
+            Ok(StoredContext::Text(x).to_fragment(codec))
+        }
+        _ => Err(Error::Context("cannot coalesce fragments of mixed modes".into())),
     }
 }
 
@@ -239,6 +312,61 @@ mod tests {
             let enc = base64_encode(&data);
             assert_eq!(base64_decode(&enc).unwrap(), data);
         });
+    }
+
+    #[test]
+    fn append_matches_full_reencode() {
+        // The delta invariant: base ⊕ fragment == full-state document.
+        for codec in [TokenCodec::JsonInts, TokenCodec::BinaryU16] {
+            let base = StoredContext::Tokens(vec![1, 2, 3]).to_kv(1, codec);
+            let frag = StoredContext::Tokens(vec![4, 5]).to_fragment(codec);
+            let merged = append_to_doc(&base, &frag, 2).unwrap();
+            let full = StoredContext::Tokens(vec![1, 2, 3, 4, 5]).to_kv(2, codec);
+            assert_eq!(merged, full, "codec {codec:?}");
+        }
+        let base = StoredContext::Text("ab".into()).to_kv(1, TokenCodec::JsonInts);
+        let frag = StoredContext::Text("cd".into()).to_fragment(TokenCodec::JsonInts);
+        assert_eq!(
+            append_to_doc(&base, &frag, 2).unwrap(),
+            StoredContext::Text("abcd".into()).to_kv(2, TokenCodec::JsonInts)
+        );
+    }
+
+    #[test]
+    fn append_keeps_base_codec() {
+        // A tokb replica receiving a tok-framed fragment stays tokb.
+        let base = StoredContext::Tokens(vec![7]).to_kv(1, TokenCodec::BinaryU16);
+        let frag = StoredContext::Tokens(vec![8]).to_fragment(TokenCodec::JsonInts);
+        let merged = append_to_doc(&base, &frag, 2).unwrap();
+        assert_eq!(
+            merged,
+            StoredContext::Tokens(vec![7, 8]).to_kv(2, TokenCodec::BinaryU16)
+        );
+    }
+
+    #[test]
+    fn append_rejects_mode_mismatch() {
+        let base = StoredContext::Text("ab".into()).to_kv(1, TokenCodec::JsonInts);
+        let frag = StoredContext::Tokens(vec![1]).to_fragment(TokenCodec::JsonInts);
+        assert!(append_to_doc(&base, &frag, 2).is_err());
+        assert!(append_to_doc("not json", &frag, 2).is_err());
+    }
+
+    #[test]
+    fn fragments_coalesce() {
+        let a = StoredContext::Tokens(vec![1, 2]).to_fragment(TokenCodec::BinaryU16);
+        let b = StoredContext::Tokens(vec![3]).to_fragment(TokenCodec::BinaryU16);
+        let ab = concat_fragment_docs(&a, &b).unwrap();
+        assert_eq!(
+            StoredContext::from_fragment(&ab).unwrap(),
+            StoredContext::Tokens(vec![1, 2, 3])
+        );
+        // Coalesced fragment applies exactly like the two separate ones.
+        let base = StoredContext::Tokens(vec![0]).to_kv(1, TokenCodec::BinaryU16);
+        let step = append_to_doc(&append_to_doc(&base, &a, 2).unwrap(), &b, 3).unwrap();
+        assert_eq!(append_to_doc(&base, &ab, 3).unwrap(), step);
+        let t = StoredContext::Text("x".into()).to_fragment(TokenCodec::JsonInts);
+        assert!(concat_fragment_docs(&a, &t).is_err());
     }
 
     #[test]

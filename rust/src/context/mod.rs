@@ -19,7 +19,7 @@
 //! - stamp each KV write with the turn number as its version and the
 //!   session TTL.
 
-mod codec;
+pub mod codec;
 mod protocol;
 
 pub use codec::{base64_decode, base64_encode, StoredContext, TokenCodec};
@@ -118,7 +118,7 @@ impl ContextManager {
         let max_tokens = req.max_tokens.unwrap_or(self.generation.max_tokens);
         let policy = req.consistency.unwrap_or(self.consistency.policy);
 
-        let (input_ids, history) = match req.mode {
+        let (input_ids, history, exact_base) = match req.mode {
             ContextMode::ClientSide => {
                 // Stateless: render + tokenize everything, store nothing.
                 let text = self.template.render_messages(&req.messages, &req.prompt);
@@ -127,10 +127,11 @@ impl ContextManager {
                     .profile
                     .tokenize_emulated(text.len(), || self.template.encode_transcript(&text));
                 timings.tokenize_s = t.elapsed().as_secs_f64();
-                (ids, None)
+                (ids, None, false)
             }
             ContextMode::Tokenized => {
-                let (ctx, fetch) = self.fetch_context(req, &key, policy, ContextMode::Tokenized)?;
+                let (ctx, fetch, exact) =
+                    self.fetch_context(req, &key, policy, ContextMode::Tokenized)?;
                 timings.fetch_s = fetch.0;
                 timings.retries = fetch.1;
                 let history_ids = match ctx {
@@ -161,10 +162,11 @@ impl ContextManager {
                 timings.tokenize_s += t.elapsed().as_secs_f64();
                 let mut input = history_ids.clone();
                 input.extend_from_slice(&new_ids);
-                (input, Some(StoredContext::Tokens(history_ids)))
+                (input, Some(StoredContext::Tokens(history_ids)), exact)
             }
             ContextMode::Raw => {
-                let (ctx, fetch) = self.fetch_context(req, &key, policy, ContextMode::Raw)?;
+                let (ctx, fetch, exact) =
+                    self.fetch_context(req, &key, policy, ContextMode::Raw)?;
                 timings.fetch_s = fetch.0;
                 timings.retries = fetch.1;
                 let history_text = match ctx {
@@ -188,7 +190,7 @@ impl ContextManager {
                         self.template.encode_transcript(&full_text)
                     });
                 timings.tokenize_s = t.elapsed().as_secs_f64();
-                (ids, Some(StoredContext::Text(history_text)))
+                (ids, Some(StoredContext::Text(history_text)), exact)
             }
         };
 
@@ -216,6 +218,7 @@ impl ContextManager {
                 history,
                 req.prompt.clone(),
                 response_text.clone(),
+                exact_base,
             );
         }
 
@@ -252,21 +255,26 @@ impl ContextManager {
     /// The turn-counter consistency protocol (paper §3.1/§3.3): read the
     /// local replica; expect version `turn - 1`; retry on staleness.
     ///
-    /// Returns the context (None for a fresh session) and
-    /// `(fetch_seconds, retries)`.
+    /// Returns the context (None for a fresh session),
+    /// `(fetch_seconds, retries)`, and whether the context is **exactly**
+    /// at version `turn - 1` (false when the `Available` policy served
+    /// stale state). The async update must not advertise a delta base it
+    /// did not actually extend — a receiver genuinely at `turn - 1` would
+    /// splice the fragment onto a *different* history and the replicas
+    /// would diverge at equal versions, beyond LWW's reach.
     fn fetch_context(
         &self,
         req: &CompletionRequest,
         key: &str,
         policy: ConsistencyPolicy,
         mode: ContextMode,
-    ) -> Result<(Option<StoredContext>, (f64, u64))> {
+    ) -> Result<(Option<StoredContext>, (f64, u64), bool)> {
         let t = Instant::now();
         let expected = req.turn - 1;
         if expected == 0 {
             // New session. A leftover entry (e.g. expired client restart)
             // is superseded; turn 1 always starts fresh.
-            return Ok((None, (t.elapsed().as_secs_f64(), 0)));
+            return Ok((None, (t.elapsed().as_secs_f64(), 0), true));
         }
         let mut retries = 0u64;
         // Local read-your-writes: if this node itself queued the update
@@ -297,7 +305,7 @@ impl ContextManager {
                 Some(entry) if entry.version == expected => {
                     let (ctx, _) = StoredContext::from_kv(&entry.value)?;
                     self.check_mode(&ctx, mode)?;
-                    return Ok((Some(ctx), (t.elapsed().as_secs_f64(), retries)));
+                    return Ok((Some(ctx), (t.elapsed().as_secs_f64(), retries), true));
                 }
                 stale => {
                     if self.has_pending_local_update(key, expected)
@@ -321,7 +329,9 @@ impl ContextManager {
                                     Some(e) => Some(StoredContext::from_kv(&e.value)?.0),
                                     None => None,
                                 };
-                                Ok((ctx, (t.elapsed().as_secs_f64(), retries)))
+                                // Stale base: the coming write is NOT an
+                                // append onto `expected`.
+                                Ok((ctx, (t.elapsed().as_secs_f64(), retries), false))
                             }
                         };
                     }
@@ -365,7 +375,10 @@ impl ContextManager {
 
     /// Background context update: tokenize the new turn fragment (the
     /// paper's async tokenization step), append, and write to the KV
-    /// store with the turn number as version.
+    /// store with the turn number as version. `exact_base` marks the
+    /// write as a true append onto version `turn - 1`; only then may the
+    /// KV layer replicate it as a delta.
+    #[allow(clippy::too_many_arguments)]
     fn spawn_update(
         &self,
         model: String,
@@ -374,6 +387,7 @@ impl ContextManager {
         history: StoredContext,
         prompt: String,
         response: String,
+        exact_base: bool,
     ) {
         self.updates_queued.fetch_add(1, Ordering::SeqCst);
         {
@@ -393,7 +407,16 @@ impl ContextManager {
             .name("cm-update".into())
             .spawn(move || {
                 let t = Instant::now();
-                let doc = match history {
+                // The turn's new content is an append-only fragment on top
+                // of the stored history; when this node replicates deltas
+                // AND the history really sits at version turn-1, the
+                // fragment document is handed to the KV layer alongside
+                // the full value so only the fragment goes on the wire.
+                // Otherwise skip building it (full-state mode would throw
+                // it away; a stale base must never ship as a delta; turn 1
+                // always ships full state — nothing to append onto).
+                let want_fragment = exact_base && turn > 1 && kv.delta_sync_enabled();
+                let (doc, frag_doc) = match history {
                     StoredContext::Tokens(mut ids) => {
                         // Async tokenization of the new fragment only.
                         let fragment = format!(
@@ -405,18 +428,27 @@ impl ContextManager {
                             .update_tokenize_emulated(fragment.len(), || {
                                 template.encode_transcript(&fragment)
                             });
+                        let frag_doc = want_fragment
+                            .then(|| StoredContext::Tokens(frag_ids.clone()).to_fragment(codec));
                         ids.extend(frag_ids);
-                        StoredContext::Tokens(ids).to_kv(turn, codec)
+                        (StoredContext::Tokens(ids).to_kv(turn, codec), frag_doc)
                     }
                     StoredContext::Text(mut text) => {
                         // Raw mode: plain string append, no tokenization.
-                        text.push_str(&template.user_turn_text(&prompt));
-                        text.push_str(&template.close_text(&response));
-                        StoredContext::Text(text).to_kv(turn, codec)
+                        let mut fragment = template.user_turn_text(&prompt);
+                        fragment.push_str(&template.close_text(&response));
+                        text.push_str(&fragment);
+                        (
+                            StoredContext::Text(text).to_kv(turn, codec),
+                            want_fragment
+                                .then(|| StoredContext::Text(fragment).to_fragment(codec)),
+                        )
                     }
                 };
                 registry.observe("cm_async_update_s", t.elapsed().as_secs_f64());
-                if let Err(e) = kv.put_ttl(&model, &key, doc, turn, Some(ttl)) {
+                if let Err(e) =
+                    kv.put_ttl_append(&model, &key, doc, turn, Some(ttl), frag_doc.as_deref())
+                {
                     // Benign when an out-of-order update lost the LWW race.
                     registry.incr("cm_update_conflicts_total", 1);
                     let _ = e;
@@ -662,6 +694,74 @@ mod tests {
             session = Some(r.session_id);
             assert_eq!(r.timings.retries, 0, "local RYW must not burn retries");
         }
+    }
+
+    #[test]
+    fn stale_base_update_never_ships_as_delta() {
+        // An Available-policy write onto a stale base must replicate as
+        // full state: a peer genuinely at `turn - 1` would otherwise
+        // splice the fragment onto a *different* history and the replicas
+        // would diverge at equal versions, beyond LWW's reach.
+        let kv_cfg = KvConfig {
+            peer_link: LinkModel::ideal(),
+            replication: crate::kvstore::ReplicationConfig {
+                delta_sync: true,
+                ..Default::default()
+            },
+            ..KvConfig::default()
+        };
+        let a = KvNode::start("a", kv_cfg.clone()).unwrap();
+        let b = KvNode::start("b", kv_cfg).unwrap();
+        a.create_keygroup(MODEL);
+        b.create_keygroup(MODEL);
+        a.add_peer(MODEL, b.replication_addr());
+        let a = Arc::new(a);
+        let mut cm = make_cm(a.clone());
+        cm.consistency.retries = 0;
+        let e = engine();
+
+        // Turn 1 establishes v1 on both replicas.
+        let mut req = CompletionRequest::new(MODEL, "hello", 1, ContextMode::Tokenized);
+        req.user_id = Some("u1".into());
+        req.session_id = Some("s1".into());
+        cm.handle(&req, &e).unwrap();
+        cm.quiesce();
+        let key = session_key("u1", "s1");
+        for _ in 0..200 {
+            if b.get(MODEL, &key).is_some() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(b.get(MODEL, &key).is_some(), "v1 must replicate first");
+
+        // b alone advances to v2 with a history a never saw.
+        let divergent = StoredContext::Tokens(vec![1, 2, 3]).to_kv(2, TokenCodec::BinaryU16);
+        b.put(MODEL, &key, divergent, 2).unwrap();
+
+        // a (still at v1) serves turn 3 under Available: stale base.
+        req.turn = 3;
+        req.prompt = "more".into();
+        req.consistency = Some(ConsistencyPolicy::Available);
+        cm.handle(&req, &e).unwrap();
+        cm.quiesce();
+
+        let av = a.get(MODEL, &key).expect("a stores its own write");
+        assert_eq!(av.version, 3);
+        let bv = (0..200)
+            .find_map(|_| {
+                let e = b.get(MODEL, &key).filter(|e| e.version == 3);
+                if e.is_none() {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                e
+            })
+            .expect("b must converge to v3");
+        assert_eq!(
+            bv.value, av.value,
+            "stale-base write must replicate as full state, not a delta"
+        );
+        assert_eq!(b.delta_applies(), 0, "no delta may carry a stale base");
     }
 
     #[test]

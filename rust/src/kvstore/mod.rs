@@ -25,6 +25,18 @@
 //! only to the session's consistent-hash **preference list** of N replica
 //! nodes, and a node outside that list serves reads by fetching from a
 //! home replica and read-repairing the entry locally ([`HashRing`] docs).
+//!
+//! **Delta sync.** Session documents are append-only per turn, so with
+//! `replication.delta_sync` on, [`KvNode::put_ttl_append`] replicates only
+//! the turn's fragment (base version `n-1` → `n`) instead of the whole
+//! value; per-turn sync bytes stay O(new tokens) instead of O(history).
+//! The receiving `/replicate` handler applies a delta **iff** its local
+//! entry is exactly at the base version (equal-or-newer versions are
+//! idempotent no-ops); on a gap it falls back to a full-state `/fetch`
+//! from the sender — the same remote-read path ring mobility uses. The
+//! fragment payload is a `context::codec` document, the one place the KV
+//! layer knows about the context format. Default **off**: the seed's
+//! full-state wire format, byte-for-byte.
 
 mod replication;
 mod ring;
@@ -180,18 +192,48 @@ pub struct KvNode {
     fetches: AtomicU64,
     /// Remote reads that repaired a newer entry into the local store.
     read_repairs: AtomicU64,
+    /// Inbound deltas applied contiguously (shared with the endpoint).
+    delta_applies: Arc<AtomicU64>,
+    /// Inbound deltas recovered via full-state fallback fetch.
+    delta_fallbacks: Arc<AtomicU64>,
     config: KvConfig,
     janitor_stop: Arc<std::sync::atomic::AtomicBool>,
     janitor: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Shared state of the inbound replication endpoint: the store plus what
+/// the delta fallback path needs (a link + meter to `/fetch` full state
+/// from the sender) and the delta counters.
+struct ReplicaCtx {
+    store: Arc<Store>,
+    /// Link model for fallback fetches (same hop class as replication).
+    link: LinkModel,
+    /// Meter shared with [`KvNode::fetch_meter`]: fallback fetches are
+    /// remote-read traffic, accounted like ring mobility reads.
+    fetch_meter: Arc<TrafficMeter>,
+    /// Deltas applied contiguously onto the local entry.
+    delta_applies: Arc<AtomicU64>,
+    /// Deltas that could not apply (gap/mismatch) and were recovered via a
+    /// full-state fetch from the sender.
+    delta_fallbacks: Arc<AtomicU64>,
 }
 
 impl KvNode {
     /// Start a node: replication listener + sender + janitor.
     pub fn start(name: &str, config: KvConfig) -> Result<KvNode> {
         let store = Store::new();
-        let handler_store = store.clone();
+        let fetch_meter = TrafficMeter::new();
+        let delta_applies = Arc::new(AtomicU64::new(0));
+        let delta_fallbacks = Arc::new(AtomicU64::new(0));
+        let ctx = ReplicaCtx {
+            store: store.clone(),
+            link: config.peer_link.clone(),
+            fetch_meter: fetch_meter.clone(),
+            delta_applies: delta_applies.clone(),
+            delta_fallbacks: delta_fallbacks.clone(),
+        };
         let handler: Handler = Arc::new(move |req: &Request| {
-            replication_endpoint(&handler_store, req)
+            replication_endpoint(&ctx, req)
         });
         let server = Server::serve(config.port, config.peer_link.clone(), handler)?;
         let replicator = Replicator::start(
@@ -218,9 +260,11 @@ impl KvNode {
             server,
             peers: Arc::new(Mutex::new(HashMap::new())),
             placement: RwLock::new(None),
-            fetch_meter: TrafficMeter::new(),
+            fetch_meter,
             fetches: AtomicU64::new(0),
             read_repairs: AtomicU64::new(0),
+            delta_applies,
+            delta_fallbacks,
             config,
             janitor_stop,
             janitor: Some(janitor),
@@ -284,6 +328,28 @@ impl KvNode {
         version: u64,
         ttl: Option<Duration>,
     ) -> Result<()> {
+        self.put_ttl_append(keygroup, key, value, version, ttl, None)
+    }
+
+    /// Write with an explicit TTL, optionally describing the write as an
+    /// **append**: `fragment` is the part of `value` added on top of
+    /// version `version - 1` (a `context::codec` fragment document).
+    ///
+    /// The local replica always stores the full `value`. With
+    /// `replication.delta_sync` on and a fragment present, peers receive a
+    /// delta record (base `version - 1`, the fragment, and this node's
+    /// listener address for their full-state fallback) instead of the full
+    /// value; otherwise the seed's full-state push is used. Version 1
+    /// writes always push full state — there is nothing to append onto.
+    pub fn put_ttl_append(
+        &self,
+        keygroup: &str,
+        key: &str,
+        value: String,
+        version: u64,
+        ttl: Option<Duration>,
+        fragment: Option<&str>,
+    ) -> Result<()> {
         if !self.has_keygroup(keygroup) {
             return Err(Error::KvStore(format!("unknown keygroup {keygroup}")));
         }
@@ -297,8 +363,24 @@ impl KvNode {
         }
         let peers = self.write_targets(keygroup, key);
         if !peers.is_empty() {
-            self.replicator
-                .push(peers, keygroup, key, &value, version, ttl);
+            match fragment {
+                Some(frag) if self.config.replication.delta_sync && version > 1 => {
+                    self.replicator.push_delta(
+                        peers,
+                        keygroup,
+                        key,
+                        frag,
+                        version - 1,
+                        version,
+                        ttl,
+                        self.replication_addr(),
+                    );
+                }
+                _ => {
+                    self.replicator
+                        .push(peers, keygroup, key, &value, version, ttl);
+                }
+            }
         }
         Ok(())
     }
@@ -392,36 +474,13 @@ impl KvNode {
 
     /// One synchronous remote read from a peer's replication listener.
     fn fetch_from(&self, addr: SocketAddr, keygroup: &str, key: &str) -> Result<Option<Entry>> {
-        let payload = Value::obj().set("kg", keygroup).set("key", key).to_json();
-        let mut conn = Connection::open(
+        fetch_entry(
             addr,
-            self.fetch_meter.clone(),
-            self.config.peer_link.clone(),
-        )?;
-        let resp = conn.round_trip(&Request::post_json("/fetch", &payload))?;
-        if resp.status != 200 {
-            return Err(Error::KvStore(format!(
-                "fetch {keygroup}/{key} from {addr}: status {}",
-                resp.status
-            )));
-        }
-        let v = json::parse(resp.body_str()?)?;
-        if v.get("found").and_then(|f| f.as_bool()) != Some(true) {
-            return Ok(None);
-        }
-        let (val, ver) = match (v.req_str("val"), v.req_u64("ver")) {
-            (Ok(val), Ok(ver)) => (val, ver),
-            _ => return Err(Error::KvStore("fetch response missing fields".into())),
-        };
-        let expires_at = v
-            .get("ttl_ms")
-            .and_then(|t| t.as_u64())
-            .map(|ms| Instant::now() + Duration::from_millis(ms));
-        Ok(Some(Entry {
-            value: val,
-            version: ver,
-            expires_at,
-        }))
+            keygroup,
+            key,
+            &self.fetch_meter,
+            &self.config.peer_link,
+        )
     }
 
     /// Delete locally (client's explicit request, §3.3). Not replicated as
@@ -469,6 +528,24 @@ impl KvNode {
         self.read_repairs.load(Ordering::SeqCst)
     }
 
+    /// Whether this node replicates appends as deltas
+    /// (`replication.delta_sync`). Writers use this to skip building
+    /// fragment documents that would never go on the wire.
+    pub fn delta_sync_enabled(&self) -> bool {
+        self.config.replication.delta_sync
+    }
+
+    /// Inbound deltas applied contiguously onto the local entry.
+    pub fn delta_applies(&self) -> u64 {
+        self.delta_applies.load(Ordering::SeqCst)
+    }
+
+    /// Inbound deltas that hit a version gap (or mode mismatch) and were
+    /// recovered via a full-state fetch from the sender.
+    pub fn delta_fallbacks(&self) -> u64 {
+        self.delta_fallbacks.load(Ordering::SeqCst)
+    }
+
     /// Wait until the replicator's queue is drained (test/benchmark sync).
     pub fn quiesce(&self) {
         self.replicator.quiesce();
@@ -492,13 +569,53 @@ impl Drop for KvNode {
     }
 }
 
+/// One synchronous `/fetch` round-trip to a peer's replication listener,
+/// shared by ring-mobility reads ([`KvNode::get_or_fetch`]) and the delta
+/// fallback path in [`replication_endpoint`].
+fn fetch_entry(
+    addr: SocketAddr,
+    keygroup: &str,
+    key: &str,
+    meter: &Arc<TrafficMeter>,
+    link: &LinkModel,
+) -> Result<Option<Entry>> {
+    let payload = Value::obj().set("kg", keygroup).set("key", key).to_json();
+    let mut conn = Connection::open(addr, meter.clone(), link.clone())?;
+    let resp = conn.round_trip(&Request::post_json("/fetch", &payload))?;
+    if resp.status != 200 {
+        return Err(Error::KvStore(format!(
+            "fetch {keygroup}/{key} from {addr}: status {}",
+            resp.status
+        )));
+    }
+    let v = json::parse(resp.body_str()?)?;
+    if v.get("found").and_then(|f| f.as_bool()) != Some(true) {
+        return Ok(None);
+    }
+    let (val, ver) = match (v.req_str("val"), v.req_u64("ver")) {
+        (Ok(val), Ok(ver)) => (val, ver),
+        _ => return Err(Error::KvStore("fetch response missing fields".into())),
+    };
+    let expires_at = v
+        .get("ttl_ms")
+        .and_then(|t| t.as_u64())
+        .map(|ms| Instant::now() + Duration::from_millis(ms));
+    Ok(Some(Entry {
+        value: val,
+        version: ver,
+        expires_at,
+    }))
+}
+
 /// Inbound replication endpoint: applies pushed writes to the local store
-/// (`POST /replicate`) and answers remote reads from non-replica nodes
-/// (`POST /fetch`, the ring mobility path).
-fn replication_endpoint(store: &Arc<Store>, req: &Request) -> Response {
+/// (`POST /replicate`, full-state or delta records) and answers remote
+/// reads from non-replica nodes (`POST /fetch`, the ring mobility path —
+/// also the delta fallback's recovery read).
+fn replication_endpoint(ctx: &ReplicaCtx, req: &Request) -> Response {
     if req.method != "POST" || (req.path != "/replicate" && req.path != "/fetch") {
         return Response::error(404, "not found");
     }
+    let store = &ctx.store;
     let body = match req.body_str() {
         Ok(b) => b,
         Err(_) => return Response::error(400, "body not utf-8"),
@@ -527,6 +644,9 @@ fn replication_endpoint(store: &Arc<Store>, req: &Request) -> Response {
             None => Response::json(&Value::obj().set("found", false).to_json()),
         };
     }
+    if v.get("op").and_then(|o| o.as_str()) == Some("delta") {
+        return apply_delta(ctx, &v);
+    }
     let (kg, key, val, ver) = match (
         v.req_str("kg"),
         v.req_str("key"),
@@ -549,6 +669,75 @@ fn replication_endpoint(store: &Arc<Store>, req: &Request) -> Response {
         .insert(kg.clone());
     let applied = store.apply(&kg, &key, val, ver, ttl);
     Response::json(&Value::obj().set("applied", applied).to_json())
+}
+
+/// Apply a delta record: append the fragment iff the local entry is
+/// exactly at the base version; treat equal-or-newer local versions as an
+/// idempotent no-op; on a gap (or fragment/mode mismatch), recover by
+/// fetching full state from the sender.
+fn apply_delta(ctx: &ReplicaCtx, v: &Value) -> Response {
+    let store = &ctx.store;
+    let (kg, key, frag) = match (v.req_str("kg"), v.req_str("key"), v.req_str("frag")) {
+        (Ok(kg), Ok(key), Ok(frag)) => (kg, key, frag),
+        _ => return Response::error(400, "missing delta fields"),
+    };
+    let (base, ver) = match (v.req_u64("base"), v.req_u64("ver")) {
+        (Ok(base), Ok(ver)) => (base, ver),
+        _ => return Response::error(400, "missing delta versions"),
+    };
+    let ttl = v
+        .get("ttl_ms")
+        .and_then(|t| t.as_u64())
+        .map(Duration::from_millis);
+    store.keygroups.write().unwrap().insert(kg.clone());
+    match store.read(&kg, &key) {
+        // Already at (or past) the delta's target: idempotent re-apply.
+        Some(local) if local.version >= ver => {
+            return Response::json(&Value::obj().set("applied", true).to_json());
+        }
+        // Contiguous: splice the fragment onto the local document. A
+        // mode-mismatched fragment falls through to the fetch fallback.
+        Some(local) if local.version == base => {
+            if let Ok(doc) = crate::context::codec::append_to_doc(&local.value, &frag, ver) {
+                let applied = store.apply(&kg, &key, doc, ver, ttl);
+                if applied {
+                    ctx.delta_applies.fetch_add(1, Ordering::SeqCst);
+                }
+                return Response::json(&Value::obj().set("applied", applied).to_json());
+            }
+        }
+        // Missing, expired, or behind the base: a gap.
+        _ => {}
+    }
+    // Fallback: full-state read-repair from the sender (PR 1's /fetch
+    // path). The sender holds at least `ver`, so one fetch converges.
+    ctx.delta_fallbacks.fetch_add(1, Ordering::SeqCst);
+    let from = match v.req_str("from").ok().and_then(|f| f.parse::<SocketAddr>().ok()) {
+        Some(a) => a,
+        None => return Response::error(400, "delta record missing sender address"),
+    };
+    match fetch_entry(from, &kg, &key, &ctx.fetch_meter, &ctx.link) {
+        Ok(Some(remote)) => {
+            let remaining = remote
+                .expires_at
+                .map(|t| t.saturating_duration_since(Instant::now()));
+            let applied = store.apply(&kg, &key, remote.value, remote.version, remaining);
+            Response::json(
+                &Value::obj()
+                    .set("applied", applied)
+                    .set("fallback", "fetch")
+                    .to_json(),
+            )
+        }
+        // Sender no longer has it (expired/evicted): report not applied;
+        // TTL cleanup makes this benign, as in the seed's drop handling.
+        Ok(None) | Err(_) => Response::json(
+            &Value::obj()
+                .set("applied", false)
+                .set("fallback", "fetch")
+                .to_json(),
+        ),
+    }
 }
 
 #[cfg(test)]
@@ -792,5 +981,176 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         None
+    }
+
+    // ---- delta-append replication ----
+
+    use crate::context::{StoredContext, TokenCodec};
+
+    const CODEC: TokenCodec = TokenCodec::BinaryU16;
+
+    fn delta_node(name: &str) -> KvNode {
+        let cfg = KvConfig {
+            peer_link: LinkModel::ideal(),
+            replication: ReplicationConfig {
+                delta_sync: true,
+                ..ReplicationConfig::default()
+            },
+            ..KvConfig::default()
+        };
+        KvNode::start(name, cfg).unwrap()
+    }
+
+    fn doc(ids: &[u32], turns: u64) -> String {
+        StoredContext::Tokens(ids.to_vec()).to_kv(turns, CODEC)
+    }
+
+    fn frag(ids: &[u32]) -> String {
+        StoredContext::Tokens(ids.to_vec()).to_fragment(CODEC)
+    }
+
+    #[test]
+    fn delta_applies_contiguously() {
+        let a = delta_node("a");
+        let b = delta_node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        a.add_peer("m", b.replication_addr());
+        // Turn 1 always ships full state.
+        a.put_ttl_append("m", "s", doc(&[1, 2], 1), 1, None, Some(frag(&[1, 2]).as_str()))
+            .unwrap();
+        a.quiesce();
+        wait_for(|| b.get("m", "s"), Duration::from_secs(2)).unwrap();
+        // Turn 2 ships only the fragment; b splices it on.
+        a.put_ttl_append("m", "s", doc(&[1, 2, 3], 2), 2, None, Some(frag(&[3]).as_str()))
+            .unwrap();
+        a.quiesce();
+        let e = wait_for(
+            || b.get("m", "s").filter(|e| e.version == 2),
+            Duration::from_secs(2),
+        )
+        .unwrap();
+        assert_eq!(e.value, doc(&[1, 2, 3], 2), "delta result == full-state doc");
+        assert_eq!(b.delta_applies(), 1);
+        assert_eq!(b.delta_fallbacks(), 0);
+    }
+
+    #[test]
+    fn delta_gap_falls_back_to_full_fetch() {
+        let a = delta_node("a");
+        let b = delta_node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        a.add_peer("m", b.replication_addr());
+        // b never saw v1/v2 (peer wired up late): the v3 delta has a gap.
+        a.put_ttl_append("m", "s", doc(&[1], 1), 1, None, None).unwrap();
+        a.quiesce();
+        wait_for(|| b.get("m", "s"), Duration::from_secs(2)).unwrap();
+        b.delete("m", "s"); // simulate b having lost the entry
+        a.put_ttl_append("m", "s", doc(&[1, 2], 2), 2, None, Some(frag(&[2]).as_str()))
+            .unwrap();
+        a.quiesce();
+        // b cannot apply base=1 onto nothing -> fetches full state from a.
+        let e = wait_for(
+            || b.get("m", "s").filter(|e| e.version == 2),
+            Duration::from_secs(2),
+        )
+        .expect("fallback must converge");
+        assert_eq!(e.value, doc(&[1, 2], 2));
+        assert_eq!(b.delta_fallbacks(), 1);
+        assert_eq!(b.delta_applies(), 0);
+    }
+
+    #[test]
+    fn delta_equal_version_is_idempotent() {
+        let a = delta_node("a");
+        let b = delta_node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        a.add_peer("m", b.replication_addr());
+        a.put_ttl_append("m", "s", doc(&[7], 1), 1, None, None).unwrap();
+        a.quiesce();
+        wait_for(|| b.get("m", "s"), Duration::from_secs(2)).unwrap();
+        // Replay the same v2 delta twice directly through the replicator
+        // (models a duplicate push after a sender retry).
+        for _ in 0..2 {
+            a.replicator.push_delta(
+                vec![b.replication_addr()],
+                "m",
+                "s",
+                &frag(&[8]),
+                1,
+                2,
+                None,
+                a.replication_addr(),
+            );
+        }
+        a.quiesce();
+        let e = wait_for(
+            || b.get("m", "s").filter(|e| e.version == 2),
+            Duration::from_secs(2),
+        )
+        .unwrap();
+        // Applied exactly once: no doubled fragment, no fallback.
+        assert_eq!(e.value, doc(&[7, 8], 2));
+        assert_eq!(b.delta_applies(), 1);
+        assert_eq!(b.delta_fallbacks(), 0);
+    }
+
+    #[test]
+    fn delta_preserves_ttl() {
+        let a = delta_node("a");
+        let b = delta_node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        a.add_peer("m", b.replication_addr());
+        let ttl = Some(Duration::from_secs(60));
+        a.put_ttl_append("m", "s", doc(&[1], 1), 1, ttl, None).unwrap();
+        a.quiesce();
+        wait_for(|| b.get("m", "s"), Duration::from_secs(2)).unwrap();
+        a.put_ttl_append("m", "s", doc(&[1, 2], 2), 2, ttl, Some(frag(&[2]).as_str()))
+            .unwrap();
+        a.quiesce();
+        let e = wait_for(
+            || b.get("m", "s").filter(|e| e.version == 2),
+            Duration::from_secs(2),
+        )
+        .unwrap();
+        let left = e
+            .expires_at
+            .expect("delta apply must refresh the TTL")
+            .saturating_duration_since(Instant::now());
+        assert!(left > Duration::from_secs(50), "{left:?}");
+        assert!(left <= Duration::from_secs(60));
+    }
+
+    #[test]
+    fn delta_disabled_keeps_full_state_pushes() {
+        // With the default config the fragment hint must be ignored: the
+        // peer receives full state (seed wire format) and never counts
+        // delta activity.
+        let a = node("a");
+        let b = node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        a.add_peer("m", b.replication_addr());
+        a.put_ttl_append("m", "s", doc(&[1], 1), 1, None, Some(frag(&[1]).as_str()))
+            .unwrap();
+        a.put_ttl_append("m", "s", doc(&[1, 2], 2), 2, None, Some(frag(&[2]).as_str()))
+            .unwrap();
+        a.quiesce();
+        let e = wait_for(
+            || b.get("m", "s").filter(|e| e.version == 2),
+            Duration::from_secs(2),
+        )
+        .unwrap();
+        assert_eq!(e.value, doc(&[1, 2], 2));
+        assert_eq!(b.delta_applies(), 0);
+        assert_eq!(b.delta_fallbacks(), 0);
     }
 }

@@ -44,44 +44,69 @@ pub mod workload;
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type. Hand-rolled `Display`/`Error` impls keep the
+/// default build free of external dependencies (no proc-macro crates in
+/// the offline registry).
+#[derive(Debug)]
 pub enum Error {
     /// I/O failure (sockets, files).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// JSON parse/encode failure.
-    #[error("json: {0}")]
     Json(String),
     /// HTTP protocol violation.
-    #[error("http: {0}")]
     Http(String),
     /// Tokenizer failure (unknown id, bad vocab file...).
-    #[error("tokenizer: {0}")]
     Tokenizer(String),
     /// KV store failure.
-    #[error("kvstore: {0}")]
     KvStore(String),
     /// Consistency protocol gave up (stale context after retries).
-    #[error("consistency: {0}")]
     Consistency(String),
     /// Context manager / session failure.
-    #[error("context: {0}")]
     Context(String),
     /// Inference engine failure.
-    #[error("engine: {0}")]
     Engine(String),
     /// XLA/PJRT runtime failure.
-    #[error("runtime: {0}")]
     Runtime(String),
     /// Configuration error.
-    #[error("config: {0}")]
     Config(String),
     /// Invalid client request.
-    #[error("bad request: {0}")]
     BadRequest(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Http(m) => write!(f, "http: {m}"),
+            Error::Tokenizer(m) => write!(f, "tokenizer: {m}"),
+            Error::KvStore(m) => write!(f, "kvstore: {m}"),
+            Error::Consistency(m) => write!(f, "consistency: {m}"),
+            Error::Context(m) => write!(f, "context: {m}"),
+            Error::Engine(m) => write!(f, "engine: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::BadRequest(m) => write!(f, "bad request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())

@@ -38,11 +38,13 @@ fn main() {
                  \u{20}             --engine mock|pjrt (default pjrt)\n\
                  \u{20}             --replication-factor N (default: replicate to all)\n\
                  \u{20}             --virtual-nodes V (ring points per node, default 128)\n\
+                 \u{20}             --delta-sync (replicate per-turn deltas, not full state)\n\
                  run-scenario  --mode tokenized|raw|client_side (default tokenized)\n\
                  \u{20}             --mobility sticky|paper (default sticky)\n\
                  \u{20}             --engine mock|pjrt (default pjrt)\n\
                  \u{20}             --max-tokens N (default 128)\n\
                  \u{20}             --replication-factor N / --virtual-nodes V (as above)\n\
+                 \u{20}             --delta-sync (as above)\n\
                  profiles      print the hardware profile table"
             );
             2
@@ -77,6 +79,9 @@ fn load_config(args: &Args) -> Result<ClusterConfig, String> {
         .map_err(|e| e.to_string())?
     {
         cfg.sharding.virtual_nodes = vn;
+    }
+    if args.flag("delta-sync") {
+        cfg.replication.delta_sync = true;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)

@@ -16,15 +16,30 @@
 //!
 //! Static shapes are required for AOT, so contexts are padded to bucket
 //! sizes `{128, 256, 512, 1024, 2048}` and masked by their true length.
+//!
+//! The `xla` crate (and its native `xla_extension` library) is an optional
+//! dependency behind the **`pjrt` cargo feature**. Without the feature,
+//! [`ModelRuntime::load`] reports the runtime as unavailable (after
+//! surfacing missing-artifact errors first) so the mock-engine paths —
+//! every protocol-level test and bench — build and run with zero external
+//! dependencies. [`pjrt_available`] lets callers skip real-model work.
 
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
+#[cfg(feature = "pjrt")]
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::json;
 use crate::{Error, Result};
+
+/// Whether this build carries the PJRT runtime (`--features pjrt`).
+pub const fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}
 
 /// Model metadata contract shared with `python/compile/aot.py`
 /// (`artifacts/model_meta.json`).
@@ -128,22 +143,58 @@ pub struct RawGeneration {
 /// needs on this single-core testbed. Engine calls are serialized, so
 /// cross-request contamination cannot occur; other in-process threads
 /// sleep during inference and contribute negligible CPU.
+///
+/// Calls `clock_gettime(CLOCK_PROCESS_CPUTIME_ID)` through a local FFI
+/// declaration — the seed referenced the `libc` crate here without
+/// declaring the dependency, which could never compile. Returns 0.0 on
+/// platforms without the clock (callers treat it as "no CPU accounting").
+/// The hand-declared `Timespec` hardcodes 64-bit fields, so the real
+/// implementation is additionally gated to 64-bit targets — on 32-bit
+/// (e.g. armv7 edge boards) `time_t`/`long` are 32-bit and the layout
+/// would be wrong, so those fall back to 0.0 instead of reading garbage.
+#[cfg(all(
+    target_pointer_width = "64",
+    any(target_os = "linux", target_os = "macos")
+))]
 pub fn process_cpu_time() -> f64 {
-    let mut ts = libc::timespec {
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    extern "C" {
+        fn clock_gettime(clk_id: i32, tp: *mut Timespec) -> i32;
+    }
+    #[cfg(target_os = "linux")]
+    const CLOCK_PROCESS_CPUTIME_ID: i32 = 2;
+    #[cfg(target_os = "macos")]
+    const CLOCK_PROCESS_CPUTIME_ID: i32 = 12;
+    let mut ts = Timespec {
         tv_sec: 0,
         tv_nsec: 0,
     };
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
+    let rc = unsafe { clock_gettime(CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
     if rc != 0 {
         return 0.0;
     }
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
 }
 
+/// Fallback for platforms without `CLOCK_PROCESS_CPUTIME_ID` (or whose C
+/// `timespec` layout the 64-bit FFI declaration above would misread).
+#[cfg(not(all(
+    target_pointer_width = "64",
+    any(target_os = "linux", target_os = "macos")
+)))]
+pub fn process_cpu_time() -> f64 {
+    0.0
+}
+
 /// The compiled model: PJRT client + per-bucket executables + weights.
 ///
 /// NOT `Send`/`Sync` (the `xla` crate wraps `Rc` internals) — own it on a
 /// dedicated engine thread; see [`crate::llm::PjrtEngine`].
+#[cfg(feature = "pjrt")]
 pub struct ModelRuntime {
     meta: ModelMeta,
     weights: Vec<Literal>,
@@ -151,6 +202,7 @@ pub struct ModelRuntime {
     _client: PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelRuntime {
     /// Load and compile every artifact in `dir`.
     pub fn load(dir: &Path) -> Result<ModelRuntime> {
@@ -253,6 +305,49 @@ impl ModelRuntime {
     }
 }
 
+/// Stub runtime for builds without the `pjrt` feature: loading surfaces
+/// missing-artifact errors first (same diagnostics as the real runtime),
+/// then reports the feature as absent. The accessors exist so PJRT call
+/// sites type-check unchanged; they are unreachable because `load` never
+/// succeeds.
+#[cfg(not(feature = "pjrt"))]
+pub struct ModelRuntime {
+    meta: ModelMeta,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ModelRuntime {
+    /// Always fails: with artifacts absent, like the real runtime; with
+    /// artifacts present, because the PJRT stack is not compiled in.
+    pub fn load(dir: &Path) -> Result<ModelRuntime> {
+        let _meta = ModelMeta::load(dir)?;
+        Err(Error::Runtime(
+            "PJRT runtime not compiled in (rebuild with `--features pjrt`)".into(),
+        ))
+    }
+
+    /// Model metadata.
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Number of weight tensors (diagnostics).
+    pub fn weight_count(&self) -> usize {
+        0
+    }
+
+    /// Unreachable (construction is impossible without the feature).
+    pub fn generate(
+        &self,
+        _input_ids: &[u32],
+        _max_new: usize,
+        _stop_id: u32,
+    ) -> Result<RawGeneration> {
+        Err(Error::Runtime("PJRT runtime not compiled in".into()))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
     if !path.exists() {
         return Err(Error::Runtime(format!(

@@ -158,6 +158,8 @@ fn dispatch(
             dump.push_str(&format!("kv_push_targets {}\n", kv.push_targets()));
             dump.push_str(&format!("kv_remote_fetches {}\n", kv.remote_fetches()));
             dump.push_str(&format!("kv_read_repairs {}\n", kv.read_repairs()));
+            dump.push_str(&format!("kv_delta_applies {}\n", kv.delta_applies()));
+            dump.push_str(&format!("kv_delta_fallbacks {}\n", kv.delta_fallbacks()));
             Response::text(&dump)
         }
         _ => Response::error(404, "not found"),

@@ -1,0 +1,160 @@
+//! Integration tests for delta-append replication: a fleet running
+//! `delta_sync` must converge to byte-for-byte the same stored state as a
+//! full-state fleet, including across ring sharding and roaming (where
+//! version gaps force the full-state `/fetch` fallback).
+
+use discedge::client::{Client, MobilityPolicy};
+use discedge::config::{ClusterConfig, ContextMode};
+use discedge::http::{Connection, Request as HttpRequest};
+use discedge::netsim::{LinkModel, TrafficMeter};
+use discedge::server::EdgeCluster;
+
+const MODEL: &str = "discedge/tiny-chat";
+
+fn fleet(n: usize, replication_factor: Option<usize>, delta_sync: bool) -> EdgeCluster {
+    let mut cfg = ClusterConfig::mock_fleet(n, replication_factor);
+    cfg.replication.delta_sync = delta_sync;
+    EdgeCluster::launch(cfg).unwrap()
+}
+
+/// Drive one 5-turn session (fixed ids, sticky to node 0) and quiesce
+/// between turns. Returns the session key.
+fn drive_session(cluster: &EdgeCluster) -> String {
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(12);
+    for t in 0..5 {
+        client
+            .chat(&format!("turn {t}: tell me about mapping"))
+            .unwrap();
+        cluster.quiesce();
+    }
+    let (user, sess) = client.session();
+    format!("{}/{}", user.unwrap(), sess.unwrap())
+}
+
+#[test]
+fn sharded_delta_fleet_converges_to_full_state_result() {
+    // Same fleet shape, same conversation, both sync modes. Placement and
+    // the mock engine are deterministic, so every replica must end up with
+    // byte-for-byte identical documents — except the session ids differ
+    // per cluster, so compare via each cluster's own key.
+    let full = fleet(4, Some(2), false);
+    let delta = fleet(4, Some(2), true);
+    let full_key = drive_session(&full);
+    let delta_key = drive_session(&delta);
+
+    let doc_of = |cluster: &EdgeCluster, key: &str| -> Vec<(String, String, u64)> {
+        let mut held: Vec<(String, String, u64)> = cluster
+            .nodes
+            .iter()
+            .filter_map(|n| {
+                n.kv
+                    .get(MODEL, key)
+                    .map(|e| (n.name.clone(), e.value, e.version))
+            })
+            .collect();
+        held.sort();
+        held
+    };
+    let full_docs = doc_of(&full, &full_key);
+    let delta_docs = doc_of(&delta, &delta_key);
+
+    // Every replica inside one cluster agrees with its writer.
+    for docs in [&full_docs, &delta_docs] {
+        assert!(!docs.is_empty());
+        for (name, doc, ver) in docs.iter() {
+            assert_eq!(*ver, 5, "{name} must be at the final turn");
+            assert_eq!(doc, &docs[0].1, "{name} diverged");
+        }
+    }
+    // And the two sync modes agree with each other, apart from the session
+    // ids embedded nowhere in the doc (documents hold only tokens+turns).
+    assert_eq!(
+        full_docs[0].1, delta_docs[0].1,
+        "delta sync must reproduce the full-state document"
+    );
+    // The delta cluster actually exercised the delta path.
+    let applies: u64 = delta.nodes.iter().map(|n| n.kv.delta_applies()).sum();
+    assert!(applies >= 4, "turns 2..=5 should apply as deltas ({applies})");
+    let full_applies: u64 = full.nodes.iter().map(|n| n.kv.delta_applies()).sum();
+    assert_eq!(full_applies, 0, "full-state cluster must not see deltas");
+}
+
+#[test]
+fn roaming_with_delta_sync_satisfies_the_turn_protocol() {
+    // Roaming across a sharded delta fleet: non-contiguous replicas
+    // recover through the /fetch fallback and the turn-counter protocol
+    // holds on every turn.
+    let cluster = fleet(4, Some(2), true);
+    let mut client = Client::connect(
+        cluster.endpoints(),
+        MobilityPolicy::Alternate {
+            nodes: vec![0, 1, 2, 3],
+            every: 2,
+        },
+    )
+    .with_mode(ContextMode::Tokenized)
+    .with_model(MODEL)
+    .with_max_tokens(8);
+    let mut prev = 0usize;
+    let scenario = discedge::workload::Scenario::robotics_9turn();
+    for turn in scenario.turns() {
+        let r = client.chat(&turn.prompt).unwrap();
+        assert!(
+            r.response.prefill_tokens > prev,
+            "context must grow on turn {}",
+            turn.number
+        );
+        prev = r.response.prefill_tokens;
+        cluster.quiesce();
+    }
+}
+
+#[test]
+fn raw_mode_sessions_replicate_as_text_deltas() {
+    // The raw-text baseline is append-only too; delta sync must keep its
+    // cross-node handover working.
+    let cluster = fleet(2, None, true);
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Raw)
+        .with_model(MODEL)
+        .with_max_tokens(8);
+    let mut prev = 0usize;
+    for t in 0..3 {
+        let r = client.chat(&format!("raw turn {t}")).unwrap();
+        assert!(r.response.prefill_tokens > prev);
+        prev = r.response.prefill_tokens;
+        cluster.quiesce();
+    }
+    let (user, sess) = client.session();
+    let key = format!("{}/{}", user.unwrap(), sess.unwrap());
+    let a = cluster.nodes[0].kv.get(MODEL, &key).unwrap();
+    let b = cluster.nodes[1].kv.get(MODEL, &key).unwrap();
+    assert_eq!(a.version, 3);
+    assert_eq!(a.value, b.value, "raw docs must converge over deltas");
+    assert!(cluster.nodes[1].kv.delta_applies() >= 2);
+}
+
+#[test]
+fn metrics_expose_delta_counters() {
+    let cluster = fleet(2, None, true);
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(8);
+    client.chat("one").unwrap();
+    client.chat("two").unwrap();
+    cluster.quiesce();
+    let mut conn = Connection::open(
+        cluster.nodes[1].api_addr(),
+        TrafficMeter::new(),
+        LinkModel::ideal(),
+    )
+    .unwrap();
+    let m = conn.round_trip(&HttpRequest::get("/metrics")).unwrap();
+    let body = m.body_str().unwrap();
+    assert!(body.contains("kv_delta_applies 1"), "{body}");
+    assert!(body.contains("kv_delta_fallbacks"), "{body}");
+}

@@ -5,7 +5,7 @@
 //! `cargo test` stays green on a fresh checkout. The tiny-model round-trip
 //! regenerates its own artifacts if a python interpreter is available.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use discedge::llm::Engine;
 use discedge::runtime::ModelRuntime;
@@ -16,7 +16,12 @@ fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-fn have_artifacts(dir: &PathBuf) -> bool {
+/// Artifacts present AND the PJRT runtime compiled in (`--features pjrt`).
+fn have_artifacts(dir: &Path) -> bool {
+    if !discedge::runtime::pjrt_available() {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return false;
+    }
     dir.join("model_meta.json").exists() && dir.join("init.hlo.txt").exists()
 }
 
