@@ -11,12 +11,14 @@
 mod common;
 
 use discedge::benchkit::{emit, per_turn_table, PerTurn};
-use discedge::client::MobilityPolicy;
-use discedge::config::ContextMode;
-use discedge::metrics::Series;
+use discedge::client::{Client, MobilityPolicy};
+use discedge::cluster::NodeState;
+use discedge::config::{ClusterConfig, ContextMode};
+use discedge::metrics::{Series, Table};
 use discedge::workload::Scenario;
 
 fn main() {
+    churn_scenario();
     let cluster = common::testbed();
     let scenario = Scenario::robotics_9turn();
     let reps = common::repetitions();
@@ -82,4 +84,85 @@ fn main() {
         &split(edge, &tx2_turns),
     );
     println!("  consistency retries observed across runs: {retries_seen}");
+}
+
+/// Node-failure extension of the mobility figure: response time and sync
+/// bytes per turn through a kill → detect → recover cycle on a 3-node
+/// rf=2 mock fleet. Runs before the paper figure so it works without
+/// PJRT artifacts. CSV: `results/fig6_churn.csv`.
+fn churn_scenario() {
+    use std::time::Duration;
+    const TURNS: usize = 12;
+    const KILL_AFTER: usize = 4; // kill once this many turns completed
+    const RESTART_AFTER: usize = 8;
+
+    eprintln!("[fig6] churn scenario: kill/recover a replica mid-conversation");
+    let mut cfg = ClusterConfig::mock_fleet(3, Some(2));
+    cfg.enable_fast_membership();
+    cfg.replication.max_attempts = 2;
+    cfg.replication.retry_backoff = Duration::from_millis(1);
+    let mut cluster = common::launch_fleet_with(cfg);
+    let view = cluster.membership().expect("membership on").clone();
+
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(common::MODEL)
+        .with_max_tokens(16);
+
+    let mut table = Table::new(
+        "Fig 6b — response time and sync bytes through a kill/recover cycle",
+        &["e2e_s", "sync_bytes", "epoch"],
+    );
+    let mut victim: Option<(String, discedge::config::NodeConfig)> = None;
+    let mut prev_sync: u64 = 0;
+    for turn in 1..=TURNS {
+        if turn == KILL_AFTER + 1 {
+            // Crash a home replica of the session (not the serving node).
+            let (user, session) = client.session();
+            let key = format!("{}/{}", user.unwrap(), session.unwrap());
+            let name = cluster
+                .current_placement()
+                .unwrap()
+                .replicas(common::MODEL, &key)
+                .into_iter()
+                .map(|(n, _)| n)
+                .find(|n| n != "edge-0")
+                .expect("rf=2 over 3 nodes");
+            eprintln!("[fig6]   turn {turn}: killing {name}");
+            let node_cfg = cluster.kill_node(&name).unwrap();
+            victim = Some((name, node_cfg));
+        }
+        if turn == RESTART_AFTER + 1 {
+            let (name, node_cfg) = victim.take().expect("killed earlier");
+            eprintln!("[fig6]   turn {turn}: restarting {name}");
+            cluster.add_node(node_cfg).expect("restart");
+            view.wait_for_state(&name, NodeState::Alive, Duration::from_secs(10));
+        }
+        let r = client
+            .chat(&format!("turn {turn}: mobile robots under churn"))
+            .expect("turn must survive the churn");
+        cluster.quiesce();
+        let sync: u64 = cluster.nodes.iter().map(|n| n.sync_bytes()).sum();
+        // saturating: the kill removes a node (and its counters) from
+        // the sum, so the first post-kill delta can dip below zero.
+        table.row(
+            &format!("turn {turn}"),
+            &[
+                r.e2e_s,
+                sync.saturating_sub(prev_sync) as f64,
+                view.epoch() as f64,
+            ],
+        );
+        prev_sync = sync;
+    }
+    emit(&table, "fig6_churn.csv");
+    let edge0 = cluster.node("edge-0").unwrap();
+    println!(
+        "churn: hints queued {} replayed {} dropped {}; repl drops {}; final epoch {}",
+        edge0.kv.hints_queued(),
+        edge0.kv.hints_replayed(),
+        edge0.kv.hints_dropped(),
+        edge0.kv.repl_dropped_total(),
+        view.epoch()
+    );
 }

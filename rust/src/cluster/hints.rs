@@ -1,0 +1,379 @@
+//! Hinted handoff: parked replication updates for unreachable peers.
+//!
+//! When a push target is `Down` (per the failure detector) — or a push
+//! exhausts its retry attempts while hinting is enabled — the
+//! [`crate::kvstore::Replicator`] parks the update here instead of
+//! dropping it. Each peer gets a bounded FIFO queue of [`Hint`]s keyed by
+//! its replication address; when the detector reports the peer up again,
+//! the queue is drained back into the replication pipeline **in order**
+//! (re-addressed if the peer restarted at a new address).
+//!
+//! Queues are kept small by the same two tricks the live pipeline uses:
+//!
+//! - a **full-state** hint supersedes every older queued hint for the
+//!   same key (last-writer-wins makes them dead weight);
+//! - a **delta** hint whose base continues the newest queued delta for
+//!   the key merges into it (fragments concatenated), so an outage
+//!   spanning many turns costs one replay per session.
+//!
+//! Replayed deltas that still miss their base on the receiver fall back
+//! to a full-state `/fetch` exactly like the live delta path — replay can
+//! therefore never diverge a replica, only catch it up.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Hinted-handoff tuning (`hints` config section).
+#[derive(Debug, Clone)]
+pub struct HintConfig {
+    /// Maximum parked hints per peer; the oldest hint is evicted (and
+    /// counted dropped) when a park would exceed it.
+    pub max_per_peer: usize,
+}
+
+impl Default for HintConfig {
+    fn default() -> HintConfig {
+        HintConfig { max_per_peer: 512 }
+    }
+}
+
+/// The payload of a parked update (mirror of the replicator's job kinds).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HintUpdate {
+    /// Whole-document write.
+    Full {
+        /// Serialized document.
+        value: String,
+    },
+    /// Append-only fragment on top of `base`.
+    Delta {
+        /// Version the receiver must hold for the delta to apply.
+        base: u64,
+        /// Self-describing fragment document (`context::codec`).
+        frag: String,
+        /// The sender's replication listener, for the receiver's
+        /// full-state fallback fetch.
+        from: SocketAddr,
+    },
+}
+
+/// One parked replication update for one peer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hint {
+    /// Keygroup of the write.
+    pub keygroup: String,
+    /// Session key of the write.
+    pub key: String,
+    /// Full-state or delta payload.
+    pub update: HintUpdate,
+    /// Version the write produces.
+    pub version: u64,
+    /// Remaining TTL in milliseconds at park time.
+    pub ttl_ms: Option<u64>,
+}
+
+/// Per-node hint storage plus the down-peer set the replicator consults
+/// before every send.
+#[derive(Debug)]
+pub struct HintedHandoff {
+    cfg: HintConfig,
+    queues: Mutex<HashMap<SocketAddr, VecDeque<Hint>>>,
+    down: Mutex<HashSet<SocketAddr>>,
+    /// Old address → current address for restarted peers. A push job
+    /// that was already in flight to the old listener when the peer
+    /// rejoined would otherwise park under a queue key no future replay
+    /// ever drains; forwarding parks it where the next replay looks.
+    forwards: Mutex<HashMap<SocketAddr, SocketAddr>>,
+    queued: AtomicU64,
+    replayed: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl HintedHandoff {
+    /// Empty handoff store.
+    pub fn new(cfg: HintConfig) -> Arc<HintedHandoff> {
+        Arc::new(HintedHandoff {
+            cfg,
+            queues: Mutex::new(HashMap::new()),
+            down: Mutex::new(HashSet::new()),
+            forwards: Mutex::new(HashMap::new()),
+            queued: AtomicU64::new(0),
+            replayed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Whether the failure detector currently marks `peer` down.
+    pub fn is_down(&self, peer: SocketAddr) -> bool {
+        self.down.lock().unwrap().contains(&peer)
+    }
+
+    /// Mark `peer` down: subsequent pushes park immediately instead of
+    /// burning connect attempts against a dead listener.
+    pub fn set_down(&self, peer: SocketAddr) {
+        self.down.lock().unwrap().insert(peer);
+    }
+
+    /// Clear the down mark (the peer answered a probe or rejoined).
+    pub fn set_up(&self, peer: SocketAddr) {
+        self.down.lock().unwrap().remove(&peer);
+    }
+
+    /// Record that hints addressed to `old` park under `new` from now on
+    /// (the peer restarted on a fresh port). Without this, a push that
+    /// was already queued for the old listener when the rejoin replay
+    /// ran would park under a key nothing ever drains again.
+    pub fn set_forward(&self, old: SocketAddr, new: SocketAddr) {
+        if old != new {
+            self.forwards.lock().unwrap().insert(old, new);
+        }
+    }
+
+    /// Follow the forwarding chain from `peer` to its current address
+    /// (bounded hops: address reuse across restarts could form a cycle).
+    /// `peer` itself when no restart forward is recorded. The sender
+    /// uses a changed answer as the signal that the peer restarted while
+    /// a push was in flight — meaning the rejoin replay already ran and
+    /// a fresh park needs its own requeue.
+    pub fn resolve_addr(&self, peer: SocketAddr) -> SocketAddr {
+        self.resolve(peer)
+    }
+
+    fn resolve(&self, peer: SocketAddr) -> SocketAddr {
+        let forwards = self.forwards.lock().unwrap();
+        let mut addr = peer;
+        for _ in 0..8 {
+            match forwards.get(&addr) {
+                Some(next) if *next != addr => addr = *next,
+                _ => break,
+            }
+        }
+        addr
+    }
+
+    /// Park an update for `peer` (resolved through restart forwards),
+    /// coalescing where safe. Evicts the oldest hint (counted in
+    /// [`Self::dropped`]) on overflow.
+    pub fn park(&self, peer: SocketAddr, hint: Hint) {
+        let peer = self.resolve(peer);
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        let mut queues = self.queues.lock().unwrap();
+        let q = queues.entry(peer).or_default();
+        match &hint.update {
+            // LWW: every older queued hint for this key is dead weight
+            // once a newer full-state write is parked behind it.
+            HintUpdate::Full { .. } => {
+                q.retain(|h| {
+                    h.keygroup != hint.keygroup
+                        || h.key != hint.key
+                        || h.version > hint.version
+                });
+            }
+            // Contiguous deltas merge, mirroring the live queue's
+            // coalescing: replaying one merged fragment equals replaying
+            // the run one by one.
+            HintUpdate::Delta { base, frag, .. } => {
+                if let Some(last) = q
+                    .iter_mut()
+                    .rev()
+                    .find(|h| h.keygroup == hint.keygroup && h.key == hint.key)
+                {
+                    if let HintUpdate::Delta { frag: qfrag, .. } = &mut last.update {
+                        if last.version == *base {
+                            if let Ok(merged) =
+                                crate::context::codec::concat_fragment_docs(qfrag, frag)
+                            {
+                                *qfrag = merged;
+                                last.version = hint.version;
+                                last.ttl_ms = hint.ttl_ms;
+                                return;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if q.len() >= self.cfg.max_per_peer {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::SeqCst);
+        }
+        q.push_back(hint);
+    }
+
+    /// Drain every hint parked for `peer`, in park order; counts them as
+    /// replayed (the caller re-enqueues them for delivery).
+    pub fn take(&self, peer: SocketAddr) -> Vec<Hint> {
+        let hints: Vec<Hint> = self
+            .queues
+            .lock()
+            .unwrap()
+            .remove(&peer)
+            .map(Vec::from)
+            .unwrap_or_default();
+        self.replayed.fetch_add(hints.len() as u64, Ordering::SeqCst);
+        hints
+    }
+
+    /// Whether any hints are parked for `peer`.
+    pub fn has_hints(&self, peer: SocketAddr) -> bool {
+        self.queues
+            .lock()
+            .unwrap()
+            .get(&peer)
+            .is_some_and(|q| !q.is_empty())
+    }
+
+    /// Parked hints currently held for `peer`.
+    pub fn len(&self, peer: SocketAddr) -> usize {
+        self.queues.lock().unwrap().get(&peer).map_or(0, VecDeque::len)
+    }
+
+    /// True when no peer has parked hints.
+    pub fn is_empty(&self) -> bool {
+        self.queues.lock().unwrap().values().all(VecDeque::is_empty)
+    }
+
+    /// Total updates parked (before coalescing/supersede).
+    pub fn queued(&self) -> u64 {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Total hint records handed back for replay.
+    pub fn replayed(&self) -> u64 {
+        self.replayed.load(Ordering::SeqCst)
+    }
+
+    /// Total hint records evicted by the per-peer bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::context::{StoredContext, TokenCodec};
+
+    fn peer(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    fn full(key: &str, version: u64, value: &str) -> Hint {
+        Hint {
+            keygroup: "m".into(),
+            key: key.into(),
+            update: HintUpdate::Full {
+                value: value.into(),
+            },
+            version,
+            ttl_ms: None,
+        }
+    }
+
+    fn delta(key: &str, base: u64, version: u64, ids: Vec<u32>) -> Hint {
+        Hint {
+            keygroup: "m".into(),
+            key: key.into(),
+            update: HintUpdate::Delta {
+                base,
+                frag: StoredContext::Tokens(ids).to_fragment(TokenCodec::BinaryU16),
+                from: peer(9),
+            },
+            version,
+            ttl_ms: None,
+        }
+    }
+
+    #[test]
+    fn down_marks_toggle() {
+        let h = HintedHandoff::new(HintConfig::default());
+        assert!(!h.is_down(peer(1)));
+        h.set_down(peer(1));
+        assert!(h.is_down(peer(1)));
+        h.set_up(peer(1));
+        assert!(!h.is_down(peer(1)));
+    }
+
+    #[test]
+    fn park_and_take_preserve_order() {
+        let h = HintedHandoff::new(HintConfig::default());
+        h.park(peer(1), full("s1", 1, "a"));
+        h.park(peer(1), full("s2", 1, "b"));
+        h.park(peer(2), full("s3", 1, "c"));
+        assert_eq!(h.len(peer(1)), 2);
+        assert_eq!(h.queued(), 3);
+        let taken = h.take(peer(1));
+        assert_eq!(
+            taken.iter().map(|t| t.key.as_str()).collect::<Vec<_>>(),
+            vec!["s1", "s2"]
+        );
+        assert_eq!(h.replayed(), 2);
+        assert!(h.len(peer(1)) == 0 && h.len(peer(2)) == 1);
+        assert!(h.take(peer(3)).is_empty());
+    }
+
+    #[test]
+    fn newer_full_state_supersedes_older_hints_for_the_key() {
+        let h = HintedHandoff::new(HintConfig::default());
+        h.park(peer(1), full("s", 1, "v1"));
+        h.park(peer(1), delta("s", 1, 2, vec![5]));
+        h.park(peer(1), full("other", 1, "keep"));
+        h.park(peer(1), full("s", 3, "v3"));
+        let taken = h.take(peer(1));
+        assert_eq!(taken.len(), 2, "{taken:?}");
+        assert_eq!(taken[0].key, "other");
+        assert_eq!(taken[1].version, 3);
+        assert!(matches!(&taken[1].update, HintUpdate::Full { value } if value == "v3"));
+    }
+
+    #[test]
+    fn contiguous_deltas_coalesce_in_the_queue() {
+        let h = HintedHandoff::new(HintConfig::default());
+        h.park(peer(1), delta("s", 1, 2, vec![10]));
+        h.park(peer(1), delta("s", 2, 3, vec![11]));
+        assert_eq!(h.len(peer(1)), 1);
+        let taken = h.take(peer(1));
+        let HintUpdate::Delta { base, frag, .. } = &taken[0].update else {
+            panic!("expected delta");
+        };
+        assert_eq!(*base, 1);
+        assert_eq!(taken[0].version, 3);
+        assert_eq!(
+            StoredContext::from_fragment(frag).unwrap(),
+            StoredContext::Tokens(vec![10, 11])
+        );
+        // A gap must not merge.
+        h.park(peer(1), delta("s", 1, 2, vec![20]));
+        h.park(peer(1), delta("s", 5, 6, vec![21]));
+        assert_eq!(h.len(peer(1)), 2);
+    }
+
+    #[test]
+    fn parks_after_a_restart_forward_land_under_the_new_address() {
+        let h = HintedHandoff::new(HintConfig::default());
+        // A stale in-flight job parks against the pre-restart address...
+        h.set_forward(peer(1), peer(2));
+        h.park(peer(1), full("s", 4, "v4"));
+        assert_eq!(h.len(peer(1)), 0, "old key must stay empty");
+        assert_eq!(h.len(peer(2)), 1, "park must follow the forward");
+        // ...and chains across a second restart, with cycles bounded.
+        h.set_forward(peer(2), peer(3));
+        h.set_forward(peer(3), peer(2));
+        h.park(peer(1), full("s", 5, "v5"));
+        assert_eq!(h.len(peer(1)), 0);
+        assert!(h.len(peer(2)) + h.len(peer(3)) >= 1);
+    }
+
+    #[test]
+    fn overflow_evicts_oldest_and_counts() {
+        let h = HintedHandoff::new(HintConfig { max_per_peer: 2 });
+        h.park(peer(1), full("s1", 1, "a"));
+        h.park(peer(1), full("s2", 1, "b"));
+        h.park(peer(1), full("s3", 1, "c"));
+        assert_eq!(h.dropped(), 1);
+        let keys: Vec<String> = h.take(peer(1)).into_iter().map(|t| t.key).collect();
+        assert_eq!(keys, vec!["s2", "s3"], "oldest hint must be evicted");
+    }
+}

@@ -1,0 +1,617 @@
+//! Heartbeat-based failure detection and the shared membership view.
+//!
+//! Each node runs a [`FailureDetector`] thread that pings its **ring
+//! successors** (via [`crate::kvstore::HashRing::successors`]) on a
+//! configurable interval over the crate's own HTTP client. Probe outcomes
+//! feed a cluster-wide [`MembershipView`] holding one
+//! [`NodeState`] per member:
+//!
+//! ```text
+//!            k consecutive misses              down_after since last ok
+//!   Alive ─────────────────────────▶ Suspect ─────────────────────────▶ Down
+//!     ▲                                │                                 │
+//!     │      successful probe          │       successful probe /        │
+//!     └────────────────────────────────┴────────── rejoin ───────────────┘
+//! ```
+//!
+//! `Suspect` is a grace state: the node stays in placement (a transient
+//! hiccup must not reshuffle sessions). Only `Alive ⇄ Down` transitions
+//! and joins bump the monotonically increasing **epoch** — the version
+//! number of the cluster topology, stamped into every rebuilt
+//! [`crate::kvstore::Placement`]. Down members keep being probed so a
+//! recovered node (same address) is re-admitted by its next successful
+//! probe; a *restarted* node (new address) re-admits itself through
+//! [`MembershipView::join`].
+//!
+//! The view's subscribers (see [`super::ClusterCoordinator`]) receive the
+//! resulting [`MembershipEvent`]s strictly *after* the view's lock is
+//! released, so they are free to read the view and touch KV nodes.
+//!
+//! Heartbeat traffic uses dedicated ping listeners and meters: with zero
+//! failures a membership-enabled fleet produces byte-for-byte the same
+//! *replication* wire traffic as one without membership.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::http::{Connection, Request, Response, Server};
+use crate::json::Value;
+use crate::kvstore::HashRing;
+use crate::netsim::{LinkModel, TrafficMeter};
+use crate::Result;
+
+/// How many ring successors each node probes per heartbeat tick. Two
+/// probers per target tolerate one failed observer without losing
+/// coverage; every node has at least one ring predecessor, so every node
+/// is probed by someone.
+pub const PROBE_FANOUT: usize = 2;
+
+/// Failure-detector liveness state of one member.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Responding to probes; full member of the placement.
+    Alive,
+    /// Missed `suspect_after` consecutive probes; still placed (grace).
+    Suspect,
+    /// Unresponsive past `down_after`; removed from placement, writes to
+    /// it are parked as hints.
+    Down,
+}
+
+impl NodeState {
+    /// Wire/metrics string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NodeState::Alive => "alive",
+            NodeState::Suspect => "suspect",
+            NodeState::Down => "down",
+        }
+    }
+}
+
+/// Failure-detector tuning (`membership` config section).
+#[derive(Debug, Clone)]
+pub struct MembershipConfig {
+    /// Master switch. Default **off**: the cluster behaves exactly like
+    /// the static seed — placement frozen at launch, no heartbeats.
+    pub enabled: bool,
+    /// Interval between probe rounds (`heartbeat_ms`).
+    pub heartbeat: Duration,
+    /// Consecutive missed probes before a member turns `Suspect`.
+    pub suspect_after: u32,
+    /// Time since the last successful probe before a `Suspect` member is
+    /// declared `Down` (`down_after_ms`).
+    pub down_after: Duration,
+}
+
+impl Default for MembershipConfig {
+    fn default() -> MembershipConfig {
+        MembershipConfig {
+            enabled: false,
+            heartbeat: Duration::from_millis(100),
+            suspect_after: 3,
+            down_after: Duration::from_millis(1000),
+        }
+    }
+}
+
+/// One member as seen by the failure detector.
+#[derive(Debug, Clone)]
+pub struct MemberInfo {
+    /// Node name (placement identity).
+    pub name: String,
+    /// Current liveness state.
+    pub state: NodeState,
+    /// Ping listener address (probed by the detectors).
+    pub ping_addr: SocketAddr,
+    /// KV replication listener address (what placement routes writes to).
+    pub kv_addr: SocketAddr,
+    /// Models (keygroups) served by the member.
+    pub models: Vec<String>,
+    /// Consecutive missed probes.
+    missed: u32,
+    /// Instant of the last successful probe (join time initially).
+    last_ok: Instant,
+}
+
+/// A state transition worth reacting to. Emitted by [`MembershipView`] to
+/// its subscribers after the triggering report/join.
+#[derive(Debug, Clone)]
+pub enum MembershipEvent {
+    /// A brand-new member was admitted (epoch bumped).
+    Joined {
+        /// Member name.
+        name: String,
+    },
+    /// A member stopped answering probes but is still within its grace
+    /// window (no epoch change).
+    Suspected {
+        /// Member name.
+        name: String,
+    },
+    /// A member was declared down (epoch bumped): remove from placement,
+    /// park its writes as hints.
+    Down {
+        /// Member name.
+        name: String,
+        /// Its KV replication address (the hint-queue key).
+        kv_addr: SocketAddr,
+    },
+    /// A down member came back (epoch bumped) — either probed alive at
+    /// its old address or rejoined at a new one. Hints parked for
+    /// `old_kv_addr` replay to `kv_addr`.
+    Up {
+        /// Member name.
+        name: String,
+        /// KV address while it was down (where hints were parked).
+        old_kv_addr: SocketAddr,
+        /// KV address now (equal to `old_kv_addr` unless restarted).
+        kv_addr: SocketAddr,
+    },
+}
+
+type Subscriber = Box<dyn Fn(&[MembershipEvent]) + Send + Sync>;
+
+/// Cluster-wide membership: per-member state, the topology epoch, and the
+/// subscriber list notified on every transition.
+pub struct MembershipView {
+    cfg: MembershipConfig,
+    members: Mutex<Vec<MemberInfo>>,
+    epoch: AtomicU64,
+    subscribers: Mutex<Vec<Subscriber>>,
+}
+
+impl MembershipView {
+    /// Empty view at epoch 0; every join bumps the epoch.
+    pub fn new(cfg: MembershipConfig) -> Arc<MembershipView> {
+        Arc::new(MembershipView {
+            cfg,
+            members: Mutex::new(Vec::new()),
+            epoch: AtomicU64::new(0),
+            subscribers: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The detector configuration this view was built with.
+    pub fn config(&self) -> &MembershipConfig {
+        &self.cfg
+    }
+
+    /// Current topology epoch (bumps on join and `Alive ⇄ Down`).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot of all members (any state), in join order.
+    pub fn members(&self) -> Vec<MemberInfo> {
+        self.members.lock().unwrap().clone()
+    }
+
+    /// Members currently counted as live (`Alive` or `Suspect`).
+    pub fn alive_count(&self) -> usize {
+        self.members
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|m| m.state != NodeState::Down)
+            .count()
+    }
+
+    /// State of a member by name.
+    pub fn state_of(&self, name: &str) -> Option<NodeState> {
+        self.members
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|m| m.name == name)
+            .map(|m| m.state)
+    }
+
+    /// Register a callback for future membership events.
+    pub fn subscribe(&self, f: Subscriber) {
+        self.subscribers.lock().unwrap().push(f);
+    }
+
+    /// Admit a member (new node or a restarted one rejoining under its
+    /// old name with fresh addresses). Returns the epoch after the join.
+    pub fn join(
+        &self,
+        name: &str,
+        ping_addr: SocketAddr,
+        kv_addr: SocketAddr,
+        models: &[String],
+    ) -> u64 {
+        let mut events = Vec::new();
+        let epoch;
+        {
+            let mut members = self.members.lock().unwrap();
+            match members.iter_mut().find(|m| m.name == name) {
+                Some(m) => {
+                    let old_kv = m.kv_addr;
+                    let was_down = m.state == NodeState::Down;
+                    m.ping_addr = ping_addr;
+                    m.kv_addr = kv_addr;
+                    m.models = models.to_vec();
+                    m.missed = 0;
+                    m.last_ok = Instant::now();
+                    if was_down || old_kv != kv_addr {
+                        m.state = NodeState::Alive;
+                        self.epoch.fetch_add(1, Ordering::SeqCst);
+                        events.push(MembershipEvent::Up {
+                            name: name.to_string(),
+                            old_kv_addr: old_kv,
+                            kv_addr,
+                        });
+                    }
+                }
+                None => {
+                    members.push(MemberInfo {
+                        name: name.to_string(),
+                        state: NodeState::Alive,
+                        ping_addr,
+                        kv_addr,
+                        models: models.to_vec(),
+                        missed: 0,
+                        last_ok: Instant::now(),
+                    });
+                    self.epoch.fetch_add(1, Ordering::SeqCst);
+                    events.push(MembershipEvent::Joined {
+                        name: name.to_string(),
+                    });
+                }
+            }
+            epoch = self.epoch.load(Ordering::SeqCst);
+        }
+        self.notify(&events);
+        epoch
+    }
+
+    /// Record one probe outcome for `name` and advance its state machine.
+    pub fn report(&self, name: &str, ok: bool) {
+        let mut events = Vec::new();
+        {
+            let mut members = self.members.lock().unwrap();
+            let Some(m) = members.iter_mut().find(|m| m.name == name) else {
+                return;
+            };
+            if ok {
+                m.missed = 0;
+                m.last_ok = Instant::now();
+                match m.state {
+                    NodeState::Down => {
+                        // Recovered in place: same address, so hints for
+                        // it replay to where they were parked.
+                        m.state = NodeState::Alive;
+                        self.epoch.fetch_add(1, Ordering::SeqCst);
+                        events.push(MembershipEvent::Up {
+                            name: name.to_string(),
+                            old_kv_addr: m.kv_addr,
+                            kv_addr: m.kv_addr,
+                        });
+                    }
+                    NodeState::Suspect => m.state = NodeState::Alive,
+                    NodeState::Alive => {}
+                }
+            } else {
+                m.missed = m.missed.saturating_add(1);
+                match m.state {
+                    NodeState::Alive if m.missed >= self.cfg.suspect_after => {
+                        m.state = NodeState::Suspect;
+                        events.push(MembershipEvent::Suspected {
+                            name: name.to_string(),
+                        });
+                    }
+                    NodeState::Suspect if m.last_ok.elapsed() >= self.cfg.down_after => {
+                        m.state = NodeState::Down;
+                        self.epoch.fetch_add(1, Ordering::SeqCst);
+                        events.push(MembershipEvent::Down {
+                            name: name.to_string(),
+                            kv_addr: m.kv_addr,
+                        });
+                    }
+                    _ => {}
+                }
+            }
+        }
+        self.notify(&events);
+    }
+
+    /// The members `prober` should ping this round: its `fanout` ring
+    /// successors. Down members stay in the ring so a recovery at the old
+    /// address is noticed (rejoin-on-probe).
+    pub fn probe_targets(&self, prober: &str, fanout: usize) -> Vec<(String, SocketAddr)> {
+        let members = self.members.lock().unwrap();
+        let names: Vec<&str> = members.iter().map(|m| m.name.as_str()).collect();
+        // successors() orders members by their primary ring position
+        // only, so one virtual point per member is all this needs —
+        // this runs every heartbeat tick under the members lock.
+        let ring = HashRing::new(&names, 1);
+        ring.successors(prober, fanout)
+            .into_iter()
+            .filter_map(|succ| {
+                members
+                    .iter()
+                    .find(|m| m.name == succ)
+                    .map(|m| (m.name.clone(), m.ping_addr))
+            })
+            .collect()
+    }
+
+    /// Test/benchmark helper: block until `name` reaches `state`.
+    pub fn wait_for_state(&self, name: &str, state: NodeState, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.state_of(name) == Some(state) {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        false
+    }
+
+    /// Test/benchmark helper: block until the epoch reaches `at_least`.
+    pub fn wait_for_epoch(&self, at_least: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.epoch() >= at_least {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        false
+    }
+
+    fn notify(&self, events: &[MembershipEvent]) {
+        if events.is_empty() {
+            return;
+        }
+        // Subscribers run outside the members lock: they may read the
+        // view and swap placements on KV nodes.
+        for sub in self.subscribers.lock().unwrap().iter() {
+            sub(events);
+        }
+    }
+}
+
+impl std::fmt::Debug for MembershipView {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MembershipView")
+            .field("epoch", &self.epoch())
+            .field("members", &self.members())
+            .finish()
+    }
+}
+
+/// Start the per-node ping listener the detectors probe. Dedicated
+/// server + meter: heartbeat bytes never pollute replication accounting.
+pub fn serve_ping(name: &str) -> Result<Server> {
+    let name = name.to_string();
+    Server::serve(
+        0,
+        LinkModel::ideal(),
+        Arc::new(move |req: &Request| {
+            if req.method == "GET" && req.path == "/ping" {
+                Response::json(&Value::obj().set("node", name.as_str()).to_json())
+            } else {
+                Response::error(404, "not found")
+            }
+        }),
+    )
+}
+
+/// One node's probing loop, feeding the shared [`MembershipView`].
+pub struct FailureDetector {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FailureDetector {
+    /// Spawn the probe thread for `node`. Interval and thresholds come
+    /// from the view's [`MembershipConfig`].
+    pub fn start(node: String, view: Arc<MembershipView>) -> FailureDetector {
+        let stop = Arc::new(AtomicBool::new(false));
+        let t_stop = stop.clone();
+        let cfg = view.config().clone();
+        let meter = TrafficMeter::new();
+        let thread = std::thread::Builder::new()
+            .name(format!("membership-{node}"))
+            .spawn(move || {
+                // A probe must resolve within one heartbeat so a hung
+                // peer cannot stall the round (floor keeps very fast test
+                // heartbeats from spuriously timing out the handshake).
+                let timeout = cfg.heartbeat.max(Duration::from_millis(20));
+                while !t_stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(cfg.heartbeat);
+                    if t_stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    for (target, ping_addr) in view.probe_targets(&node, PROBE_FANOUT) {
+                        let ok = probe(ping_addr, &meter, timeout);
+                        view.report(&target, ok);
+                    }
+                }
+            })
+            .expect("spawn failure detector");
+        FailureDetector {
+            stop,
+            thread: Some(thread),
+        }
+    }
+
+    /// Stop probing and join the thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for FailureDetector {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One `GET /ping` round-trip with a hard timeout on connect and I/O.
+fn probe(addr: SocketAddr, meter: &Arc<TrafficMeter>, timeout: Duration) -> bool {
+    match Connection::open_timeout(addr, meter.clone(), LinkModel::ideal(), timeout) {
+        Ok(mut conn) => matches!(
+            conn.round_trip(&Request::get("/ping")),
+            Ok(resp) if resp.status == 200
+        ),
+        Err(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    fn fast_cfg() -> MembershipConfig {
+        MembershipConfig {
+            enabled: true,
+            heartbeat: Duration::from_millis(10),
+            suspect_after: 2,
+            down_after: Duration::from_millis(50),
+        }
+    }
+
+    #[test]
+    fn joins_bump_the_epoch_and_emit_events() {
+        let view = MembershipView::new(fast_cfg());
+        let seen = Arc::new(Mutex::new(Vec::<String>::new()));
+        let s2 = seen.clone();
+        view.subscribe(Box::new(move |events| {
+            for e in events {
+                s2.lock().unwrap().push(format!("{e:?}"));
+            }
+        }));
+        assert_eq!(view.epoch(), 0);
+        assert_eq!(view.join("a", addr(1), addr(2), &["m".into()]), 1);
+        assert_eq!(view.join("b", addr(3), addr(4), &["m".into()]), 2);
+        assert_eq!(view.alive_count(), 2);
+        // Re-announcing unchanged addresses is idempotent.
+        assert_eq!(view.join("a", addr(1), addr(2), &["m".into()]), 2);
+        let log = seen.lock().unwrap();
+        assert_eq!(log.len(), 2, "{log:?}");
+        assert!(log[0].contains("Joined"));
+    }
+
+    #[test]
+    fn state_machine_alive_suspect_down_and_back() {
+        let view = MembershipView::new(fast_cfg());
+        view.join("a", addr(1), addr(2), &[]);
+        view.join("b", addr(3), addr(4), &[]);
+        let e0 = view.epoch();
+        // One miss: still alive (suspect_after = 2).
+        view.report("b", false);
+        assert_eq!(view.state_of("b"), Some(NodeState::Alive));
+        view.report("b", false);
+        assert_eq!(view.state_of("b"), Some(NodeState::Suspect));
+        assert_eq!(view.epoch(), e0, "suspect must not bump the epoch");
+        // Down only after down_after has elapsed since the last success.
+        view.report("b", false);
+        std::thread::sleep(Duration::from_millis(60));
+        view.report("b", false);
+        assert_eq!(view.state_of("b"), Some(NodeState::Down));
+        assert_eq!(view.epoch(), e0 + 1);
+        assert_eq!(view.alive_count(), 1);
+        // A successful probe re-admits at the same address.
+        view.report("b", true);
+        assert_eq!(view.state_of("b"), Some(NodeState::Alive));
+        assert_eq!(view.epoch(), e0 + 2);
+    }
+
+    #[test]
+    fn suspect_recovers_without_epoch_change() {
+        let view = MembershipView::new(fast_cfg());
+        view.join("a", addr(1), addr(2), &[]);
+        let e0 = view.epoch();
+        view.report("a", false);
+        view.report("a", false);
+        assert_eq!(view.state_of("a"), Some(NodeState::Suspect));
+        view.report("a", true);
+        assert_eq!(view.state_of("a"), Some(NodeState::Alive));
+        assert_eq!(view.epoch(), e0);
+    }
+
+    #[test]
+    fn rejoin_with_new_address_reports_old_hint_queue_key() {
+        let view = MembershipView::new(fast_cfg());
+        view.join("a", addr(1), addr(2), &[]);
+        view.join("b", addr(3), addr(4), &[]);
+        let events = Arc::new(Mutex::new(Vec::<MembershipEvent>::new()));
+        let e2 = events.clone();
+        view.subscribe(Box::new(move |evs| {
+            e2.lock().unwrap().extend(evs.iter().cloned());
+        }));
+        // Take b down, then rejoin at a fresh address.
+        view.report("b", false);
+        view.report("b", false);
+        std::thread::sleep(Duration::from_millis(60));
+        view.report("b", false);
+        assert_eq!(view.state_of("b"), Some(NodeState::Down));
+        view.join("b", addr(13), addr(14), &[]);
+        let log = events.lock().unwrap();
+        let up = log
+            .iter()
+            .find_map(|e| match e {
+                MembershipEvent::Up {
+                    old_kv_addr,
+                    kv_addr,
+                    ..
+                } => Some((*old_kv_addr, *kv_addr)),
+                _ => None,
+            })
+            .expect("rejoin must emit Up");
+        assert_eq!(up, (addr(4), addr(14)));
+        assert_eq!(view.state_of("b"), Some(NodeState::Alive));
+    }
+
+    #[test]
+    fn probe_targets_are_ring_successors_excluding_self() {
+        let view = MembershipView::new(fast_cfg());
+        for (i, n) in ["a", "b", "c", "d"].into_iter().enumerate() {
+            view.join(n, addr(10 + i as u16), addr(20 + i as u16), &[]);
+        }
+        let targets = view.probe_targets("a", PROBE_FANOUT);
+        assert_eq!(targets.len(), PROBE_FANOUT);
+        assert!(targets.iter().all(|(n, _)| n != "a"));
+        // Two-node cluster: each probes the other.
+        let small = MembershipView::new(fast_cfg());
+        small.join("x", addr(1), addr(2), &[]);
+        small.join("y", addr(3), addr(4), &[]);
+        assert_eq!(small.probe_targets("x", PROBE_FANOUT).len(), 1);
+        assert_eq!(small.probe_targets("x", PROBE_FANOUT)[0].0, "y");
+        // Single node: nothing to probe.
+        assert!(small.probe_targets("z", PROBE_FANOUT).is_empty());
+    }
+
+    #[test]
+    fn detector_discovers_death_and_recovery_end_to_end() {
+        let view = MembershipView::new(fast_cfg());
+        let ping_a = serve_ping("a").unwrap();
+        let mut ping_b = serve_ping("b").unwrap();
+        view.join("a", ping_a.addr, addr(101), &[]);
+        view.join("b", ping_b.addr, addr(102), &[]);
+        let mut det_a = FailureDetector::start("a".into(), view.clone());
+        // a probes b; kill b's ping server and watch the state machine.
+        ping_b.shutdown();
+        assert!(
+            view.wait_for_state("b", NodeState::Down, Duration::from_secs(5)),
+            "detector must declare the dead peer down"
+        );
+        // Restart b's listener at a new address and rejoin.
+        let ping_b2 = serve_ping("b").unwrap();
+        view.join("b", ping_b2.addr, addr(102), &[]);
+        assert!(view.wait_for_state("b", NodeState::Alive, Duration::from_secs(5)));
+        det_a.stop();
+    }
+}

@@ -1,0 +1,332 @@
+//! Cluster membership & failure handling (heartbeats, epoch-versioned
+//! placement, hinted handoff).
+//!
+//! Three pieces, layered on the static seed cluster without changing its
+//! default behaviour:
+//!
+//! - [`membership`] — a heartbeat failure detector maintaining a shared
+//!   [`MembershipView`] with per-node `Alive/Suspect/Down` state and a
+//!   monotonically increasing **epoch**;
+//! - [`hints`] — hinted handoff: updates addressed to a down peer are
+//!   parked in a bounded per-peer queue and replayed in order when the
+//!   peer returns;
+//! - [`ClusterCoordinator`] — the glue that reacts to membership events:
+//!   on every epoch change it rebuilds the consistent-hash
+//!   [`Placement`] from the live member set, stamps it with the epoch,
+//!   and swaps it atomically into every [`KvNode`] via
+//!   `set_placement`, so reads and writes skip down replicas instead of
+//!   timing out on them.
+//!
+//! The ordering contract on a `Down` event is: mark the peer down first
+//! (new pushes park as hints immediately), *then* swap the placement
+//! (new writes stop addressing the peer at all). On an `Up` event the
+//! inverse: re-address stale peer entries, clear the down mark and
+//! replay hints, then swap the placement back in — so no window exists
+//! in which a write to the returning peer could be silently dropped.
+//!
+//! Everything here is **off by default** (`membership.enabled = false`);
+//! a fleet in which no node ever fails behaves byte-for-byte like the
+//! static cluster, heartbeats included (they ride dedicated listeners
+//! and meters).
+
+pub mod hints;
+pub mod membership;
+
+pub use hints::{Hint, HintConfig, HintUpdate, HintedHandoff};
+pub use membership::{
+    FailureDetector, MemberInfo, MembershipConfig, MembershipEvent, MembershipView, NodeState,
+    PROBE_FANOUT,
+};
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+
+use crate::config::ShardingConfig;
+use crate::http::Server;
+use crate::kvstore::{KvNode, Placement};
+use crate::Result;
+
+/// Per-node machinery owned by the coordinator: the ping listener the
+/// other detectors probe, and this node's own prober.
+struct NodeRuntime {
+    /// Ping listener; kept alive for the member's lifetime. Probed by
+    /// peers, so it must be dropped (closed) when the node is killed.
+    _ping: Server,
+    /// This node's failure-detector thread.
+    _detector: FailureDetector,
+}
+
+/// Reacts to membership events for an in-process fleet: epoch-versioned
+/// placement rebuilds, down-peer marking, and hint replay.
+pub struct ClusterCoordinator {
+    view: Arc<MembershipView>,
+    sharding: ShardingConfig,
+    /// Live KV replicas to apply placement swaps / peer marks to.
+    kvs: Mutex<Vec<(String, Arc<KvNode>)>>,
+    runtimes: Mutex<HashMap<String, NodeRuntime>>,
+}
+
+impl ClusterCoordinator {
+    /// Create the coordinator and subscribe it to the view's events.
+    pub fn start(view: Arc<MembershipView>, sharding: ShardingConfig) -> Arc<ClusterCoordinator> {
+        let coordinator = Arc::new(ClusterCoordinator {
+            view: view.clone(),
+            sharding,
+            kvs: Mutex::new(Vec::new()),
+            runtimes: Mutex::new(HashMap::new()),
+        });
+        // Weak subscription: the view must not keep the coordinator (and
+        // through it every KvNode) alive after the cluster is dropped.
+        let weak = Arc::downgrade(&coordinator);
+        view.subscribe(Box::new(move |events| {
+            if let Some(c) = weak.upgrade() {
+                c.apply_events(events);
+            }
+        }));
+        coordinator
+    }
+
+    /// The membership view driven by this coordinator's detectors.
+    pub fn view(&self) -> &Arc<MembershipView> {
+        &self.view
+    }
+
+    /// Bring a node under membership management: start its ping listener
+    /// and failure detector, then announce it to the view (which swaps an
+    /// updated placement into every registered replica, and replays any
+    /// hints parked for a rejoining node).
+    pub fn register_node(&self, name: &str, kv: Arc<KvNode>, models: &[String]) -> Result<()> {
+        let ping = membership::serve_ping(name)?;
+        let ping_addr = ping.addr;
+        let kv_addr = kv.replication_addr();
+        {
+            let mut kvs = self.kvs.lock().unwrap();
+            kvs.retain(|(n, _)| n != name);
+            kvs.push((name.to_string(), kv));
+        }
+        let detector = FailureDetector::start(name.to_string(), self.view.clone());
+        self.runtimes.lock().unwrap().insert(
+            name.to_string(),
+            NodeRuntime {
+                _ping: ping,
+                _detector: detector,
+            },
+        );
+        self.view.join(name, ping_addr, kv_addr, models);
+        Ok(())
+    }
+
+    /// Stop a node's detector and ping listener and forget its replica
+    /// (test kill hook). The view is *not* told: the remaining detectors
+    /// must discover the death themselves.
+    pub fn remove_node(&self, name: &str) {
+        self.kvs.lock().unwrap().retain(|(n, _)| n != name);
+        // Take the runtime out before dropping it: the drop joins the
+        // detector thread and closes the ping listener (so peers' probes
+        // start failing), and must not run under the map lock.
+        let runtime = self.runtimes.lock().unwrap().remove(name);
+        drop(runtime);
+    }
+
+    fn apply_events(&self, events: &[MembershipEvent]) {
+        let mut rebuild = false;
+        for event in events {
+            match event {
+                MembershipEvent::Down { name, kv_addr } => {
+                    // Two detectors probe each member, so a Down event
+                    // can arrive here *after* the Up that superseded it
+                    // (state commits under the view lock before events
+                    // are delivered). Re-check the live view: marking an
+                    // alive peer down would park its traffic forever.
+                    if self.view.state_of(name) != Some(NodeState::Down) {
+                        rebuild = true;
+                        continue;
+                    }
+                    // Order matters: park-on-arrival first, then the
+                    // placement swap stops addressing the peer at all.
+                    for (_, kv) in self.kvs.lock().unwrap().iter() {
+                        kv.mark_peer_down(*kv_addr);
+                    }
+                    rebuild = true;
+                }
+                MembershipEvent::Up {
+                    name,
+                    old_kv_addr,
+                    kv_addr,
+                } => {
+                    // Mirror guard: a stale Up behind a newer Down must
+                    // not clear the down mark; the hints stay parked for
+                    // the next genuine recovery.
+                    if self.view.state_of(name) == Some(NodeState::Down) {
+                        rebuild = true;
+                        continue;
+                    }
+                    for (_, kv) in self.kvs.lock().unwrap().iter() {
+                        // Replicate-to-all subscriptions may still point
+                        // at the pre-restart address.
+                        kv.replace_peer(*old_kv_addr, *kv_addr);
+                        kv.mark_peer_alive(*old_kv_addr, *kv_addr);
+                    }
+                    rebuild = true;
+                }
+                MembershipEvent::Joined { .. } => rebuild = true,
+                // Suspect is a grace state: placement untouched.
+                MembershipEvent::Suspected { .. } => {}
+            }
+        }
+        if rebuild {
+            self.rebuild_placement();
+        }
+    }
+
+    /// Rebuild the ring placement over the live member set (`Alive` +
+    /// `Suspect`), stamp it with the current epoch, and swap it into
+    /// every registered replica. No-op without a replication factor
+    /// (replicate-to-all fleets route by peer subscriptions instead; the
+    /// down-peer marks above already divert their pushes to hints).
+    fn rebuild_placement(&self) {
+        let Some(rf) = self.sharding.replication_factor else {
+            return;
+        };
+        let members = self.view.members();
+        let live: Vec<&MemberInfo> = members
+            .iter()
+            .filter(|m| m.state != NodeState::Down)
+            .collect();
+        let mut models: Vec<&String> = live.iter().flat_map(|m| m.models.iter()).collect();
+        models.sort_unstable();
+        models.dedup();
+        let mut placement = Placement::new(rf);
+        placement.set_epoch(self.view.epoch());
+        for model in models {
+            let serving: Vec<(String, SocketAddr)> = live
+                .iter()
+                .filter(|m| m.models.contains(model))
+                .map(|m| (m.name.clone(), m.kv_addr))
+                .collect();
+            placement.add_keygroup(model, &serving, self.sharding.virtual_nodes);
+        }
+        let placement = Arc::new(placement);
+        for (_, kv) in self.kvs.lock().unwrap().iter() {
+            kv.set_placement(placement.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::KvConfig;
+    use crate::netsim::LinkModel;
+    use std::time::Duration;
+
+    fn kv(name: &str) -> Arc<KvNode> {
+        let node = KvNode::start(
+            name,
+            KvConfig {
+                peer_link: LinkModel::ideal(),
+                hints: Some(HintConfig::default()),
+                ..KvConfig::default()
+            },
+        )
+        .unwrap();
+        node.create_keygroup("m");
+        Arc::new(node)
+    }
+
+    fn fast_view() -> Arc<MembershipView> {
+        MembershipView::new(MembershipConfig {
+            enabled: true,
+            heartbeat: Duration::from_millis(10),
+            suspect_after: 2,
+            down_after: Duration::from_millis(40),
+        })
+    }
+
+    #[test]
+    fn registration_installs_an_epoch_stamped_placement() {
+        let view = fast_view();
+        let coordinator = ClusterCoordinator::start(
+            view.clone(),
+            ShardingConfig {
+                replication_factor: Some(2),
+                virtual_nodes: 32,
+            },
+        );
+        let (a, b, c) = (kv("a"), kv("b"), kv("c"));
+        for (name, node) in [("a", &a), ("b", &b), ("c", &c)] {
+            coordinator
+                .register_node(name, node.clone(), &["m".to_string()])
+                .unwrap();
+        }
+        assert_eq!(view.epoch(), 3);
+        let p = a.placement().expect("placement installed");
+        assert_eq!(p.epoch(), 3);
+        assert_eq!(p.replicas("m", "u/s").len(), 2);
+        // Every replica shares the same swapped-in placement.
+        assert_eq!(b.placement().unwrap().epoch(), 3);
+        assert_eq!(c.placement().unwrap().epoch(), 3);
+    }
+
+    #[test]
+    fn down_event_removes_the_member_from_placement_and_marks_peers() {
+        let view = fast_view();
+        let coordinator = ClusterCoordinator::start(
+            view.clone(),
+            ShardingConfig {
+                replication_factor: Some(2),
+                virtual_nodes: 32,
+            },
+        );
+        let (a, b) = (kv("a"), kv("b"));
+        coordinator.register_node("a", a.clone(), &["m".to_string()]).unwrap();
+        coordinator.register_node("b", b.clone(), &["m".to_string()]).unwrap();
+        // Drive b down through the view directly (detector-free test).
+        view.report("b", false);
+        view.report("b", false);
+        std::thread::sleep(Duration::from_millis(50));
+        view.report("b", false);
+        assert_eq!(view.state_of("b"), Some(NodeState::Down));
+        let p = a.placement().unwrap();
+        let reps = p.replicas("m", "u/s");
+        assert_eq!(reps.len(), 1, "down member must leave the ring");
+        assert_eq!(reps[0].0, "a");
+        // Writes now target only live replicas: the local apply + push
+        // path never addresses b, so nothing is parked and nothing drops.
+        a.put("m", "u/s", "v".into(), 1).unwrap();
+        a.quiesce();
+        assert_eq!(a.hints_queued(), 0);
+        assert_eq!(a.repl_dropped_total(), 0);
+    }
+
+    #[test]
+    fn rejoin_swaps_the_member_back_in() {
+        let view = fast_view();
+        let coordinator = ClusterCoordinator::start(
+            view.clone(),
+            ShardingConfig {
+                replication_factor: Some(1),
+                virtual_nodes: 32,
+            },
+        );
+        let (a, b) = (kv("a"), kv("b"));
+        coordinator.register_node("a", a.clone(), &["m".to_string()]).unwrap();
+        coordinator.register_node("b", b.clone(), &["m".to_string()]).unwrap();
+        view.report("b", false);
+        view.report("b", false);
+        std::thread::sleep(Duration::from_millis(50));
+        view.report("b", false);
+        let down_epoch = view.epoch();
+        assert!(a
+            .placement()
+            .unwrap()
+            .ring("m")
+            .is_some_and(|r| r.len() == 1));
+        view.report("b", true);
+        assert_eq!(view.epoch(), down_epoch + 1);
+        let p = a.placement().unwrap();
+        assert_eq!(p.epoch(), down_epoch + 1);
+        assert!(p.ring("m").is_some_and(|r| r.len() == 2));
+    }
+}

@@ -5,6 +5,7 @@
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
+use crate::cluster::{HintConfig, MembershipConfig};
 use crate::json::{self, Value};
 use crate::kvstore::ReplicationConfig;
 use crate::netsim::LinkModel;
@@ -169,6 +170,12 @@ pub struct ClusterConfig {
     pub replication: ReplicationConfig,
     /// Session sharding / ring placement.
     pub sharding: ShardingConfig,
+    /// Heartbeat failure detection / runtime membership (default off:
+    /// topology frozen at launch, exactly the seed behaviour).
+    pub membership: MembershipConfig,
+    /// Hinted handoff for unreachable peers (active only with
+    /// membership enabled).
+    pub hints: HintConfig,
     /// Turn-counter protocol settings.
     pub consistency: ConsistencyConfig,
     /// Generation settings.
@@ -206,6 +213,8 @@ impl ClusterConfig {
             client_link: LinkModel::mobile_uplink(),
             replication: ReplicationConfig::default(),
             sharding: ShardingConfig::default(),
+            membership: MembershipConfig::default(),
+            hints: HintConfig::default(),
             consistency: ConsistencyConfig::default(),
             generation: GenerationConfig::default(),
             engine: EngineKind::Pjrt,
@@ -244,6 +253,17 @@ impl ClusterConfig {
             .collect();
         cfg.sharding.replication_factor = replication_factor;
         cfg
+    }
+
+    /// Turn on membership with failure-detection knobs tight enough for
+    /// tests and failover demos: 15 ms heartbeats, suspect after 2
+    /// misses, down after 120 ms — a kill is detected in well under a
+    /// second without flapping on scheduler hiccups.
+    pub fn enable_fast_membership(&mut self) {
+        self.membership.enabled = true;
+        self.membership.heartbeat = Duration::from_millis(15);
+        self.membership.suspect_after = 2;
+        self.membership.down_after = Duration::from_millis(120);
     }
 
     /// Load from a JSON config file. Unspecified fields keep testbed
@@ -321,6 +341,25 @@ impl ClusterConfig {
                 cfg.sharding.virtual_nodes = vn as usize;
             }
         }
+        if let Some(m) = v.get("membership") {
+            if let Some(e) = m.get("enabled").and_then(|x| x.as_bool()) {
+                cfg.membership.enabled = e;
+            }
+            if let Some(h) = m.get("heartbeat_ms").and_then(|x| x.as_u64()) {
+                cfg.membership.heartbeat = Duration::from_millis(h);
+            }
+            if let Some(s) = m.get("suspect_after").and_then(|x| x.as_u64()) {
+                cfg.membership.suspect_after = s as u32;
+            }
+            if let Some(d) = m.get("down_after_ms").and_then(|x| x.as_u64()) {
+                cfg.membership.down_after = Duration::from_millis(d);
+            }
+        }
+        if let Some(h) = v.get("hints") {
+            if let Some(n) = h.get("max_per_peer").and_then(|x| x.as_u64()) {
+                cfg.hints.max_per_peer = n as usize;
+            }
+        }
         if let Some(t) = v.get("session_ttl_s").and_then(|x| x.as_u64()) {
             cfg.session_ttl = Duration::from_secs(t);
         }
@@ -349,6 +388,17 @@ impl ClusterConfig {
         }
         if self.sharding.virtual_nodes == 0 {
             return Err(Error::Config("virtual_nodes must be >= 1".into()));
+        }
+        if self.membership.enabled {
+            if self.membership.heartbeat.is_zero() {
+                return Err(Error::Config("membership.heartbeat_ms must be >= 1".into()));
+            }
+            if self.membership.suspect_after == 0 {
+                return Err(Error::Config("membership.suspect_after must be >= 1".into()));
+            }
+        }
+        if self.hints.max_per_peer == 0 {
+            return Err(Error::Config("hints.max_per_peer must be >= 1".into()));
         }
         Ok(())
     }
@@ -474,6 +524,53 @@ mod tests {
             r#"{"engine": "mock", "sharding": {"replication_factor": 0}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn membership_defaults_off_and_parses() {
+        // The seed's frozen topology must stay the default.
+        let cfg = ClusterConfig::two_node_testbed();
+        assert!(!cfg.membership.enabled);
+        assert_eq!(cfg.membership.heartbeat, Duration::from_millis(100));
+        assert_eq!(cfg.membership.suspect_after, 3);
+        assert_eq!(cfg.membership.down_after, Duration::from_millis(1000));
+        assert_eq!(cfg.hints.max_per_peer, 512);
+        let cfg = ClusterConfig::from_json(
+            r#"{
+              "engine": "mock",
+              "membership": {"enabled": true, "heartbeat_ms": 25,
+                             "suspect_after": 2, "down_after_ms": 150},
+              "hints": {"max_per_peer": 64}
+            }"#,
+        )
+        .unwrap();
+        assert!(cfg.membership.enabled);
+        assert_eq!(cfg.membership.heartbeat, Duration::from_millis(25));
+        assert_eq!(cfg.membership.suspect_after, 2);
+        assert_eq!(cfg.membership.down_after, Duration::from_millis(150));
+        assert_eq!(cfg.hints.max_per_peer, 64);
+        // Degenerate knobs are rejected.
+        assert!(ClusterConfig::from_json(
+            r#"{"engine": "mock", "membership": {"enabled": true, "heartbeat_ms": 0}}"#
+        )
+        .is_err());
+        assert!(ClusterConfig::from_json(
+            r#"{"engine": "mock", "membership": {"enabled": true, "suspect_after": 0}}"#
+        )
+        .is_err());
+        assert!(
+            ClusterConfig::from_json(r#"{"engine": "mock", "hints": {"max_per_peer": 0}}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn fast_membership_helper_enables_detection() {
+        let mut cfg = ClusterConfig::mock_fleet(3, Some(2));
+        cfg.enable_fast_membership();
+        assert!(cfg.membership.enabled);
+        assert!(cfg.membership.heartbeat < Duration::from_millis(100));
+        cfg.validate().unwrap();
     }
 
     #[test]

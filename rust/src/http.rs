@@ -8,9 +8,9 @@
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::netsim::{LinkModel, MeteredStream, TrafficMeter};
@@ -240,6 +240,25 @@ impl Connection {
         })
     }
 
+    /// Open a connection with a hard bound on connect *and* subsequent
+    /// reads/writes. Used by probes (a hung peer must cost at most one
+    /// timeout, not a stalled detector thread).
+    pub fn open_timeout(
+        addr: SocketAddr,
+        meter: Arc<TrafficMeter>,
+        link: LinkModel,
+        timeout: Duration,
+    ) -> Result<Connection> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        Ok(Connection {
+            stream: BufReader::new(MeteredStream::new(stream, meter, link)),
+            addr,
+        })
+    }
+
     /// Send a request and wait for the response (single in-flight request,
     /// as in the paper's single-client experiments).
     pub fn round_trip(&mut self, req: &Request) -> Result<Response> {
@@ -262,7 +281,16 @@ pub struct Server {
     accept_thread: Option<std::thread::JoinHandle<()>>,
     /// Meter counting all bytes through this server's accepted sockets.
     pub meter: Arc<TrafficMeter>,
+    /// Raw handles of live accepted sockets, so a stop can sever
+    /// in-flight connections instead of letting each serve one last
+    /// request. Each entry carries a done-flag its connection thread
+    /// sets on exit; the accept loop reaps finished entries, so the
+    /// list (and its duplicated fds) tracks live connections only.
+    conns: Arc<Mutex<Vec<ConnSlot>>>,
 }
+
+/// One accepted socket plus the flag its serving thread sets on exit.
+type ConnSlot = (Arc<AtomicBool>, TcpStream);
 
 impl Server {
     /// Bind to `127.0.0.1:port` (0 = ephemeral) and serve `handler` on a
@@ -273,27 +301,45 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let meter = TrafficMeter::new();
+        let conns = Arc::new(Mutex::new(Vec::new()));
         let accept_stop = stop.clone();
         let accept_meter = meter.clone();
+        let accept_conns = conns.clone();
         let accept_thread = std::thread::Builder::new()
             .name(format!("http-accept-{}", addr.port()))
             .spawn(move || {
-                accept_loop(listener, accept_stop, accept_meter, link, handler);
+                accept_loop(listener, accept_stop, accept_meter, accept_conns, link, handler);
             })?;
         Ok(Server {
             addr,
             stop,
             accept_thread: Some(accept_thread),
             meter,
+            conns,
         })
     }
 
-    /// Stop accepting and join the accept loop. Existing connection
-    /// threads exit when their peers disconnect.
-    pub fn shutdown(&mut self) {
+    /// Stop serving without joining the accept thread (callable through a
+    /// shared reference — the failure-injection kill path). Severs every
+    /// accepted socket so blocked connection threads exit immediately and
+    /// no in-flight request is served after the "crash".
+    pub fn request_stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
+        for (_, conn) in self.conns.lock().unwrap().drain(..) {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Stop accepting, sever open connections, and join the accept loop.
+    pub fn shutdown(&mut self) {
+        self.request_stop();
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        // A connection accepted while the flag was being set may have
+        // registered after the first drain.
+        for (_, conn) in self.conns.lock().unwrap().drain(..) {
+            let _ = conn.shutdown(Shutdown::Both);
         }
     }
 }
@@ -308,6 +354,7 @@ fn accept_loop(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
     meter: Arc<TrafficMeter>,
+    conns: Arc<Mutex<Vec<ConnSlot>>>,
     link: LinkModel,
     handler: Handler,
 ) {
@@ -315,6 +362,33 @@ fn accept_loop(
         match listener.accept() {
             Ok((stream, _peer)) => {
                 let _ = stream.set_nodelay(true);
+                // Track the raw socket so request_stop() can sever it,
+                // reaping entries whose serving threads have exited so
+                // the list (and its duplicated fds) stays bounded by the
+                // number of *live* connections. The stop flag is
+                // re-checked under the conns lock: a connection accepted
+                // while request_stop() drains must be refused here, or a
+                // "crashed" node would keep serving it unseverably.
+                let done = Arc::new(AtomicBool::new(false));
+                let registered = match stream.try_clone() {
+                    Ok(raw) => {
+                        let mut conns = conns.lock().unwrap();
+                        if stop.load(Ordering::SeqCst) {
+                            false
+                        } else {
+                            conns.retain(|(d, _)| !d.load(Ordering::SeqCst));
+                            conns.push((done.clone(), raw));
+                            true
+                        }
+                    }
+                    // No sever handle available: refuse rather than
+                    // serve a connection a kill could never cut.
+                    Err(_) => false,
+                };
+                if !registered {
+                    let _ = stream.shutdown(Shutdown::Both);
+                    continue;
+                }
                 let meter = meter.clone();
                 let link = link.clone();
                 let handler = handler.clone();
@@ -340,6 +414,7 @@ fn accept_loop(
                                 Err(_) => break, // peer closed or bad request
                             }
                         }
+                        done.store(true, Ordering::SeqCst);
                     });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -431,5 +506,30 @@ mod tests {
     fn shutdown_joins() {
         let mut server = echo_server();
         server.shutdown();
+    }
+
+    #[test]
+    fn request_stop_severs_kept_alive_connections() {
+        let server = echo_server();
+        let mut conn =
+            Connection::open(server.addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+        conn.round_trip(&Request::post_json("/echo", "{}")).unwrap();
+        server.request_stop();
+        // The "crashed" server must not serve the in-flight connection.
+        assert!(conn.round_trip(&Request::post_json("/echo", "{}")).is_err());
+    }
+
+    #[test]
+    fn open_timeout_fails_fast_on_dead_peer() {
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let t = std::time::Instant::now();
+        let r = Connection::open_timeout(
+            dead,
+            TrafficMeter::new(),
+            LinkModel::ideal(),
+            Duration::from_millis(100),
+        );
+        assert!(r.is_err());
+        assert!(t.elapsed() < Duration::from_secs(2), "{:?}", t.elapsed());
     }
 }

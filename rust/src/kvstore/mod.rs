@@ -50,6 +50,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
+use crate::cluster::{HintConfig, HintedHandoff};
 use crate::http::{Connection, Handler, Request, Response, Server};
 use crate::json::{self, Value};
 use crate::netsim::{LinkModel, TrafficMeter};
@@ -160,6 +161,9 @@ pub struct KvConfig {
     pub default_ttl: Option<Duration>,
     /// Janitor sweep interval.
     pub sweep_interval: Duration,
+    /// Hinted handoff for unreachable peers (set when cluster membership
+    /// is enabled). `None` keeps the seed's drop-after-retries behaviour.
+    pub hints: Option<HintConfig>,
 }
 
 impl Default for KvConfig {
@@ -170,6 +174,7 @@ impl Default for KvConfig {
             replication: ReplicationConfig::default(),
             default_ttl: Some(Duration::from_secs(3600)),
             sweep_interval: Duration::from_millis(500),
+            hints: None,
         }
     }
 }
@@ -196,6 +201,8 @@ pub struct KvNode {
     delta_applies: Arc<AtomicU64>,
     /// Inbound deltas recovered via full-state fallback fetch.
     delta_fallbacks: Arc<AtomicU64>,
+    /// Hinted handoff shared with the replicator (membership mode only).
+    handoff: Option<Arc<HintedHandoff>>,
     config: KvConfig,
     janitor_stop: Arc<std::sync::atomic::AtomicBool>,
     janitor: Option<std::thread::JoinHandle<()>>,
@@ -236,10 +243,12 @@ impl KvNode {
             replication_endpoint(&ctx, req)
         });
         let server = Server::serve(config.port, config.peer_link.clone(), handler)?;
+        let handoff = config.hints.clone().map(HintedHandoff::new);
         let replicator = Replicator::start(
             name.to_string(),
             config.replication.clone(),
             config.peer_link.clone(),
+            handoff.clone(),
         );
         let janitor_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let jstop = janitor_stop.clone();
@@ -265,6 +274,7 @@ impl KvNode {
             read_repairs: AtomicU64::new(0),
             delta_applies,
             delta_fallbacks,
+            handoff,
             config,
             janitor_stop,
             janitor: Some(janitor),
@@ -299,6 +309,49 @@ impl KvNode {
             .entry(keygroup.to_string())
             .or_default()
             .push(peer);
+    }
+
+    /// Re-address every subscription of `old` to `new` (a peer restarted
+    /// on a fresh port). No-op when `old` appears nowhere.
+    pub fn replace_peer(&self, old: SocketAddr, new: SocketAddr) {
+        if old == new {
+            return;
+        }
+        for list in self.peers.lock().unwrap().values_mut() {
+            for addr in list.iter_mut() {
+                if *addr == old {
+                    *addr = new;
+                }
+            }
+        }
+    }
+
+    /// Failure-detector downcall: pushes addressed to `peer` park as
+    /// hints immediately instead of burning connect attempts. No-op
+    /// without hinted handoff.
+    pub fn mark_peer_down(&self, peer: SocketAddr) {
+        if let Some(h) = &self.handoff {
+            h.set_down(peer);
+        }
+    }
+
+    /// Failure-detector upcall: clear the down mark and replay hints
+    /// parked while the peer (previously at `old`) was away, addressed to
+    /// its current listener `new`. No-op without hinted handoff.
+    pub fn mark_peer_alive(&self, old: SocketAddr, new: SocketAddr) {
+        if let Some(h) = &self.handoff {
+            // Forward first: a push already in flight to the old listener
+            // parks under the new key, where replay will find it.
+            h.set_forward(old, new);
+            h.set_up(old);
+            h.set_up(new);
+            self.replicator.replay_hints(old, new);
+            if old != new {
+                // Drain anything parked under the new key too (forwarded
+                // parks from a prior rejoin of this same peer).
+                self.replicator.replay_hints(new, new);
+            }
+        }
     }
 
     /// Install ring placement. From then on, writes to keygroups the
@@ -546,9 +599,56 @@ impl KvNode {
         self.delta_fallbacks.load(Ordering::SeqCst)
     }
 
+    /// Updates parked as hints for unreachable peers (0 when disabled).
+    pub fn hints_queued(&self) -> u64 {
+        self.handoff.as_ref().map_or(0, |h| h.queued())
+    }
+
+    /// Hint records handed back for replay after a peer returned.
+    pub fn hints_replayed(&self) -> u64 {
+        self.handoff.as_ref().map_or(0, |h| h.replayed())
+    }
+
+    /// Hint records evicted by the per-peer bound.
+    pub fn hints_dropped(&self) -> u64 {
+        self.handoff.as_ref().map_or(0, |h| h.dropped())
+    }
+
+    /// Replication pushes dropped, all causes combined.
+    pub fn repl_dropped_total(&self) -> u64 {
+        self.replicator.dropped_total()
+    }
+
+    /// Replication pushes dropped by failure injection.
+    pub fn repl_dropped_injected(&self) -> u64 {
+        self.replicator.dropped_injected()
+    }
+
+    /// Replication pushes dropped after exhausting attempts.
+    pub fn repl_dropped_exhausted(&self) -> u64 {
+        self.replicator.dropped_exhausted()
+    }
+
+    /// Replication pushes dropped at/after shutdown or hard kill.
+    pub fn repl_dropped_shutdown(&self) -> u64 {
+        self.replicator.dropped_shutdown()
+    }
+
     /// Wait until the replicator's queue is drained (test/benchmark sync).
     pub fn quiesce(&self) {
         self.replicator.quiesce();
+    }
+
+    /// Crash emulation (test hook): sever the replication listener and
+    /// its accepted connections so peers' pushes fail immediately, and
+    /// discard this node's own outbound queue — a killed node must
+    /// neither apply nor send another write. Callable through the shared
+    /// handle; background threads are joined later when the node drops.
+    pub fn kill(&self) {
+        self.janitor_stop
+            .store(true, std::sync::atomic::Ordering::SeqCst);
+        self.replicator.abort();
+        self.server.request_stop();
     }
 
     /// Stop all background machinery.
@@ -970,6 +1070,68 @@ mod tests {
         // Stale relative to min_version: still returned as-is, no fetch.
         assert_eq!(n.get_or_fetch("m", "k", 5).unwrap().version, 2);
         assert_eq!(n.remote_fetches(), 0);
+    }
+
+    #[test]
+    fn kill_severs_the_replication_listener() {
+        let a = node("a");
+        let b = node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        a.add_peer("m", b.replication_addr());
+        b.kill();
+        // Listener teardown completes within the accept poll interval.
+        std::thread::sleep(Duration::from_millis(20));
+        a.put("m", "k", "v".into(), 1).unwrap();
+        a.quiesce();
+        assert!(b.get("m", "k").is_none(), "killed node must not apply writes");
+        assert_eq!(a.repl_dropped_exhausted(), 1);
+        assert_eq!(a.repl_dropped_total(), 1);
+    }
+
+    #[test]
+    fn hinted_handoff_replays_to_restarted_peer() {
+        let cfg = KvConfig {
+            peer_link: LinkModel::ideal(),
+            hints: Some(crate::cluster::HintConfig::default()),
+            replication: ReplicationConfig {
+                max_attempts: 2,
+                retry_backoff: Duration::ZERO,
+                ..ReplicationConfig::default()
+            },
+            ..KvConfig::default()
+        };
+        let a = KvNode::start("a", cfg).unwrap();
+        let b = node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        let old = b.replication_addr();
+        a.add_peer("m", old);
+        b.kill();
+        std::thread::sleep(Duration::from_millis(20));
+        a.mark_peer_down(old);
+        // Writes during the outage park (and coalesce via LWW supersede).
+        a.put("m", "s", "v1".into(), 1).unwrap();
+        a.put("m", "s", "v2".into(), 2).unwrap();
+        a.quiesce();
+        assert_eq!(a.repl_dropped_total(), 0, "outage writes must be hinted");
+        assert_eq!(a.hints_queued(), 2);
+        // "Restart" the peer at a fresh address and replay.
+        let b2 = node("b-restarted");
+        b2.create_keygroup("m");
+        a.replace_peer(old, b2.replication_addr());
+        a.mark_peer_alive(old, b2.replication_addr());
+        a.quiesce();
+        let e = wait_for(
+            || b2.get("m", "s").filter(|e| e.version == 2),
+            Duration::from_secs(2),
+        )
+        .expect("replayed hint must reach the restarted peer");
+        assert_eq!(e.value, "v2");
+        assert_eq!(a.hints_replayed(), 1, "v2 superseded v1 in the queue");
+        assert_eq!(a.hints_dropped(), 0);
     }
 
     fn wait_for<T>(mut f: impl FnMut() -> Option<T>, timeout: Duration) -> Option<T> {

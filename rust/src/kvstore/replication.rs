@@ -21,13 +21,23 @@
 //!   only when its local entry is exactly at `base`; otherwise it
 //!   recovers via a full-state `/fetch` from `from` (see
 //!   `kvstore::replication_endpoint`).
+//!
+//! With a [`HintedHandoff`] attached (cluster membership enabled), a push
+//! to a peer the failure detector marks `Down` — or one that exhausts its
+//! attempts during the detection window — is **parked** as a hint instead
+//! of dropped, and replayed in order when the peer returns (see
+//! [`Replicator::replay_hints`]). Without one, exhausted pushes drop as
+//! in the seed; the drop counter is split by cause
+//! (injected / exhausted / shutdown) with the combined total kept for
+//! compatibility.
 
 use std::collections::{HashMap, VecDeque};
 use std::net::SocketAddr;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use crate::cluster::{Hint, HintUpdate, HintedHandoff};
 use crate::http::{Connection, Request};
 use crate::json::Value;
 use crate::netsim::{LinkModel, TrafficMeter};
@@ -98,6 +108,26 @@ struct Job {
 }
 
 impl Job {
+    /// The job's payload for one peer, reshaped as a parkable hint.
+    fn to_hint(&self) -> Hint {
+        Hint {
+            keygroup: self.keygroup.clone(),
+            key: self.key.clone(),
+            update: match &self.update {
+                Update::Full { value } => HintUpdate::Full {
+                    value: value.clone(),
+                },
+                Update::Delta { base, frag, from } => HintUpdate::Delta {
+                    base: *base,
+                    frag: frag.clone(),
+                    from: *from,
+                },
+            },
+            version: self.version,
+            ttl_ms: self.ttl_ms,
+        }
+    }
+
     fn payload(&self) -> String {
         let mut v = Value::obj()
             .set("kg", self.keygroup.as_str())
@@ -178,14 +208,32 @@ pub struct Replicator {
     queued: Arc<AtomicU64>,
     done: Arc<AtomicU64>,
     targets: Arc<AtomicU64>,
-    /// Pushes dropped after exhausting attempts, by failure injection, or
-    /// because they arrived after shutdown.
+    /// Combined drop count (all causes), kept for compatibility with the
+    /// pre-split counter. Always equals injected + exhausted + shutdown.
     pub dropped: Arc<AtomicU64>,
+    /// Pushes dropped by failure injection (`drop_probability`).
+    dropped_injected: Arc<AtomicU64>,
+    /// Pushes dropped after exhausting connect/retry attempts (only
+    /// without hinted handoff — with it they park instead).
+    dropped_exhausted: Arc<AtomicU64>,
+    /// Pushes dropped because they arrived after shutdown, or were still
+    /// queued when the node was hard-killed.
+    dropped_shutdown: Arc<AtomicU64>,
+    /// Hard-stop flag: discard the queue instead of draining it.
+    abort_flag: Arc<AtomicBool>,
+    /// Hinted handoff for unreachable peers (None = seed drop behaviour).
+    handoff: Option<Arc<HintedHandoff>>,
 }
 
 impl Replicator {
-    /// Spawn the sender thread.
-    pub fn start(name: String, config: ReplicationConfig, link: LinkModel) -> Replicator {
+    /// Spawn the sender thread. With a [`HintedHandoff`], pushes to down
+    /// or unreachable peers are parked there instead of dropped.
+    pub fn start(
+        name: String,
+        config: ReplicationConfig,
+        link: LinkModel,
+        handoff: Option<Arc<HintedHandoff>>,
+    ) -> Replicator {
         let queue = Arc::new((
             Mutex::new(Queue {
                 jobs: VecDeque::new(),
@@ -197,10 +245,20 @@ impl Replicator {
         let queued = Arc::new(AtomicU64::new(0));
         let done = Arc::new(AtomicU64::new(0));
         let dropped = Arc::new(AtomicU64::new(0));
+        let dropped_injected = Arc::new(AtomicU64::new(0));
+        let dropped_exhausted = Arc::new(AtomicU64::new(0));
+        let dropped_shutdown = Arc::new(AtomicU64::new(0));
+        let abort_flag = Arc::new(AtomicBool::new(false));
         let t_queue = queue.clone();
         let t_meter = meter.clone();
+        let t_queued = queued.clone();
         let t_done = done.clone();
         let t_dropped = dropped.clone();
+        let t_injected = dropped_injected.clone();
+        let t_exhausted = dropped_exhausted.clone();
+        let t_shutdown = dropped_shutdown.clone();
+        let t_abort = abort_flag.clone();
+        let t_handoff = handoff.clone();
         let thread = std::thread::Builder::new()
             .name(format!("kv-repl-{name}"))
             .spawn(move || {
@@ -215,6 +273,17 @@ impl Replicator {
                         let (lock, cvar) = &*t_queue;
                         let mut q = lock.lock().unwrap();
                         loop {
+                            if t_abort.load(Ordering::SeqCst) {
+                                // Hard kill: whatever is still queued
+                                // dies with the "process".
+                                while let Some(j) = q.jobs.pop_front() {
+                                    let n = j.peers.len().max(1) as u64;
+                                    t_shutdown.fetch_add(n, Ordering::SeqCst);
+                                    t_dropped.fetch_add(n, Ordering::SeqCst);
+                                    t_done.fetch_add(j.merged, Ordering::SeqCst);
+                                }
+                                break None;
+                            }
                             if let Some(j) = q.jobs.pop_front() {
                                 break Some(j);
                             }
@@ -229,8 +298,18 @@ impl Replicator {
                         std::thread::sleep(config.delay);
                     }
                     let req = Request::post_json("/replicate", &job.payload());
+                    let mut replay_to: Vec<SocketAddr> = Vec::new();
                     for peer in &job.peers {
+                        if let Some(h) = &t_handoff {
+                            // A peer the failure detector declared down:
+                            // park immediately, no doomed attempts.
+                            if h.is_down(*peer) {
+                                h.park(*peer, job.to_hint());
+                                continue;
+                            }
+                        }
                         if config.drop_probability > 0.0 && rng.chance(config.drop_probability) {
+                            t_injected.fetch_add(1, Ordering::SeqCst);
                             t_dropped.fetch_add(1, Ordering::SeqCst);
                             continue;
                         }
@@ -259,11 +338,44 @@ impl Replicator {
                                 }
                             }
                         }
-                        if !ok {
+                        if ok {
+                            // The peer answered: if older hints are still
+                            // parked for it (it died and came back before
+                            // the detector noticed), requeue them now.
+                            if let Some(h) = &t_handoff {
+                                if !h.is_down(*peer) && h.has_hints(*peer) {
+                                    replay_to.push(*peer);
+                                }
+                            }
+                        } else if let Some(h) = &t_handoff {
+                            // Unreachable but not (yet) declared down —
+                            // the detection window. Park, don't drop.
+                            h.park(*peer, job.to_hint());
+                            // If the peer restarted elsewhere while this
+                            // push was burning attempts, the rejoin
+                            // replay has already run — requeue the
+                            // forwarded queue so this park cannot
+                            // strand. (A forward is the restart signal;
+                            // same-address parks wait for the detector,
+                            // avoiding a retry hot-loop against a peer
+                            // that is simply still dead.)
+                            let current = h.resolve_addr(*peer);
+                            if current != *peer && !h.is_down(current) {
+                                replay_to.push(current);
+                            }
+                        } else {
+                            t_exhausted.fetch_add(1, Ordering::SeqCst);
                             t_dropped.fetch_add(1, Ordering::SeqCst);
                         }
                     }
                     t_done.fetch_add(job.merged, Ordering::SeqCst);
+                    if let Some(h) = &t_handoff {
+                        for peer in replay_to {
+                            requeue_hints(
+                                &t_queue, &t_queued, &t_dropped, &t_shutdown, h, peer, peer,
+                            );
+                        }
+                    }
                 }
             })
             .expect("spawn replicator");
@@ -275,6 +387,11 @@ impl Replicator {
             done,
             targets: Arc::new(AtomicU64::new(0)),
             dropped,
+            dropped_injected,
+            dropped_exhausted,
+            dropped_shutdown,
+            abort_flag,
+            handoff,
         }
     }
 
@@ -340,6 +457,8 @@ impl Replicator {
             // drop per addressed peer and bail out so quiesce() cannot
             // spin on a queued-but-never-done update.
             drop(q);
+            self.dropped_shutdown
+                .fetch_add(n_targets.max(1), Ordering::SeqCst);
             self.dropped.fetch_add(n_targets.max(1), Ordering::SeqCst);
             return;
         }
@@ -367,11 +486,63 @@ impl Replicator {
         self.targets.load(Ordering::SeqCst)
     }
 
+    /// Pushes dropped by failure injection.
+    pub fn dropped_injected(&self) -> u64 {
+        self.dropped_injected.load(Ordering::SeqCst)
+    }
+
+    /// Pushes dropped after exhausting all attempts (hint-less mode).
+    pub fn dropped_exhausted(&self) -> u64 {
+        self.dropped_exhausted.load(Ordering::SeqCst)
+    }
+
+    /// Pushes dropped at or after shutdown (late pushes + aborted queue).
+    pub fn dropped_shutdown(&self) -> u64 {
+        self.dropped_shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Combined drop count across all causes.
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped.load(Ordering::SeqCst)
+    }
+
+    /// Re-enqueue every hint parked for `parked_at`, in park order, ahead
+    /// of the queue, addressed to `deliver_to` (differs from `parked_at`
+    /// when the peer restarted on a new port). Called by the cluster
+    /// coordinator when the failure detector reports the peer up.
+    pub fn replay_hints(&self, parked_at: SocketAddr, deliver_to: SocketAddr) {
+        if let Some(h) = &self.handoff {
+            requeue_hints(
+                &self.queue,
+                &self.queued,
+                &self.dropped,
+                &self.dropped_shutdown,
+                h,
+                parked_at,
+                deliver_to,
+            );
+        }
+    }
+
     /// Block until every queued push has been processed.
     pub fn quiesce(&self) {
         while self.done.load(Ordering::SeqCst) < self.queued.load(Ordering::SeqCst) {
             std::thread::sleep(Duration::from_millis(1));
         }
+    }
+
+    /// Hard stop (node-kill emulation): close the queue and discard
+    /// whatever is still in it (counted as shutdown drops) instead of
+    /// draining. Callable through a shared reference; the thread is
+    /// joined later by `shutdown()`/`Drop`.
+    pub fn abort(&self) {
+        self.abort_flag.store(true, Ordering::SeqCst);
+        let (lock, cvar) = &*self.queue;
+        {
+            let mut q = lock.lock().unwrap();
+            q.open = false;
+        }
+        cvar.notify_all();
     }
 
     /// Stop the sender thread (drains remaining queue first).
@@ -386,6 +557,50 @@ impl Replicator {
             let _ = t.join();
         }
     }
+}
+
+/// Move `parked_at`'s hints back into the job queue (front, in order) as
+/// single-peer jobs addressed to `deliver_to`. Hints arriving after the
+/// queue closed are accounted as shutdown drops — they can never be
+/// delivered by this sender again.
+fn requeue_hints(
+    queue: &Arc<(Mutex<Queue>, Condvar)>,
+    queued: &Arc<AtomicU64>,
+    dropped: &Arc<AtomicU64>,
+    dropped_shutdown: &Arc<AtomicU64>,
+    handoff: &HintedHandoff,
+    parked_at: SocketAddr,
+    deliver_to: SocketAddr,
+) {
+    let hints = handoff.take(parked_at);
+    if hints.is_empty() {
+        return;
+    }
+    let (lock, cvar) = &**queue;
+    let mut q = lock.lock().unwrap();
+    if !q.open {
+        let n = hints.len() as u64;
+        dropped_shutdown.fetch_add(n, Ordering::SeqCst);
+        dropped.fetch_add(n, Ordering::SeqCst);
+        return;
+    }
+    for (i, hint) in hints.into_iter().enumerate() {
+        queued.fetch_add(1, Ordering::SeqCst);
+        let job = Job {
+            peers: vec![deliver_to],
+            keygroup: hint.keygroup,
+            key: hint.key,
+            update: match hint.update {
+                HintUpdate::Full { value } => Update::Full { value },
+                HintUpdate::Delta { base, frag, from } => Update::Delta { base, frag, from },
+            },
+            version: hint.version,
+            ttl_ms: hint.ttl_ms,
+            merged: 1,
+        };
+        q.jobs.insert(i, job);
+    }
+    cvar.notify_all();
 }
 
 impl Drop for Replicator {
@@ -414,7 +629,8 @@ mod tests {
             }),
         )
         .unwrap();
-        let repl = Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal());
+        let repl =
+            Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal(), None);
         repl.push(vec![server.addr], "kg", "k", "v", 1, None);
         repl.quiesce();
         let msgs = received.lock().unwrap();
@@ -449,11 +665,15 @@ mod tests {
             drop_probability: 1.0,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal());
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
         // Peer doesn't even need to exist: drop happens first.
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
         assert_eq!(repl.dropped.load(Ordering::SeqCst), 1);
+        // The split counters attribute the precise cause.
+        assert_eq!(repl.dropped_injected(), 1);
+        assert_eq!(repl.dropped_exhausted(), 0);
+        assert_eq!(repl.dropped_shutdown(), 0);
     }
 
     #[test]
@@ -463,10 +683,13 @@ mod tests {
             retry_backoff: Duration::ZERO,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal());
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
         assert_eq!(repl.dropped.load(Ordering::SeqCst), 1);
+        assert_eq!(repl.dropped_exhausted(), 1);
+        assert_eq!(repl.dropped_injected(), 0);
+        assert_eq!(repl.dropped_shutdown(), 0);
     }
 
     #[test]
@@ -478,7 +701,7 @@ mod tests {
             retry_backoff: Duration::from_millis(20),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal());
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
         let t = std::time::Instant::now();
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -492,12 +715,130 @@ mod tests {
         // Regression: `push()` used to increment `queued` before noticing
         // the closed channel, so a late push made quiesce() spin forever.
         let mut repl =
-            Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal());
+            Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal(), None);
         repl.shutdown();
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce(); // must return immediately
         assert_eq!(repl.dropped.load(Ordering::SeqCst), 1);
+        assert_eq!(repl.dropped_shutdown(), 1);
+        assert_eq!(repl.dropped_exhausted(), 0);
         assert_eq!(repl.push_targets(), 0, "dropped push is not a target");
+    }
+
+    #[test]
+    fn abort_discards_queue_as_shutdown_drops() {
+        // A hard kill must not drain queued pushes to peers — they die
+        // with the "process" and are attributed to the shutdown cause.
+        let cfg = ReplicationConfig {
+            // Slow first job keeps the rest queued while we abort.
+            delay: Duration::from_millis(50),
+            max_attempts: 1,
+            retry_backoff: Duration::ZERO,
+            ..ReplicationConfig::default()
+        };
+        let mut repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        for i in 0..3 {
+            repl.push(vec![dead], "kg", &format!("k{i}"), "v", 1, None);
+        }
+        repl.abort();
+        repl.shutdown();
+        repl.quiesce(); // all jobs accounted for despite the discard
+        assert_eq!(
+            repl.dropped_shutdown() + repl.dropped_exhausted(),
+            3,
+            "every queued push must be accounted to a drop cause"
+        );
+        assert!(repl.dropped_shutdown() >= 2, "queued jobs discarded on abort");
+    }
+
+    #[test]
+    fn exhausted_push_parks_as_hint_instead_of_dropping() {
+        use crate::cluster::{HintConfig, HintedHandoff};
+        let handoff = HintedHandoff::new(HintConfig::default());
+        let cfg = ReplicationConfig {
+            max_attempts: 2,
+            retry_backoff: Duration::ZERO,
+            ..ReplicationConfig::default()
+        };
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), Some(handoff.clone()));
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        repl.push(vec![dead], "kg", "k", "v", 3, None);
+        repl.quiesce();
+        assert_eq!(repl.dropped.load(Ordering::SeqCst), 0, "hinted, not dropped");
+        assert_eq!(handoff.queued(), 1);
+        assert_eq!(handoff.len(dead), 1);
+    }
+
+    #[test]
+    fn down_peer_parks_without_attempting() {
+        use crate::cluster::{HintConfig, HintedHandoff};
+        let handoff = HintedHandoff::new(HintConfig::default());
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        handoff.set_down(dead);
+        let cfg = ReplicationConfig {
+            // Would take ≥ 200 ms if the sender attempted + backed off.
+            max_attempts: 100,
+            retry_backoff: Duration::from_millis(2),
+            ..ReplicationConfig::default()
+        };
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), Some(handoff.clone()));
+        let t = std::time::Instant::now();
+        repl.push(vec![dead], "kg", "k", "v", 1, None);
+        repl.quiesce();
+        assert!(t.elapsed() < Duration::from_millis(100), "{:?}", t.elapsed());
+        assert_eq!(handoff.len(dead), 1);
+    }
+
+    #[test]
+    fn replay_hints_delivers_in_order_to_the_new_address() {
+        use crate::cluster::{Hint, HintConfig, HintUpdate, HintedHandoff};
+        let received = Arc::new(Mutex::new(Vec::<String>::new()));
+        let r2 = received.clone();
+        let server = Server::serve(
+            0,
+            LinkModel::ideal(),
+            Arc::new(move |req: &Request| {
+                r2.lock().unwrap().push(req.body_str().unwrap().to_string());
+                Response::json("{\"applied\":true}")
+            }),
+        )
+        .unwrap();
+        let handoff = HintedHandoff::new(HintConfig::default());
+        // Hints were parked for the peer's *old* (now dead) address.
+        let old: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        for v in 1..=3u64 {
+            handoff.park(
+                old,
+                Hint {
+                    keygroup: "kg".into(),
+                    key: format!("s{v}"),
+                    update: HintUpdate::Full {
+                        value: format!("v{v}"),
+                    },
+                    version: v,
+                    ttl_ms: None,
+                },
+            );
+        }
+        let repl = Replicator::start(
+            "t".into(),
+            ReplicationConfig::default(),
+            LinkModel::ideal(),
+            Some(handoff.clone()),
+        );
+        repl.replay_hints(old, server.addr);
+        repl.quiesce();
+        let msgs = received.lock().unwrap();
+        assert_eq!(msgs.len(), 3);
+        for (i, m) in msgs.iter().enumerate() {
+            assert!(
+                m.contains(&format!("\"key\":\"s{}\"", i + 1)),
+                "replay out of order: {m}"
+            );
+        }
+        assert_eq!(handoff.replayed(), 3);
+        assert!(!handoff.has_hints(old));
     }
 
     #[test]
@@ -512,7 +853,7 @@ mod tests {
             delay: Duration::from_millis(30),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal());
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
         let t = std::time::Instant::now();
         repl.push(vec![server.addr], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -585,7 +926,7 @@ mod tests {
             delay: Duration::from_millis(40),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal());
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
         let frag = |id: u32| StoredContext::Tokens(vec![id]).to_fragment(TokenCodec::BinaryU16);
         let from: SocketAddr = "127.0.0.1:9".parse().unwrap();
         repl.push(vec![server.addr], "kg", "k", "v1", 1, None);

@@ -131,6 +131,24 @@ impl HashRing {
     pub fn is_replica(&self, node: &str, key: &str, n: usize) -> bool {
         self.preference_list(key, n).iter().any(|&r| r == node)
     }
+
+    /// The next `k` members clockwise from `name` when members are laid
+    /// out by their primary ring position — the peers `name` heartbeats
+    /// in the failure detector. One position per member (not the virtual
+    /// points): in a circular order every member is the immediate
+    /// successor of exactly one other, so with `k ≥ 1` the union of all
+    /// successor sets provably covers every node. Empty when `name` is
+    /// not a member.
+    pub fn successors(&self, name: &str, k: usize) -> Vec<&str> {
+        if !self.names.iter().any(|n| n == name) {
+            return Vec::new();
+        }
+        let mut order: Vec<&str> = self.names.iter().map(String::as_str).collect();
+        order.sort_by(|a, b| (point_hash(a, 0), *a).cmp(&(point_hash(b, 0), *b)));
+        let pos = order.iter().position(|n| *n == name).unwrap();
+        let want = k.min(order.len() - 1);
+        (1..=want).map(|i| order[(pos + i) % order.len()]).collect()
+    }
 }
 
 /// Cluster-wide placement: one ring per keygroup (only the nodes serving
@@ -142,6 +160,10 @@ pub struct Placement {
     rings: HashMap<String, HashRing>,
     addrs: HashMap<String, SocketAddr>,
     replication_factor: usize,
+    /// Topology version this placement was built from. 0 for a static
+    /// launch-time placement; membership-driven rebuilds stamp the
+    /// cluster epoch here so `/metrics` (and tests) can observe swaps.
+    epoch: u64,
 }
 
 impl Placement {
@@ -151,12 +173,23 @@ impl Placement {
             rings: HashMap::new(),
             addrs: HashMap::new(),
             replication_factor: replication_factor.max(1),
+            epoch: 0,
         }
     }
 
     /// The configured replication factor.
     pub fn replication_factor(&self) -> usize {
         self.replication_factor
+    }
+
+    /// The membership epoch this placement was built from (0 = static).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Stamp the membership epoch this placement was built from.
+    pub fn set_epoch(&mut self, epoch: u64) {
+        self.epoch = epoch;
     }
 
     /// Register a keygroup with its member nodes and their replication
@@ -367,6 +400,39 @@ mod tests {
         assert!(p.replicas("model-z", "u1/s1").is_empty());
         // The same session key may place differently per keygroup.
         assert!(p.has_keygroup("model-x") && !p.has_keygroup("model-z"));
+    }
+
+    #[test]
+    fn successors_cover_every_member_and_exclude_self() {
+        let ring = HashRing::new(&names(6), 32);
+        let mut probed: HashMap<String, usize> = HashMap::new();
+        for name in ring.nodes().to_vec() {
+            let succ = ring.successors(&name, 2);
+            assert_eq!(succ.len(), 2);
+            assert!(!succ.contains(&name.as_str()), "{name} probing itself");
+            let mut dedup = succ.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), succ.len());
+            for s in succ {
+                *probed.entry(s.to_string()).or_default() += 1;
+            }
+        }
+        // Everyone is somebody's successor: no member goes unprobed.
+        assert_eq!(probed.len(), 6, "{probed:?}");
+        // Degenerate sizes.
+        let two = HashRing::new(&["a", "b"], 8);
+        assert_eq!(two.successors("a", 2), vec!["b"]);
+        assert!(HashRing::new(&["solo"], 8).successors("solo", 2).is_empty());
+        assert!(two.successors("ghost", 2).is_empty());
+    }
+
+    #[test]
+    fn placement_epoch_round_trips() {
+        let mut p = Placement::new(2);
+        assert_eq!(p.epoch(), 0, "static placements are epoch 0");
+        p.set_epoch(7);
+        assert_eq!(p.epoch(), 7);
     }
 
     #[test]

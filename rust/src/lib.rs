@@ -10,7 +10,10 @@
 //!   ([`kvstore::HashRing`]) with a bounded replication factor, an [`llm`]
 //!   service that accepts pre-tokenized context, and an HTTP [`server`] /
 //!   [`client`] pair implementing the paper's extended `/completion` API
-//!   with a client-driven turn-counter consistency protocol.
+//!   with a client-driven turn-counter consistency protocol. The
+//!   [`cluster`] module adds runtime membership: heartbeat failure
+//!   detection, epoch-versioned placement swaps, and hinted handoff for
+//!   writes addressed to down replicas.
 //! - **Layer 2 (build time, `python/compile/model.py`)** — a Qwen-style
 //!   decoder-only transformer in JAX, AOT-lowered to HLO text.
 //! - **Layer 1 (build time, `python/compile/kernels/`)** — Pallas attention
@@ -26,6 +29,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod client;
+pub mod cluster;
 pub mod config;
 pub mod context;
 pub mod http;

@@ -39,12 +39,15 @@ fn main() {
                  \u{20}             --replication-factor N (default: replicate to all)\n\
                  \u{20}             --virtual-nodes V (ring points per node, default 128)\n\
                  \u{20}             --delta-sync (replicate per-turn deltas, not full state)\n\
+                 \u{20}             --membership (heartbeat failure detection + hinted handoff)\n\
+                 \u{20}             --heartbeat-ms N / --suspect-after K / --down-after-ms N\n\
+                 \u{20}             --hints-max-per-peer N (parked updates per down peer, default 512)\n\
                  run-scenario  --mode tokenized|raw|client_side (default tokenized)\n\
                  \u{20}             --mobility sticky|paper (default sticky)\n\
                  \u{20}             --engine mock|pjrt (default pjrt)\n\
                  \u{20}             --max-tokens N (default 128)\n\
                  \u{20}             --replication-factor N / --virtual-nodes V (as above)\n\
-                 \u{20}             --delta-sync (as above)\n\
+                 \u{20}             --delta-sync / --membership etc. (as above)\n\
                  profiles      print the hardware profile table"
             );
             2
@@ -82,6 +85,33 @@ fn load_config(args: &Args) -> Result<ClusterConfig, String> {
     }
     if args.flag("delta-sync") {
         cfg.replication.delta_sync = true;
+    }
+    if args.flag("membership") {
+        cfg.membership.enabled = true;
+    }
+    if let Some(ms) = args
+        .opt_parse::<u64>("heartbeat-ms")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.membership.heartbeat = std::time::Duration::from_millis(ms);
+    }
+    if let Some(k) = args
+        .opt_parse::<u32>("suspect-after")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.membership.suspect_after = k;
+    }
+    if let Some(ms) = args
+        .opt_parse::<u64>("down-after-ms")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.membership.down_after = std::time::Duration::from_millis(ms);
+    }
+    if let Some(n) = args
+        .opt_parse::<usize>("hints-max-per-peer")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.hints.max_per_peer = n;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)

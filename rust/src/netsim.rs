@@ -70,6 +70,26 @@ impl LinkModel {
         }
     }
 
+    /// A partitioned link: nothing gets through within any realistic test
+    /// budget (one hour one-way). Lets failure tests make a peer
+    /// unreachable-but-bound — a sender thread writing into it simply
+    /// never completes, like a blackholing network path.
+    ///
+    /// Use it on throwaway connections only: the delay is charged inside
+    /// `write`, so a thread sending into a partitioned link blocks for
+    /// the full hour and anything that joins that thread (e.g.
+    /// `Replicator::shutdown`) blocks with it. Crash-style tests that
+    /// need a joinable teardown should sever the listener instead
+    /// (`http::Server::request_stop`), which is what `tests/failover.rs`
+    /// does.
+    pub fn partitioned() -> LinkModel {
+        LinkModel {
+            latency: Duration::from_secs(3600),
+            bandwidth_bps: None,
+            jitter: Duration::ZERO,
+        }
+    }
+
     /// Transmission delay for a message of `bytes` (excluding jitter).
     pub fn delay_for(&self, bytes: usize) -> Duration {
         let ser = match self.bandwidth_bps {
@@ -177,6 +197,90 @@ mod tests {
         // 500 bytes at 1000 B/s = 500 ms + 1 ms latency.
         assert_eq!(l.delay_for(500), Duration::from_millis(501));
         assert_eq!(LinkModel::ideal().delay_for(1_000_000), Duration::ZERO);
+    }
+
+    /// |computed − expected| within one microsecond (float serialization
+    /// delay rounds through `Duration::from_secs_f64`).
+    fn close(actual: Duration, expected: Duration) -> bool {
+        let (a, e) = (actual.as_secs_f64(), expected.as_secs_f64());
+        (a - e).abs() < 1e-6
+    }
+
+    #[test]
+    fn delay_for_matches_every_builtin_profile() {
+        // ideal: pure accounting, no delay at any size.
+        assert_eq!(LinkModel::ideal().delay_for(0), Duration::ZERO);
+        assert_eq!(LinkModel::ideal().delay_for(usize::MAX / 2), Duration::ZERO);
+        // lan: 200 µs + bytes / 125 MB/s (1 Gbit/s).
+        let lan = LinkModel::lan();
+        assert!(close(lan.delay_for(0), Duration::from_micros(200)));
+        assert!(close(
+            lan.delay_for(125_000), // 1 ms of serialization
+            Duration::from_micros(200) + Duration::from_millis(1)
+        ));
+        // mobile_uplink: 2 ms + bytes / 2.5 MB/s (20 Mbit/s).
+        let mob = LinkModel::mobile_uplink();
+        assert!(close(mob.delay_for(0), Duration::from_millis(2)));
+        assert!(close(
+            mob.delay_for(2_500_000),
+            Duration::from_millis(2) + Duration::from_secs(1)
+        ));
+        // wan(rtt): rtt/2 one-way + bytes / 12.5 MB/s (100 Mbit/s).
+        let wan = LinkModel::wan(80);
+        assert!(close(wan.delay_for(0), Duration::from_millis(40)));
+        assert!(close(
+            wan.delay_for(12_500),
+            Duration::from_millis(41) // 40 ms latency + 1 ms serialization
+        ));
+        // Zero-bandwidth degenerates to latency-only, not a divide.
+        let degenerate = LinkModel {
+            latency: Duration::from_millis(3),
+            bandwidth_bps: Some(0),
+            jitter: Duration::ZERO,
+        };
+        assert_eq!(degenerate.delay_for(10_000), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn partitioned_link_blackholes_within_any_test_budget() {
+        let p = LinkModel::partitioned();
+        assert!(p.delay_for(0) >= Duration::from_secs(3600));
+        assert!(p.delay_for(1) >= Duration::from_secs(3600));
+        assert!(p.jitter.is_zero(), "partition must be deterministic");
+    }
+
+    #[test]
+    fn metered_stream_accumulates_across_writes_and_partial_reads() {
+        let meter = TrafficMeter::new();
+        let mut s = MeteredStream::new(Cursor::new(Vec::new()), meter.clone(), LinkModel::ideal());
+        for chunk in [&b"abc"[..], &b"defgh"[..]] {
+            s.write_all(chunk).unwrap();
+        }
+        assert_eq!(meter.tx.get(), 8, "tx must sum every write");
+        assert_eq!(meter.messages.get(), 2);
+
+        let data = Cursor::new(b"0123456789".to_vec());
+        let mut r = MeteredStream::new(data, meter.clone(), LinkModel::ideal());
+        let mut buf = [0u8; 4];
+        r.read(&mut buf).unwrap();
+        r.read(&mut buf).unwrap();
+        let mut rest = Vec::new();
+        r.read_to_end(&mut rest).unwrap();
+        assert_eq!(meter.rx.get(), 10, "rx must sum partial reads");
+        assert_eq!(meter.total(), 18, "total = tx + rx");
+    }
+
+    #[test]
+    fn independent_streams_share_a_meter() {
+        // The replicator hangs one meter across all peer connections;
+        // accounting must aggregate.
+        let meter = TrafficMeter::new();
+        let mut a = MeteredStream::new(Cursor::new(Vec::new()), meter.clone(), LinkModel::ideal());
+        let mut b = MeteredStream::new(Cursor::new(Vec::new()), meter.clone(), LinkModel::ideal());
+        a.write_all(b"xx").unwrap();
+        b.write_all(b"yyy").unwrap();
+        assert_eq!(meter.tx.get(), 5);
+        assert_eq!(meter.messages.get(), 2);
     }
 
     #[test]

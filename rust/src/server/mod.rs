@@ -18,9 +18,11 @@ use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::sync::Arc;
 
+use crate::cluster::{ClusterCoordinator, MembershipView};
 use crate::config::{ClusterConfig, EngineKind, NodeConfig};
 use crate::context::{CompletionRequest, ContextManager, TokenCodec};
 use crate::http::{Handler, Request, Response, Server};
+use crate::json::Value;
 use crate::kvstore::{KvConfig, KvNode, Placement};
 use crate::llm::{ChatTemplate, Engine, MockEngine, PjrtEngine};
 use crate::profile::NodeProfile;
@@ -42,12 +44,15 @@ pub struct EdgeNode {
 }
 
 impl EdgeNode {
-    /// Start a node with prepared engines and template.
+    /// Start a node with prepared engines and template. `membership` is
+    /// the shared view when cluster membership is enabled; it backs the
+    /// `/cluster/*` endpoints and the metrics gauges.
     pub fn start(
         node_cfg: &NodeConfig,
         cluster_cfg: &ClusterConfig,
         engines: Arc<HashMap<String, Arc<dyn Engine>>>,
         template: ChatTemplate,
+        membership: Option<Arc<MembershipView>>,
     ) -> Result<EdgeNode> {
         let kv = Arc::new(KvNode::start(
             &node_cfg.name,
@@ -56,6 +61,10 @@ impl EdgeNode {
                 peer_link: cluster_cfg.peer_link.clone(),
                 replication: cluster_cfg.replication.clone(),
                 default_ttl: Some(cluster_cfg.session_ttl),
+                hints: cluster_cfg
+                    .membership
+                    .enabled
+                    .then(|| cluster_cfg.hints.clone()),
                 ..KvConfig::default()
             },
         )?);
@@ -75,8 +84,9 @@ impl EdgeNode {
         let h_cm = cm.clone();
         let h_engines = engines.clone();
         let h_kv = kv.clone();
+        let h_membership = membership.clone();
         let handler: Handler = Arc::new(move |req: &Request| {
-            dispatch(req, &h_cm, &h_engines, &h_kv)
+            dispatch(req, &h_cm, &h_engines, &h_kv, &h_membership)
         });
         let api = Server::serve(node_cfg.api_port, cluster_cfg.client_link.clone(), handler)?;
         Ok(EdgeNode {
@@ -109,6 +119,14 @@ impl EdgeNode {
     pub fn quiesce(&self) {
         self.cm.quiesce();
     }
+
+    /// Crash emulation (test hook): sever the API and KV listeners and
+    /// discard queued outbound replication, as a process kill would. The
+    /// node object stays alive only so the caller can inspect state.
+    pub fn kill(&self) {
+        self.api.request_stop();
+        self.kv.kill();
+    }
 }
 
 fn dispatch(
@@ -116,6 +134,7 @@ fn dispatch(
     cm: &Arc<ContextManager>,
     engines: &Arc<HashMap<String, Arc<dyn Engine>>>,
     kv: &Arc<KvNode>,
+    membership: &Option<Arc<MembershipView>>,
 ) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/completion") => {
@@ -160,8 +179,95 @@ fn dispatch(
             dump.push_str(&format!("kv_read_repairs {}\n", kv.read_repairs()));
             dump.push_str(&format!("kv_delta_applies {}\n", kv.delta_applies()));
             dump.push_str(&format!("kv_delta_fallbacks {}\n", kv.delta_fallbacks()));
+            dump.push_str(&format!("kv_hints_queued {}\n", kv.hints_queued()));
+            dump.push_str(&format!("kv_hints_replayed {}\n", kv.hints_replayed()));
+            dump.push_str(&format!("kv_hints_dropped {}\n", kv.hints_dropped()));
+            dump.push_str(&format!("kv_repl_dropped {}\n", kv.repl_dropped_total()));
+            dump.push_str(&format!(
+                "kv_repl_dropped_injected {}\n",
+                kv.repl_dropped_injected()
+            ));
+            dump.push_str(&format!(
+                "kv_repl_dropped_exhausted {}\n",
+                kv.repl_dropped_exhausted()
+            ));
+            dump.push_str(&format!(
+                "kv_repl_dropped_shutdown {}\n",
+                kv.repl_dropped_shutdown()
+            ));
+            // Topology gauges. Without membership the epoch is the
+            // installed placement's stamp (0 = static) and liveness is
+            // unobserved (0).
+            let (epoch, alive) = match membership {
+                Some(view) => (view.epoch(), view.alive_count() as u64),
+                None => (kv.placement().map_or(0, |p| p.epoch()), 0),
+            };
+            dump.push_str(&format!("cluster_epoch {epoch}\n"));
+            dump.push_str(&format!("cluster_alive {alive}\n"));
             Response::text(&dump)
         }
+        ("GET", "/cluster/members") => match membership {
+            Some(view) => {
+                let members: Vec<Value> = view
+                    .members()
+                    .iter()
+                    .map(|m| {
+                        Value::obj()
+                            .set("name", m.name.as_str())
+                            .set("state", m.state.as_str())
+                            .set("kv_addr", m.kv_addr.to_string())
+                            .set("ping_addr", m.ping_addr.to_string())
+                            .set(
+                                "models",
+                                m.models
+                                    .iter()
+                                    .map(|s| Value::Str(s.clone()))
+                                    .collect::<Vec<Value>>(),
+                            )
+                    })
+                    .collect();
+                Response::json(
+                    &Value::obj()
+                        .set("epoch", view.epoch())
+                        .set("members", members)
+                        .to_json(),
+                )
+            }
+            None => Response::error(503, "membership disabled on this cluster"),
+        },
+        ("POST", "/cluster/join") => match membership {
+            Some(view) => {
+                let v = match req.body_str().and_then(crate::json::parse) {
+                    Ok(v) => v,
+                    Err(e) => return Response::error(400, &e.to_string()),
+                };
+                let (name, kv_addr, ping_addr) = match (
+                    v.req_str("name"),
+                    v.req_str("kv_addr"),
+                    v.req_str("ping_addr"),
+                ) {
+                    (Ok(n), Ok(k), Ok(p)) => (n, k, p),
+                    _ => return Response::error(400, "missing name/kv_addr/ping_addr"),
+                };
+                let (Ok(kv_addr), Ok(ping_addr)) =
+                    (kv_addr.parse::<SocketAddr>(), ping_addr.parse::<SocketAddr>())
+                else {
+                    return Response::error(400, "addresses must be host:port");
+                };
+                let models: Vec<String> = v
+                    .get("models")
+                    .and_then(|m| m.as_array())
+                    .map(|ms| {
+                        ms.iter()
+                            .filter_map(|m| m.as_str().map(str::to_string))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let epoch = view.join(&name, ping_addr, kv_addr, &models);
+                Response::json(&Value::obj().set("epoch", epoch).to_json())
+            }
+            None => Response::error(503, "membership disabled on this cluster"),
+        },
         _ => Response::error(404, "not found"),
     }
 }
@@ -170,11 +276,18 @@ fn dispatch(
 pub struct EdgeCluster {
     /// The running nodes, in config order.
     pub nodes: Vec<EdgeNode>,
-    /// Ring placement installed on every node, when sharding is enabled
+    /// Ring placement installed at launch, when sharding is enabled
     /// (`sharding.replication_factor = Some(n)`); `None` means the seed's
     /// replicate-to-all wiring. Public so tests and benches can compute
-    /// the expected preference list of a session.
+    /// the expected preference list of a session. With membership
+    /// enabled this is the *launch-time* snapshot — failure-driven
+    /// rebuilds swap fresh placements into the nodes; read those through
+    /// [`EdgeCluster::current_placement`].
     pub placement: Option<Arc<Placement>>,
+    cfg: ClusterConfig,
+    engines: Arc<HashMap<String, Arc<dyn Engine>>>,
+    template: ChatTemplate,
+    coordinator: Option<Arc<ClusterCoordinator>>,
 }
 
 impl EdgeCluster {
@@ -194,6 +307,10 @@ impl EdgeCluster {
         template: ChatTemplate,
     ) -> Result<EdgeCluster> {
         cfg.validate()?;
+        let membership = cfg
+            .membership
+            .enabled
+            .then(|| MembershipView::new(cfg.membership.clone()));
         let mut nodes = Vec::with_capacity(cfg.nodes.len());
         for node_cfg in &cfg.nodes {
             for m in &node_cfg.models {
@@ -209,54 +326,82 @@ impl EdgeCluster {
                 &cfg,
                 engines.clone(),
                 template.clone(),
+                membership.clone(),
             )?);
         }
-        let placement = match cfg.sharding.replication_factor {
-            // Ring placement: one ring per model over the nodes serving
-            // it; every node shares the same placement table, so each
-            // computes identical preference lists with no coordination.
-            Some(rf) => {
-                let mut models: Vec<&String> =
-                    cfg.nodes.iter().flat_map(|n| n.models.iter()).collect();
-                models.sort_unstable();
-                models.dedup();
-                let mut placement = Placement::new(rf);
-                for model in models {
-                    let members: Vec<(String, SocketAddr)> = cfg
-                        .nodes
-                        .iter()
-                        .zip(&nodes)
-                        .filter(|(nc, _)| nc.models.contains(model))
-                        .map(|(nc, n)| (nc.name.clone(), n.kv.replication_addr()))
-                        .collect();
-                    placement.add_keygroup(model, &members, cfg.sharding.virtual_nodes);
-                }
-                let placement = Arc::new(placement);
-                for n in &nodes {
-                    n.kv.set_placement(placement.clone());
-                }
-                Some(placement)
-            }
-            // Replicate-to-all (seed behaviour): nodes sharing a model
-            // subscribe to each other's updates for that keygroup.
-            None => {
-                for (i, a) in cfg.nodes.iter().enumerate() {
-                    for (j, b) in cfg.nodes.iter().enumerate() {
-                        if i == j {
-                            continue;
-                        }
-                        for model in &a.models {
-                            if b.models.contains(model) {
-                                let peer = nodes[j].kv.replication_addr();
-                                nodes[i].kv.add_peer(model, peer);
-                            }
+        // Replicate-to-all (seed behaviour): nodes sharing a model
+        // subscribe to each other's updates for that keygroup.
+        if cfg.sharding.replication_factor.is_none() {
+            for (i, a) in cfg.nodes.iter().enumerate() {
+                for (j, b) in cfg.nodes.iter().enumerate() {
+                    if i == j {
+                        continue;
+                    }
+                    for model in &a.models {
+                        if b.models.contains(model) {
+                            let peer = nodes[j].kv.replication_addr();
+                            nodes[i].kv.add_peer(model, peer);
                         }
                     }
                 }
-                None
+            }
+        }
+        let (placement, coordinator) = match &membership {
+            // Membership mode: the coordinator owns placement. Each
+            // registration starts the node's ping listener + failure
+            // detector, joins the view, and (with sharding) swaps an
+            // epoch-stamped placement into every registered replica.
+            Some(view) => {
+                let coordinator = ClusterCoordinator::start(view.clone(), cfg.sharding.clone());
+                for (node_cfg, node) in cfg.nodes.iter().zip(&nodes) {
+                    coordinator.register_node(&node_cfg.name, node.kv.clone(), &node_cfg.models)?;
+                }
+                (
+                    nodes.first().and_then(|n| n.kv.placement()),
+                    Some(coordinator),
+                )
+            }
+            None => {
+                let placement = match cfg.sharding.replication_factor {
+                    // Static ring placement: one ring per model over the
+                    // nodes serving it; every node shares the same
+                    // placement table, so each computes identical
+                    // preference lists with no coordination.
+                    Some(rf) => {
+                        let mut models: Vec<&String> =
+                            cfg.nodes.iter().flat_map(|n| n.models.iter()).collect();
+                        models.sort_unstable();
+                        models.dedup();
+                        let mut placement = Placement::new(rf);
+                        for model in models {
+                            let members: Vec<(String, SocketAddr)> = cfg
+                                .nodes
+                                .iter()
+                                .zip(&nodes)
+                                .filter(|(nc, _)| nc.models.contains(model))
+                                .map(|(nc, n)| (nc.name.clone(), n.kv.replication_addr()))
+                                .collect();
+                            placement.add_keygroup(model, &members, cfg.sharding.virtual_nodes);
+                        }
+                        let placement = Arc::new(placement);
+                        for n in &nodes {
+                            n.kv.set_placement(placement.clone());
+                        }
+                        Some(placement)
+                    }
+                    None => None,
+                };
+                (placement, None)
             }
         };
-        Ok(EdgeCluster { nodes, placement })
+        Ok(EdgeCluster {
+            nodes,
+            placement,
+            cfg,
+            engines,
+            template,
+            coordinator,
+        })
     }
 
     /// Named API endpoints in node order.
@@ -270,6 +415,144 @@ impl EdgeCluster {
     /// Node by name.
     pub fn node(&self, name: &str) -> Option<&EdgeNode> {
         self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// The membership view, when membership is enabled.
+    pub fn membership(&self) -> Option<&Arc<MembershipView>> {
+        self.coordinator.as_ref().map(|c| c.view())
+    }
+
+    /// The placement currently installed on the nodes (tracks membership
+    /// rebuilds, unlike the launch-time [`EdgeCluster::placement`] field).
+    pub fn current_placement(&self) -> Option<Arc<Placement>> {
+        self.nodes.first().and_then(|n| n.kv.placement())
+    }
+
+    /// Crash one node (test hook): sever its listeners, discard its
+    /// outbound queue, stop its detector, and remove it from the running
+    /// set. The remaining detectors discover the death on their own.
+    /// Returns the node's config so a test can restart it via
+    /// [`EdgeCluster::add_node`]. Without membership, the placement stays
+    /// frozen — exactly the static cluster's behaviour under a crash.
+    pub fn kill_node(&mut self, name: &str) -> Option<NodeConfig> {
+        let idx = self.nodes.iter().position(|n| n.name == name)?;
+        if let Some(coordinator) = &self.coordinator {
+            coordinator.remove_node(name);
+        }
+        let node = self.nodes.remove(idx);
+        node.kill();
+        drop(node);
+        self.cfg.nodes.iter().find(|n| n.name == name).cloned()
+    }
+
+    /// Start a new node (or restart a killed one — same name, fresh
+    /// ports) and wire it into the running fleet: keygroup peering in
+    /// replicate-to-all mode, membership registration (which triggers the
+    /// epoch bump, placement swap, and hint replay for a rejoin), or a
+    /// static placement rebuild when sharding runs without membership.
+    pub fn add_node(&mut self, node_cfg: NodeConfig) -> Result<()> {
+        for m in &node_cfg.models {
+            if !self.engines.contains_key(m) {
+                return Err(Error::Config(format!(
+                    "node {} serves model {m} but no engine was built for it",
+                    node_cfg.name
+                )));
+            }
+        }
+        if self.nodes.iter().any(|n| n.name == node_cfg.name) {
+            return Err(Error::Config(format!(
+                "node {} is already running",
+                node_cfg.name
+            )));
+        }
+        let membership = self.membership().cloned();
+        let node = EdgeNode::start(
+            &node_cfg,
+            &self.cfg,
+            self.engines.clone(),
+            self.template.clone(),
+            membership,
+        )?;
+        if self.cfg.sharding.replication_factor.is_none() {
+            // Replicate-to-all peering. A rejoining member is not
+            // re-added on the existing side: their subscriptions still
+            // carry its pre-restart address, which the coordinator's Up
+            // event re-addresses (without membership, stale entries decay
+            // into per-write drops, matching the seed's crash semantics).
+            let rejoining = self
+                .membership()
+                .is_some_and(|v| v.state_of(&node_cfg.name).is_some());
+            for existing in &self.nodes {
+                let Some(existing_cfg) =
+                    self.cfg.nodes.iter().find(|c| c.name == existing.name)
+                else {
+                    continue;
+                };
+                for model in &node_cfg.models {
+                    if existing_cfg.models.contains(model) {
+                        node.kv.add_peer(model, existing.kv.replication_addr());
+                        if !rejoining {
+                            existing.kv.add_peer(model, node.kv.replication_addr());
+                        }
+                    }
+                }
+            }
+        }
+        match &self.coordinator {
+            Some(coordinator) => {
+                coordinator.register_node(&node_cfg.name, node.kv.clone(), &node_cfg.models)?;
+            }
+            None => {
+                // Static sharding: rebuild the placement over the running
+                // set plus the newcomer and bump the epoch stamp.
+                if let Some(rf) = self.cfg.sharding.replication_factor {
+                    let epoch = self.current_placement().map_or(0, |p| p.epoch()) + 1;
+                    let mut models: Vec<&String> = self
+                        .cfg
+                        .nodes
+                        .iter()
+                        .filter(|c| {
+                            c.name == node_cfg.name
+                                || self.nodes.iter().any(|n| n.name == c.name)
+                        })
+                        .flat_map(|c| c.models.iter())
+                        .chain(node_cfg.models.iter())
+                        .collect();
+                    models.sort_unstable();
+                    models.dedup();
+                    let mut placement = Placement::new(rf);
+                    placement.set_epoch(epoch);
+                    for model in models {
+                        let mut members: Vec<(String, SocketAddr)> = self
+                            .nodes
+                            .iter()
+                            .filter(|n| {
+                                self.cfg
+                                    .nodes
+                                    .iter()
+                                    .any(|c| c.name == n.name && c.models.contains(model))
+                            })
+                            .map(|n| (n.name.clone(), n.kv.replication_addr()))
+                            .collect();
+                        if node_cfg.models.contains(model) {
+                            members.push((node_cfg.name.clone(), node.kv.replication_addr()));
+                        }
+                        placement.add_keygroup(model, &members, self.cfg.sharding.virtual_nodes);
+                    }
+                    let placement = Arc::new(placement);
+                    for n in &self.nodes {
+                        n.kv.set_placement(placement.clone());
+                    }
+                    node.kv.set_placement(placement.clone());
+                    self.placement = Some(placement);
+                }
+            }
+        }
+        if !self.cfg.nodes.iter().any(|c| c.name == node_cfg.name) {
+            self.cfg.nodes.push(node_cfg);
+        }
+        self.nodes.push(node);
+        Ok(())
     }
 
     /// Drain all async work on every node (bench barrier).
@@ -484,6 +767,143 @@ mod tests {
             .round_trip(&HttpRequest::post_json("/completion", &req.to_json()))
             .unwrap();
         assert_eq!(resp.status, 409);
+    }
+
+    #[test]
+    fn metrics_export_the_full_counter_set() {
+        // Regression net for the scrape surface: every kvstore / cluster
+        // counter the docs promise must be present (with membership off,
+        // the cluster gauges read 0).
+        let cluster = mock_cluster(1);
+        let mut conn = Connection::open(
+            cluster.nodes[0].api_addr(),
+            TrafficMeter::new(),
+            LinkModel::ideal(),
+        )
+        .unwrap();
+        let m = conn.round_trip(&HttpRequest::get("/metrics")).unwrap();
+        let body = m.body_str().unwrap().to_string();
+        for key in [
+            "kv_entries",
+            "kv_sync_bytes",
+            "kv_push_targets",
+            "kv_remote_fetches",
+            "kv_read_repairs",
+            "kv_delta_applies",
+            "kv_delta_fallbacks",
+            "kv_hints_queued",
+            "kv_hints_replayed",
+            "kv_hints_dropped",
+            "kv_repl_dropped",
+            "kv_repl_dropped_injected",
+            "kv_repl_dropped_exhausted",
+            "kv_repl_dropped_shutdown",
+            "cluster_epoch",
+            "cluster_alive",
+        ] {
+            assert!(
+                body.lines().any(|l| l.starts_with(&format!("{key} "))),
+                "metric {key} missing from /metrics:\n{body}"
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_endpoints_require_membership() {
+        let cluster = mock_cluster(1);
+        let mut conn = Connection::open(
+            cluster.nodes[0].api_addr(),
+            TrafficMeter::new(),
+            LinkModel::ideal(),
+        )
+        .unwrap();
+        let r = conn.round_trip(&HttpRequest::get("/cluster/members")).unwrap();
+        assert_eq!(r.status, 503);
+        let r = conn
+            .round_trip(&HttpRequest::post_json("/cluster/join", "{}"))
+            .unwrap();
+        assert_eq!(r.status, 503);
+    }
+
+    fn mock_membership_cluster(n_nodes: usize) -> EdgeCluster {
+        let mut cfg = ClusterConfig::mock_fleet(n_nodes, Some(2));
+        cfg.enable_fast_membership();
+        EdgeCluster::launch(cfg).unwrap()
+    }
+
+    #[test]
+    fn cluster_members_lists_the_fleet() {
+        let cluster = mock_membership_cluster(2);
+        let mut conn = Connection::open(
+            cluster.nodes[0].api_addr(),
+            TrafficMeter::new(),
+            LinkModel::ideal(),
+        )
+        .unwrap();
+        let r = conn.round_trip(&HttpRequest::get("/cluster/members")).unwrap();
+        assert_eq!(r.status, 200);
+        let v = crate::json::parse(r.body_str().unwrap()).unwrap();
+        assert_eq!(v.req_u64("epoch").unwrap(), 2, "one epoch bump per join");
+        let members = v.get("members").and_then(|m| m.as_array()).unwrap();
+        assert_eq!(members.len(), 2);
+        for m in members {
+            assert_eq!(m.req_str("state").unwrap(), "alive");
+        }
+    }
+
+    #[test]
+    fn http_join_admits_a_member_and_detector_prunes_it() {
+        use std::time::Duration;
+        let cluster = mock_membership_cluster(2);
+        let view = cluster.membership().unwrap().clone();
+        let epoch0 = view.epoch();
+        let mut conn = Connection::open(
+            cluster.nodes[0].api_addr(),
+            TrafficMeter::new(),
+            LinkModel::ideal(),
+        )
+        .unwrap();
+        // Join a ghost node whose listeners don't exist.
+        let body = r#"{"name":"edge-ghost","kv_addr":"127.0.0.1:1",
+                       "ping_addr":"127.0.0.1:1","models":["discedge/tiny-chat"]}"#;
+        let r = conn
+            .round_trip(&HttpRequest::post_json("/cluster/join", body))
+            .unwrap();
+        assert_eq!(r.status, 200, "{}", r.body_str().unwrap_or("?"));
+        assert_eq!(view.epoch(), epoch0 + 1);
+        // It joins the ring immediately...
+        assert!(cluster
+            .current_placement()
+            .unwrap()
+            .ring("discedge/tiny-chat")
+            .is_some_and(|ring| ring.len() == 3));
+        // ...and the failure detectors prune it once probes fail.
+        assert!(
+            view.wait_for_state(
+                "edge-ghost",
+                crate::cluster::NodeState::Down,
+                Duration::from_secs(10)
+            ),
+            "ghost member must be detected down"
+        );
+        // The placement swap trails the state flip by the subscriber
+        // call; poll briefly instead of racing it.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let pruned = cluster
+                .current_placement()
+                .unwrap()
+                .ring("discedge/tiny-chat")
+                .is_some_and(|ring| ring.len() == 2);
+            if pruned {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "placement must drop the down member"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Failover integration: kill a replica mid-conversation and verify that
+//! (a) no committed turn is lost, (b) writes during the outage are parked
+//! as hints instead of dropped, (c) the detector prunes the dead node
+//! from placement (epoch bump) so later writes skip it, (d) hints replay
+//! on restart and the fleet converges byte-for-byte with an identical
+//! no-failure run, and (e) membership with zero failures produces
+//! exactly the same replication wire traffic as a membership-less fleet.
+
+use std::time::{Duration, Instant};
+
+use discedge::client::{Client, MobilityPolicy};
+use discedge::cluster::NodeState;
+use discedge::config::{ClusterConfig, ContextMode};
+use discedge::server::EdgeCluster;
+
+const MODEL: &str = "discedge/tiny-chat";
+
+fn fleet(n: usize, rf: Option<usize>, membership: bool) -> EdgeCluster {
+    let mut cfg = ClusterConfig::mock_fleet(n, rf);
+    if membership {
+        cfg.enable_fast_membership();
+        // A wider down-after keeps the detection window comfortably
+        // behind the outage-window turns even on a loaded CI host, so
+        // the "writes during the outage are hinted" assertions observe
+        // the pre-detection path deterministically.
+        cfg.membership.down_after = Duration::from_millis(400);
+        // Fail fast during the outage window so hinting (not retrying)
+        // carries the test.
+        cfg.replication.max_attempts = 2;
+        cfg.replication.retry_backoff = Duration::from_millis(1);
+    }
+    EdgeCluster::launch(cfg).unwrap()
+}
+
+fn sticky_client(cluster: &EdgeCluster) -> Client {
+    Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(8)
+}
+
+/// Drive turns `[from, to)` with deterministic prompts; every turn must
+/// succeed (no committed turn lost / no failed request).
+fn run_turns(cluster: &EdgeCluster, client: &mut Client, from: usize, to: usize) {
+    for t in from..to {
+        client
+            .chat(&format!("turn {t}: tell me about robots"))
+            .unwrap_or_else(|e| panic!("turn {t} failed: {e}"));
+        cluster.quiesce();
+    }
+}
+
+fn wait_for<T>(mut f: impl FnMut() -> Option<T>, timeout: Duration) -> Option<T> {
+    let start = Instant::now();
+    while start.elapsed() < timeout {
+        if let Some(v) = f() {
+            return Some(v);
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    None
+}
+
+#[test]
+fn killed_replica_loses_no_turn_and_hints_replay_on_restart() {
+    let mut cluster = fleet(3, Some(2), true);
+    let view = cluster.membership().unwrap().clone();
+    let mut client = sticky_client(&cluster);
+
+    // Turns 1-3 with the full fleet.
+    run_turns(&cluster, &mut client, 1, 4);
+    let (user, session) = client.session();
+    let key = format!("{}/{}", user.unwrap(), session.unwrap());
+
+    // Kill a home replica of the session that is not the serving node.
+    let placement = cluster.current_placement().unwrap();
+    let replicas = placement.replicas(MODEL, &key);
+    assert_eq!(replicas.len(), 2);
+    let victim = replicas
+        .iter()
+        .map(|(name, _)| name.clone())
+        .find(|name| name != "edge-0")
+        .expect("rf=2 over 3 nodes: some home replica is not edge-0");
+    let victim_cfg = cluster.kill_node(&victim).expect("victim config");
+    // Give the severed listener a beat to finish tearing down.
+    std::thread::sleep(Duration::from_millis(30));
+
+    // Turns 4-5 during the outage: the serving node has the context
+    // locally, so the conversation continues; its pushes to the dead
+    // replica park as hints (never as drops).
+    run_turns(&cluster, &mut client, 4, 6);
+    let edge0 = cluster.node("edge-0").unwrap();
+    assert!(
+        edge0.kv.hints_queued() >= 1,
+        "outage-window writes must be parked as hints"
+    );
+    assert_eq!(
+        edge0.kv.repl_dropped_total(),
+        0,
+        "hinted writes must not count as drops"
+    );
+
+    // The detector declares the victim down and swaps an epoch-stamped
+    // placement that excludes it.
+    assert!(
+        view.wait_for_state(&victim, NodeState::Down, Duration::from_secs(10)),
+        "victim must be detected down"
+    );
+    let down_epoch = view.epoch();
+    let pruned = wait_for(
+        || {
+            cluster
+                .current_placement()
+                .filter(|p| p.epoch() >= down_epoch)
+        },
+        Duration::from_secs(5),
+    )
+    .expect("placement swap must follow the epoch bump");
+    assert!(
+        !pruned.replicas(MODEL, &key).iter().any(|(n, _)| n == &victim),
+        "down node must leave the preference list"
+    );
+
+    // Turns 6-7 while down: writes go to surviving replicas only.
+    run_turns(&cluster, &mut client, 6, 8);
+
+    // Restart the victim (same name, fresh ports): rejoin bumps the
+    // epoch, restores it to placement, and replays the parked hints.
+    cluster.add_node(victim_cfg).unwrap();
+    assert!(view.wait_for_state(&victim, NodeState::Alive, Duration::from_secs(10)));
+    let restarted = cluster.node(&victim).unwrap();
+    let replayed = wait_for(
+        || restarted.kv.get(MODEL, &key).filter(|e| e.version >= 5),
+        Duration::from_secs(10),
+    )
+    .expect("hint replay must restore the outage-window turns");
+    assert!(replayed.version >= 5);
+    let edge0 = cluster.node("edge-0").unwrap();
+    assert!(edge0.kv.hints_replayed() >= 1, "hints must replay on rejoin");
+    assert_eq!(edge0.kv.hints_dropped(), 0);
+
+    // One more turn after recovery: the write lands on the original
+    // preference list again and closes any gap from the down window.
+    run_turns(&cluster, &mut client, 8, 9);
+
+    // Byte-for-byte convergence with an identical run that never saw a
+    // failure (same node names => same ids; deterministic mock engine).
+    let control = fleet(3, Some(2), true);
+    let mut control_client = sticky_client(&control);
+    run_turns(&control, &mut control_client, 1, 9);
+    let (cu, cs) = control_client.session();
+    assert_eq!(key, format!("{}/{}", cu.unwrap(), cs.unwrap()));
+    let expected = control
+        .node("edge-0")
+        .unwrap()
+        .kv
+        .get(MODEL, &key)
+        .expect("control holds the session");
+    assert_eq!(expected.version, 8);
+
+    let final_placement = cluster.current_placement().unwrap();
+    for (name, _) in final_placement.replicas(MODEL, &key) {
+        let entry = wait_for(
+            || {
+                cluster
+                    .node(&name)
+                    .unwrap()
+                    .kv
+                    .get(MODEL, &key)
+                    .filter(|e| e.version == expected.version)
+            },
+            Duration::from_secs(5),
+        )
+        .unwrap_or_else(|| panic!("replica {name} must reach v{}", expected.version));
+        assert_eq!(
+            entry.value, expected.value,
+            "replica {name} diverged from the no-failure run"
+        );
+    }
+    let served = cluster.node("edge-0").unwrap().kv.get(MODEL, &key).unwrap();
+    assert_eq!(served.value, expected.value, "serving node diverged");
+}
+
+#[test]
+fn membership_with_zero_failures_matches_default_wire_traffic() {
+    // Same fleet, same conversation, with and without membership: the
+    // replication byte counters must be identical on every node —
+    // heartbeats ride dedicated listeners and meters, and a no-failure
+    // placement rebuild sequence ends at the same ring.
+    fn run(membership: bool) -> Vec<(String, u64, u64)> {
+        let cluster = fleet(3, Some(2), membership);
+        let mut client = sticky_client(&cluster);
+        run_turns(&cluster, &mut client, 1, 6);
+        cluster.quiesce();
+        cluster
+            .nodes
+            .iter()
+            .map(|n| (n.name.clone(), n.kv.sync_rx_bytes(), n.kv.sync_tx_bytes()))
+            .collect()
+    }
+    let base = run(false);
+    let with_membership = run(true);
+    assert_eq!(
+        base, with_membership,
+        "membership with zero failures must not change replication traffic"
+    );
+}
+
+#[test]
+fn membership_fleet_reports_cluster_gauges() {
+    let cluster = fleet(2, Some(2), true);
+    let view = cluster.membership().unwrap();
+    assert_eq!(view.epoch(), 2, "one bump per launch join");
+    assert_eq!(view.alive_count(), 2);
+    // Zero failures: nothing hinted, nothing dropped.
+    let mut client = sticky_client(&cluster);
+    run_turns(&cluster, &mut client, 1, 3);
+    for node in &cluster.nodes {
+        assert_eq!(node.kv.hints_queued(), 0);
+        assert_eq!(node.kv.repl_dropped_total(), 0);
+    }
+}
+
+#[test]
+fn replicate_to_all_fleet_hints_and_replays_without_a_ring() {
+    // Membership also protects the seed's replicate-to-all wiring: the
+    // peers list is fixed, so an outage parks every push and a rejoin
+    // replays them to the restarted listener.
+    let mut cluster = fleet(2, None, true);
+    let view = cluster.membership().unwrap().clone();
+    let mut client = sticky_client(&cluster);
+    run_turns(&cluster, &mut client, 1, 3);
+    let (user, session) = client.session();
+    let key = format!("{}/{}", user.unwrap(), session.unwrap());
+
+    let victim_cfg = cluster.kill_node("edge-1").expect("edge-1 exists");
+    std::thread::sleep(Duration::from_millis(30));
+    run_turns(&cluster, &mut client, 3, 5);
+    let edge0 = cluster.node("edge-0").unwrap();
+    assert!(edge0.kv.hints_queued() >= 1);
+    assert_eq!(edge0.kv.repl_dropped_total(), 0);
+    assert!(view.wait_for_state("edge-1", NodeState::Down, Duration::from_secs(10)));
+
+    cluster.add_node(victim_cfg).unwrap();
+    let restarted = cluster.node("edge-1").unwrap();
+    let entry = wait_for(
+        || restarted.kv.get(MODEL, &key).filter(|e| e.version >= 4),
+        Duration::from_secs(10),
+    )
+    .expect("replayed hints must reach the restarted replicate-to-all peer");
+    assert!(entry.version >= 4);
+    // Post-restart writes flow over the re-addressed subscription.
+    run_turns(&cluster, &mut client, 5, 6);
+    wait_for(
+        || restarted.kv.get(MODEL, &key).filter(|e| e.version == 5),
+        Duration::from_secs(5),
+    )
+    .expect("re-addressed peer must receive live writes");
+}
