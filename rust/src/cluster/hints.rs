@@ -74,9 +74,13 @@ pub struct Hint {
     pub ttl_ms: Option<u64>,
 }
 
+/// Callback invoked with every hint the per-peer bound evicts — the
+/// record is lost to replay, so the subscriber (anti-entropy repair)
+/// takes over responsibility for the divergence it leaves behind.
+pub type EvictionHook = Box<dyn Fn(SocketAddr, &Hint) + Send + Sync>;
+
 /// Per-node hint storage plus the down-peer set the replicator consults
 /// before every send.
-#[derive(Debug)]
 pub struct HintedHandoff {
     cfg: HintConfig,
     queues: Mutex<HashMap<SocketAddr, VecDeque<Hint>>>,
@@ -86,9 +90,21 @@ pub struct HintedHandoff {
     /// rejoined would otherwise park under a queue key no future replay
     /// ever drains; forwarding parks it where the next replay looks.
     forwards: Mutex<HashMap<SocketAddr, SocketAddr>>,
+    /// Observer of bound-evicted hints (anti-entropy damage handoff).
+    on_evict: Mutex<Option<EvictionHook>>,
     queued: AtomicU64,
     replayed: AtomicU64,
     dropped: AtomicU64,
+}
+
+impl std::fmt::Debug for HintedHandoff {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HintedHandoff")
+            .field("queued", &self.queued())
+            .field("replayed", &self.replayed())
+            .field("dropped", &self.dropped())
+            .finish_non_exhaustive()
+    }
 }
 
 impl HintedHandoff {
@@ -99,6 +115,7 @@ impl HintedHandoff {
             queues: Mutex::new(HashMap::new()),
             down: Mutex::new(HashSet::new()),
             forwards: Mutex::new(HashMap::new()),
+            on_evict: Mutex::new(None),
             queued: AtomicU64::new(0),
             replayed: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
@@ -153,53 +170,73 @@ impl HintedHandoff {
         addr
     }
 
+    /// Register the observer called with every bound-evicted hint (used
+    /// by anti-entropy repair to take over what replay can no longer
+    /// deliver). At most one hook; a second call replaces the first.
+    pub fn set_eviction_hook(&self, hook: EvictionHook) {
+        *self.on_evict.lock().unwrap() = Some(hook);
+    }
+
     /// Park an update for `peer` (resolved through restart forwards),
     /// coalescing where safe. Evicts the oldest hint (counted in
-    /// [`Self::dropped`]) on overflow.
+    /// [`Self::dropped`] and reported to the eviction hook) on overflow.
     pub fn park(&self, peer: SocketAddr, hint: Hint) {
         let peer = self.resolve(peer);
         self.queued.fetch_add(1, Ordering::SeqCst);
-        let mut queues = self.queues.lock().unwrap();
-        let q = queues.entry(peer).or_default();
-        match &hint.update {
-            // LWW: every older queued hint for this key is dead weight
-            // once a newer full-state write is parked behind it.
-            HintUpdate::Full { .. } => {
-                q.retain(|h| {
-                    h.keygroup != hint.keygroup
-                        || h.key != hint.key
-                        || h.version > hint.version
-                });
-            }
-            // Contiguous deltas merge, mirroring the live queue's
-            // coalescing: replaying one merged fragment equals replaying
-            // the run one by one.
-            HintUpdate::Delta { base, frag, .. } => {
-                if let Some(last) = q
-                    .iter_mut()
-                    .rev()
-                    .find(|h| h.keygroup == hint.keygroup && h.key == hint.key)
-                {
-                    if let HintUpdate::Delta { frag: qfrag, .. } = &mut last.update {
-                        if last.version == *base {
-                            if let Ok(merged) =
-                                crate::context::codec::concat_fragment_docs(qfrag, frag)
-                            {
-                                *qfrag = merged;
-                                last.version = hint.version;
-                                last.ttl_ms = hint.ttl_ms;
-                                return;
+        let evicted = {
+            let mut queues = self.queues.lock().unwrap();
+            let q = queues.entry(peer).or_default();
+            match &hint.update {
+                // LWW: every older queued hint for this key is dead weight
+                // once a newer full-state write is parked behind it.
+                HintUpdate::Full { .. } => {
+                    q.retain(|h| {
+                        h.keygroup != hint.keygroup
+                            || h.key != hint.key
+                            || h.version > hint.version
+                    });
+                }
+                // Contiguous deltas merge, mirroring the live queue's
+                // coalescing: replaying one merged fragment equals
+                // replaying the run one by one.
+                HintUpdate::Delta { base, frag, .. } => {
+                    if let Some(last) = q
+                        .iter_mut()
+                        .rev()
+                        .find(|h| h.keygroup == hint.keygroup && h.key == hint.key)
+                    {
+                        if let HintUpdate::Delta { frag: qfrag, .. } = &mut last.update {
+                            if last.version == *base {
+                                if let Ok(merged) =
+                                    crate::context::codec::concat_fragment_docs(qfrag, frag)
+                                {
+                                    *qfrag = merged;
+                                    last.version = hint.version;
+                                    last.ttl_ms = hint.ttl_ms;
+                                    return;
+                                }
                             }
                         }
                     }
                 }
             }
+            let evicted = if q.len() >= self.cfg.max_per_peer {
+                self.dropped.fetch_add(1, Ordering::SeqCst);
+                q.pop_front()
+            } else {
+                None
+            };
+            q.push_back(hint);
+            evicted
+        };
+        // The hook runs outside the queues lock: it marks Merkle buckets
+        // dirty and kicks the repair thread, neither of which may nest
+        // under this lock.
+        if let Some(hint) = evicted {
+            if let Some(hook) = self.on_evict.lock().unwrap().as_ref() {
+                hook(peer, &hint);
+            }
         }
-        if q.len() >= self.cfg.max_per_peer {
-            q.pop_front();
-            self.dropped.fetch_add(1, Ordering::SeqCst);
-        }
-        q.push_back(hint);
     }
 
     /// Drain every hint parked for `peer`, in park order; counts them as

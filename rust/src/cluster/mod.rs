@@ -207,6 +207,15 @@ impl ClusterCoordinator {
                 .collect();
             placement.add_keygroup(model, &serving, self.sharding.virtual_nodes);
         }
+        // Anti-entropy listener addresses ride the placement so the
+        // digest walks re-address on every swap exactly like writes do.
+        // Known only for in-process replicas (an HTTP-joined member's AE
+        // listener is not announced; repair simply skips it).
+        for (name, kv) in self.kvs.lock().unwrap().iter() {
+            if let Some(ae) = kv.ae_addr() {
+                placement.set_ae_addr(name, ae);
+            }
+        }
         let placement = Arc::new(placement);
         for (_, kv) in self.kvs.lock().unwrap().iter() {
             kv.set_placement(placement.clone());

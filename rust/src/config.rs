@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use crate::cluster::{HintConfig, MembershipConfig};
 use crate::json::{self, Value};
-use crate::kvstore::ReplicationConfig;
+use crate::kvstore::{AntiEntropyConfig, ReplicationConfig};
 use crate::netsim::LinkModel;
 use crate::profile::NodeProfile;
 use crate::{Error, Result};
@@ -176,6 +176,9 @@ pub struct ClusterConfig {
     /// Hinted handoff for unreachable peers (active only with
     /// membership enabled).
     pub hints: HintConfig,
+    /// Merkle-tree anti-entropy repair (default off: no digest listener,
+    /// no background rounds — the seed's wire behaviour).
+    pub antientropy: AntiEntropyConfig,
     /// Turn-counter protocol settings.
     pub consistency: ConsistencyConfig,
     /// Generation settings.
@@ -215,6 +218,7 @@ impl ClusterConfig {
             sharding: ShardingConfig::default(),
             membership: MembershipConfig::default(),
             hints: HintConfig::default(),
+            antientropy: AntiEntropyConfig::default(),
             consistency: ConsistencyConfig::default(),
             generation: GenerationConfig::default(),
             engine: EngineKind::Pjrt,
@@ -360,6 +364,20 @@ impl ClusterConfig {
                 cfg.hints.max_per_peer = n as usize;
             }
         }
+        if let Some(a) = v.get("antientropy") {
+            if let Some(e) = a.get("enabled").and_then(|x| x.as_bool()) {
+                cfg.antientropy.enabled = e;
+            }
+            if let Some(ms) = a.get("interval_ms").and_then(|x| x.as_u64()) {
+                cfg.antientropy.interval = Duration::from_millis(ms);
+            }
+            if let Some(f) = a.get("fanout").and_then(|x| x.as_u64()) {
+                cfg.antientropy.fanout = f as usize;
+            }
+            if let Some(k) = a.get("max_keys_per_round").and_then(|x| x.as_u64()) {
+                cfg.antientropy.max_keys_per_round = k as usize;
+            }
+        }
         if let Some(t) = v.get("session_ttl_s").and_then(|x| x.as_u64()) {
             cfg.session_ttl = Duration::from_secs(t);
         }
@@ -399,6 +417,19 @@ impl ClusterConfig {
         }
         if self.hints.max_per_peer == 0 {
             return Err(Error::Config("hints.max_per_peer must be >= 1".into()));
+        }
+        if self.antientropy.enabled {
+            if self.antientropy.interval.is_zero() {
+                return Err(Error::Config("antientropy.interval_ms must be >= 1".into()));
+            }
+            if self.antientropy.fanout < 2 {
+                return Err(Error::Config("antientropy.fanout must be >= 2".into()));
+            }
+            if self.antientropy.max_keys_per_round == 0 {
+                return Err(Error::Config(
+                    "antientropy.max_keys_per_round must be >= 1".into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -562,6 +593,37 @@ mod tests {
             ClusterConfig::from_json(r#"{"engine": "mock", "hints": {"max_per_peer": 0}}"#)
                 .is_err()
         );
+    }
+
+    #[test]
+    fn antientropy_defaults_off_and_parses() {
+        // The seed's wire behaviour (no digest listener) must stay the
+        // default.
+        let cfg = ClusterConfig::two_node_testbed();
+        assert!(!cfg.antientropy.enabled);
+        assert_eq!(cfg.antientropy.interval, Duration::from_millis(1000));
+        assert_eq!(cfg.antientropy.fanout, 16);
+        assert_eq!(cfg.antientropy.max_keys_per_round, 256);
+        let cfg = ClusterConfig::from_json(
+            r#"{
+              "engine": "mock",
+              "antientropy": {"enabled": true, "interval_ms": 250,
+                              "fanout": 8, "max_keys_per_round": 32}
+            }"#,
+        )
+        .unwrap();
+        assert!(cfg.antientropy.enabled);
+        assert_eq!(cfg.antientropy.interval, Duration::from_millis(250));
+        assert_eq!(cfg.antientropy.fanout, 8);
+        assert_eq!(cfg.antientropy.max_keys_per_round, 32);
+        // Degenerate knobs are rejected.
+        for bad in [
+            r#"{"engine": "mock", "antientropy": {"enabled": true, "interval_ms": 0}}"#,
+            r#"{"engine": "mock", "antientropy": {"enabled": true, "fanout": 1}}"#,
+            r#"{"engine": "mock", "antientropy": {"enabled": true, "max_keys_per_round": 0}}"#,
+        ] {
+            assert!(ClusterConfig::from_json(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -1,0 +1,1040 @@
+//! Anti-entropy repair: Merkle-tree replica synchronization (Dynamo-style
+//! background repair, cf. PAPERS.md on edge churn).
+//!
+//! Push replication (PR 1), delta sync (PR 2), and hinted handoff (PR 3)
+//! each narrow the window in which replicas can diverge — but none closes
+//! it: a push that exhausts its retry budget with membership disabled
+//! drops forever, and a hint queue at `hints.max_per_peer` evicts its
+//! oldest record. This module is the backstop that makes the paper's
+//! "guaranteed data consistency" unconditional: every replica can detect
+//! and heal divergence at O(digest) cost, no matter how the damage
+//! happened.
+//!
+//! **Tree shape.** Each node keeps one incrementally-updated
+//! [`MerkleForest`] entry per keygroup: `fanout²` leaf buckets (keys
+//! assigned by key hash), one internal level of `fanout` nodes, one root.
+//! A leaf hashes the `(key, version, content hash)` triples of its live
+//! entries in key order; every put / delta apply / delete / TTL sweep
+//! marks the touched bucket **dirty**, so a digest rebuild re-hashes only
+//! changed buckets (content hashing is the expensive part — the internal
+//! levels are a few hundred 8-byte folds).
+//!
+//! **Exchange.** A background [`AntiEntropy`] thread periodically picks a
+//! replica peer per keygroup (ring members under placement, keygroup
+//! subscribers otherwise; Down peers are skipped) and walks the peer's
+//! tree over three verbs on the peer's dedicated anti-entropy listener:
+//! `/ae/root` (root digest — equal roots end the round at O(1) bytes),
+//! `/ae/level` (internal node hashes, then leaf hashes under mismatched
+//! parents), and `/ae/keys` (per-key records for mismatched buckets).
+//! Digest traffic rides its own listener and meters, exported as
+//! `kv_ae_digest_bytes` — the replication-port byte accounting the
+//! figures plot is untouched (PR 3's zero-failure regression style).
+//!
+//! **Repair (who wins).** Both sides repair themselves by **pulling**
+//! over the existing `fetch_entry` read-repair path (TTL
+//! preserved; an entry that expired on the source is never resurrected —
+//! `/fetch` filters expired entries):
+//!
+//! - lower version pulls the newer entry (LWW, as everywhere else);
+//! - equal version, different bytes: the side with the *lower* content
+//!   hash pulls — both sides apply the same rule, so they converge
+//!   deterministically; `kv_ae_conflicts` counts these;
+//! - a key missing locally is pulled (explicit deletes are not
+//!   tombstoned in the prototype — TTL is the deletion mechanism — so a
+//!   missing key is indistinguishable from damage and is restored);
+//! - under ring placement a key is only repaired between two of its home
+//!   replicas (read-repair caches age out by TTL instead).
+//!
+//! At most `antientropy.max_keys_per_round` entries are pulled per round;
+//! the rest heal on subsequent rounds. Default **off**; with zero
+//! divergence an enabled fleet's replication-port traffic is
+//! byte-for-byte identical to a disabled one.
+//!
+//! **Sharded-mode cost.** The tree covers a node's whole local key set,
+//! so the O(1)-bytes converged round holds when sync partners replicate
+//! the same keys (replicate-to-all, or `replication_factor >=` fleet
+//! size). Under a ring with a smaller factor, two replicas legitimately
+//! hold different key sets: their roots differ even when every shared
+//! key agrees, and each round descends to the record exchange for the
+//! buckets holding non-shared keys (repair itself stays correct — the
+//! preference-list filter skips those keys, and pulls stay bounded by
+//! `max_keys_per_round`). Restricting digests to the pairwise-shared
+//! subset needs per-peer trees and is future work; see ARCHITECTURE.md.
+
+use std::collections::{HashMap, HashSet};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use super::ring::mix64;
+use super::{fetch_entry, Placement, Store};
+use crate::cluster::HintedHandoff;
+use crate::http::{Connection, Handler, Request, Response, Server};
+use crate::json::{self, Value};
+use crate::netsim::{LinkModel, TrafficMeter};
+use crate::testkit::fnv1a;
+use crate::Result;
+
+/// Anti-entropy tuning (`antientropy` config section).
+#[derive(Debug, Clone)]
+pub struct AntiEntropyConfig {
+    /// Master switch. Default **off**: no listener, no thread, no digest
+    /// traffic — the wire behaviour of the seed, byte-for-byte.
+    pub enabled: bool,
+    /// Pause between background rounds (`interval_ms`).
+    pub interval: Duration,
+    /// Tree fanout: `fanout²` leaf buckets, `fanout` internal nodes.
+    pub fanout: usize,
+    /// Maximum entries pulled per round; the remainder heals on later
+    /// rounds (bounds repair burst bandwidth after a long partition).
+    pub max_keys_per_round: usize,
+}
+
+impl Default for AntiEntropyConfig {
+    fn default() -> AntiEntropyConfig {
+        AntiEntropyConfig {
+            enabled: false,
+            interval: Duration::from_millis(1000),
+            fanout: 16,
+            max_keys_per_round: 256,
+        }
+    }
+}
+
+/// Hash of one entry's bytes + version — the per-key digest exchanged in
+/// `/ae/keys` records and the equal-version tiebreaker.
+pub fn content_hash(value: &str, version: u64) -> u64 {
+    mix64(fnv1a(value.as_bytes()) ^ version.rotate_left(32))
+}
+
+/// Deterministic fold of one `(key hash, content hash)` pair into an
+/// accumulator. Order-sensitive, but both sides iterate entries in key
+/// order (the store is a BTreeMap), so folds agree.
+fn fold(acc: u64, key_hash: u64, entry_hash: u64) -> u64 {
+    mix64(acc.wrapping_mul(0x100000001b3) ^ key_hash).wrapping_add(entry_hash)
+}
+
+/// Hash every leaf/internal child sequence folds from.
+const EMPTY_HASH: u64 = 0xcbf29ce484222325;
+
+/// One keygroup's incrementally-maintained tree state.
+#[derive(Debug)]
+struct Tree {
+    /// Leaf bucket hashes (`fanout²` of them).
+    leaves: Vec<u64>,
+    /// Buckets whose contents changed since their hash was computed.
+    dirty: Vec<bool>,
+    /// Cheap "anything to rebuild?" flag.
+    any_dirty: bool,
+}
+
+impl Tree {
+    fn new(leaf_count: usize) -> Tree {
+        Tree {
+            leaves: vec![EMPTY_HASH; leaf_count],
+            dirty: vec![true; leaf_count],
+            any_dirty: true,
+        }
+    }
+}
+
+/// A refreshed digest snapshot of one keygroup's tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeDigest {
+    /// Root hash over the internal level.
+    pub root: u64,
+    /// Internal node hashes (`fanout` of them; node `i` covers leaf
+    /// buckets `i*fanout .. (i+1)*fanout`).
+    pub level1: Vec<u64>,
+    /// Leaf bucket hashes.
+    pub leaves: Vec<u64>,
+}
+
+/// Per-node set of keygroup Merkle trees with dirty-bucket tracking.
+///
+/// Installed into the [`Store`] when anti-entropy is enabled so every
+/// mutation (local put, replicated apply, delta apply, delete, TTL
+/// sweep) marks the key's bucket dirty; [`MerkleForest::digest`] then
+/// re-hashes only dirty buckets from store contents.
+#[derive(Debug)]
+pub struct MerkleForest {
+    fanout: usize,
+    trees: Mutex<HashMap<String, Tree>>,
+}
+
+impl MerkleForest {
+    /// Empty forest; trees materialize lazily per keygroup.
+    pub fn new(fanout: usize) -> Arc<MerkleForest> {
+        Arc::new(MerkleForest {
+            fanout: fanout.max(2),
+            trees: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Leaf buckets per tree.
+    pub fn leaf_count(&self) -> usize {
+        self.fanout * self.fanout
+    }
+
+    /// The leaf bucket `key` hashes into.
+    pub fn bucket_of(&self, key: &str) -> usize {
+        (mix64(fnv1a(key.as_bytes())) % self.leaf_count() as u64) as usize
+    }
+
+    /// Mark `key`'s bucket dirty (cheap; called on every store mutation).
+    pub fn mark(&self, keygroup: &str, key: &str) {
+        let bucket = self.bucket_of(key);
+        let mut trees = self.trees.lock().unwrap();
+        let tree = trees
+            .entry(keygroup.to_string())
+            .or_insert_with(|| Tree::new(self.leaf_count()));
+        tree.dirty[bucket] = true;
+        tree.any_dirty = true;
+    }
+
+    /// Refresh dirty buckets from `store` and return the digest snapshot.
+    /// Expired-but-unswept entries are skipped so a swept and an unswept
+    /// replica hash identically.
+    ///
+    /// A rebuild with any dirty bucket makes one pass over the keygroup:
+    /// the per-key work is a cheap key hash to find the bucket, and only
+    /// entries in dirty buckets pay the content hash. Keeping a
+    /// per-bucket key index would drop the scan to O(dirty keys) at the
+    /// cost of mirroring the store's membership — not worth it at the
+    /// prototype's key counts.
+    pub fn digest(&self, keygroup: &str, store: &Store) -> TreeDigest {
+        let leaf_count = self.leaf_count();
+        let mut trees = self.trees.lock().unwrap();
+        let tree = trees
+            .entry(keygroup.to_string())
+            .or_insert_with(|| Tree::new(leaf_count));
+        if tree.any_dirty {
+            let now = Instant::now();
+            let mut fresh = vec![EMPTY_HASH; leaf_count];
+            let data = store.data.read().unwrap();
+            if let Some(kg) = data.get(keygroup) {
+                for (key, entry) in kg {
+                    if entry.is_expired(now) {
+                        continue;
+                    }
+                    let bucket = self.bucket_of(key);
+                    if tree.dirty[bucket] {
+                        fresh[bucket] = fold(
+                            fresh[bucket],
+                            fnv1a(key.as_bytes()),
+                            content_hash(&entry.value, entry.version),
+                        );
+                    }
+                }
+            }
+            for (bucket, dirty) in tree.dirty.iter_mut().enumerate() {
+                if *dirty {
+                    tree.leaves[bucket] = fresh[bucket];
+                    *dirty = false;
+                }
+            }
+            tree.any_dirty = false;
+        }
+        let leaves = tree.leaves.clone();
+        drop(trees);
+        let level1: Vec<u64> = leaves
+            .chunks(self.fanout)
+            .map(|chunk| {
+                chunk
+                    .iter()
+                    .enumerate()
+                    .fold(EMPTY_HASH, |acc, (i, h)| fold(acc, i as u64, *h))
+            })
+            .collect();
+        let root = level1
+            .iter()
+            .enumerate()
+            .fold(EMPTY_HASH, |acc, (i, h)| fold(acc, i as u64, *h));
+        TreeDigest {
+            root,
+            level1,
+            leaves,
+        }
+    }
+}
+
+/// Wake-up latch for the background thread (interval OR on-demand kick).
+#[derive(Debug, Default)]
+pub struct Kick {
+    flag: Mutex<bool>,
+    cvar: Condvar,
+}
+
+impl Kick {
+    /// Fresh latch.
+    pub fn new() -> Arc<Kick> {
+        Arc::new(Kick::default())
+    }
+
+    /// Request an immediate round (coalesces with pending kicks).
+    pub fn kick(&self) {
+        *self.flag.lock().unwrap() = true;
+        self.cvar.notify_all();
+    }
+
+    /// Wait until kicked or `timeout` elapses; clears the kick flag.
+    fn wait(&self, timeout: Duration) {
+        let flag = self.flag.lock().unwrap();
+        let (mut flag, _) = self
+            .cvar
+            .wait_timeout_while(flag, timeout, |kicked| !*kicked)
+            .unwrap();
+        *flag = false;
+    }
+}
+
+/// Damage handle the replication pipeline reports unrecoverable losses
+/// to: an exhausted drop (membership off) or a hint-queue eviction means
+/// the push path can no longer deliver that update — the loss is
+/// counted, logged once per peer, and an immediate round is requested so
+/// anti-entropy repairs what replication lost. (The key's bucket is
+/// already dirty: the local write that spawned the push marked it —
+/// only [`Store`] mutations touch the forest.)
+#[derive(Debug)]
+pub struct AeSink {
+    node: String,
+    kick: Arc<Kick>,
+    lost: AtomicU64,
+    logged: Mutex<HashSet<SocketAddr>>,
+}
+
+impl AeSink {
+    /// Create the sink over a node's round latch.
+    pub(crate) fn new(node: &str, kick: Arc<Kick>) -> Arc<AeSink> {
+        Arc::new(AeSink {
+            node: node.to_string(),
+            kick,
+            lost: AtomicU64::new(0),
+            logged: Mutex::new(HashSet::new()),
+        })
+    }
+
+    /// Record that an update for `keygroup/key` addressed to `peer` was
+    /// lost by the push pipeline and must be healed by repair.
+    pub fn note_lost(&self, peer: SocketAddr, keygroup: &str, key: &str) {
+        self.lost.fetch_add(1, Ordering::SeqCst);
+        if self.logged.lock().unwrap().insert(peer) {
+            eprintln!(
+                "[kv-ae {}] replication to {peer} lost an update for \
+                 {keygroup}/{key}; anti-entropy will repair (further losses \
+                 to this peer not logged)",
+                self.node
+            );
+        }
+        self.kick.kick();
+    }
+
+    /// Updates handed to repair after the push pipeline gave up on them.
+    pub fn lost(&self) -> u64 {
+        self.lost.load(Ordering::SeqCst)
+    }
+}
+
+/// One sync partner's two listeners.
+#[derive(Debug, Clone, Copy)]
+struct AePeer {
+    /// Replication listener — where repair pulls `/fetch` from.
+    kv: SocketAddr,
+    /// Anti-entropy listener — where the digest walk goes.
+    ae: SocketAddr,
+}
+
+/// Everything one node's anti-entropy machinery shares between the
+/// background thread, the manual-round test hook, and the `/ae/*`
+/// endpoint (which repairs the responder side).
+pub struct AeRuntime {
+    /// Node name (placement identity, logs).
+    name: String,
+    cfg: AntiEntropyConfig,
+    store: Arc<Store>,
+    forest: Arc<MerkleForest>,
+    placement: Arc<RwLock<Option<Arc<Placement>>>>,
+    /// keygroup → subscribed peer replication addresses (replicate-to-all
+    /// peer source; shared with the owning `KvNode`).
+    peers: Arc<Mutex<HashMap<String, Vec<SocketAddr>>>>,
+    /// Replication address → anti-entropy address of known peers.
+    ae_map: Arc<Mutex<HashMap<SocketAddr, SocketAddr>>>,
+    /// Down-peer set (None without membership): Down peers are skipped.
+    handoff: Option<Arc<HintedHandoff>>,
+    link: LinkModel,
+    /// This node's replication listener (peers pull repairs from here).
+    kv_addr: SocketAddr,
+    /// Outbound digest-walk traffic (client side of `/ae/*`).
+    digest_meter: Arc<TrafficMeter>,
+    /// Repair pulls ride the node's remote-read meter, like read-repair.
+    fetch_meter: Arc<TrafficMeter>,
+    rounds: AtomicU64,
+    repaired: AtomicU64,
+    conflicts: AtomicU64,
+    /// Serializes rounds (background thread vs. manual test hook).
+    round_lock: Mutex<()>,
+    /// Round-robin cursor over sync partners.
+    next_peer: AtomicU64,
+}
+
+impl AeRuntime {
+    /// Assemble the shared runtime. `kv_addr` is the owning node's
+    /// replication listener; `peers`/`ae_map`/`placement` are shared live
+    /// with the `KvNode` so topology changes are visible immediately.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        cfg: AntiEntropyConfig,
+        store: Arc<Store>,
+        forest: Arc<MerkleForest>,
+        placement: Arc<RwLock<Option<Arc<Placement>>>>,
+        peers: Arc<Mutex<HashMap<String, Vec<SocketAddr>>>>,
+        ae_map: Arc<Mutex<HashMap<SocketAddr, SocketAddr>>>,
+        handoff: Option<Arc<HintedHandoff>>,
+        link: LinkModel,
+        kv_addr: SocketAddr,
+        fetch_meter: Arc<TrafficMeter>,
+    ) -> Arc<AeRuntime> {
+        Arc::new(AeRuntime {
+            name: name.to_string(),
+            cfg,
+            store,
+            forest,
+            placement,
+            peers,
+            ae_map,
+            handoff,
+            link,
+            kv_addr,
+            digest_meter: TrafficMeter::new(),
+            fetch_meter,
+            rounds: AtomicU64::new(0),
+            repaired: AtomicU64::new(0),
+            conflicts: AtomicU64::new(0),
+            round_lock: Mutex::new(()),
+            next_peer: AtomicU64::new(0),
+        })
+    }
+
+    /// Digest exchanges initiated by this node.
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Ordering::SeqCst)
+    }
+
+    /// Entries pulled and applied by repair (either side).
+    pub fn repaired(&self) -> u64 {
+        self.repaired.load(Ordering::SeqCst)
+    }
+
+    /// Equal-version byte mismatches repaired deterministically.
+    pub fn conflicts(&self) -> u64 {
+        self.conflicts.load(Ordering::SeqCst)
+    }
+
+    /// Outbound digest-walk bytes (the server-side share is metered on
+    /// the listener and added by the owning node's accessor).
+    pub fn digest_tx_bytes(&self) -> u64 {
+        self.digest_meter.total()
+    }
+
+    /// Run one full round now: for every keygroup, pick the next sync
+    /// partner round-robin and walk its tree. Returns entries repaired
+    /// on this (initiating) side. Serialized against the background
+    /// thread; safe to call from tests/benches/examples.
+    pub fn run_once(&self) -> u64 {
+        let _guard = self.round_lock.lock().unwrap();
+        let mut keygroups: Vec<String> = self
+            .store
+            .keygroups
+            .read()
+            .unwrap()
+            .iter()
+            .cloned()
+            .collect();
+        keygroups.sort_unstable();
+        let mut repaired = 0;
+        for kg in keygroups {
+            let peers = self.peers_for(&kg);
+            if peers.is_empty() {
+                continue;
+            }
+            let idx = self.next_peer.fetch_add(1, Ordering::SeqCst) as usize % peers.len();
+            let peer = peers[idx];
+            if let Some(h) = &self.handoff {
+                // The failure detector marked the peer down: its tree is
+                // unreachable, and the rejoin path schedules a round the
+                // moment it returns.
+                if h.is_down(peer.kv) {
+                    continue;
+                }
+            }
+            repaired += self.sync_keygroup(&kg, &peer).unwrap_or(0);
+        }
+        repaired
+    }
+
+    /// Sync partners for `kg`: ring members under placement (minus this
+    /// node), keygroup subscribers otherwise. Peers without a known
+    /// anti-entropy listener (e.g. admitted over HTTP from outside the
+    /// process) are skipped — push replication still covers them.
+    fn peers_for(&self, kg: &str) -> Vec<AePeer> {
+        if let Some(placement) = self.placement.read().unwrap().clone() {
+            if placement.has_keygroup(kg) {
+                let Some(ring) = placement.ring(kg) else {
+                    return Vec::new();
+                };
+                return ring
+                    .nodes()
+                    .iter()
+                    .filter(|n| *n != &self.name)
+                    .filter_map(|n| {
+                        let kv = placement.node_addr(n)?;
+                        let ae = placement.ae_addr(n)?;
+                        Some(AePeer { kv, ae })
+                    })
+                    .collect();
+            }
+        }
+        let subscribed = self.peers.lock().unwrap().get(kg).cloned().unwrap_or_default();
+        let ae_map = self.ae_map.lock().unwrap();
+        subscribed
+            .into_iter()
+            .filter_map(|kv| ae_map.get(&kv).map(|ae| AePeer { kv, ae: *ae }))
+            .collect()
+    }
+
+    /// Walk one peer's tree for `kg` and repair this side. The peer
+    /// repairs itself inside its `/ae/keys` handler.
+    fn sync_keygroup(&self, kg: &str, peer: &AePeer) -> Result<u64> {
+        self.rounds.fetch_add(1, Ordering::SeqCst);
+        let mine = self.forest.digest(kg, &self.store);
+        // Hard-bounded connect and I/O, like the failure detector's
+        // probes: a wedged peer (accepts TCP, never answers — exactly
+        // the failure class repair exists for) must cost one timeout,
+        // not a walker stalled under `round_lock` forever.
+        let timeout = self.probe_timeout();
+        let mut conn = Connection::open_timeout(
+            peer.ae,
+            self.digest_meter.clone(),
+            self.link.clone(),
+            timeout,
+        )?;
+        // Step 1: root digests. Equal roots end the round at O(1) bytes.
+        let resp = conn.round_trip(&Request::post_json(
+            "/ae/root",
+            &Value::obj().set("kg", kg).to_json(),
+        ))?;
+        let v = json::parse(resp.body_str()?)?;
+        if v.req_u64("leaves")? as usize != mine.leaves.len() {
+            // Mismatched fanout config: digests are incomparable. Push
+            // replication still converges the pair; nothing to do here.
+            return Ok(0);
+        }
+        if parse_hash(&v, "root")? == mine.root {
+            return Ok(0);
+        }
+        // Step 2: internal level — find mismatched subtrees.
+        let resp = conn.round_trip(&Request::post_json(
+            "/ae/level",
+            &Value::obj().set("kg", kg).to_json(),
+        ))?;
+        let theirs_l1 = parse_hash_list(&json::parse(resp.body_str()?)?, "hashes")?;
+        let parents: Vec<Value> = mine
+            .level1
+            .iter()
+            .enumerate()
+            .filter(|(i, h)| theirs_l1.get(*i) != Some(*h))
+            .map(|(i, _)| Value::from(i))
+            .collect();
+        if parents.is_empty() {
+            return Ok(0);
+        }
+        // Step 3: leaf hashes under the mismatched parents only.
+        let resp = conn.round_trip(&Request::post_json(
+            "/ae/level",
+            &Value::obj().set("kg", kg).set("parents", parents).to_json(),
+        ))?;
+        let v = json::parse(resp.body_str()?)?;
+        let mut buckets: Vec<usize> = Vec::new();
+        for pair in v.get("buckets").and_then(|b| b.as_array()).unwrap_or(&[]) {
+            let items = pair.as_array().unwrap_or(&[]);
+            let (Some(idx), Some(hash)) = (
+                items.first().and_then(Value::as_u64),
+                items.get(1).and_then(Value::as_str),
+            ) else {
+                continue;
+            };
+            let idx = idx as usize;
+            if idx < mine.leaves.len() && hash_from_hex(hash) != Some(mine.leaves[idx]) {
+                buckets.push(idx);
+            }
+        }
+        if buckets.is_empty() {
+            return Ok(0);
+        }
+        // Step 4: exchange per-key records for the diverged buckets. The
+        // peer repairs itself from our records before answering.
+        let my_records = self.records_for(kg, &buckets);
+        let req = Value::obj()
+            .set("kg", kg)
+            .set("kv", self.kv_addr.to_string())
+            .set(
+                "buckets",
+                buckets.iter().map(|b| Value::from(*b)).collect::<Vec<Value>>(),
+            )
+            .set("keys", records_to_json(&my_records));
+        // The peer repairs itself (bounded sequential pulls) before
+        // answering, so this step needs a far looser bound than the
+        // digest probes — the peer already proved responsive in steps
+        // 1-3, and a wedge mid-exchange costs one capped wait, not a
+        // stalled walker. Fresh connection: its timeout is set at open.
+        drop(conn);
+        let keys_timeout = timeout.max(Duration::from_secs(30));
+        let mut conn = Connection::open_timeout(
+            peer.ae,
+            self.digest_meter.clone(),
+            self.link.clone(),
+            keys_timeout,
+        )?;
+        let resp = conn.round_trip(&Request::post_json("/ae/keys", &req.to_json()))?;
+        let v = json::parse(resp.body_str()?)?;
+        let their_records = records_from_json(&v);
+        Ok(self.repair_from(kg, &their_records, peer.kv))
+    }
+
+    /// Per-exchange connect/I-O bound: one repair step against a wedged
+    /// peer costs at most this, never a stalled thread.
+    fn probe_timeout(&self) -> Duration {
+        self.cfg
+            .interval
+            .clamp(Duration::from_millis(100), Duration::from_secs(5))
+    }
+
+    /// Live `(key, version, content hash)` records in the given buckets.
+    fn records_for(&self, kg: &str, buckets: &[usize]) -> Vec<(String, u64, u64)> {
+        let wanted: HashSet<usize> = buckets.iter().copied().collect();
+        let now = Instant::now();
+        let data = self.store.data.read().unwrap();
+        let Some(map) = data.get(kg) else {
+            return Vec::new();
+        };
+        map.iter()
+            .filter(|(_, e)| !e.is_expired(now))
+            .filter(|(k, _)| wanted.contains(&self.forest.bucket_of(k)))
+            .map(|(k, e)| (k.clone(), e.version, content_hash(&e.value, e.version)))
+            .collect()
+    }
+
+    /// Pull every entry `source` holds a better copy of, version-aware:
+    /// newer version wins; equal version + different bytes, the higher
+    /// content hash wins on both sides. Pulls ride `fetch_entry` (TTL
+    /// preserved; an entry expired at the source is never resurrected).
+    /// Bounded by `max_keys_per_round`.
+    fn repair_from(&self, kg: &str, remote: &[(String, u64, u64)], source_kv: SocketAddr) -> u64 {
+        let placement = self.placement.read().unwrap().clone();
+        let mut pulled = 0u64;
+        for (key, r_ver, r_hash) in remote {
+            let (pull, conflict) = match self.store.read(kg, key) {
+                None => (true, false),
+                Some(local) if *r_ver > local.version => (true, false),
+                Some(local) if *r_ver == local.version => {
+                    let l_hash = content_hash(&local.value, local.version);
+                    (l_hash != *r_hash && *r_hash > l_hash, l_hash != *r_hash)
+                }
+                Some(_) => (false, false),
+            };
+            if !pull {
+                continue;
+            }
+            if let Some(p) = &placement {
+                // Only a home replica of the key repairs itself: pulling
+                // onto a non-replica would spread the key outside its
+                // preference list (a read-repair cache there ages out by
+                // TTL instead). Pulling *from* a non-replica is fine —
+                // a write-through cache can legitimately hold the newest
+                // version — and the version compare already rejects
+                // anything stale.
+                if p.has_keygroup(kg) && !p.is_replica(&self.name, kg, key) {
+                    continue;
+                }
+            }
+            if pulled >= self.cfg.max_keys_per_round as u64 {
+                break;
+            }
+            let fetched = fetch_entry(
+                source_kv,
+                kg,
+                key,
+                &self.fetch_meter,
+                &self.link,
+                Some(self.probe_timeout()),
+            );
+            match fetched {
+                Ok(Some(entry)) => {
+                    let remaining = entry
+                        .expires_at
+                        .map(|t| t.saturating_duration_since(Instant::now()));
+                    self.store.keygroups.write().unwrap().insert(kg.to_string());
+                    // `apply` marks the bucket through the installed
+                    // forest — only store mutations touch the tree.
+                    if self.store.apply(kg, key, entry.value, entry.version, remaining) {
+                        pulled += 1;
+                        self.repaired.fetch_add(1, Ordering::SeqCst);
+                        if conflict {
+                            self.conflicts.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }
+                // Gone at the source (expired / evicted): skip — TTL
+                // cleanup is the deletion mechanism, never resurrect.
+                Ok(None) | Err(_) => {}
+            }
+        }
+        pulled
+    }
+}
+
+/// Hex framing for 64-bit hashes: the crate's JSON numbers are i64-backed,
+/// which cannot round-trip the top bit of a hash.
+fn hash_to_hex(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+fn hash_from_hex(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn parse_hash(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(|h| h.as_str())
+        .and_then(hash_from_hex)
+        .ok_or_else(|| crate::Error::KvStore(format!("ae response missing hash `{key}`")))
+}
+
+fn parse_hash_list(v: &Value, key: &str) -> Result<Vec<u64>> {
+    v.get(key)
+        .and_then(|h| h.as_array())
+        .map(|items| {
+            items
+                .iter()
+                .filter_map(|i| i.as_str().and_then(hash_from_hex))
+                .collect()
+        })
+        .ok_or_else(|| crate::Error::KvStore(format!("ae response missing list `{key}`")))
+}
+
+fn records_to_json(records: &[(String, u64, u64)]) -> Vec<Value> {
+    records
+        .iter()
+        .map(|(key, ver, hash)| {
+            Value::from(vec![
+                Value::Str(key.clone()),
+                Value::from(*ver),
+                Value::Str(hash_to_hex(*hash)),
+            ])
+        })
+        .collect()
+}
+
+fn records_from_json(v: &Value) -> Vec<(String, u64, u64)> {
+    v.get("keys")
+        .and_then(|k| k.as_array())
+        .map(|items| {
+            items
+                .iter()
+                .filter_map(|rec| {
+                    let parts = rec.as_array()?;
+                    Some((
+                        parts.first()?.as_str()?.to_string(),
+                        parts.get(1)?.as_u64()?,
+                        parts.get(2)?.as_str().and_then(hash_from_hex)?,
+                    ))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Start the node's dedicated anti-entropy listener. Rides its own
+/// server + meter so digest traffic never pollutes the replication-port
+/// byte accounting (the same separation the heartbeat listeners use).
+pub fn serve(runtime: Arc<AeRuntime>) -> Result<Server> {
+    let link = runtime.link.clone();
+    let handler: Handler = Arc::new(move |req: &Request| ae_endpoint(&runtime, req));
+    Server::serve(0, link, handler)
+}
+
+/// The `/ae/*` verbs (responder side of the digest walk).
+fn ae_endpoint(rt: &AeRuntime, req: &Request) -> Response {
+    if req.method != "POST" {
+        return Response::error(404, "not found");
+    }
+    let v = match req.body_str().and_then(json::parse) {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &format!("bad json: {e}")),
+    };
+    let Ok(kg) = v.req_str("kg") else {
+        return Response::error(400, "missing keygroup");
+    };
+    match req.path.as_str() {
+        "/ae/root" => {
+            let digest = rt.forest.digest(&kg, &rt.store);
+            Response::json(
+                &Value::obj()
+                    .set("root", hash_to_hex(digest.root))
+                    .set("leaves", digest.leaves.len())
+                    .to_json(),
+            )
+        }
+        "/ae/level" => {
+            let digest = rt.forest.digest(&kg, &rt.store);
+            match v.get("parents").and_then(|p| p.as_array()) {
+                // Leaf hashes under the requested internal nodes.
+                Some(parents) => {
+                    let fanout = digest.level1.len();
+                    let mut out: Vec<Value> = Vec::new();
+                    for p in parents.iter().filter_map(Value::as_u64) {
+                        let p = p as usize;
+                        for b in (p * fanout)..((p + 1) * fanout).min(digest.leaves.len()) {
+                            out.push(Value::from(vec![
+                                Value::from(b),
+                                Value::Str(hash_to_hex(digest.leaves[b])),
+                            ]));
+                        }
+                    }
+                    Response::json(&Value::obj().set("buckets", out).to_json())
+                }
+                // The whole internal level.
+                None => {
+                    let hashes: Vec<Value> = digest
+                        .level1
+                        .iter()
+                        .map(|h| Value::Str(hash_to_hex(*h)))
+                        .collect();
+                    Response::json(&Value::obj().set("hashes", hashes).to_json())
+                }
+            }
+        }
+        "/ae/keys" => {
+            let buckets: Vec<usize> = v
+                .get("buckets")
+                .and_then(|b| b.as_array())
+                .map(|items| {
+                    items
+                        .iter()
+                        .filter_map(Value::as_u64)
+                        .map(|b| b as usize)
+                        .collect()
+                })
+                .unwrap_or_default();
+            // Snapshot local records *before* repairing: the initiator
+            // compares against our pre-repair state, so both sides make
+            // independent, symmetric pull decisions.
+            let local = rt.records_for(&kg, &buckets);
+            let initiator_records = records_from_json(&v);
+            if let Some(kv) = v
+                .get("kv")
+                .and_then(|a| a.as_str())
+                .and_then(|a| a.parse::<SocketAddr>().ok())
+            {
+                rt.repair_from(&kg, &initiator_records, kv);
+            }
+            Response::json(&Value::obj().set("keys", records_to_json(&local)).to_json())
+        }
+        _ => Response::error(404, "not found"),
+    }
+}
+
+/// The background repair thread: waits out the configured interval (or
+/// an on-demand [`Kick`] — damage reports and topology changes request
+/// immediate rounds) and runs [`AeRuntime::run_once`].
+pub struct AntiEntropy {
+    stop: Arc<AtomicBool>,
+    kick: Arc<Kick>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl AntiEntropy {
+    /// Spawn the round loop for `runtime`.
+    pub fn start(runtime: Arc<AeRuntime>, kick: Arc<Kick>) -> AntiEntropy {
+        let stop = Arc::new(AtomicBool::new(false));
+        let t_stop = stop.clone();
+        let t_kick = kick.clone();
+        let interval = runtime.cfg.interval;
+        let thread = std::thread::Builder::new()
+            .name(format!("kv-ae-{}", runtime.name))
+            .spawn(move || loop {
+                t_kick.wait(interval);
+                if t_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                runtime.run_once();
+            })
+            .expect("spawn anti-entropy");
+        AntiEntropy {
+            stop,
+            kick,
+            thread: Some(thread),
+        }
+    }
+
+    /// Ask the loop to exit without joining (kill-through-&self path).
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.kick.kick();
+    }
+
+    /// Stop the loop and join the thread.
+    pub fn shutdown(&mut self) {
+        self.request_stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for AntiEntropy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_with(entries: &[(&str, &str, u64)]) -> Arc<Store> {
+        let store = Store::new();
+        for (key, value, version) in entries {
+            store.apply("m", key, value.to_string(), *version, None);
+        }
+        store.keygroups.write().unwrap().insert("m".into());
+        store
+    }
+
+    #[test]
+    fn identical_stores_have_identical_digests() {
+        let entries: Vec<(String, String, u64)> = (0..200)
+            .map(|i| (format!("u{i}/s{i}"), format!("value-{i}"), 1 + i % 5))
+            .collect();
+        let refs: Vec<(&str, &str, u64)> = entries
+            .iter()
+            .map(|(k, v, ver)| (k.as_str(), v.as_str(), *ver))
+            .collect();
+        let (a, b) = (store_with(&refs), store_with(&refs));
+        let (fa, fb) = (MerkleForest::new(8), MerkleForest::new(8));
+        let (da, db) = (fa.digest("m", &a), fb.digest("m", &b));
+        assert_eq!(da, db, "same contents must hash identically");
+        assert_eq!(da.level1.len(), 8);
+        assert_eq!(da.leaves.len(), 64);
+    }
+
+    #[test]
+    fn divergence_is_visible_at_every_level() {
+        let a = store_with(&[("u/s1", "v", 1), ("u/s2", "w", 1)]);
+        let b = store_with(&[("u/s1", "v", 1), ("u/s2", "DIFFERENT", 1)]);
+        let (fa, fb) = (MerkleForest::new(4), MerkleForest::new(4));
+        let (da, db) = (fa.digest("m", &a), fb.digest("m", &b));
+        assert_ne!(da.root, db.root);
+        let bucket = fa.bucket_of("u/s2");
+        assert_ne!(da.leaves[bucket], db.leaves[bucket]);
+        assert_eq!(
+            da.leaves
+                .iter()
+                .zip(&db.leaves)
+                .filter(|(x, y)| x != y)
+                .count(),
+            1,
+            "only the diverged key's bucket may differ"
+        );
+    }
+
+    #[test]
+    fn dirty_marking_refreshes_only_changed_buckets() {
+        let store = store_with(&[("u/s1", "v1", 1)]);
+        let forest = MerkleForest::new(4);
+        let before = forest.digest("m", &store);
+        // Mutate without marking: the (stale) digest must not change —
+        // proof that clean buckets are not re-hashed.
+        store.apply("m", "u/s1", "v2".into(), 2, None);
+        assert_eq!(forest.digest("m", &store).root, before.root);
+        // Marking the key refreshes its bucket.
+        forest.mark("m", "u/s1");
+        let after = forest.digest("m", &store);
+        assert_ne!(after.root, before.root);
+        // And matches a from-scratch tree over the same store.
+        assert_eq!(after, MerkleForest::new(4).digest("m", &store));
+    }
+
+    #[test]
+    fn expired_entries_hash_as_absent() {
+        let live = store_with(&[("u/s1", "v", 1)]);
+        let with_expired = store_with(&[("u/s1", "v", 1)]);
+        with_expired.apply("m", "u/s2", "dying".into(), 1, Some(Duration::from_millis(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        // Unswept-but-expired on one side, never-written on the other:
+        // identical digests, so no spurious repair round.
+        let (fa, fb) = (MerkleForest::new(4), MerkleForest::new(4));
+        assert_eq!(
+            fa.digest("m", &live).root,
+            fb.digest("m", &with_expired).root
+        );
+    }
+
+    #[test]
+    fn bucket_assignment_spreads_keys() {
+        let forest = MerkleForest::new(16);
+        let mut used = HashSet::new();
+        for i in 0..1000 {
+            used.insert(forest.bucket_of(&format!("u{i}/s{i}")));
+        }
+        assert!(
+            used.len() > forest.leaf_count() / 2,
+            "keys must spread over buckets ({} of {})",
+            used.len(),
+            forest.leaf_count()
+        );
+    }
+
+    #[test]
+    fn hash_hex_round_trips() {
+        for h in [0u64, 1, u64::MAX, 0xdead_beef_cafe_f00d] {
+            assert_eq!(hash_from_hex(&hash_to_hex(h)), Some(h));
+        }
+        assert_eq!(hash_from_hex("not hex"), None);
+    }
+
+    #[test]
+    fn content_hash_separates_versions_and_bytes() {
+        assert_ne!(content_hash("v", 1), content_hash("v", 2));
+        assert_ne!(content_hash("a", 1), content_hash("b", 1));
+        assert_eq!(content_hash("a", 3), content_hash("a", 3));
+    }
+
+    #[test]
+    fn sink_counts_losses_and_logs_once_per_peer() {
+        let kick = Kick::new();
+        let sink = AeSink::new("t", kick);
+        let peer: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        sink.note_lost(peer, "m", "u/s1");
+        sink.note_lost(peer, "m", "u/s2");
+        assert_eq!(sink.lost(), 2);
+        // (The damaged keys' buckets were already marked by the local
+        // writes that spawned the pushes — only store mutations touch
+        // the forest.)
+    }
+
+    #[test]
+    fn installed_forest_marks_on_every_store_mutation() {
+        // The invariant the sink relies on: a store with a forest
+        // installed dirties the bucket on apply, so the divergence a
+        // lost push leaves behind is already visible to the next digest.
+        let store = store_with(&[("u/s1", "v", 1)]);
+        let forest = MerkleForest::new(4);
+        store.install_forest(forest.clone());
+        let before = forest.digest("m", &store);
+        store.apply("m", "u/s1", "v2".into(), 2, None);
+        assert_ne!(forest.digest("m", &store).root, before.root);
+    }
+}

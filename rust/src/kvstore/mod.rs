@@ -37,12 +37,27 @@
 //! fragment payload is a `context::codec` document, the one place the KV
 //! layer knows about the context format. Default **off**: the seed's
 //! full-state wire format, byte-for-byte.
+//!
+//! **Anti-entropy repair.** Push replication, delta sync, and hinted
+//! handoff can all still lose an update (exhausted retries without
+//! membership, a hint queue past its bound). With `antientropy.enabled`,
+//! each node maintains per-keygroup Merkle trees over its entries and a
+//! background thread exchanges digests with replica peers over a
+//! dedicated listener, pulling diverged entries back over the `/fetch`
+//! path — see [`antientropy`](self::AntiEntropyConfig) ([`MerkleForest`],
+//! `rust/src/kvstore/antientropy.rs`) for tree shape and who-wins rules.
+//! Default **off**; with zero divergence the replication-port byte
+//! accounting is untouched.
 
+mod antientropy;
 mod replication;
 mod ring;
 
+pub use antientropy::{AeSink, AntiEntropyConfig, MerkleForest, TreeDigest};
 pub use replication::{ReplicationConfig, Replicator};
 pub use ring::{HashRing, Placement};
+
+use antientropy::{AeRuntime, AntiEntropy, Kick};
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::net::SocketAddr;
@@ -81,11 +96,30 @@ pub struct Store {
     data: RwLock<HashMap<String, BTreeMap<String, Entry>>>,
     /// known keygroups
     keygroups: RwLock<HashSet<String>>,
+    /// Merkle forest for anti-entropy digests; installed when repair is
+    /// enabled so every mutation marks the key's bucket dirty. `None`
+    /// (the default) keeps mutations free of tracking work.
+    forest: RwLock<Option<Arc<MerkleForest>>>,
 }
 
 impl Store {
     fn new() -> Arc<Store> {
         Arc::new(Store::default())
+    }
+
+    /// Attach the anti-entropy forest; from now on every mutation marks
+    /// the touched bucket dirty.
+    fn install_forest(&self, forest: Arc<MerkleForest>) {
+        *self.forest.write().unwrap() = Some(forest);
+    }
+
+    /// Dirty-mark `key`'s tree bucket. Called *after* the data lock is
+    /// released (the forest has its own lock; nesting them would deadlock
+    /// against a concurrent digest rebuild reading the data).
+    fn mark_ae(&self, keygroup: &str, key: &str) {
+        if let Some(forest) = self.forest.read().unwrap().as_ref() {
+            forest.mark(keygroup, key);
+        }
     }
 
     /// Apply a write if it is newer than what we have. Returns true when
@@ -98,22 +132,28 @@ impl Store {
         version: u64,
         ttl: Option<Duration>,
     ) -> bool {
-        let mut data = self.data.write().unwrap();
-        let kg = data.entry(keygroup.to_string()).or_default();
-        match kg.get(key) {
-            Some(existing) if existing.version > version => false,
-            _ => {
-                kg.insert(
-                    key.to_string(),
-                    Entry {
-                        value,
-                        version,
-                        expires_at: ttl.map(|t| Instant::now() + t),
-                    },
-                );
-                true
+        let applied = {
+            let mut data = self.data.write().unwrap();
+            let kg = data.entry(keygroup.to_string()).or_default();
+            match kg.get(key) {
+                Some(existing) if existing.version > version => false,
+                _ => {
+                    kg.insert(
+                        key.to_string(),
+                        Entry {
+                            value,
+                            version,
+                            expires_at: ttl.map(|t| Instant::now() + t),
+                        },
+                    );
+                    true
+                }
             }
+        };
+        if applied {
+            self.mark_ae(keygroup, key);
         }
+        applied
     }
 
     fn read(&self, keygroup: &str, key: &str) -> Option<Entry> {
@@ -126,21 +166,43 @@ impl Store {
     }
 
     fn remove(&self, keygroup: &str, key: &str) -> bool {
-        let mut data = self.data.write().unwrap();
-        data.get_mut(keygroup).map_or(false, |kg| kg.remove(key).is_some())
+        let removed = {
+            let mut data = self.data.write().unwrap();
+            data.get_mut(keygroup).map_or(false, |kg| kg.remove(key).is_some())
+        };
+        if removed {
+            self.mark_ae(keygroup, key);
+        }
+        removed
     }
 
     /// Sweep expired entries; returns the number evicted.
     fn sweep(&self) -> usize {
         let now = Instant::now();
-        let mut data = self.data.write().unwrap();
-        let mut evicted = 0;
-        for kg in data.values_mut() {
-            let before = kg.len();
-            kg.retain(|_, e| !e.is_expired(now));
-            evicted += before - kg.len();
+        // Evicted keys are collected only when a forest will consume
+        // them — the default (repair-off) janitor stays allocation-free.
+        let track = self.forest.read().unwrap().is_some();
+        let mut evicted: Vec<(String, String)> = Vec::new();
+        let mut count = 0usize;
+        {
+            let mut data = self.data.write().unwrap();
+            for (kg_name, kg) in data.iter_mut() {
+                kg.retain(|key, e| {
+                    let keep = !e.is_expired(now);
+                    if !keep {
+                        count += 1;
+                        if track {
+                            evicted.push((kg_name.clone(), key.clone()));
+                        }
+                    }
+                    keep
+                });
+            }
         }
-        evicted
+        for (kg, key) in &evicted {
+            self.mark_ae(kg, key);
+        }
+        count
     }
 
     fn len(&self) -> usize {
@@ -164,6 +226,9 @@ pub struct KvConfig {
     /// Hinted handoff for unreachable peers (set when cluster membership
     /// is enabled). `None` keeps the seed's drop-after-retries behaviour.
     pub hints: Option<HintConfig>,
+    /// Merkle-tree anti-entropy repair (default off: no listener, no
+    /// digest traffic — the seed's wire behaviour, byte-for-byte).
+    pub antientropy: AntiEntropyConfig,
 }
 
 impl Default for KvConfig {
@@ -175,6 +240,7 @@ impl Default for KvConfig {
             default_ttl: Some(Duration::from_secs(3600)),
             sweep_interval: Duration::from_millis(500),
             hints: None,
+            antientropy: AntiEntropyConfig::default(),
         }
     }
 }
@@ -189,8 +255,14 @@ pub struct KvNode {
     /// keygroup -> peers receiving its updates (replicate-to-all path)
     peers: Arc<Mutex<HashMap<String, Vec<SocketAddr>>>>,
     /// Ring placement; when set, writes target preference lists instead of
-    /// the full `peers` subscription.
-    placement: RwLock<Option<Arc<Placement>>>,
+    /// the full `peers` subscription. Shared (`Arc`) with the
+    /// anti-entropy runtime so placement swaps are visible to repair.
+    placement: Arc<RwLock<Option<Arc<Placement>>>>,
+    /// Replication address -> anti-entropy listener address of known
+    /// peers (the replicate-to-all analogue of the placement's AE map).
+    ae_map: Arc<Mutex<HashMap<SocketAddr, SocketAddr>>>,
+    /// Anti-entropy machinery (None when disabled).
+    ae: Option<AeParts>,
     /// Meter for outbound `/fetch` reads (mobility / read-repair traffic).
     fetch_meter: Arc<TrafficMeter>,
     /// Remote reads issued because the local replica missed.
@@ -206,6 +278,17 @@ pub struct KvNode {
     config: KvConfig,
     janitor_stop: Arc<std::sync::atomic::AtomicBool>,
     janitor: Option<std::thread::JoinHandle<()>>,
+}
+
+/// One node's anti-entropy machinery: the shared runtime, the damage
+/// sink the replication pipeline reports losses to, the round latch, the
+/// dedicated digest listener, and the background round thread.
+struct AeParts {
+    runtime: Arc<AeRuntime>,
+    sink: Arc<AeSink>,
+    kick: Arc<Kick>,
+    server: Server,
+    engine: AntiEntropy,
 }
 
 /// Shared state of the inbound replication endpoint: the store plus what
@@ -244,11 +327,55 @@ impl KvNode {
         });
         let server = Server::serve(config.port, config.peer_link.clone(), handler)?;
         let handoff = config.hints.clone().map(HintedHandoff::new);
+        let placement: Arc<RwLock<Option<Arc<Placement>>>> = Arc::new(RwLock::new(None));
+        let peers: Arc<Mutex<HashMap<String, Vec<SocketAddr>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let ae_map: Arc<Mutex<HashMap<SocketAddr, SocketAddr>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let ae = if config.antientropy.enabled {
+            let forest = MerkleForest::new(config.antientropy.fanout);
+            store.install_forest(forest.clone());
+            let kick = Kick::new();
+            let sink = AeSink::new(name, kick.clone());
+            if let Some(h) = &handoff {
+                // A hint evicted by the per-peer bound is data the push
+                // pipeline can no longer deliver: hand it to repair.
+                let s = sink.clone();
+                h.set_eviction_hook(Box::new(move |peer, hint| {
+                    s.note_lost(peer, &hint.keygroup, &hint.key);
+                }));
+            }
+            let runtime = AeRuntime::new(
+                name,
+                config.antientropy.clone(),
+                store.clone(),
+                forest,
+                placement.clone(),
+                peers.clone(),
+                ae_map.clone(),
+                handoff.clone(),
+                config.peer_link.clone(),
+                server.addr,
+                fetch_meter.clone(),
+            );
+            let ae_server = antientropy::serve(runtime.clone())?;
+            let engine = AntiEntropy::start(runtime.clone(), kick.clone());
+            Some(AeParts {
+                runtime,
+                sink,
+                kick,
+                server: ae_server,
+                engine,
+            })
+        } else {
+            None
+        };
         let replicator = Replicator::start(
             name.to_string(),
             config.replication.clone(),
             config.peer_link.clone(),
             handoff.clone(),
+            ae.as_ref().map(|parts| parts.sink.clone()),
         );
         let janitor_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let jstop = janitor_stop.clone();
@@ -267,8 +394,10 @@ impl KvNode {
             store,
             replicator,
             server,
-            peers: Arc::new(Mutex::new(HashMap::new())),
-            placement: RwLock::new(None),
+            peers,
+            placement,
+            ae_map,
+            ae,
             fetch_meter,
             fetches: AtomicU64::new(0),
             read_repairs: AtomicU64::new(0),
@@ -351,6 +480,12 @@ impl KvNode {
                 // parks from a prior rejoin of this same peer).
                 self.replicator.replay_hints(new, new);
             }
+            // Hints bounded by `max_per_peer` may have evicted during the
+            // outage: schedule an immediate anti-entropy round so the
+            // returning peer heals past what replay could restore.
+            if let Some(ae) = &self.ae {
+                ae.kick.kick();
+            }
         }
     }
 
@@ -360,6 +495,11 @@ impl KvNode {
     /// through to home replicas.
     pub fn set_placement(&self, placement: Arc<Placement>) {
         *self.placement.write().unwrap() = Some(placement);
+        // Topology changed (join, failure, rejoin): repair soon, with
+        // the fresh preference lists.
+        if let Some(ae) = &self.ae {
+            ae.kick.kick();
+        }
     }
 
     /// The installed placement, if any.
@@ -533,6 +673,7 @@ impl KvNode {
             key,
             &self.fetch_meter,
             &self.config.peer_link,
+            None,
         )
     }
 
@@ -614,6 +755,63 @@ impl KvNode {
         self.handoff.as_ref().map_or(0, |h| h.dropped())
     }
 
+    /// Whether Merkle-tree anti-entropy repair is running on this node.
+    pub fn antientropy_enabled(&self) -> bool {
+        self.ae.is_some()
+    }
+
+    /// Address of this node's anti-entropy listener (None when disabled).
+    pub fn ae_addr(&self) -> Option<SocketAddr> {
+        self.ae.as_ref().map(|parts| parts.server.addr)
+    }
+
+    /// Teach this node where a peer's anti-entropy listener lives
+    /// (replicate-to-all wiring; placement-mode fleets carry the map in
+    /// the [`Placement`] instead). The mapping is inert with repair
+    /// disabled.
+    pub fn map_ae_peer(&self, peer_kv: SocketAddr, peer_ae: SocketAddr) {
+        self.ae_map.lock().unwrap().insert(peer_kv, peer_ae);
+    }
+
+    /// Run one synchronous anti-entropy round now (tests, benches, the
+    /// demo example). Returns entries repaired on this side; 0 when
+    /// disabled.
+    pub fn run_antientropy_round(&self) -> u64 {
+        self.ae.as_ref().map_or(0, |parts| parts.runtime.run_once())
+    }
+
+    /// Digest exchanges initiated by this node's repair engine.
+    pub fn ae_rounds(&self) -> u64 {
+        self.ae.as_ref().map_or(0, |parts| parts.runtime.rounds())
+    }
+
+    /// Entries pulled and applied by anti-entropy repair.
+    pub fn ae_keys_repaired(&self) -> u64 {
+        self.ae.as_ref().map_or(0, |parts| parts.runtime.repaired())
+    }
+
+    /// Equal-version byte mismatches repaired deterministically.
+    pub fn ae_conflicts(&self) -> u64 {
+        self.ae.as_ref().map_or(0, |parts| parts.runtime.conflicts())
+    }
+
+    /// Bytes moved by the digest walk, both directions: this node's
+    /// outbound `/ae/*` requests plus everything through its anti-entropy
+    /// listener. Rides dedicated meters — never part of the
+    /// replication-port accounting ([`KvNode::sync_rx_bytes`] /
+    /// [`KvNode::sync_tx_bytes`]).
+    pub fn ae_digest_bytes(&self) -> u64 {
+        self.ae.as_ref().map_or(0, |parts| {
+            parts.runtime.digest_tx_bytes() + parts.server.meter.total()
+        })
+    }
+
+    /// Updates the push pipeline reported as lost (exhausted drops, hint
+    /// evictions) and handed to repair.
+    pub fn ae_lost_updates(&self) -> u64 {
+        self.ae.as_ref().map_or(0, |parts| parts.sink.lost())
+    }
+
     /// Replication pushes dropped, all causes combined.
     pub fn repl_dropped_total(&self) -> u64 {
         self.replicator.dropped_total()
@@ -649,6 +847,11 @@ impl KvNode {
             .store(true, std::sync::atomic::Ordering::SeqCst);
         self.replicator.abort();
         self.server.request_stop();
+        if let Some(ae) = &self.ae {
+            // A killed node must neither answer digest walks nor repair.
+            ae.engine.request_stop();
+            ae.server.request_stop();
+        }
     }
 
     /// Stop all background machinery.
@@ -657,6 +860,10 @@ impl KvNode {
             .store(true, std::sync::atomic::Ordering::SeqCst);
         if let Some(j) = self.janitor.take() {
             let _ = j.join();
+        }
+        if let Some(ae) = &mut self.ae {
+            ae.engine.shutdown();
+            ae.server.shutdown();
         }
         self.replicator.shutdown();
         self.server.shutdown();
@@ -670,17 +877,24 @@ impl Drop for KvNode {
 }
 
 /// One synchronous `/fetch` round-trip to a peer's replication listener,
-/// shared by ring-mobility reads ([`KvNode::get_or_fetch`]) and the delta
-/// fallback path in [`replication_endpoint`].
+/// shared by ring-mobility reads ([`KvNode::get_or_fetch`]), the delta
+/// fallback path in [`replication_endpoint`], and anti-entropy repair
+/// pulls. `timeout` bounds connect and I/O when given (the repair path
+/// must survive a wedged peer); `None` keeps the seed's blocking
+/// behaviour for the request-path reads.
 fn fetch_entry(
     addr: SocketAddr,
     keygroup: &str,
     key: &str,
     meter: &Arc<TrafficMeter>,
     link: &LinkModel,
+    timeout: Option<Duration>,
 ) -> Result<Option<Entry>> {
     let payload = Value::obj().set("kg", keygroup).set("key", key).to_json();
-    let mut conn = Connection::open(addr, meter.clone(), link.clone())?;
+    let mut conn = match timeout {
+        Some(t) => Connection::open_timeout(addr, meter.clone(), link.clone(), t)?,
+        None => Connection::open(addr, meter.clone(), link.clone())?,
+    };
     let resp = conn.round_trip(&Request::post_json("/fetch", &payload))?;
     if resp.status != 200 {
         return Err(Error::KvStore(format!(
@@ -816,7 +1030,7 @@ fn apply_delta(ctx: &ReplicaCtx, v: &Value) -> Response {
         Some(a) => a,
         None => return Response::error(400, "delta record missing sender address"),
     };
-    match fetch_entry(from, &kg, &key, &ctx.fetch_meter, &ctx.link) {
+    match fetch_entry(from, &kg, &key, &ctx.fetch_meter, &ctx.link, None) {
         Ok(Some(remote)) => {
             let remaining = remote
                 .expires_at
@@ -973,6 +1187,11 @@ mod tests {
             .collect();
         let mut p = Placement::new(rf);
         p.add_keygroup("m", &members, 32);
+        for n in nodes {
+            if let Some(ae) = n.ae_addr() {
+                p.set_ae_addr(&n.name, ae);
+            }
+        }
         let p = Arc::new(p);
         for n in nodes {
             n.set_placement(p.clone());
@@ -1288,6 +1507,197 @@ mod tests {
             .saturating_duration_since(Instant::now());
         assert!(left > Duration::from_secs(50), "{left:?}");
         assert!(left <= Duration::from_secs(60));
+    }
+
+    // ---- anti-entropy repair ----
+
+    /// Node with repair enabled but the background thread dormant
+    /// (hour-long interval): tests drive rounds manually.
+    fn ae_node(name: &str) -> KvNode {
+        let cfg = KvConfig {
+            peer_link: LinkModel::ideal(),
+            replication: ReplicationConfig {
+                max_attempts: 1,
+                retry_backoff: Duration::ZERO,
+                ..ReplicationConfig::default()
+            },
+            antientropy: AntiEntropyConfig {
+                enabled: true,
+                interval: Duration::from_secs(3600),
+                ..AntiEntropyConfig::default()
+            },
+            ..KvConfig::default()
+        };
+        KvNode::start(name, cfg).unwrap()
+    }
+
+    /// Wire `a` and `b` as replicate-to-all peers with AE listener maps.
+    fn wire_ae(a: &KvNode, b: &KvNode) {
+        a.add_peer("m", b.replication_addr());
+        a.map_ae_peer(b.replication_addr(), b.ae_addr().unwrap());
+        b.add_peer("m", a.replication_addr());
+        b.map_ae_peer(a.replication_addr(), a.ae_addr().unwrap());
+    }
+
+    #[test]
+    fn antientropy_heals_exhausted_drop_divergence() {
+        // Regression for the "diverged forever" hole: without hints, a
+        // push that exhausts its attempts used to only bump a counter —
+        // now it is handed to repair, and one round heals the peer.
+        let a = ae_node("a");
+        let b = ae_node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        a.add_peer("m", dead);
+        a.put("m", "u/s", "ctx-v1".into(), 1).unwrap();
+        a.quiesce();
+        assert_eq!(a.repl_dropped_exhausted(), 1);
+        assert_eq!(
+            a.ae_lost_updates(),
+            1,
+            "exhausted drop must be reported to repair"
+        );
+        assert!(b.get("m", "u/s").is_none(), "b must have diverged");
+        // The peer becomes reachable (re-addressed to b's listeners);
+        // one digest round repairs b from a's replica.
+        a.replace_peer(dead, b.replication_addr());
+        a.map_ae_peer(b.replication_addr(), b.ae_addr().unwrap());
+        a.run_antientropy_round();
+        let e = b.get("m", "u/s").expect("repair must restore the entry");
+        assert_eq!(e.value, "ctx-v1");
+        assert_eq!(e.version, 1);
+        assert_eq!(b.ae_keys_repaired(), 1, "the responder pulled the entry");
+        assert!(a.ae_rounds() >= 1);
+        assert!(a.ae_digest_bytes() > 0, "digest walk must be metered");
+        assert_eq!(a.ae_conflicts() + b.ae_conflicts(), 0);
+    }
+
+    #[test]
+    fn antientropy_converged_round_is_digest_only() {
+        let a = ae_node("a");
+        let b = ae_node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        wire_ae(&a, &b);
+        a.put("m", "u/s", "v".into(), 1).unwrap();
+        a.quiesce();
+        wait_for(|| b.get("m", "u/s"), Duration::from_secs(2)).unwrap();
+        let tx_before = (a.sync_tx_bytes(), b.sync_tx_bytes());
+        let root_only = a.ae_digest_bytes();
+        assert_eq!(a.run_antientropy_round(), 0);
+        assert_eq!(b.run_antientropy_round(), 0);
+        assert_eq!(a.ae_keys_repaired() + b.ae_keys_repaired(), 0);
+        // Converged trees stop at the root exchange...
+        assert!(a.ae_digest_bytes() > root_only);
+        // ...and never touch the replication-port accounting.
+        assert_eq!((a.sync_tx_bytes(), b.sync_tx_bytes()), tx_before);
+    }
+
+    #[test]
+    fn antientropy_resolves_equal_version_conflicts_deterministically() {
+        // Equal versions with different bytes are beyond LWW's reach; the
+        // higher content hash wins on both sides.
+        let a = ae_node("a");
+        let b = ae_node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        // Diverge before wiring so the writes stay local.
+        a.put("m", "u/s", "from-a".into(), 2).unwrap();
+        b.put("m", "u/s", "from-b".into(), 2).unwrap();
+        wire_ae(&a, &b);
+        a.run_antientropy_round();
+        let (ea, eb) = (a.get("m", "u/s").unwrap(), b.get("m", "u/s").unwrap());
+        assert_eq!(ea.value, eb.value, "both sides must converge");
+        assert_eq!(ea.version, 2);
+        assert!(
+            ["from-a", "from-b"].contains(&ea.value.as_str()),
+            "winner must be one of the divergent values"
+        );
+        assert_eq!(
+            a.ae_conflicts() + b.ae_conflicts(),
+            1,
+            "exactly one side pulled the conflict winner"
+        );
+        // A second round finds nothing left to do.
+        assert_eq!(a.run_antientropy_round(), 0);
+        assert_eq!(b.run_antientropy_round(), 0);
+    }
+
+    #[test]
+    fn antientropy_repair_preserves_remaining_ttl() {
+        let a = ae_node("a");
+        let b = ae_node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        // b unreachable at write time: divergence with a live TTL on a.
+        a.put_ttl("m", "u/s", "v".into(), 1, Some(Duration::from_secs(60)))
+            .unwrap();
+        wire_ae(&a, &b);
+        a.run_antientropy_round();
+        let e = b.get("m", "u/s").expect("repair must deliver the entry");
+        let left = e
+            .expires_at
+            .expect("repaired entry must keep its TTL")
+            .saturating_duration_since(Instant::now());
+        assert!(left > Duration::from_secs(50), "{left:?}");
+        assert!(left <= Duration::from_secs(60));
+    }
+
+    #[test]
+    fn antientropy_never_resurrects_expired_entries() {
+        let a = ae_node("a");
+        let b = ae_node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        // Both writes stay local (peers unwired): one live entry, one
+        // that expires before the first round.
+        a.put("m", "u/live", "v".into(), 1).unwrap();
+        a.put_ttl("m", "u/dying", "soon".into(), 1, Some(Duration::from_millis(20)))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(a.get("m", "u/dying").is_none(), "expired on a");
+        wire_ae(&a, &b);
+        a.run_antientropy_round();
+        b.run_antientropy_round();
+        // Repair delivered the live entry but never the expired one —
+        // whether or not a's janitor swept it yet.
+        assert_eq!(b.get("m", "u/live").unwrap().value, "v");
+        assert!(
+            b.get("m", "u/dying").is_none(),
+            "repair must not resurrect an expired entry"
+        );
+    }
+
+    #[test]
+    fn antientropy_respects_preference_lists() {
+        // Under ring placement only a key's home replicas repair it: a
+        // non-replica never pulls (its cache ages out by TTL instead).
+        let a = ae_node("a");
+        let b = ae_node("b");
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        let placement = placement_over(&[&a, &b], 1);
+        // A key homed on b that only b holds: a must not pull it.
+        let key = (0..64)
+            .map(|i| format!("u/s{i}"))
+            .find(|k| placement.replicas("m", k)[0].0 == "b")
+            .expect("some key must hash to b");
+        b.put("m", &key, "homed-on-b".into(), 1).unwrap();
+        b.quiesce();
+        a.run_antientropy_round();
+        b.run_antientropy_round();
+        assert!(
+            a.get("m", &key).is_none(),
+            "non-replica must not pull keys homed elsewhere"
+        );
+        assert_eq!(a.ae_keys_repaired(), 0);
     }
 
     #[test]

@@ -37,6 +37,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use super::antientropy::AeSink;
 use crate::cluster::{Hint, HintUpdate, HintedHandoff};
 use crate::http::{Connection, Request};
 use crate::json::Value;
@@ -227,12 +228,16 @@ pub struct Replicator {
 
 impl Replicator {
     /// Spawn the sender thread. With a [`HintedHandoff`], pushes to down
-    /// or unreachable peers are parked there instead of dropped.
+    /// or unreachable peers are parked there instead of dropped. With an
+    /// [`AeSink`], every exhausted drop is also reported to anti-entropy
+    /// repair — the damage this sender can no longer fix is handed off
+    /// instead of lost silently.
     pub fn start(
         name: String,
         config: ReplicationConfig,
         link: LinkModel,
         handoff: Option<Arc<HintedHandoff>>,
+        ae: Option<Arc<AeSink>>,
     ) -> Replicator {
         let queue = Arc::new((
             Mutex::new(Queue {
@@ -259,6 +264,7 @@ impl Replicator {
         let t_shutdown = dropped_shutdown.clone();
         let t_abort = abort_flag.clone();
         let t_handoff = handoff.clone();
+        let t_ae = ae;
         let thread = std::thread::Builder::new()
             .name(format!("kv-repl-{name}"))
             .spawn(move || {
@@ -366,6 +372,12 @@ impl Replicator {
                         } else {
                             t_exhausted.fetch_add(1, Ordering::SeqCst);
                             t_dropped.fetch_add(1, Ordering::SeqCst);
+                            // Without hints this update is gone for good
+                            // as far as the push path is concerned — hand
+                            // the damage to anti-entropy repair.
+                            if let Some(sink) = &t_ae {
+                                sink.note_lost(*peer, &job.keygroup, &job.key);
+                            }
                         }
                     }
                     t_done.fetch_add(job.merged, Ordering::SeqCst);
@@ -630,7 +642,7 @@ mod tests {
         )
         .unwrap();
         let repl =
-            Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal(), None);
+            Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal(), None, None);
         repl.push(vec![server.addr], "kg", "k", "v", 1, None);
         repl.quiesce();
         let msgs = received.lock().unwrap();
@@ -665,7 +677,7 @@ mod tests {
             drop_probability: 1.0,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
         // Peer doesn't even need to exist: drop happens first.
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -683,7 +695,7 @@ mod tests {
             retry_backoff: Duration::ZERO,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
         assert_eq!(repl.dropped.load(Ordering::SeqCst), 1);
@@ -701,7 +713,7 @@ mod tests {
             retry_backoff: Duration::from_millis(20),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
         let t = std::time::Instant::now();
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -715,7 +727,7 @@ mod tests {
         // Regression: `push()` used to increment `queued` before noticing
         // the closed channel, so a late push made quiesce() spin forever.
         let mut repl =
-            Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal(), None);
+            Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal(), None, None);
         repl.shutdown();
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce(); // must return immediately
@@ -736,7 +748,7 @@ mod tests {
             retry_backoff: Duration::ZERO,
             ..ReplicationConfig::default()
         };
-        let mut repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
+        let mut repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
         let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
         for i in 0..3 {
             repl.push(vec![dead], "kg", &format!("k{i}"), "v", 1, None);
@@ -761,7 +773,7 @@ mod tests {
             retry_backoff: Duration::ZERO,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), Some(handoff.clone()));
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), Some(handoff.clone()), None);
         let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
         repl.push(vec![dead], "kg", "k", "v", 3, None);
         repl.quiesce();
@@ -782,7 +794,7 @@ mod tests {
             retry_backoff: Duration::from_millis(2),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), Some(handoff.clone()));
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), Some(handoff.clone()), None);
         let t = std::time::Instant::now();
         repl.push(vec![dead], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -826,6 +838,7 @@ mod tests {
             ReplicationConfig::default(),
             LinkModel::ideal(),
             Some(handoff.clone()),
+            None,
         );
         repl.replay_hints(old, server.addr);
         repl.quiesce();
@@ -853,7 +866,7 @@ mod tests {
             delay: Duration::from_millis(30),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
         let t = std::time::Instant::now();
         repl.push(vec![server.addr], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -926,7 +939,7 @@ mod tests {
             delay: Duration::from_millis(40),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None);
+        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
         let frag = |id: u32| StoredContext::Tokens(vec![id]).to_fragment(TokenCodec::BinaryU16);
         let from: SocketAddr = "127.0.0.1:9".parse().unwrap();
         repl.push(vec![server.addr], "kg", "k", "v1", 1, None);

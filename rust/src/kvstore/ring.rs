@@ -159,6 +159,10 @@ impl HashRing {
 pub struct Placement {
     rings: HashMap<String, HashRing>,
     addrs: HashMap<String, SocketAddr>,
+    /// Anti-entropy listener per node, when repair is enabled there.
+    /// Carried here so membership-driven placement swaps re-address the
+    /// digest walks exactly like they re-address writes.
+    ae_addrs: HashMap<String, SocketAddr>,
     replication_factor: usize,
     /// Topology version this placement was built from. 0 for a static
     /// launch-time placement; membership-driven rebuilds stamp the
@@ -172,6 +176,7 @@ impl Placement {
         Placement {
             rings: HashMap::new(),
             addrs: HashMap::new(),
+            ae_addrs: HashMap::new(),
             replication_factor: replication_factor.max(1),
             epoch: 0,
         }
@@ -206,6 +211,21 @@ impl Placement {
         for (name, addr) in members {
             self.addrs.insert(name.clone(), *addr);
         }
+    }
+
+    /// Record `name`'s anti-entropy listener address.
+    pub fn set_ae_addr(&mut self, name: &str, addr: SocketAddr) {
+        self.ae_addrs.insert(name.to_string(), addr);
+    }
+
+    /// `name`'s anti-entropy listener, if repair runs there.
+    pub fn ae_addr(&self, name: &str) -> Option<SocketAddr> {
+        self.ae_addrs.get(name).copied()
+    }
+
+    /// `name`'s replication listener, if the node is known to placement.
+    pub fn node_addr(&self, name: &str) -> Option<SocketAddr> {
+        self.addrs.get(name).copied()
     }
 
     /// Whether placement is defined for `keygroup`.
@@ -261,8 +281,10 @@ fn key_hash(key: &str) -> u64 {
 }
 
 /// SplitMix64 finalizer: FNV alone clusters similar strings; this gives
-/// the avalanche the ring's balance depends on.
-fn mix64(mut z: u64) -> u64 {
+/// the avalanche the ring's balance depends on. Shared with the
+/// anti-entropy bucket hashing — the two must never diverge, or a
+/// placement tweak would silently reshuffle Merkle buckets too.
+pub(crate) fn mix64(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)

@@ -42,6 +42,8 @@ fn main() {
                  \u{20}             --membership (heartbeat failure detection + hinted handoff)\n\
                  \u{20}             --heartbeat-ms N / --suspect-after K / --down-after-ms N\n\
                  \u{20}             --hints-max-per-peer N (parked updates per down peer, default 512)\n\
+                 \u{20}             --antientropy (Merkle-tree background replica repair)\n\
+                 \u{20}             --ae-interval-ms N / --ae-fanout F / --ae-max-keys K\n\
                  run-scenario  --mode tokenized|raw|client_side (default tokenized)\n\
                  \u{20}             --mobility sticky|paper (default sticky)\n\
                  \u{20}             --engine mock|pjrt (default pjrt)\n\
@@ -112,6 +114,27 @@ fn load_config(args: &Args) -> Result<ClusterConfig, String> {
         .map_err(|e| e.to_string())?
     {
         cfg.hints.max_per_peer = n;
+    }
+    if args.flag("antientropy") {
+        cfg.antientropy.enabled = true;
+    }
+    if let Some(ms) = args
+        .opt_parse::<u64>("ae-interval-ms")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.antientropy.interval = std::time::Duration::from_millis(ms);
+    }
+    if let Some(f) = args
+        .opt_parse::<usize>("ae-fanout")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.antientropy.fanout = f;
+    }
+    if let Some(k) = args
+        .opt_parse::<usize>("ae-max-keys")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.antientropy.max_keys_per_round = k;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)

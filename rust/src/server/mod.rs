@@ -65,6 +65,7 @@ impl EdgeNode {
                     .membership
                     .enabled
                     .then(|| cluster_cfg.hints.clone()),
+                antientropy: cluster_cfg.antientropy.clone(),
                 ..KvConfig::default()
             },
         )?);
@@ -195,6 +196,16 @@ fn dispatch(
                 "kv_repl_dropped_shutdown {}\n",
                 kv.repl_dropped_shutdown()
             ));
+            // Anti-entropy repair (all 0 when disabled). Digest bytes
+            // ride dedicated listeners/meters, never the replication
+            // port's accounting above.
+            dump.push_str(&format!("kv_ae_rounds {}\n", kv.ae_rounds()));
+            dump.push_str(&format!(
+                "kv_ae_keys_repaired {}\n",
+                kv.ae_keys_repaired()
+            ));
+            dump.push_str(&format!("kv_ae_digest_bytes {}\n", kv.ae_digest_bytes()));
+            dump.push_str(&format!("kv_ae_conflicts {}\n", kv.ae_conflicts()));
             // Topology gauges. Without membership the epoch is the
             // installed placement's stamp (0 = static) and liveness is
             // unobserved (0).
@@ -341,6 +352,11 @@ impl EdgeCluster {
                         if b.models.contains(model) {
                             let peer = nodes[j].kv.replication_addr();
                             nodes[i].kv.add_peer(model, peer);
+                            // Anti-entropy digest walks need the peer's
+                            // dedicated repair listener too.
+                            if let Some(ae) = nodes[j].kv.ae_addr() {
+                                nodes[i].kv.map_ae_peer(peer, ae);
+                            }
                         }
                     }
                 }
@@ -382,6 +398,11 @@ impl EdgeCluster {
                                 .map(|(nc, n)| (nc.name.clone(), n.kv.replication_addr()))
                                 .collect();
                             placement.add_keygroup(model, &members, cfg.sharding.virtual_nodes);
+                        }
+                        for (nc, n) in cfg.nodes.iter().zip(&nodes) {
+                            if let Some(ae) = n.kv.ae_addr() {
+                                placement.set_ae_addr(&nc.name, ae);
+                            }
                         }
                         let placement = Arc::new(placement);
                         for n in &nodes {
@@ -494,6 +515,16 @@ impl EdgeCluster {
                         if !rejoining {
                             existing.kv.add_peer(model, node.kv.replication_addr());
                         }
+                        // AE listener maps flow both ways regardless: a
+                        // rejoining member's subscriptions are
+                        // re-addressed to its fresh listeners by the
+                        // coordinator, and the digest walk must follow.
+                        if let Some(ae) = existing.kv.ae_addr() {
+                            node.kv.map_ae_peer(existing.kv.replication_addr(), ae);
+                        }
+                        if let Some(ae) = node.kv.ae_addr() {
+                            existing.kv.map_ae_peer(node.kv.replication_addr(), ae);
+                        }
                     }
                 }
             }
@@ -538,6 +569,11 @@ impl EdgeCluster {
                             members.push((node_cfg.name.clone(), node.kv.replication_addr()));
                         }
                         placement.add_keygroup(model, &members, self.cfg.sharding.virtual_nodes);
+                    }
+                    for n in self.nodes.iter().chain(std::iter::once(&node)) {
+                        if let Some(ae) = n.kv.ae_addr() {
+                            placement.set_ae_addr(&n.name, ae);
+                        }
                     }
                     let placement = Arc::new(placement);
                     for n in &self.nodes {
@@ -798,6 +834,10 @@ mod tests {
             "kv_repl_dropped_injected",
             "kv_repl_dropped_exhausted",
             "kv_repl_dropped_shutdown",
+            "kv_ae_rounds",
+            "kv_ae_keys_repaired",
+            "kv_ae_digest_bytes",
+            "kv_ae_conflicts",
             "cluster_epoch",
             "cluster_alive",
         ] {
