@@ -14,6 +14,10 @@
 //! - `shard-scaling` (A6): per-node sync traffic vs fleet size ×
 //!   replication factor (consistent-hash ring placement vs the paper's
 //!   replicate-to-all).
+//! - `transport` (A7): pooled keep-alive connections vs a fresh TCP
+//!   connect per request under the WAN link model — connects per 100
+//!   turns, p50 turn latency, and connects per anti-entropy round
+//!   (fig5 harness; CSV `results/fig5e_transport.csv`).
 //!
 //! Run all: `cargo bench --bench ablations`
 //! Run one: `cargo bench --bench ablations -- retry-sweep`
@@ -277,6 +281,115 @@ fn shard_scaling() {
     );
 }
 
+/// A7: transport ablation — pooled peer connections vs connect-per-
+/// request (`transport.max_idle_per_peer = 0`, the seed's behaviour on
+/// the fetch/probe/digest paths), under the WAN link model where every
+/// fresh connect costs one 40 ms handshake round-trip.
+fn transport_ablation() {
+    use discedge::kvstore::{AntiEntropyConfig, KvConfig, KvNode, ReplicationConfig};
+    use discedge::transport::TransportConfig;
+
+    const TURNS: usize = 40;
+    const AE_ROUNDS: u64 = 5;
+
+    // Part 1: a sticky conversation over a WAN client uplink. Lower
+    // connect counts and p50 turn latency are the pooled fleet's win.
+    let turns_run = |pooled: bool| -> (f64, f64) {
+        let mut cfg = ClusterConfig::mock_fleet(2, None);
+        cfg.client_link = LinkModel::wan(40);
+        cfg.peer_link = LinkModel::wan(40);
+        if !pooled {
+            cfg.transport.max_idle_per_peer = 0;
+        }
+        let cluster = common::launch_fleet_with(cfg);
+        let mut transport = TransportConfig::default();
+        if !pooled {
+            transport.max_idle_per_peer = 0;
+        }
+        let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+            .with_mode(ContextMode::Tokenized)
+            .with_model(common::MODEL)
+            .with_link(LinkModel::wan(40))
+            .with_transport(transport)
+            .with_max_tokens(8);
+        let mut lat_ms = Series::new();
+        for t in 0..TURNS {
+            let r = client
+                .chat(&format!("turn {t}: tell me about the robot's map"))
+                .expect("turn");
+            lat_ms.push(r.e2e_s * 1000.0);
+            cluster.quiesce();
+        }
+        let connects: u64 = client.net_stats().opened.get()
+            + cluster
+                .nodes
+                .iter()
+                .map(|n| n.kv.net_stats().opened.get())
+                .sum::<u64>();
+        (
+            connects as f64 * 100.0 / TURNS as f64,
+            lat_ms.percentile(50.0),
+        )
+    };
+
+    // Part 2: converged anti-entropy rounds (digest-only). Pooled walks
+    // amortize one connect across rounds; per-request pays one each.
+    let ae_run = |pooled: bool| -> f64 {
+        let node = |name: &str| {
+            let mut cfg = KvConfig {
+                peer_link: LinkModel::ideal(),
+                replication: ReplicationConfig::default(),
+                antientropy: AntiEntropyConfig {
+                    enabled: true,
+                    interval: Duration::from_secs(3600), // manual rounds
+                    ..AntiEntropyConfig::default()
+                },
+                ..KvConfig::default()
+            };
+            if !pooled {
+                cfg.transport.max_idle_per_peer = 0;
+            }
+            KvNode::start(name, cfg).expect("node")
+        };
+        let suffix = if pooled { "pooled" } else { "fresh" };
+        let a = node(&format!("a7a-{suffix}"));
+        let b = node(&format!("a7b-{suffix}"));
+        for n in [&a, &b] {
+            n.create_keygroup("m");
+        }
+        a.add_peer("m", b.replication_addr());
+        a.map_ae_peer(b.replication_addr(), b.ae_addr().unwrap());
+        a.put("m", "u/s", "ctx".into(), 1).expect("put");
+        a.quiesce();
+        let opened0 = a.net_stats().opened.get();
+        for _ in 0..AE_ROUNDS {
+            a.run_antientropy_round();
+        }
+        (a.net_stats().opened.get() - opened0) as f64 / AE_ROUNDS as f64
+    };
+
+    eprintln!("[a7] pooled");
+    let (pooled_connects, pooled_p50) = turns_run(true);
+    let pooled_ae = ae_run(true);
+    eprintln!("[a7] per-request");
+    let (fresh_connects, fresh_p50) = turns_run(false);
+    let fresh_ae = ae_run(false);
+
+    let mut table = Table::new(
+        "A7 — transport: pooled vs connect-per-request (wan link)",
+        &["connects_per_100_turns", "p50_turn_ms", "connects_per_ae_round"],
+    );
+    table.row("pooled", &[pooled_connects, pooled_p50, pooled_ae]);
+    table.row("per_request", &[fresh_connects, fresh_p50, fresh_ae]);
+    emit(&table, "fig5e_transport.csv");
+    println!(
+        "\nHeadline: pooling cuts connects per 100 turns {fresh_connects:.0} -> \
+         {pooled_connects:.0} and p50 turn latency {fresh_p50:.1} ms -> {pooled_p50:.1} ms \
+         ({:+.1}%); converged AE rounds cost {fresh_ae:.1} -> {pooled_ae:.1} connects",
+        pct_speedup(fresh_p50, pooled_p50),
+    );
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     let run_all = args.is_empty();
@@ -299,5 +412,8 @@ fn main() {
     }
     if want("shard-scaling") {
         shard_scaling();
+    }
+    if want("transport") {
+        transport_ablation();
     }
 }

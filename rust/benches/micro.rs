@@ -10,11 +10,12 @@ use std::time::Instant;
 
 use discedge::benchkit::{emit, results_dir, Bench};
 use discedge::context::{StoredContext, TokenCodec};
-use discedge::http::{Connection, Request, Response, Server};
+use discedge::http::{Request, Response, Server};
 use discedge::json;
 use discedge::kvstore::{KvConfig, KvNode};
 use discedge::metrics::Table;
 use discedge::netsim::{LinkModel, TrafficMeter};
+use discedge::transport::PeerPool;
 use discedge::tokenizer::Tokenizer;
 use discedge::workload;
 
@@ -131,12 +132,20 @@ fn main() {
         Arc::new(|_req: &Request| Response::json("{\"ok\":true}")),
     )
     .unwrap();
-    let mut conn = Connection::open(server.addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let mut conn = pool.checkout(server.addr).unwrap();
     let req = Request::post_json("/x", &doc);
     add(
         "http_roundtrip_5KB",
         time_per_op(500, || {
             std::hint::black_box(conn.round_trip(&req).unwrap());
+        }),
+    );
+    drop(conn);
+    add(
+        "http_roundtrip_5KB_pooled_checkout",
+        time_per_op(500, || {
+            std::hint::black_box(pool.round_trip(server.addr, &req).unwrap());
         }),
     );
 

@@ -5,7 +5,17 @@
 //! In `client_side` mode the client keeps the full conversation history and
 //! ships it with every request — the baseline of §4.2.2. In the edge-side
 //! modes it only tracks ids + turn counter. Per-turn request/response byte
-//! counts come from the connection meter (Fig 7).
+//! counts come from the per-endpoint pool meter (Fig 7).
+//!
+//! Connections ride one [`PeerPool`] per endpoint: keep-alive reuse
+//! across turns, with a stale cached socket (a node restarted, or the
+//! server reaped the idle connection) surfacing as at most one failed
+//! turn before being discarded — the caller's retry reconnects, so a
+//! single broken socket can no longer wedge an endpoint forever. The
+//! pool's transparent re-send stays off here: `/completion` is not
+//! replay-safe (a duplicate of a committed turn trips the turn-counter
+//! guard), so the retry decision belongs to the caller, who owns the
+//! turn counter.
 
 use std::collections::HashMap;
 use std::net::SocketAddr;
@@ -14,9 +24,10 @@ use std::time::Instant;
 
 use crate::config::ContextMode;
 use crate::context::{CompletionRequest, CompletionResponse};
-use crate::http::{Connection, Request};
+use crate::http::Request;
 use crate::llm::Message;
 use crate::netsim::{LinkModel, TrafficMeter};
+use crate::transport::{NetStats, PeerPool, TransportConfig};
 use crate::{Error, Result};
 
 /// Which node serves which turn (paper §4.2.2 mobility).
@@ -82,8 +93,11 @@ pub struct Client {
     endpoints: Vec<(String, SocketAddr)>,
     policy: MobilityPolicy,
     link: LinkModel,
-    conns: HashMap<usize, Connection>,
-    meters: HashMap<usize, Arc<TrafficMeter>>,
+    /// One keep-alive pool per endpoint index, each with its own meter
+    /// so per-node byte accounting survives mobility switches.
+    pools: HashMap<usize, PeerPool>,
+    transport: TransportConfig,
+    net: Arc<NetStats>,
     /// Context mode for all requests.
     pub mode: ContextMode,
     /// Target model.
@@ -102,8 +116,9 @@ impl Client {
             endpoints,
             policy,
             link: LinkModel::ideal(),
-            conns: HashMap::new(),
-            meters: HashMap::new(),
+            pools: HashMap::new(),
+            transport: TransportConfig::default(),
+            net: NetStats::new(),
             mode: ContextMode::Tokenized,
             model: "discedge/tiny-chat".into(),
             user_id: None,
@@ -138,6 +153,20 @@ impl Client {
         self
     }
 
+    /// Builder: transport tuning (pool idle bound; `max_idle_per_peer =
+    /// 0` reverts to a fresh connect per request — the A7 ablation
+    /// baseline).
+    pub fn with_transport(mut self, transport: TransportConfig) -> Client {
+        self.transport = transport;
+        self
+    }
+
+    /// Connection-lifecycle counters aggregated across this client's
+    /// per-endpoint pools.
+    pub fn net_stats(&self) -> &Arc<NetStats> {
+        &self.net
+    }
+
     /// Current turn counter (turns completed).
     pub fn turns_done(&self) -> u64 {
         self.turn
@@ -166,23 +195,27 @@ impl Client {
             req.messages = self.history.clone();
         }
 
-        let meter = self
-            .meters
-            .entry(node_idx)
-            .or_insert_with(TrafficMeter::new)
-            .clone();
         let link = self.link.clone();
-        let conn = match self.conns.entry(node_idx) {
-            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::hash_map::Entry::Vacant(e) => {
-                e.insert(Connection::open(addr, meter.clone(), link)?)
-            }
-        };
+        let transport = self.transport.clone();
+        let net = self.net.clone();
+        let pool = self.pools.entry(node_idx).or_insert_with(|| {
+            // No transparent re-send: `/completion` is not replay-safe
+            // (a duplicate of a committed turn trips the turn-counter
+            // guard), so a failure on a stale socket surfaces as this
+            // turn's error — the caller retries with the same counter,
+            // exactly the seed's contract — while the dead socket is
+            // discarded, so the *next* call reconnects instead of
+            // wedging the endpoint forever.
+            transport
+                .pool(TrafficMeter::new(), link, net)
+                .without_stale_retry()
+        });
+        let meter = pool.meter().clone();
 
         let tx0 = meter.tx.get();
         let rx0 = meter.rx.get();
         let t = Instant::now();
-        let http_resp = conn.round_trip(&Request::post_json("/completion", &req.to_json()))?;
+        let http_resp = pool.round_trip(addr, &Request::post_json("/completion", &req.to_json()))?;
         let e2e_s = t.elapsed().as_secs_f64();
         if http_resp.status != 200 {
             return Err(Error::Http(format!(

@@ -36,10 +36,11 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::http::{Connection, Request, Response, Server};
+use crate::http::{Request, Response, Server};
 use crate::json::Value;
 use crate::kvstore::HashRing;
 use crate::netsim::{LinkModel, TrafficMeter};
+use crate::transport::PeerPool;
 use crate::Result;
 
 /// How many ring successors each node probes per heartbeat tick. Two
@@ -418,17 +419,31 @@ impl FailureDetector {
         let thread = std::thread::Builder::new()
             .name(format!("membership-{node}"))
             .spawn(move || {
-                // A probe must resolve within one heartbeat so a hung
-                // peer cannot stall the round (floor keeps very fast test
-                // heartbeats from spuriously timing out the handshake).
+                // Every probe step is hard-bounded by the timeout so a
+                // hung peer cannot stall the round (floor keeps very
+                // fast test heartbeats from spuriously timing out the
+                // handshake). Probes to live peers ride one keep-alive
+                // pooled connection per target instead of a connect per
+                // tick; the pool's stale-retry is disabled so a wedged
+                // peer's dead socket costs one timeout, not a
+                // reconnect-and-retry multiple of it — the spuriously
+                // missed probe after a peer restart is absorbed by
+                // `suspect_after`, and the next tick connects fresh.
+                // Heartbeats slower than the pool's 30 s idle expiry
+                // degrade gracefully to connect-per-ping: the expired
+                // socket is pruned before reuse, never probed stale
+                // (the ping listener reaps its half at 60 s).
                 let timeout = cfg.heartbeat.max(Duration::from_millis(20));
+                let pool = PeerPool::new(meter, LinkModel::ideal())
+                    .with_io_timeout(timeout)
+                    .without_stale_retry();
                 while !t_stop.load(Ordering::SeqCst) {
                     std::thread::sleep(cfg.heartbeat);
                     if t_stop.load(Ordering::SeqCst) {
                         break;
                     }
                     for (target, ping_addr) in view.probe_targets(&node, PROBE_FANOUT) {
-                        let ok = probe(ping_addr, &meter, timeout);
+                        let ok = probe(&pool, ping_addr);
                         view.report(&target, ok);
                     }
                 }
@@ -455,15 +470,14 @@ impl Drop for FailureDetector {
     }
 }
 
-/// One `GET /ping` round-trip with a hard timeout on connect and I/O.
-fn probe(addr: SocketAddr, meter: &Arc<TrafficMeter>, timeout: Duration) -> bool {
-    match Connection::open_timeout(addr, meter.clone(), LinkModel::ideal(), timeout) {
-        Ok(mut conn) => matches!(
-            conn.round_trip(&Request::get("/ping")),
-            Ok(resp) if resp.status == 200
-        ),
-        Err(_) => false,
-    }
+/// One `GET /ping` round-trip over the detector's pool, under its hard
+/// connect/IO timeout. A live target's connection is kept alive between
+/// ticks; a dead target costs one bounded connect attempt.
+fn probe(pool: &PeerPool, addr: SocketAddr) -> bool {
+    matches!(
+        pool.round_trip(addr, &Request::get("/ping")),
+        Ok(resp) if resp.status == 200
+    )
 }
 
 #[cfg(test)]

@@ -10,6 +10,7 @@ use crate::json::{self, Value};
 use crate::kvstore::{AntiEntropyConfig, ReplicationConfig};
 use crate::netsim::LinkModel;
 use crate::profile::NodeProfile;
+use crate::transport::TransportConfig;
 use crate::{Error, Result};
 
 /// Context storage mode (paper §4.1: raw / tokenized / client-side).
@@ -179,6 +180,10 @@ pub struct ClusterConfig {
     /// Merkle-tree anti-entropy repair (default off: no digest listener,
     /// no background rounds — the seed's wire behaviour).
     pub antientropy: AntiEntropyConfig,
+    /// Transport layer: outbound pool idle bound and the per-listener
+    /// inbound connection budget (applies to every node's API, KV, and
+    /// anti-entropy listeners).
+    pub transport: TransportConfig,
     /// Turn-counter protocol settings.
     pub consistency: ConsistencyConfig,
     /// Generation settings.
@@ -219,6 +224,7 @@ impl ClusterConfig {
             membership: MembershipConfig::default(),
             hints: HintConfig::default(),
             antientropy: AntiEntropyConfig::default(),
+            transport: TransportConfig::default(),
             consistency: ConsistencyConfig::default(),
             generation: GenerationConfig::default(),
             engine: EngineKind::Pjrt,
@@ -378,6 +384,17 @@ impl ClusterConfig {
                 cfg.antientropy.max_keys_per_round = k as usize;
             }
         }
+        if let Some(t) = v.get("transport") {
+            if let Some(n) = t.get("max_server_conns").and_then(|x| x.as_u64()) {
+                cfg.transport.max_server_conns = n as usize;
+            }
+            if let Some(ms) = t.get("idle_timeout_ms").and_then(|x| x.as_u64()) {
+                cfg.transport.idle_timeout = Duration::from_millis(ms);
+            }
+            if let Some(n) = t.get("max_idle_per_peer").and_then(|x| x.as_u64()) {
+                cfg.transport.max_idle_per_peer = n as usize;
+            }
+        }
         if let Some(t) = v.get("session_ttl_s").and_then(|x| x.as_u64()) {
             cfg.session_ttl = Duration::from_secs(t);
         }
@@ -417,6 +434,12 @@ impl ClusterConfig {
         }
         if self.hints.max_per_peer == 0 {
             return Err(Error::Config("hints.max_per_peer must be >= 1".into()));
+        }
+        if self.transport.max_server_conns == 0 {
+            return Err(Error::Config("transport.max_server_conns must be >= 1".into()));
+        }
+        if self.transport.idle_timeout.is_zero() {
+            return Err(Error::Config("transport.idle_timeout_ms must be >= 1".into()));
         }
         if self.antientropy.enabled {
             if self.antientropy.interval.is_zero() {
@@ -621,6 +644,34 @@ mod tests {
             r#"{"engine": "mock", "antientropy": {"enabled": true, "interval_ms": 0}}"#,
             r#"{"engine": "mock", "antientropy": {"enabled": true, "fanout": 1}}"#,
             r#"{"engine": "mock", "antientropy": {"enabled": true, "max_keys_per_round": 0}}"#,
+        ] {
+            assert!(ClusterConfig::from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn transport_defaults_and_parses() {
+        // Defaults: bounded listener, pooling on.
+        let cfg = ClusterConfig::two_node_testbed();
+        assert_eq!(cfg.transport.max_server_conns, 256);
+        assert_eq!(cfg.transport.idle_timeout, Duration::from_secs(60));
+        assert_eq!(cfg.transport.max_idle_per_peer, 4);
+        let cfg = ClusterConfig::from_json(
+            r#"{
+              "engine": "mock",
+              "transport": {"max_server_conns": 32, "idle_timeout_ms": 500,
+                            "max_idle_per_peer": 0}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.transport.max_server_conns, 32);
+        assert_eq!(cfg.transport.idle_timeout, Duration::from_millis(500));
+        // 0 is legal: it means connect-per-request (the ablation baseline).
+        assert_eq!(cfg.transport.max_idle_per_peer, 0);
+        // Degenerate knobs are rejected.
+        for bad in [
+            r#"{"engine": "mock", "transport": {"max_server_conns": 0}}"#,
+            r#"{"engine": "mock", "transport": {"idle_timeout_ms": 0}}"#,
         ] {
             assert!(ClusterConfig::from_json(bad).is_err(), "{bad}");
         }

@@ -1,23 +1,41 @@
 //! Minimal HTTP/1.1 implementation over std TCP (hyper/axum substitute).
 //!
 //! Supports what the DisCEdge API needs: `POST`/`GET` with
-//! `Content-Length` bodies, a threaded server with graceful shutdown, and
-//! keep-alive client connections. Each request/response is serialized into
-//! a single `write` call so the [`crate::netsim::LinkModel`] charges exactly
-//! one message per HTTP message.
+//! `Content-Length` bodies, a threaded server with a **bounded
+//! connection budget** and graceful shutdown, and keep-alive client
+//! connections (pooled by [`crate::transport::PeerPool`] — outside this
+//! module and its tests, connections are only opened through the pool).
+//! Each request/response is serialized into a single `write` call so the
+//! [`crate::netsim::LinkModel`] charges exactly one message per HTTP
+//! message.
+//!
+//! The server accepts at most [`ServerLimits::max_conns`] live
+//! connections per listener; at capacity, further accepts are answered
+//! with an immediate `503` and closed, so overload degrades into clean
+//! rejections instead of an unbounded thread-per-socket explosion.
+//! Keep-alive connections idle past [`ServerLimits::idle_timeout`] are
+//! reaped. Hostile inputs are bounded too: a request head over
+//! [`MAX_HEAD`] bytes is answered `431`, a `Content-Length` over
+//! [`MAX_BODY`] is answered `413`, both followed by a close.
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::netsim::{LinkModel, MeteredStream, TrafficMeter};
+use crate::transport::NetStats;
 use crate::{Error, Result};
 
 /// Maximum accepted body size (guards the parser against hostile peers).
 pub const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// Maximum total bytes of a message head — request/status line plus all
+/// header lines. A peer streaming unbounded headers used to grow memory
+/// without limit; now it gets a `431` and a closed connection.
+pub const MAX_HEAD: usize = 16 * 1024;
 
 /// An HTTP request (server-side view and client-side builder).
 #[derive(Debug, Clone)]
@@ -126,6 +144,8 @@ impl Response {
             400 => "Bad Request",
             404 => "Not Found",
             409 => "Conflict",
+            413 => "Payload Too Large",
+            431 => "Request Header Fields Too Large",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
             _ => "Status",
@@ -146,55 +166,102 @@ impl Response {
     }
 }
 
-fn read_head<R: BufRead>(r: &mut R) -> Result<(String, BTreeMap<String, String>)> {
-    let mut line = String::new();
-    if r.read_line(&mut line)? == 0 {
-        return Err(Error::Http("connection closed".into()));
+/// Why parsing one inbound message stopped. The server maps the bound
+/// violations to status replies (`431`/`413`) before closing; everything
+/// else closes silently, as the seed did.
+enum ParseAbort {
+    /// Peer closed, idle reap, or an I/O error mid-message.
+    Closed,
+    /// Syntactically invalid head.
+    Malformed(String),
+    /// Head exceeded [`MAX_HEAD`] total bytes.
+    HeadTooLarge,
+    /// Declared `Content-Length` exceeded [`MAX_BODY`].
+    BodyTooLarge,
+}
+
+impl ParseAbort {
+    fn into_error(self) -> Error {
+        Error::Http(match self {
+            ParseAbort::Closed => "connection closed".into(),
+            ParseAbort::Malformed(m) => m,
+            ParseAbort::HeadTooLarge => format!("head exceeds {MAX_HEAD} bytes"),
+            ParseAbort::BodyTooLarge => format!("body exceeds {MAX_BODY} bytes"),
+        })
     }
-    let start = line.trim_end().to_string();
+}
+
+/// Read one head line without letting the peer grow the buffer past the
+/// remaining head budget (a single newline-free line must not bypass the
+/// cumulative cap).
+fn read_capped_line<R: BufRead>(
+    r: &mut R,
+    budget: &mut usize,
+) -> std::result::Result<String, ParseAbort> {
+    let mut line = String::new();
+    let n = r
+        .by_ref()
+        .take(*budget as u64 + 1)
+        .read_line(&mut line)
+        .map_err(|_| ParseAbort::Closed)?;
+    if n == 0 {
+        return Err(ParseAbort::Closed);
+    }
+    if n > *budget {
+        return Err(ParseAbort::HeadTooLarge);
+    }
+    *budget -= n;
+    Ok(line)
+}
+
+fn read_head<R: BufRead>(
+    r: &mut R,
+) -> std::result::Result<(String, BTreeMap<String, String>), ParseAbort> {
+    let mut budget = MAX_HEAD;
+    let start = read_capped_line(r, &mut budget)?.trim_end().to_string();
     let mut headers = BTreeMap::new();
     loop {
-        let mut h = String::new();
-        if r.read_line(&mut h)? == 0 {
-            return Err(Error::Http("eof in headers".into()));
-        }
-        let h = h.trim_end();
+        let line = read_capped_line(r, &mut budget)?;
+        let h = line.trim_end();
         if h.is_empty() {
             break;
         }
         let (k, v) = h
             .split_once(':')
-            .ok_or_else(|| Error::Http(format!("bad header line {h:?}")))?;
+            .ok_or_else(|| ParseAbort::Malformed(format!("bad header line {h:?}")))?;
         headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
     }
     Ok((start, headers))
 }
 
-fn read_body<R: BufRead>(r: &mut R, headers: &BTreeMap<String, String>) -> Result<Vec<u8>> {
-    let len: usize = headers
-        .get("content-length")
-        .map(|v| v.parse().map_err(|_| Error::Http("bad content-length".into())))
-        .transpose()?
-        .unwrap_or(0);
+fn read_body<R: BufRead>(
+    r: &mut R,
+    headers: &BTreeMap<String, String>,
+) -> std::result::Result<Vec<u8>, ParseAbort> {
+    let len: usize = match headers.get("content-length") {
+        Some(v) => v
+            .parse()
+            .map_err(|_| ParseAbort::Malformed("bad content-length".into()))?,
+        None => 0,
+    };
     if len > MAX_BODY {
-        return Err(Error::Http(format!("body too large: {len}")));
+        return Err(ParseAbort::BodyTooLarge);
     }
     let mut body = vec![0u8; len];
-    r.read_exact(&mut body)?;
+    r.read_exact(&mut body).map_err(|_| ParseAbort::Closed)?;
     Ok(body)
 }
 
-/// Parse one request from a buffered stream.
-pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request> {
+fn read_request_checked<R: BufRead>(r: &mut R) -> std::result::Result<Request, ParseAbort> {
     let (start, headers) = read_head(r)?;
     let mut parts = start.split_whitespace();
     let method = parts
         .next()
-        .ok_or_else(|| Error::Http("empty request line".into()))?
+        .ok_or_else(|| ParseAbort::Malformed("empty request line".into()))?
         .to_string();
     let path = parts
         .next()
-        .ok_or_else(|| Error::Http("missing path".into()))?
+        .ok_or_else(|| ParseAbort::Malformed("missing path".into()))?
         .to_string();
     let body = read_body(r, &headers)?;
     Ok(Request {
@@ -205,15 +272,20 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request> {
     })
 }
 
+/// Parse one request from a buffered stream.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request> {
+    read_request_checked(r).map_err(ParseAbort::into_error)
+}
+
 /// Parse one response from a buffered stream.
 pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response> {
-    let (start, headers) = read_head(r)?;
+    let (start, headers) = read_head(r).map_err(ParseAbort::into_error)?;
     let status: u16 = start
         .split_whitespace()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| Error::Http(format!("bad status line {start:?}")))?;
-    let body = read_body(r, &headers)?;
+    let body = read_body(r, &headers).map_err(ParseAbort::into_error)?;
     Ok(Response {
         status,
         headers,
@@ -241,8 +313,8 @@ impl Connection {
     }
 
     /// Open a connection with a hard bound on connect *and* subsequent
-    /// reads/writes. Used by probes (a hung peer must cost at most one
-    /// timeout, not a stalled detector thread).
+    /// reads/writes. Used by the transport pool's timeout checkouts (a
+    /// hung peer must cost at most one timeout, not a stalled thread).
     pub fn open_timeout(
         addr: SocketAddr,
         meter: Arc<TrafficMeter>,
@@ -259,6 +331,16 @@ impl Connection {
         })
     }
 
+    /// Adjust the hard read/write bound on the underlying socket (`None`
+    /// = blocking). Lets the pool apply per-checkout timeouts to reused
+    /// connections and restore the default on return.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        let socket = self.stream.get_ref().get_ref();
+        socket.set_read_timeout(timeout)?;
+        socket.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
     /// Send a request and wait for the response (single in-flight request,
     /// as in the paper's single-client experiments).
     pub fn round_trip(&mut self, req: &Request) -> Result<Response> {
@@ -272,8 +354,29 @@ impl Connection {
 /// Handler signature for the threaded server.
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
 
-/// A small threaded HTTP server: one thread per connection, keep-alive,
-/// graceful stop.
+/// Inbound budget of one listener (see
+/// [`crate::transport::TransportConfig`], which builds these from the
+/// `transport.*` knobs).
+#[derive(Debug, Clone)]
+pub struct ServerLimits {
+    /// Live connections served concurrently; accepts past the budget are
+    /// answered `503` + close.
+    pub max_conns: usize,
+    /// Idle bound on keep-alive connections: a connection with no
+    /// request for this long is reaped, freeing its budget slot.
+    pub idle_timeout: Duration,
+    /// Node-wide counters the listener reports rejected accepts into.
+    pub stats: Option<Arc<NetStats>>,
+}
+
+impl Default for ServerLimits {
+    fn default() -> ServerLimits {
+        crate::transport::TransportConfig::default().server_limits(None)
+    }
+}
+
+/// A small threaded HTTP server: one thread per **live** connection
+/// under a hard budget, keep-alive with idle reaping, graceful stop.
 pub struct Server {
     /// Bound local address.
     pub addr: SocketAddr,
@@ -294,11 +397,22 @@ type ConnSlot = (Arc<AtomicBool>, TcpStream);
 
 impl Server {
     /// Bind to `127.0.0.1:port` (0 = ephemeral) and serve `handler` on a
-    /// background accept loop. Accepted sockets are wrapped with `link`.
+    /// background accept loop with the default [`ServerLimits`].
+    /// Accepted sockets are wrapped with `link`.
     pub fn serve(port: u16, link: LinkModel, handler: Handler) -> Result<Server> {
+        Server::serve_with(port, link, ServerLimits::default(), handler)
+    }
+
+    /// [`Server::serve`] with an explicit connection budget, idle
+    /// policy, and stats sink.
+    pub fn serve_with(
+        port: u16,
+        link: LinkModel,
+        limits: ServerLimits,
+        handler: Handler,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let meter = TrafficMeter::new();
         let conns = Arc::new(Mutex::new(Vec::new()));
@@ -308,7 +422,15 @@ impl Server {
         let accept_thread = std::thread::Builder::new()
             .name(format!("http-accept-{}", addr.port()))
             .spawn(move || {
-                accept_loop(listener, accept_stop, accept_meter, accept_conns, link, handler);
+                accept_loop(
+                    listener,
+                    accept_stop,
+                    accept_meter,
+                    accept_conns,
+                    link,
+                    handler,
+                    limits,
+                );
             })?;
         Ok(Server {
             addr,
@@ -317,6 +439,14 @@ impl Server {
             meter,
             conns,
         })
+    }
+
+    /// Live accepted connections right now (reaps finished entries
+    /// first). Never exceeds the listener's `max_conns`.
+    pub fn live_conns(&self) -> usize {
+        let mut conns = self.conns.lock().unwrap();
+        conns.retain(|(done, _)| !done.load(Ordering::SeqCst));
+        conns.len()
     }
 
     /// Stop serving without joining the accept thread (callable through a
@@ -328,12 +458,25 @@ impl Server {
         for (_, conn) in self.conns.lock().unwrap().drain(..) {
             let _ = conn.shutdown(Shutdown::Both);
         }
+        // The accept loop blocks in accept(); a throwaway connect wakes
+        // it so it observes the flag (this replaced the old 1 ms
+        // busy-wait poll). Refused/failed connects just mean the loop
+        // already exited.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(250));
     }
 
     /// Stop accepting, sever open connections, and join the accept loop.
     pub fn shutdown(&mut self) {
         self.request_stop();
         if let Some(t) = self.accept_thread.take() {
+            // request_stop's single wake-up connect can fail while the
+            // loop is still parked in accept() (ephemeral-port pressure,
+            // a rejection burst eating the timeout). Keep nudging until
+            // the thread actually exits so a Drop can never hang.
+            while !t.is_finished() {
+                let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(50));
+                std::thread::sleep(Duration::from_millis(5));
+            }
             let _ = t.join();
         }
         // A connection accepted while the flag was being set may have
@@ -350,6 +493,44 @@ impl Drop for Server {
     }
 }
 
+/// Mark a reply terminal: the server closes the connection after
+/// sending it, and the client pool must not park the socket for reuse.
+fn closing(mut resp: Response) -> Response {
+    resp.headers.insert("connection".into(), "close".into());
+    resp
+}
+
+/// Toggle the read bound on the socket under a server-side reader (the
+/// idle gate between requests vs the looser active-request bound).
+fn set_timeout(
+    reader: &BufReader<MeteredStream<TcpStream>>,
+    timeout: Option<Duration>,
+) -> std::io::Result<()> {
+    reader.get_ref().get_ref().set_read_timeout(timeout)
+}
+
+/// Consume whatever the peer already sent, bounded in time, so closing
+/// the socket right after an error status does not RST away the
+/// undelivered reply (closing with unread receive-buffer data discards
+/// in-flight transmit data). Drains through the raw socket, NOT the
+/// metered stream — hostile overflow bytes must no more inflate the
+/// listener's rx accounting than the unmetered 503 path does. Runs on
+/// the serving thread, which may sleep; the bound keeps a hostile
+/// streamer from holding it.
+fn drain_briefly(ctl: &TcpStream) {
+    let _ = ctl.set_read_timeout(Some(Duration::from_millis(50)));
+    let deadline = std::time::Instant::now() + Duration::from_millis(250);
+    let mut buf = [0u8; 4096];
+    let mut raw = ctl;
+    while std::time::Instant::now() < deadline {
+        match raw.read(&mut buf) {
+            // Peer closed (clean) or nothing more within the bound.
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
 fn accept_loop(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
@@ -357,71 +538,194 @@ fn accept_loop(
     conns: Arc<Mutex<Vec<ConnSlot>>>,
     link: LinkModel,
     handler: Handler,
+    limits: ServerLimits,
 ) {
-    while !stop.load(Ordering::SeqCst) {
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let _ = stream.set_nodelay(true);
-                // Track the raw socket so request_stop() can sever it,
-                // reaping entries whose serving threads have exited so
-                // the list (and its duplicated fds) stays bounded by the
-                // number of *live* connections. The stop flag is
-                // re-checked under the conns lock: a connection accepted
-                // while request_stop() drains must be refused here, or a
-                // "crashed" node would keep serving it unseverably.
-                let done = Arc::new(AtomicBool::new(false));
-                let registered = match stream.try_clone() {
-                    Ok(raw) => {
-                        let mut conns = conns.lock().unwrap();
-                        if stop.load(Ordering::SeqCst) {
-                            false
-                        } else {
-                            conns.retain(|(d, _)| !d.load(Ordering::SeqCst));
-                            conns.push((done.clone(), raw));
-                            true
-                        }
-                    }
-                    // No sever handle available: refuse rather than
-                    // serve a connection a kill could never cut.
-                    Err(_) => false,
-                };
-                if !registered {
-                    let _ = stream.shutdown(Shutdown::Both);
-                    continue;
+    // Rejected sockets linger after their 503: closing a socket whose
+    // receive buffer holds an unread request makes the kernel send RST,
+    // which can discard the undelivered 503 on a write-first client.
+    // Entries live until the next accept (or loop exit) — the accept
+    // thread must never sleep, so there is no timer here — but the
+    // queue is pruned every iteration and hard-capped at 32
+    // write-shutdown sockets, so a rejection flood stays bounded.
+    let mut refused: std::collections::VecDeque<(std::time::Instant, TcpStream)> =
+        std::collections::VecDeque::new();
+    loop {
+        let now = std::time::Instant::now();
+        while refused.len() > 32
+            || refused
+                .front()
+                .is_some_and(|(t, _)| now.duration_since(*t) > Duration::from_millis(250))
+        {
+            refused.pop_front();
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::Interrupted | std::io::ErrorKind::ConnectionAborted
+                ) =>
+            {
+                continue;
+            }
+            // ENFILE(23)/EMFILE(24): transient fd exhaustion. Back off
+            // briefly and keep listening — killing the accept loop here
+            // would silently take the listener down for the node's
+            // lifetime over a recoverable condition.
+            Err(e) if matches!(e.raw_os_error(), Some(23) | Some(24)) => {
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            Err(_) => break, // listener torn down
+        };
+        if stop.load(Ordering::SeqCst) {
+            // The stop wake-up connect, or a client racing the stop.
+            let _ = stream.shutdown(Shutdown::Both);
+            break;
+        }
+        let _ = stream.set_nodelay(true);
+        // Budget check: reap finished entries, then count the live ones.
+        // Check-then-register cannot race another registration — this is
+        // the only accepting thread.
+        let at_capacity = {
+            let mut conns = conns.lock().unwrap();
+            conns.retain(|(done, _)| !done.load(Ordering::SeqCst));
+            conns.len() >= limits.max_conns
+        };
+        if at_capacity {
+            // Immediate 503 + close, sent before any request arrives so
+            // a refused client reads the status cleanly instead of
+            // silently growing a thread the budget promised not to.
+            // Written raw, NOT through the link model: a metered write
+            // sleeps for the link delay, and the accept thread must
+            // never sleep (a rejection burst would serialize into an
+            // accept stall; a partitioned link would park it for hours
+            // and hang shutdown). The ~70 rejection bytes stay out of
+            // the meter — nothing accounts overload replies.
+            if let Some(stats) = &limits.stats {
+                stats.rejected.add(1);
+            }
+            let mut rejected = stream;
+            let reply = closing(Response::error(503, "connection budget exhausted"));
+            let _ = rejected.write_all(&reply.to_bytes());
+            let _ = rejected.flush();
+            // FIN after the 503 (clients see EOF after the status);
+            // the lingering close happens via the `refused` queue.
+            let _ = rejected.shutdown(Shutdown::Write);
+            refused.push_back((std::time::Instant::now(), rejected));
+            continue;
+        }
+        // Idle keep-alive reaping: the read timeout gates the wait for
+        // the *next request's first byte* only (the thread lifts it for
+        // the rest of the message — a bandwidth-limited sender mid-
+        // request must not be reaped as idle).
+        let _ = stream.set_read_timeout(Some(limits.idle_timeout));
+        // Track the raw socket so request_stop() can sever it. The stop
+        // flag is re-checked under the conns lock: a connection accepted
+        // while request_stop() drains must be refused here, or a
+        // "crashed" node would keep serving it unseverably. (The serving
+        // thread reaches the same socket through the reader's accessor
+        // chain — no third fd needed for timeout toggling.)
+        let done = Arc::new(AtomicBool::new(false));
+        let registered = match stream.try_clone() {
+            Ok(raw) => {
+                let mut conns = conns.lock().unwrap();
+                if stop.load(Ordering::SeqCst) {
+                    false
+                } else {
+                    conns.push((done.clone(), raw));
+                    true
                 }
-                let meter = meter.clone();
-                let link = link.clone();
-                let handler = handler.clone();
-                let stop = stop.clone();
-                let _ = std::thread::Builder::new()
-                    .name("http-conn".into())
-                    .spawn(move || {
-                        let metered = MeteredStream::new(stream, meter, link);
-                        let mut reader = BufReader::new(metered);
-                        loop {
-                            if stop.load(Ordering::SeqCst) {
+            }
+            // No sever handle available: refuse rather than serve a
+            // connection a kill could never cut.
+            Err(_) => false,
+        };
+        if !registered {
+            let _ = stream.shutdown(Shutdown::Both);
+            continue;
+        }
+        let meter = meter.clone();
+        let link = link.clone();
+        let handler = handler.clone();
+        let stop = stop.clone();
+        let idle_timeout = limits.idle_timeout;
+        // Per-read bound while a request is arriving: generous enough
+        // for a full MAX_BODY over the slowest built-in link, finite so
+        // a half-sent request cannot pin its slot indefinitely.
+        let request_timeout = idle_timeout.max(Duration::from_secs(30));
+        let _ = std::thread::Builder::new()
+            .name("http-conn".into())
+            .spawn(move || {
+                let metered = MeteredStream::new(stream, meter, link);
+                let mut reader = BufReader::new(metered);
+                loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // Idle gate: wait for the next request's first byte
+                    // under the idle timeout. A timeout here is a
+                    // genuinely idle keep-alive — reap it.
+                    match reader.fill_buf() {
+                        Ok(buf) if buf.is_empty() => break, // peer closed
+                        Ok(_) => {}
+                        // A stray signal is not an idle peer.
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => break, // idle past the bound, or severed
+                    }
+                    // Bytes are arriving: an active request parses under
+                    // a looser per-read bound — a bandwidth-limited
+                    // sender is not "idle" and must not be reaped
+                    // mid-message, but a client that sends one byte and
+                    // goes silent must not hold a budget slot forever
+                    // (a byte-trickler can still tie one up; that
+                    // residual is bounded by the head cap, the budget,
+                    // and request_stop's sever).
+                    if set_timeout(&reader, Some(request_timeout)).is_err() {
+                        break;
+                    }
+                    let parsed = read_request_checked(&mut reader);
+                    if set_timeout(&reader, Some(idle_timeout)).is_err() {
+                        break;
+                    }
+                    match parsed {
+                        Ok(req) => {
+                            let resp = handler(&req);
+                            let bytes = resp.to_bytes();
+                            if reader.get_mut().write_all(&bytes).is_err() {
                                 break;
                             }
-                            match read_request(&mut reader) {
-                                Ok(req) => {
-                                    let resp = handler(&req);
-                                    let bytes = resp.to_bytes();
-                                    if reader.get_mut().write_all(&bytes).is_err() {
-                                        break;
-                                    }
-                                    let _ = reader.get_mut().flush();
-                                }
-                                Err(_) => break, // peer closed or bad request
-                            }
+                            let _ = reader.get_mut().flush();
                         }
-                        done.store(true, Ordering::SeqCst);
-                    });
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(1));
-            }
-            Err(_) => break,
-        }
+                        Err(ParseAbort::HeadTooLarge) => {
+                            let resp = closing(Response::error(431, "request head too large"));
+                            let _ = reader.get_mut().write_all(&resp.to_bytes());
+                            let _ = reader.get_mut().flush();
+                            drain_briefly(reader.get_ref().get_ref());
+                            break;
+                        }
+                        Err(ParseAbort::BodyTooLarge) => {
+                            let resp = closing(Response::error(413, "body exceeds MAX_BODY"));
+                            let _ = reader.get_mut().write_all(&resp.to_bytes());
+                            let _ = reader.get_mut().flush();
+                            drain_briefly(reader.get_ref().get_ref());
+                            break;
+                        }
+                        // Peer closed or a malformed head.
+                        Err(_) => break,
+                    }
+                }
+                // Sever the shared socket explicitly: the sever handle
+                // registered in `conns` duplicates the file description,
+                // so dropping this thread's stream alone would leave the
+                // TCP connection open (no FIN to the peer) until the
+                // registry reaps it on some future accept.
+                let _ = reader.get_ref().get_ref().shutdown(Shutdown::Both);
+                done.store(true, Ordering::SeqCst);
+            });
     }
 }
 
@@ -500,6 +804,127 @@ mod tests {
             b"POST /x HTTP/1.1\r\ncontent-length: nope\r\n\r\n".to_vec(),
         ));
         assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unbounded_heads() {
+        // Cumulative cap: many small header lines.
+        let mut raw = b"POST /x HTTP/1.1\r\n".to_vec();
+        for i in 0..2000 {
+            raw.extend_from_slice(format!("x-h{i}: {}\r\n", "v".repeat(64)).as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        let mut r = std::io::BufReader::new(std::io::Cursor::new(raw));
+        let err = read_request(&mut r).unwrap_err();
+        assert!(err.to_string().contains("head exceeds"), "{err}");
+        // Single-line cap: one newline-free line may not buffer past the
+        // budget either.
+        let huge = vec![b'a'; MAX_HEAD * 2];
+        let mut r = std::io::BufReader::new(std::io::Cursor::new(huge));
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_head_gets_431() {
+        let server = echo_server();
+        let mut raw = TcpStream::connect(server.addr).unwrap();
+        raw.write_all(b"POST /echo HTTP/1.1\r\n").unwrap();
+        let filler = format!("x-filler: {}\r\n", "y".repeat(1024));
+        for _ in 0..20 {
+            raw.write_all(filler.as_bytes()).unwrap();
+        }
+        let mut reader = BufReader::new(raw);
+        let resp = read_response(&mut reader).unwrap();
+        assert_eq!(resp.status, 431);
+        // ...and the connection is closed, not left parsing forever.
+        let mut rest = Vec::new();
+        assert_eq!(reader.read_to_end(&mut rest).unwrap_or(0), 0);
+    }
+
+    #[test]
+    fn oversized_body_gets_413() {
+        // A Content-Length past MAX_BODY used to silently drop the
+        // connection; now the peer is told why.
+        let server = echo_server();
+        let mut raw = TcpStream::connect(server.addr).unwrap();
+        raw.write_all(
+            format!("POST /echo HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1).as_bytes(),
+        )
+        .unwrap();
+        let mut reader = BufReader::new(raw);
+        let resp = read_response(&mut reader).unwrap();
+        assert_eq!(resp.status, 413);
+    }
+
+    #[test]
+    fn at_capacity_accepts_get_immediate_503() {
+        let limits = ServerLimits {
+            max_conns: 1,
+            ..ServerLimits::default()
+        };
+        let server = Server::serve_with(
+            0,
+            LinkModel::ideal(),
+            limits,
+            Arc::new(|_req: &Request| Response::json("{\"ok\":true}")),
+        )
+        .unwrap();
+        // Fill the single budget slot with a live keep-alive connection.
+        let mut held =
+            Connection::open(server.addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+        held.round_trip(&Request::get("/x")).unwrap();
+        assert_eq!(server.live_conns(), 1);
+        // The next accept is answered 503 without waiting for a request
+        // (read-first client: deterministic, no write race).
+        let raw = TcpStream::connect(server.addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut reader = BufReader::new(raw);
+        let resp = read_response(&mut reader).unwrap();
+        assert_eq!(resp.status, 503);
+        assert_eq!(server.live_conns(), 1, "budget never exceeded");
+        // Freeing the slot re-admits clients.
+        drop(held);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let mut conn =
+                Connection::open(server.addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+            match conn.round_trip(&Request::get("/x")) {
+                Ok(resp) if resp.status == 200 => break,
+                _ if std::time::Instant::now() > deadline => {
+                    panic!("freed budget slot must re-admit clients")
+                }
+                _ => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    }
+
+    #[test]
+    fn idle_keepalive_is_reaped() {
+        let limits = ServerLimits {
+            idle_timeout: Duration::from_millis(30),
+            ..ServerLimits::default()
+        };
+        let server = Server::serve_with(
+            0,
+            LinkModel::ideal(),
+            limits,
+            Arc::new(|_req: &Request| Response::json("{\"ok\":true}")),
+        )
+        .unwrap();
+        let mut conn =
+            Connection::open(server.addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+        conn.round_trip(&Request::get("/x")).unwrap();
+        // Idle past the bound: the server closes the connection and the
+        // slot is freed.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while server.live_conns() > 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "idle connection must be reaped"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(conn.round_trip(&Request::get("/x")).is_err(), "socket closed");
     }
 
     #[test]

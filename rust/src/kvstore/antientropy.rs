@@ -70,10 +70,11 @@ use std::time::{Duration, Instant};
 use super::ring::mix64;
 use super::{fetch_entry, Placement, Store};
 use crate::cluster::HintedHandoff;
-use crate::http::{Connection, Handler, Request, Response, Server};
+use crate::http::{Handler, Request, Response, Server, ServerLimits};
 use crate::json::{self, Value};
-use crate::netsim::{LinkModel, TrafficMeter};
+use crate::netsim::LinkModel;
 use crate::testkit::fnv1a;
+use crate::transport::PeerPool;
 use crate::Result;
 
 /// Anti-entropy tuning (`antientropy` config section).
@@ -365,10 +366,12 @@ pub struct AeRuntime {
     link: LinkModel,
     /// This node's replication listener (peers pull repairs from here).
     kv_addr: SocketAddr,
-    /// Outbound digest-walk traffic (client side of `/ae/*`).
-    digest_meter: Arc<TrafficMeter>,
-    /// Repair pulls ride the node's remote-read meter, like read-repair.
-    fetch_meter: Arc<TrafficMeter>,
+    /// Keep-alive pool for the `/ae/*` digest walks, carrying the
+    /// dedicated digest meter (client side of the exchange).
+    digest_pool: PeerPool,
+    /// Repair pulls ride the node's shared fetch pool (and so its
+    /// remote-read meter), like read-repair.
+    fetch_pool: Arc<PeerPool>,
     rounds: AtomicU64,
     repaired: AtomicU64,
     conflicts: AtomicU64,
@@ -394,7 +397,8 @@ impl AeRuntime {
         handoff: Option<Arc<HintedHandoff>>,
         link: LinkModel,
         kv_addr: SocketAddr,
-        fetch_meter: Arc<TrafficMeter>,
+        fetch_pool: Arc<PeerPool>,
+        digest_pool: PeerPool,
     ) -> Arc<AeRuntime> {
         Arc::new(AeRuntime {
             name: name.to_string(),
@@ -407,8 +411,8 @@ impl AeRuntime {
             handoff,
             link,
             kv_addr,
-            digest_meter: TrafficMeter::new(),
-            fetch_meter,
+            digest_pool,
+            fetch_pool,
             rounds: AtomicU64::new(0),
             repaired: AtomicU64::new(0),
             conflicts: AtomicU64::new(0),
@@ -435,7 +439,7 @@ impl AeRuntime {
     /// Outbound digest-walk bytes (the server-side share is metered on
     /// the listener and added by the owning node's accessor).
     pub fn digest_tx_bytes(&self) -> u64 {
-        self.digest_meter.total()
+        self.digest_pool.meter().total()
     }
 
     /// Run one full round now: for every keygroup, pick the next sync
@@ -512,14 +516,11 @@ impl AeRuntime {
         // Hard-bounded connect and I/O, like the failure detector's
         // probes: a wedged peer (accepts TCP, never answers — exactly
         // the failure class repair exists for) must cost one timeout,
-        // not a walker stalled under `round_lock` forever.
+        // not a walker stalled under `round_lock` forever. The checkout
+        // reuses the previous round's keep-alive connection, so a
+        // converged fleet's steady-state rounds cost zero connects.
         let timeout = self.probe_timeout();
-        let mut conn = Connection::open_timeout(
-            peer.ae,
-            self.digest_meter.clone(),
-            self.link.clone(),
-            timeout,
-        )?;
+        let mut conn = self.digest_pool.checkout_timeout(peer.ae, timeout)?;
         // Step 1: root digests. Equal roots end the round at O(1) bytes.
         let resp = conn.round_trip(&Request::post_json(
             "/ae/root",
@@ -588,15 +589,10 @@ impl AeRuntime {
         // answering, so this step needs a far looser bound than the
         // digest probes — the peer already proved responsive in steps
         // 1-3, and a wedge mid-exchange costs one capped wait, not a
-        // stalled walker. Fresh connection: its timeout is set at open.
-        drop(conn);
+        // stalled walker. Same pooled connection, loosened in place;
+        // the pool restores its default policy on return.
         let keys_timeout = timeout.max(Duration::from_secs(30));
-        let mut conn = Connection::open_timeout(
-            peer.ae,
-            self.digest_meter.clone(),
-            self.link.clone(),
-            keys_timeout,
-        )?;
+        conn.set_io_timeout(Some(keys_timeout))?;
         let resp = conn.round_trip(&Request::post_json("/ae/keys", &req.to_json()))?;
         let v = json::parse(resp.body_str()?)?;
         let their_records = records_from_json(&v);
@@ -663,11 +659,10 @@ impl AeRuntime {
                 break;
             }
             let fetched = fetch_entry(
+                &self.fetch_pool,
                 source_kv,
                 kg,
                 key,
-                &self.fetch_meter,
-                &self.link,
                 Some(self.probe_timeout()),
             );
             match fetched {
@@ -756,13 +751,14 @@ fn records_from_json(v: &Value) -> Vec<(String, u64, u64)> {
         .unwrap_or_default()
 }
 
-/// Start the node's dedicated anti-entropy listener. Rides its own
-/// server + meter so digest traffic never pollutes the replication-port
-/// byte accounting (the same separation the heartbeat listeners use).
-pub fn serve(runtime: Arc<AeRuntime>) -> Result<Server> {
+/// Start the node's dedicated anti-entropy listener under the node's
+/// transport limits. Rides its own server + meter so digest traffic
+/// never pollutes the replication-port byte accounting (the same
+/// separation the heartbeat listeners use).
+pub fn serve(runtime: Arc<AeRuntime>, limits: ServerLimits) -> Result<Server> {
     let link = runtime.link.clone();
     let handler: Handler = Arc::new(move |req: &Request| ae_endpoint(&runtime, req));
-    Server::serve(0, link, handler)
+    Server::serve_with(0, link, limits, handler)
 }
 
 /// The `/ae/*` verbs (responder side of the digest walk).

@@ -66,9 +66,10 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::cluster::{HintConfig, HintedHandoff};
-use crate::http::{Connection, Handler, Request, Response, Server};
+use crate::http::{Handler, Request, Response, Server};
 use crate::json::{self, Value};
 use crate::netsim::{LinkModel, TrafficMeter};
+use crate::transport::{NetStats, PeerPool, TransportConfig};
 use crate::{Error, Result};
 
 /// A versioned value.
@@ -229,6 +230,10 @@ pub struct KvConfig {
     /// Merkle-tree anti-entropy repair (default off: no listener, no
     /// digest traffic — the seed's wire behaviour, byte-for-byte).
     pub antientropy: AntiEntropyConfig,
+    /// Transport layer: outbound pool idle bound and the inbound
+    /// listener budget applied to this node's replication and
+    /// anti-entropy listeners.
+    pub transport: TransportConfig,
 }
 
 impl Default for KvConfig {
@@ -241,6 +246,7 @@ impl Default for KvConfig {
             sweep_interval: Duration::from_millis(500),
             hints: None,
             antientropy: AntiEntropyConfig::default(),
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -263,8 +269,12 @@ pub struct KvNode {
     ae_map: Arc<Mutex<HashMap<SocketAddr, SocketAddr>>>,
     /// Anti-entropy machinery (None when disabled).
     ae: Option<AeParts>,
-    /// Meter for outbound `/fetch` reads (mobility / read-repair traffic).
-    fetch_meter: Arc<TrafficMeter>,
+    /// Pool for outbound `/fetch` reads (mobility / read-repair / delta
+    /// fallback / repair pulls), carrying the fetch meter.
+    fetch_pool: Arc<PeerPool>,
+    /// Node-wide connection-lifecycle counters, shared by every pool
+    /// and listener of this node.
+    net: Arc<NetStats>,
     /// Remote reads issued because the local replica missed.
     fetches: AtomicU64,
     /// Remote reads that repaired a newer entry into the local store.
@@ -292,15 +302,13 @@ struct AeParts {
 }
 
 /// Shared state of the inbound replication endpoint: the store plus what
-/// the delta fallback path needs (a link + meter to `/fetch` full state
-/// from the sender) and the delta counters.
+/// the delta fallback path needs (the node's fetch pool, to `/fetch`
+/// full state from the sender) and the delta counters.
 struct ReplicaCtx {
     store: Arc<Store>,
-    /// Link model for fallback fetches (same hop class as replication).
-    link: LinkModel,
-    /// Meter shared with [`KvNode::fetch_meter`]: fallback fetches are
+    /// Pool shared with [`KvNode::fetch_pool`]: fallback fetches are
     /// remote-read traffic, accounted like ring mobility reads.
-    fetch_meter: Arc<TrafficMeter>,
+    fetch_pool: Arc<PeerPool>,
     /// Deltas applied contiguously onto the local entry.
     delta_applies: Arc<AtomicU64>,
     /// Deltas that could not apply (gap/mismatch) and were recovered via a
@@ -312,20 +320,26 @@ impl KvNode {
     /// Start a node: replication listener + sender + janitor.
     pub fn start(name: &str, config: KvConfig) -> Result<KvNode> {
         let store = Store::new();
-        let fetch_meter = TrafficMeter::new();
+        let net = NetStats::new();
+        let limits = config.transport.server_limits(Some(net.clone()));
+        let fetch_pool = Arc::new(config.transport.pool(
+            TrafficMeter::new(),
+            config.peer_link.clone(),
+            net.clone(),
+        ));
         let delta_applies = Arc::new(AtomicU64::new(0));
         let delta_fallbacks = Arc::new(AtomicU64::new(0));
         let ctx = ReplicaCtx {
             store: store.clone(),
-            link: config.peer_link.clone(),
-            fetch_meter: fetch_meter.clone(),
+            fetch_pool: fetch_pool.clone(),
             delta_applies: delta_applies.clone(),
             delta_fallbacks: delta_fallbacks.clone(),
         };
         let handler: Handler = Arc::new(move |req: &Request| {
             replication_endpoint(&ctx, req)
         });
-        let server = Server::serve(config.port, config.peer_link.clone(), handler)?;
+        let server =
+            Server::serve_with(config.port, config.peer_link.clone(), limits.clone(), handler)?;
         let handoff = config.hints.clone().map(HintedHandoff::new);
         let placement: Arc<RwLock<Option<Arc<Placement>>>> = Arc::new(RwLock::new(None));
         let peers: Arc<Mutex<HashMap<String, Vec<SocketAddr>>>> =
@@ -345,6 +359,8 @@ impl KvNode {
                     s.note_lost(peer, &hint.keygroup, &hint.key);
                 }));
             }
+            let digest_pool =
+                config.transport.pool(TrafficMeter::new(), config.peer_link.clone(), net.clone());
             let runtime = AeRuntime::new(
                 name,
                 config.antientropy.clone(),
@@ -356,9 +372,10 @@ impl KvNode {
                 handoff.clone(),
                 config.peer_link.clone(),
                 server.addr,
-                fetch_meter.clone(),
+                fetch_pool.clone(),
+                digest_pool,
             );
-            let ae_server = antientropy::serve(runtime.clone())?;
+            let ae_server = antientropy::serve(runtime.clone(), limits)?;
             let engine = AntiEntropy::start(runtime.clone(), kick.clone());
             Some(AeParts {
                 runtime,
@@ -373,7 +390,7 @@ impl KvNode {
         let replicator = Replicator::start(
             name.to_string(),
             config.replication.clone(),
-            config.peer_link.clone(),
+            config.transport.pool(TrafficMeter::new(), config.peer_link.clone(), net.clone()),
             handoff.clone(),
             ae.as_ref().map(|parts| parts.sink.clone()),
         );
@@ -398,7 +415,8 @@ impl KvNode {
             placement,
             ae_map,
             ae,
-            fetch_meter,
+            fetch_pool,
+            net,
             fetches: AtomicU64::new(0),
             read_repairs: AtomicU64::new(0),
             delta_applies,
@@ -667,14 +685,7 @@ impl KvNode {
 
     /// One synchronous remote read from a peer's replication listener.
     fn fetch_from(&self, addr: SocketAddr, keygroup: &str, key: &str) -> Result<Option<Entry>> {
-        fetch_entry(
-            addr,
-            keygroup,
-            key,
-            &self.fetch_meter,
-            &self.config.peer_link,
-            None,
-        )
+        fetch_entry(&self.fetch_pool, addr, keygroup, key, None)
     }
 
     /// Delete locally (client's explicit request, §3.3). Not replicated as
@@ -703,7 +714,14 @@ impl KvNode {
     /// plus outbound remote-read traffic. Zero fetches keep this identical
     /// to the seed's accounting.
     pub fn sync_tx_bytes(&self) -> u64 {
-        self.replicator.meter().total() + self.fetch_meter.total()
+        self.replicator.meter().total() + self.fetch_pool.meter().total()
+    }
+
+    /// Connection-lifecycle counters aggregated across this node's
+    /// transport pools (replication, fetch, digest walks) and listeners
+    /// (`net_conns_*` on `/metrics`).
+    pub fn net_stats(&self) -> &Arc<NetStats> {
+        &self.net
     }
 
     /// Per-replica push targets enqueued by this node's writes (see
@@ -879,21 +897,21 @@ impl Drop for KvNode {
 /// One synchronous `/fetch` round-trip to a peer's replication listener,
 /// shared by ring-mobility reads ([`KvNode::get_or_fetch`]), the delta
 /// fallback path in [`replication_endpoint`], and anti-entropy repair
-/// pulls. `timeout` bounds connect and I/O when given (the repair path
-/// must survive a wedged peer); `None` keeps the seed's blocking
-/// behaviour for the request-path reads.
+/// pulls — all riding the node's keep-alive fetch pool. `timeout` bounds
+/// connect and I/O when given (the repair path must survive a wedged
+/// peer); `None` keeps the seed's blocking behaviour for the
+/// request-path reads.
 fn fetch_entry(
+    pool: &PeerPool,
     addr: SocketAddr,
     keygroup: &str,
     key: &str,
-    meter: &Arc<TrafficMeter>,
-    link: &LinkModel,
     timeout: Option<Duration>,
 ) -> Result<Option<Entry>> {
     let payload = Value::obj().set("kg", keygroup).set("key", key).to_json();
     let mut conn = match timeout {
-        Some(t) => Connection::open_timeout(addr, meter.clone(), link.clone(), t)?,
-        None => Connection::open(addr, meter.clone(), link.clone())?,
+        Some(t) => pool.checkout_timeout(addr, t)?,
+        None => pool.checkout(addr)?,
     };
     let resp = conn.round_trip(&Request::post_json("/fetch", &payload))?;
     if resp.status != 200 {
@@ -1030,7 +1048,7 @@ fn apply_delta(ctx: &ReplicaCtx, v: &Value) -> Response {
         Some(a) => a,
         None => return Response::error(400, "delta record missing sender address"),
     };
-    match fetch_entry(from, &kg, &key, &ctx.fetch_meter, &ctx.link, None) {
+    match fetch_entry(&ctx.fetch_pool, from, &kg, &key, None) {
         Ok(Some(remote)) => {
             let remaining = remote
                 .expires_at
@@ -1300,7 +1318,7 @@ mod tests {
         }
         a.add_peer("m", b.replication_addr());
         b.kill();
-        // Listener teardown completes within the accept poll interval.
+        // The stop wake-up lets the severed listener finish tearing down.
         std::thread::sleep(Duration::from_millis(20));
         a.put("m", "k", "v".into(), 1).unwrap();
         a.quiesce();

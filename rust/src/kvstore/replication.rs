@@ -2,10 +2,12 @@
 //! substitute).
 //!
 //! A background sender thread drains a queue of updates and POSTs each one
-//! to every subscribed peer over keep-alive HTTP connections on the peer
-//! replication port. An optional artificial delay models replication lag
-//! (used by the consistency ablation to force the Context Manager's retry
-//! path, which the paper observed "never needs more than two retries").
+//! to every subscribed peer over a shared [`PeerPool`] of keep-alive HTTP
+//! connections on the peer replication port (stale sockets are replaced
+//! transparently; the pool carries this sender's meter). An optional
+//! artificial delay models replication lag (used by the consistency
+//! ablation to force the Context Manager's retry path, which the paper
+//! observed "never needs more than two retries").
 //!
 //! Two kinds of update travel through the queue (fields listed here in
 //! spirit; the JSON serializer emits keys sorted):
@@ -31,7 +33,7 @@
 //! (injected / exhausted / shutdown) with the combined total kept for
 //! compatibility.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -39,9 +41,10 @@ use std::time::Duration;
 
 use super::antientropy::AeSink;
 use crate::cluster::{Hint, HintUpdate, HintedHandoff};
-use crate::http::{Connection, Request};
+use crate::http::Request;
 use crate::json::Value;
-use crate::netsim::{LinkModel, TrafficMeter};
+use crate::netsim::TrafficMeter;
+use crate::transport::PeerPool;
 
 /// Replication engine configuration.
 #[derive(Debug, Clone)]
@@ -227,15 +230,16 @@ pub struct Replicator {
 }
 
 impl Replicator {
-    /// Spawn the sender thread. With a [`HintedHandoff`], pushes to down
-    /// or unreachable peers are parked there instead of dropped. With an
-    /// [`AeSink`], every exhausted drop is also reported to anti-entropy
-    /// repair — the damage this sender can no longer fix is handed off
-    /// instead of lost silently.
+    /// Spawn the sender thread, pushing over `pool` (which carries the
+    /// meter charged with this sender's outbound bytes). With a
+    /// [`HintedHandoff`], pushes to down or unreachable peers are parked
+    /// there instead of dropped. With an [`AeSink`], every exhausted
+    /// drop is also reported to anti-entropy repair — the damage this
+    /// sender can no longer fix is handed off instead of lost silently.
     pub fn start(
         name: String,
         config: ReplicationConfig,
-        link: LinkModel,
+        pool: PeerPool,
         handoff: Option<Arc<HintedHandoff>>,
         ae: Option<Arc<AeSink>>,
     ) -> Replicator {
@@ -246,7 +250,7 @@ impl Replicator {
             }),
             Condvar::new(),
         ));
-        let meter = TrafficMeter::new();
+        let meter = pool.meter().clone();
         let queued = Arc::new(AtomicU64::new(0));
         let done = Arc::new(AtomicU64::new(0));
         let dropped = Arc::new(AtomicU64::new(0));
@@ -255,7 +259,6 @@ impl Replicator {
         let dropped_shutdown = Arc::new(AtomicU64::new(0));
         let abort_flag = Arc::new(AtomicBool::new(false));
         let t_queue = queue.clone();
-        let t_meter = meter.clone();
         let t_queued = queued.clone();
         let t_done = done.clone();
         let t_dropped = dropped.clone();
@@ -273,7 +276,6 @@ impl Replicator {
                 // every same-length fleet name).
                 let mut rng =
                     crate::testkit::Rng::new(0x5EED ^ crate::testkit::fnv1a(name.as_bytes()));
-                let mut conns: HashMap<SocketAddr, Connection> = HashMap::new();
                 loop {
                     let job = {
                         let (lock, cvar) = &*t_queue;
@@ -324,23 +326,14 @@ impl Replicator {
                             if attempt > 0 && !config.retry_backoff.is_zero() {
                                 std::thread::sleep(config.retry_backoff);
                             }
-                            // Reuse a cached connection; reconnect on error.
-                            let conn = match conns.entry(*peer) {
-                                std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-                                std::collections::hash_map::Entry::Vacant(e) => {
-                                    match Connection::open(*peer, t_meter.clone(), link.clone()) {
-                                        Ok(c) => e.insert(c),
-                                        Err(_) => continue,
-                                    }
-                                }
-                            };
-                            match conn.round_trip(&req) {
-                                Ok(resp) if resp.status == 200 => {
+                            // One pooled round trip per attempt: reuse
+                            // the peer's keep-alive connection, with a
+                            // stale socket transparently replaced by a
+                            // fresh connect inside the pool.
+                            if let Ok(resp) = pool.round_trip(*peer, &req) {
+                                if resp.status == 200 {
                                     ok = true;
                                     break;
-                                }
-                                _ => {
-                                    conns.remove(peer);
                                 }
                             }
                         }
@@ -626,7 +619,14 @@ mod tests {
     use super::*;
     use crate::context::{StoredContext, TokenCodec};
     use crate::http::{Response, Server};
+    use crate::netsim::LinkModel;
     use std::sync::Mutex;
+
+    /// Fresh pool over an ideal link (each test sender gets its own
+    /// meter, exactly as each seed sender had).
+    fn ideal_pool() -> PeerPool {
+        PeerPool::new(TrafficMeter::new(), LinkModel::ideal())
+    }
 
     #[test]
     fn pushes_reach_peer() {
@@ -642,7 +642,7 @@ mod tests {
         )
         .unwrap();
         let repl =
-            Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal(), None, None);
+            Replicator::start("t".into(), ReplicationConfig::default(), ideal_pool(), None, None);
         repl.push(vec![server.addr], "kg", "k", "v", 1, None);
         repl.quiesce();
         let msgs = received.lock().unwrap();
@@ -677,7 +677,7 @@ mod tests {
             drop_probability: 1.0,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
         // Peer doesn't even need to exist: drop happens first.
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -695,7 +695,7 @@ mod tests {
             retry_backoff: Duration::ZERO,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
         assert_eq!(repl.dropped.load(Ordering::SeqCst), 1);
@@ -713,7 +713,7 @@ mod tests {
             retry_backoff: Duration::from_millis(20),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
         let t = std::time::Instant::now();
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -727,7 +727,7 @@ mod tests {
         // Regression: `push()` used to increment `queued` before noticing
         // the closed channel, so a late push made quiesce() spin forever.
         let mut repl =
-            Replicator::start("t".into(), ReplicationConfig::default(), LinkModel::ideal(), None, None);
+            Replicator::start("t".into(), ReplicationConfig::default(), ideal_pool(), None, None);
         repl.shutdown();
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce(); // must return immediately
@@ -748,7 +748,7 @@ mod tests {
             retry_backoff: Duration::ZERO,
             ..ReplicationConfig::default()
         };
-        let mut repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
+        let mut repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
         let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
         for i in 0..3 {
             repl.push(vec![dead], "kg", &format!("k{i}"), "v", 1, None);
@@ -773,7 +773,7 @@ mod tests {
             retry_backoff: Duration::ZERO,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), Some(handoff.clone()), None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), Some(handoff.clone()), None);
         let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
         repl.push(vec![dead], "kg", "k", "v", 3, None);
         repl.quiesce();
@@ -794,7 +794,7 @@ mod tests {
             retry_backoff: Duration::from_millis(2),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), Some(handoff.clone()), None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), Some(handoff.clone()), None);
         let t = std::time::Instant::now();
         repl.push(vec![dead], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -836,7 +836,7 @@ mod tests {
         let repl = Replicator::start(
             "t".into(),
             ReplicationConfig::default(),
-            LinkModel::ideal(),
+            ideal_pool(),
             Some(handoff.clone()),
             None,
         );
@@ -866,7 +866,7 @@ mod tests {
             delay: Duration::from_millis(30),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
         let t = std::time::Instant::now();
         repl.push(vec![server.addr], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -939,7 +939,7 @@ mod tests {
             delay: Duration::from_millis(40),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, LinkModel::ideal(), None, None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
         let frag = |id: u32| StoredContext::Tokens(vec![id]).to_fragment(TokenCodec::BinaryU16);
         let from: SocketAddr = "127.0.0.1:9".parse().unwrap();
         repl.push(vec![server.addr], "kg", "k", "v1", 1, None);

@@ -13,7 +13,9 @@
 //!   with a client-driven turn-counter consistency protocol. The
 //!   [`cluster`] module adds runtime membership: heartbeat failure
 //!   detection, epoch-versioned placement swaps, and hinted handoff for
-//!   writes addressed to down replicas.
+//!   writes addressed to down replicas. All node-to-node plumbing rides
+//!   the [`transport`] layer: pooled keep-alive peer connections
+//!   ([`transport::PeerPool`]) and a bounded inbound listener budget.
 //! - **Layer 2 (build time, `python/compile/model.py`)** — a Qwen-style
 //!   decoder-only transformer in JAX, AOT-lowered to HLO text.
 //! - **Layer 1 (build time, `python/compile/kernels/`)** — Pallas attention
@@ -43,6 +45,7 @@ pub mod runtime;
 pub mod server;
 pub mod testkit;
 pub mod tokenizer;
+pub mod transport;
 pub mod workload;
 
 /// Crate-wide result alias.

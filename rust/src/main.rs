@@ -44,6 +44,9 @@ fn main() {
                  \u{20}             --hints-max-per-peer N (parked updates per down peer, default 512)\n\
                  \u{20}             --antientropy (Merkle-tree background replica repair)\n\
                  \u{20}             --ae-interval-ms N / --ae-fanout F / --ae-max-keys K\n\
+                 \u{20}             --max-server-conns N (503 past this many live conns, default 256)\n\
+                 \u{20}             --idle-timeout-ms N (reap idle server conns, default 60000)\n\
+                 \u{20}             --pool-max-idle N (idle conns pooled per peer; 0 = no reuse)\n\
                  run-scenario  --mode tokenized|raw|client_side (default tokenized)\n\
                  \u{20}             --mobility sticky|paper (default sticky)\n\
                  \u{20}             --engine mock|pjrt (default pjrt)\n\
@@ -135,6 +138,24 @@ fn load_config(args: &Args) -> Result<ClusterConfig, String> {
         .map_err(|e| e.to_string())?
     {
         cfg.antientropy.max_keys_per_round = k;
+    }
+    if let Some(n) = args
+        .opt_parse::<usize>("max-server-conns")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.transport.max_server_conns = n;
+    }
+    if let Some(ms) = args
+        .opt_parse::<u64>("idle-timeout-ms")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.transport.idle_timeout = std::time::Duration::from_millis(ms);
+    }
+    if let Some(n) = args
+        .opt_parse::<usize>("pool-max-idle")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.transport.max_idle_per_peer = n;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)

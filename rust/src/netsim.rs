@@ -90,6 +90,17 @@ impl LinkModel {
         }
     }
 
+    /// Connection-establishment delay: one full round-trip (SYN +
+    /// SYN-ACK; the final ACK piggybacks on the first data segment)
+    /// before any payload can flow. Charged by the transport pool on
+    /// every fresh connect — the cost connection pooling exists to
+    /// avoid. On a [`LinkModel::partitioned`] link this is the same
+    /// multi-hour blackhole as a write, so pools over partitioned links
+    /// belong on throwaway threads only.
+    pub fn connect_delay(&self) -> Duration {
+        self.latency * 2
+    }
+
     /// Transmission delay for a message of `bytes` (excluding jitter).
     pub fn delay_for(&self, bytes: usize) -> Duration {
         let ser = match self.bandwidth_bps {
@@ -239,6 +250,16 @@ mod tests {
             jitter: Duration::ZERO,
         };
         assert_eq!(degenerate.delay_for(10_000), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn connect_delay_is_one_link_round_trip() {
+        assert_eq!(LinkModel::ideal().connect_delay(), Duration::ZERO);
+        // wan(rtt): latency is rtt/2 one-way, so the handshake costs
+        // exactly one full RTT regardless of bandwidth.
+        assert_eq!(LinkModel::wan(80).connect_delay(), Duration::from_millis(80));
+        assert_eq!(LinkModel::lan().connect_delay(), Duration::from_micros(400));
+        assert!(LinkModel::partitioned().connect_delay() >= Duration::from_secs(7200));
     }
 
     #[test]

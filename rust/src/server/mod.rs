@@ -66,6 +66,7 @@ impl EdgeNode {
                     .enabled
                     .then(|| cluster_cfg.hints.clone()),
                 antientropy: cluster_cfg.antientropy.clone(),
+                transport: cluster_cfg.transport.clone(),
                 ..KvConfig::default()
             },
         )?);
@@ -89,7 +90,16 @@ impl EdgeNode {
         let handler: Handler = Arc::new(move |req: &Request| {
             dispatch(req, &h_cm, &h_engines, &h_kv, &h_membership)
         });
-        let api = Server::serve(node_cfg.api_port, cluster_cfg.client_link.clone(), handler)?;
+        // The API listener shares the node's transport budget and
+        // reports into the same `net_conns_*` stats as the KV pools.
+        let api = Server::serve_with(
+            node_cfg.api_port,
+            cluster_cfg.client_link.clone(),
+            cluster_cfg
+                .transport
+                .server_limits(Some(kv.net_stats().clone())),
+            handler,
+        )?;
         Ok(EdgeNode {
             name: node_cfg.name.clone(),
             profile: node_cfg.profile.clone(),
@@ -206,6 +216,13 @@ fn dispatch(
             ));
             dump.push_str(&format!("kv_ae_digest_bytes {}\n", kv.ae_digest_bytes()));
             dump.push_str(&format!("kv_ae_conflicts {}\n", kv.ae_conflicts()));
+            // Transport layer: connection lifecycle across this node's
+            // pools (replication, fetch, digest) and listeners.
+            let net = kv.net_stats();
+            dump.push_str(&format!("net_conns_opened {}\n", net.opened.get()));
+            dump.push_str(&format!("net_conns_reused {}\n", net.reused.get()));
+            dump.push_str(&format!("net_conns_evicted {}\n", net.evicted.get()));
+            dump.push_str(&format!("net_conns_rejected {}\n", net.rejected.get()));
             // Topology gauges. Without membership the epoch is the
             // installed placement's stamp (0 = static) and liveness is
             // unobserved (0).
@@ -675,8 +692,15 @@ pub fn train_production_tokenizer(dir: &std::path::Path, vocab_size: usize) -> R
 mod tests {
     use super::*;
     use crate::config::ContextMode;
-    use crate::http::{Connection, Request as HttpRequest};
+    use crate::http::Request as HttpRequest;
     use crate::netsim::{LinkModel, TrafficMeter};
+    use crate::transport::PeerPool;
+
+    /// One-off client pool over an ideal link (the tests' substitute
+    /// for opening raw connections).
+    fn api_pool() -> PeerPool {
+        PeerPool::new(TrafficMeter::new(), LinkModel::ideal())
+    }
 
     fn mock_cluster(n_nodes: usize) -> EdgeCluster {
         let mut cfg = ClusterConfig::two_node_testbed();
@@ -695,9 +719,8 @@ mod tests {
     }
 
     fn post(addr: SocketAddr, req: &CompletionRequest) -> crate::context::CompletionResponse {
-        let mut conn = Connection::open(addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
-        let resp = conn
-            .round_trip(&HttpRequest::post_json("/completion", &req.to_json()))
+        let resp = api_pool()
+            .round_trip(addr, &HttpRequest::post_json("/completion", &req.to_json()))
             .unwrap();
         assert_eq!(resp.status, 200, "{}", resp.body_str().unwrap_or("?"));
         crate::context::CompletionResponse::from_json(resp.body_str().unwrap()).unwrap()
@@ -707,12 +730,13 @@ mod tests {
     fn health_and_metrics() {
         let cluster = mock_cluster(1);
         let addr = cluster.nodes[0].api_addr();
-        let mut conn = Connection::open(addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
-        let h = conn.round_trip(&HttpRequest::get("/health")).unwrap();
+        let pool = api_pool();
+        let h = pool.round_trip(addr, &HttpRequest::get("/health")).unwrap();
         assert_eq!(h.status, 200);
         assert!(h.body_str().unwrap().contains("ok"));
-        let m = conn.round_trip(&HttpRequest::get("/metrics")).unwrap();
+        let m = pool.round_trip(addr, &HttpRequest::get("/metrics")).unwrap();
         assert!(m.body_str().unwrap().contains("kv_entries"));
+        assert_eq!(pool.stats().opened.get(), 1, "keep-alive across requests");
     }
 
     #[test]
@@ -728,15 +752,12 @@ mod tests {
     #[test]
     fn unknown_model_404() {
         let cluster = mock_cluster(1);
-        let mut conn = Connection::open(
-            cluster.nodes[0].api_addr(),
-            TrafficMeter::new(),
-            LinkModel::ideal(),
-        )
-        .unwrap();
         let req = CompletionRequest::new("ghost/model", "hi", 1, ContextMode::Raw);
-        let resp = conn
-            .round_trip(&HttpRequest::post_json("/completion", &req.to_json()))
+        let resp = api_pool()
+            .round_trip(
+                cluster.nodes[0].api_addr(),
+                &HttpRequest::post_json("/completion", &req.to_json()),
+            )
             .unwrap();
         assert_eq!(resp.status, 404);
     }
@@ -790,17 +811,14 @@ mod tests {
         cfg.nodes[0].profile = NodeProfile::m2_native();
         cfg.consistency.retries = 0;
         let cluster = EdgeCluster::launch(cfg).unwrap();
-        let mut conn = Connection::open(
-            cluster.nodes[0].api_addr(),
-            TrafficMeter::new(),
-            LinkModel::ideal(),
-        )
-        .unwrap();
         let mut req = CompletionRequest::new("discedge/tiny-chat", "hi", 9, ContextMode::Tokenized);
         req.user_id = Some("u".into());
         req.session_id = Some("s".into());
-        let resp = conn
-            .round_trip(&HttpRequest::post_json("/completion", &req.to_json()))
+        let resp = api_pool()
+            .round_trip(
+                cluster.nodes[0].api_addr(),
+                &HttpRequest::post_json("/completion", &req.to_json()),
+            )
             .unwrap();
         assert_eq!(resp.status, 409);
     }
@@ -811,13 +829,9 @@ mod tests {
         // counter the docs promise must be present (with membership off,
         // the cluster gauges read 0).
         let cluster = mock_cluster(1);
-        let mut conn = Connection::open(
-            cluster.nodes[0].api_addr(),
-            TrafficMeter::new(),
-            LinkModel::ideal(),
-        )
-        .unwrap();
-        let m = conn.round_trip(&HttpRequest::get("/metrics")).unwrap();
+        let m = api_pool()
+            .round_trip(cluster.nodes[0].api_addr(), &HttpRequest::get("/metrics"))
+            .unwrap();
         let body = m.body_str().unwrap().to_string();
         for key in [
             "kv_entries",
@@ -838,6 +852,10 @@ mod tests {
             "kv_ae_keys_repaired",
             "kv_ae_digest_bytes",
             "kv_ae_conflicts",
+            "net_conns_opened",
+            "net_conns_reused",
+            "net_conns_evicted",
+            "net_conns_rejected",
             "cluster_epoch",
             "cluster_alive",
         ] {
@@ -851,16 +869,14 @@ mod tests {
     #[test]
     fn cluster_endpoints_require_membership() {
         let cluster = mock_cluster(1);
-        let mut conn = Connection::open(
-            cluster.nodes[0].api_addr(),
-            TrafficMeter::new(),
-            LinkModel::ideal(),
-        )
-        .unwrap();
-        let r = conn.round_trip(&HttpRequest::get("/cluster/members")).unwrap();
+        let addr = cluster.nodes[0].api_addr();
+        let pool = api_pool();
+        let r = pool
+            .round_trip(addr, &HttpRequest::get("/cluster/members"))
+            .unwrap();
         assert_eq!(r.status, 503);
-        let r = conn
-            .round_trip(&HttpRequest::post_json("/cluster/join", "{}"))
+        let r = pool
+            .round_trip(addr, &HttpRequest::post_json("/cluster/join", "{}"))
             .unwrap();
         assert_eq!(r.status, 503);
     }
@@ -874,13 +890,12 @@ mod tests {
     #[test]
     fn cluster_members_lists_the_fleet() {
         let cluster = mock_membership_cluster(2);
-        let mut conn = Connection::open(
-            cluster.nodes[0].api_addr(),
-            TrafficMeter::new(),
-            LinkModel::ideal(),
-        )
-        .unwrap();
-        let r = conn.round_trip(&HttpRequest::get("/cluster/members")).unwrap();
+        let r = api_pool()
+            .round_trip(
+                cluster.nodes[0].api_addr(),
+                &HttpRequest::get("/cluster/members"),
+            )
+            .unwrap();
         assert_eq!(r.status, 200);
         let v = crate::json::parse(r.body_str().unwrap()).unwrap();
         assert_eq!(v.req_u64("epoch").unwrap(), 2, "one epoch bump per join");
@@ -897,17 +912,14 @@ mod tests {
         let cluster = mock_membership_cluster(2);
         let view = cluster.membership().unwrap().clone();
         let epoch0 = view.epoch();
-        let mut conn = Connection::open(
-            cluster.nodes[0].api_addr(),
-            TrafficMeter::new(),
-            LinkModel::ideal(),
-        )
-        .unwrap();
         // Join a ghost node whose listeners don't exist.
         let body = r#"{"name":"edge-ghost","kv_addr":"127.0.0.1:1",
                        "ping_addr":"127.0.0.1:1","models":["discedge/tiny-chat"]}"#;
-        let r = conn
-            .round_trip(&HttpRequest::post_json("/cluster/join", body))
+        let r = api_pool()
+            .round_trip(
+                cluster.nodes[0].api_addr(),
+                &HttpRequest::post_json("/cluster/join", body),
+            )
             .unwrap();
         assert_eq!(r.status, 200, "{}", r.body_str().unwrap_or("?"));
         assert_eq!(view.epoch(), epoch0 + 1);

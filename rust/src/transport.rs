@@ -1,0 +1,623 @@
+//! Unified transport layer: pooled outbound peer connections plus the
+//! tuning knobs for the bounded inbound HTTP listener.
+//!
+//! Before this layer existed, every network subsystem managed sockets on
+//! its own: the chat client cached one connection per endpoint and never
+//! reopened it after an error, the replicator kept its own
+//! cached-connection-reopen logic, and remote fetches, heartbeat probes,
+//! and anti-entropy digest walks paid a fresh TCP connect per call. The
+//! [`PeerPool`] replaces all five: a per-destination keep-alive pool with
+//! reconnect-on-error, a bounded idle set, optional hard open/IO
+//! timeouts, and per-pool [`TrafficMeter`]/[`LinkModel`] wiring so every
+//! subsystem keeps exactly the byte accounting it had before.
+//!
+//! The pool is **wire-format-neutral**: HTTP bytes per request are
+//! unchanged, and the meters only ever see payload bytes, so a pooled
+//! fleet's replication byte counters are identical to a
+//! connect-per-request fleet's (pinned by `tests/transport.rs`). What
+//! changes is the connect count — and, under the netsim link models,
+//! latency: a fresh connect is charged one link round-trip
+//! ([`LinkModel::connect_delay`], the TCP handshake) before any payload
+//! can flow, which is exactly the cost pooling removes.
+//!
+//! The inbound half lives in [`crate::http::Server`]: every listener
+//! accepts at most [`TransportConfig::max_server_conns`] live
+//! connections (further accepts are answered with an immediate `503` and
+//! closed), and keep-alive connections idle past
+//! [`TransportConfig::idle_timeout`] are reaped. Both sides report into
+//! a node-wide [`NetStats`], exported as `net_conns_*` on `/metrics`.
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::http::{Connection, Request, Response, ServerLimits};
+use crate::metrics::Counter;
+use crate::netsim::{LinkModel, TrafficMeter};
+use crate::Result;
+
+/// Transport tuning (`transport` config section): the outbound pools'
+/// idle bound and the inbound listener budget shared by every server of
+/// a node.
+#[derive(Debug, Clone)]
+pub struct TransportConfig {
+    /// Live connections each listener serves before answering further
+    /// accepts with an immediate `503` + close (`max_server_conns`).
+    pub max_server_conns: usize,
+    /// Idle time after which a server-side keep-alive connection is
+    /// reaped (`idle_timeout_ms`): its read times out and the serving
+    /// thread exits, freeing a budget slot.
+    pub idle_timeout: Duration,
+    /// Idle keep-alive connections a [`PeerPool`] retains per
+    /// destination (`max_idle_per_peer`). `0` disables reuse entirely —
+    /// every request pays a fresh TCP connect, the seed's behaviour and
+    /// the A7 ablation baseline.
+    pub max_idle_per_peer: usize,
+}
+
+impl Default for TransportConfig {
+    fn default() -> TransportConfig {
+        TransportConfig {
+            max_server_conns: 256,
+            idle_timeout: Duration::from_secs(60),
+            max_idle_per_peer: 4,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// Listener limits for this transport config, optionally reporting
+    /// rejected accepts into a node's [`NetStats`].
+    pub fn server_limits(&self, stats: Option<Arc<NetStats>>) -> ServerLimits {
+        ServerLimits {
+            max_conns: self.max_server_conns,
+            idle_timeout: self.idle_timeout,
+            stats,
+        }
+    }
+
+    /// Pool-side idle expiry matched to this config's server reap: a
+    /// parked connection must expire *before* the peer's listener reaps
+    /// its half (half the reap window, capped at the pool default), so
+    /// the pool rarely hands out an already-closed socket even under a
+    /// short configured `idle_timeout_ms`.
+    pub fn pool_idle_expiry(&self) -> Duration {
+        (self.idle_timeout / 2).min(Duration::from_secs(30))
+    }
+
+    /// Build a pool under this config's idle policy, reporting into
+    /// `stats`. The one construction path shared by every subsystem, so
+    /// a future transport knob cannot silently miss one of them.
+    pub fn pool(
+        &self,
+        meter: Arc<TrafficMeter>,
+        link: LinkModel,
+        stats: Arc<NetStats>,
+    ) -> PeerPool {
+        PeerPool::new(meter, link)
+            .with_max_idle(self.max_idle_per_peer)
+            .with_idle_expiry(self.pool_idle_expiry())
+            .with_stats(stats)
+    }
+}
+
+/// Node-wide connection-lifecycle counters (`net_conns_*` on
+/// `/metrics`). A node's API/KV/AE pools and listeners share one
+/// instance, so a scrape shows the node's transport behaviour on every
+/// data path. Heartbeat probes and ping listeners deliberately stay
+/// off it, exactly as they ride dedicated byte meters: membership
+/// traffic never mixes into the accounting the figures are built on.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Fresh TCP connects (pool misses and reconnects).
+    pub opened: Counter,
+    /// Checkouts served by an idle keep-alive connection.
+    pub reused: Counter,
+    /// Connections discarded by a pool: stale keep-alives replaced on
+    /// error and idle returns past the per-peer bound.
+    pub evicted: Counter,
+    /// Inbound connections answered `503` + close by a listener at its
+    /// `max_server_conns` budget.
+    pub rejected: Counter,
+}
+
+impl NetStats {
+    /// Fresh zeroed stats.
+    pub fn new() -> Arc<NetStats> {
+        Arc::new(NetStats::default())
+    }
+}
+
+/// A per-destination keep-alive connection pool.
+///
+/// One pool per subsystem (client per endpoint, replicator, remote
+/// fetch, heartbeat probes, digest walks), each carrying its own meter
+/// and link model so byte accounting stays exactly as it was when every
+/// subsystem opened sockets itself. [`PeerPool::round_trip`] is the
+/// one-shot path; [`PeerPool::checkout`] hands out a [`PooledConn`] for
+/// multi-request exchanges (the anti-entropy walk). A reused connection
+/// whose first use fails — the peer restarted, or the server reaped the
+/// idle socket — is transparently replaced by one fresh connect and the
+/// request re-sent; callers whose requests are NOT replay-safe, or who
+/// own their failure semantics, opt out with
+/// [`PeerPool::without_stale_retry`] (the chat client and the failure
+/// detector). The node-to-node paths keep the retry: replication,
+/// fetches, and digest exchanges are idempotent (versioned LWW writes,
+/// idempotent deltas, reads).
+pub struct PeerPool {
+    meter: Arc<TrafficMeter>,
+    link: LinkModel,
+    io_timeout: Option<Duration>,
+    max_idle_per_peer: usize,
+    /// Parked connections older than this are dropped instead of
+    /// reused. Default 30 s — safely under the default server-side reap
+    /// (60 s), so a pool rarely hands out a socket its server half has
+    /// already closed, and a peer that is no longer contacted cannot
+    /// leak its parked sockets past the next pool operation.
+    idle_expiry: Duration,
+    retry_stale: bool,
+    idle: Mutex<HashMap<SocketAddr, Vec<(Connection, Instant)>>>,
+    stats: Arc<NetStats>,
+}
+
+impl PeerPool {
+    /// Pool over `link`, metering every connection into `meter`.
+    pub fn new(meter: Arc<TrafficMeter>, link: LinkModel) -> PeerPool {
+        PeerPool {
+            meter,
+            link,
+            io_timeout: None,
+            max_idle_per_peer: TransportConfig::default().max_idle_per_peer,
+            idle_expiry: Duration::from_secs(30),
+            retry_stale: true,
+            idle: Mutex::new(HashMap::new()),
+            stats: NetStats::new(),
+        }
+    }
+
+    /// Builder: hard bound on connect *and* reads/writes of every
+    /// connection handed out (probes and digest walks — a wedged peer
+    /// must cost one capped wait, never a stalled thread).
+    pub fn with_io_timeout(mut self, timeout: Duration) -> PeerPool {
+        self.io_timeout = Some(timeout);
+        self
+    }
+
+    /// Builder: idle connections retained per destination (`0` =
+    /// connect-per-request, no reuse).
+    pub fn with_max_idle(mut self, max_idle_per_peer: usize) -> PeerPool {
+        self.max_idle_per_peer = max_idle_per_peer;
+        self
+    }
+
+    /// Builder: how long a parked connection may idle before the pool
+    /// drops it instead of reusing it (see the field docs for the
+    /// default's rationale).
+    pub fn with_idle_expiry(mut self, idle_expiry: Duration) -> PeerPool {
+        self.idle_expiry = idle_expiry;
+        self
+    }
+
+    /// Builder: fail a stale reused connection instead of transparently
+    /// reconnecting and re-sending within the same call. For requests
+    /// that are not replay-safe (the chat client's `/completion`: a
+    /// duplicate of a committed turn trips the turn-counter guard) and
+    /// for callers with hard latency budgets (the failure detector: one
+    /// probe must cost at most one timeout, a miss is absorbed by
+    /// `suspect_after`). The discarded socket means the next call
+    /// connects fresh — no endpoint ever wedges on a dead socket.
+    pub fn without_stale_retry(mut self) -> PeerPool {
+        self.retry_stale = false;
+        self
+    }
+
+    /// Builder: report lifecycle counts into shared (node-wide) stats.
+    pub fn with_stats(mut self, stats: Arc<NetStats>) -> PeerPool {
+        self.stats = stats;
+        self
+    }
+
+    /// The meter every connection of this pool reports into.
+    pub fn meter(&self) -> &Arc<TrafficMeter> {
+        &self.meter
+    }
+
+    /// Lifecycle counters (shared when built with [`Self::with_stats`]).
+    pub fn stats(&self) -> &Arc<NetStats> {
+        &self.stats
+    }
+
+    /// Idle connections currently parked across all destinations.
+    pub fn idle_conns(&self) -> usize {
+        self.idle.lock().unwrap().values().map(Vec::len).sum()
+    }
+
+    /// Drop (and count) every parked connection older than the expiry,
+    /// and forget destinations with nothing parked. Called under the
+    /// idle lock on every checkout/checkin, so no-longer-contacted
+    /// peers cannot leak sockets past the pool's next operation.
+    fn prune_idle(&self, idle: &mut HashMap<SocketAddr, Vec<(Connection, Instant)>>) {
+        let now = Instant::now();
+        idle.retain(|_, list| {
+            let before = list.len();
+            list.retain(|(_, parked_at)| now.duration_since(*parked_at) < self.idle_expiry);
+            self.stats.evicted.add((before - list.len()) as u64);
+            !list.is_empty()
+        });
+    }
+
+    /// One request/response exchange with `addr`: reuse the peer's
+    /// keep-alive connection when one is parked, open one otherwise,
+    /// and return the connection to the pool on success.
+    pub fn round_trip(&self, addr: SocketAddr, req: &Request) -> Result<Response> {
+        let mut conn = self.checkout(addr)?;
+        conn.round_trip(req)
+    }
+
+    /// Check out a connection to `addr` under the pool's default
+    /// timeout policy. Drop the [`PooledConn`] to return it.
+    pub fn checkout(&self, addr: SocketAddr) -> Result<PooledConn<'_>> {
+        self.checkout_with(addr, self.io_timeout)
+    }
+
+    /// Check out with a per-use hard open/IO bound overriding the pool
+    /// default (the anti-entropy repair pulls). The pool default is
+    /// restored when the connection is returned.
+    pub fn checkout_timeout(&self, addr: SocketAddr, timeout: Duration) -> Result<PooledConn<'_>> {
+        self.checkout_with(addr, Some(timeout))
+    }
+
+    fn checkout_with(&self, addr: SocketAddr, timeout: Option<Duration>) -> Result<PooledConn<'_>> {
+        let parked = {
+            let mut idle = self.idle.lock().unwrap();
+            self.prune_idle(&mut idle);
+            idle.get_mut(&addr).and_then(Vec::pop).map(|(conn, _)| conn)
+        };
+        if let Some(mut conn) = parked {
+            match conn.set_io_timeout(timeout) {
+                Ok(()) => {
+                    self.stats.reused.add(1);
+                    return Ok(PooledConn {
+                        pool: self,
+                        addr,
+                        timeout,
+                        conn: Some(conn),
+                        unproven_reuse: true,
+                        healthy: false,
+                    });
+                }
+                // The socket is already dead; replace it.
+                Err(_) => self.stats.evicted.add(1),
+            }
+        }
+        let conn = self.open_fresh(addr, timeout)?;
+        Ok(PooledConn {
+            pool: self,
+            addr,
+            timeout,
+            conn: Some(conn),
+            unproven_reuse: false,
+            healthy: false,
+        })
+    }
+
+    /// Open a new connection, charging the link's handshake round-trip.
+    fn open_fresh(&self, addr: SocketAddr, timeout: Option<Duration>) -> Result<Connection> {
+        // Model the TCP handshake: one link round-trip before any
+        // payload can flow. Loopback connects are otherwise free, which
+        // would hide exactly the latency cost pooling removes. A
+        // checkout's hard bound caps the handshake too — a connect that
+        // cannot complete inside the bound costs the bound and fails,
+        // never a walker thread parked for the link's full latency.
+        let handshake = self.link.connect_delay();
+        if let Some(t) = timeout {
+            if handshake >= t {
+                std::thread::sleep(t);
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "simulated connect handshake timed out",
+                )
+                .into());
+            }
+        }
+        if !handshake.is_zero() {
+            std::thread::sleep(handshake);
+        }
+        let conn = match timeout {
+            Some(t) => Connection::open_timeout(addr, self.meter.clone(), self.link.clone(), t)?,
+            None => Connection::open(addr, self.meter.clone(), self.link.clone())?,
+        };
+        self.stats.opened.add(1);
+        Ok(conn)
+    }
+
+    /// Return a healthy connection to the idle set, restoring the pool's
+    /// default timeout; drop (and count) it past the idle bound.
+    fn checkin(&self, addr: SocketAddr, mut conn: Connection) {
+        if self.max_idle_per_peer == 0 || conn.set_io_timeout(self.io_timeout).is_err() {
+            self.stats.evicted.add(1);
+            return;
+        }
+        let mut idle = self.idle.lock().unwrap();
+        self.prune_idle(&mut idle);
+        let list = idle.entry(addr).or_default();
+        if list.len() >= self.max_idle_per_peer {
+            self.stats.evicted.add(1);
+            return;
+        }
+        list.push((conn, Instant::now()));
+    }
+}
+
+/// A connection checked out of a [`PeerPool`]. Returned to the pool on
+/// drop iff its last exchange succeeded; dropped otherwise.
+pub struct PooledConn<'a> {
+    pool: &'a PeerPool,
+    addr: SocketAddr,
+    timeout: Option<Duration>,
+    conn: Option<Connection>,
+    /// Came from the idle set and has not yet proven live: a first-use
+    /// failure is a stale keep-alive, not a peer failure, and is
+    /// retried once on a fresh connect.
+    unproven_reuse: bool,
+    healthy: bool,
+}
+
+impl PooledConn<'_> {
+    /// One request/response exchange. A reused connection that fails on
+    /// first use (peer restarted, idle socket reaped) is transparently
+    /// replaced by one fresh connect and the request re-sent — unless
+    /// the pool was built [`PeerPool::without_stale_retry`], for
+    /// requests that must not be replayed.
+    pub fn round_trip(&mut self, req: &Request) -> Result<Response> {
+        let conn = self.conn.as_mut().expect("pooled connection present");
+        match conn.round_trip(req) {
+            Ok(resp) => {
+                self.unproven_reuse = false;
+                // A reply the server marked terminal (`connection:
+                // close` — at-capacity 503s, 431/413) is followed by a
+                // close: never park that socket.
+                self.healthy = resp.headers.get("connection").map(String::as_str) != Some("close");
+                Ok(resp)
+            }
+            Err(e) => {
+                self.healthy = false;
+                if !self.unproven_reuse || !self.pool.retry_stale {
+                    return Err(e);
+                }
+                // Stale keep-alive: reconnect once and retry.
+                self.unproven_reuse = false;
+                self.pool.stats.evicted.add(1);
+                self.conn = Some(self.pool.open_fresh(self.addr, self.timeout)?);
+                let resp = self.conn.as_mut().unwrap().round_trip(req)?;
+                self.healthy = resp.headers.get("connection").map(String::as_str) != Some("close");
+                Ok(resp)
+            }
+        }
+    }
+
+    /// Adjust the hard IO bound mid-checkout (the anti-entropy walk
+    /// loosens it for the repair step). The pool default is restored on
+    /// return.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.conn
+            .as_mut()
+            .expect("pooled connection present")
+            .set_io_timeout(timeout)
+    }
+}
+
+impl Drop for PooledConn<'_> {
+    fn drop(&mut self) {
+        if let Some(conn) = self.conn.take() {
+            if self.healthy {
+                self.pool.checkin(self.addr, conn);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::{Handler, Server};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn echo_handler() -> Handler {
+        Arc::new(|req: &Request| {
+            if req.path == "/echo" {
+                Response::json(req.body_str().unwrap_or("{}"))
+            } else {
+                Response::error(404, "not found")
+            }
+        })
+    }
+
+    fn echo_server() -> Server {
+        Server::serve(0, LinkModel::ideal(), echo_handler()).unwrap()
+    }
+
+    fn pool() -> PeerPool {
+        PeerPool::new(TrafficMeter::new(), LinkModel::ideal())
+    }
+
+    #[test]
+    fn pool_reuses_one_connection_across_round_trips() {
+        let server = echo_server();
+        let p = pool();
+        for i in 0..5 {
+            let body = format!(r#"{{"i":{i}}}"#);
+            let resp = p
+                .round_trip(server.addr, &Request::post_json("/echo", &body))
+                .unwrap();
+            assert_eq!(resp.body_str().unwrap(), body);
+        }
+        assert_eq!(p.stats().opened.get(), 1, "one connect for five requests");
+        assert_eq!(p.stats().reused.get(), 4);
+        assert_eq!(p.stats().evicted.get(), 0);
+        assert_eq!(p.idle_conns(), 1);
+    }
+
+    #[test]
+    fn max_idle_zero_connects_per_request() {
+        let server = echo_server();
+        let p = pool().with_max_idle(0);
+        for _ in 0..3 {
+            p.round_trip(server.addr, &Request::post_json("/echo", "{}"))
+                .unwrap();
+        }
+        assert_eq!(p.stats().opened.get(), 3);
+        assert_eq!(p.stats().reused.get(), 0);
+        assert_eq!(p.idle_conns(), 0);
+    }
+
+    #[test]
+    fn idle_bound_evicts_surplus_returns() {
+        let server = echo_server();
+        let p = pool().with_max_idle(1);
+        // Two concurrent checkouts force two live connections...
+        let mut a = p.checkout(server.addr).unwrap();
+        let mut b = p.checkout(server.addr).unwrap();
+        a.round_trip(&Request::post_json("/echo", "{}")).unwrap();
+        b.round_trip(&Request::post_json("/echo", "{}")).unwrap();
+        assert_eq!(p.stats().opened.get(), 2);
+        // ...but only one fits back into the idle set.
+        drop(a);
+        drop(b);
+        assert_eq!(p.idle_conns(), 1);
+        assert_eq!(p.stats().evicted.get(), 1);
+    }
+
+    #[test]
+    fn stale_keepalive_reconnects_transparently() {
+        // The server reaps connections idle past 30 ms; the pool's
+        // parked socket goes stale and the next round trip must replace
+        // it with a fresh connect instead of failing (the client.rs
+        // wedge bug, at the pool level).
+        let limits = ServerLimits {
+            idle_timeout: Duration::from_millis(30),
+            ..ServerLimits::default()
+        };
+        let server = Server::serve_with(0, LinkModel::ideal(), limits, echo_handler()).unwrap();
+        let p = pool();
+        p.round_trip(server.addr, &Request::post_json("/echo", "{}"))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        let resp = p
+            .round_trip(server.addr, &Request::post_json("/echo", r#"{"again":1}"#))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body_str().unwrap(), r#"{"again":1}"#);
+        assert_eq!(p.stats().opened.get(), 2, "stale socket replaced by a fresh connect");
+        assert_eq!(p.stats().evicted.get(), 1);
+    }
+
+    #[test]
+    fn expired_idle_connections_are_pruned_not_reused() {
+        // A connection parked past the expiry is dropped *before* reuse
+        // (reused stays 0 — this is the prune path, not the stale-retry
+        // path), so a pool never hands out a socket the server side has
+        // likely reaped, and departed peers cannot leak parked sockets.
+        let server = echo_server();
+        let p = pool().with_idle_expiry(Duration::from_millis(30));
+        p.round_trip(server.addr, &Request::post_json("/echo", "{}"))
+            .unwrap();
+        assert_eq!(p.idle_conns(), 1);
+        std::thread::sleep(Duration::from_millis(100));
+        p.round_trip(server.addr, &Request::post_json("/echo", "{}"))
+            .unwrap();
+        assert_eq!(p.stats().opened.get(), 2);
+        assert_eq!(p.stats().reused.get(), 0, "expired socket must not be handed out");
+        assert_eq!(p.stats().evicted.get(), 1);
+    }
+
+    #[test]
+    fn fresh_connect_failure_is_not_retried() {
+        // Only an unproven *reused* socket earns the transparent retry;
+        // a failing fresh connect is a real peer failure.
+        let p = pool();
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        assert!(p.round_trip(dead, &Request::get("/ping")).is_err());
+        assert_eq!(p.stats().opened.get(), 0);
+        assert_eq!(p.stats().evicted.get(), 0);
+    }
+
+    #[test]
+    fn pooled_bytes_match_connect_per_request_bytes() {
+        // Wire-format neutrality: the meters must not be able to tell a
+        // pooled fleet from a connect-per-request one.
+        let server = echo_server();
+        let req = Request::post_json("/echo", r#"{"payload":"sync"}"#);
+        let pooled = pool();
+        let fresh = pool().with_max_idle(0);
+        for _ in 0..3 {
+            pooled.round_trip(server.addr, &req).unwrap();
+            fresh.round_trip(server.addr, &req).unwrap();
+        }
+        assert_eq!(pooled.meter().tx.get(), fresh.meter().tx.get());
+        assert_eq!(pooled.meter().rx.get(), fresh.meter().rx.get());
+        assert_eq!(pooled.meter().messages.get(), fresh.meter().messages.get());
+        assert_eq!(fresh.stats().opened.get(), 3);
+        assert_eq!(pooled.stats().opened.get(), 1);
+    }
+
+    #[test]
+    fn io_timeout_bounds_dead_peer_cost() {
+        let p = pool().with_io_timeout(Duration::from_millis(100));
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let t = std::time::Instant::now();
+        assert!(p.round_trip(dead, &Request::get("/ping")).is_err());
+        assert!(t.elapsed() < Duration::from_secs(2), "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn per_checkout_timeout_overrides_and_restores_default() {
+        let server = echo_server();
+        let p = pool();
+        {
+            let mut conn = p
+                .checkout_timeout(server.addr, Duration::from_millis(200))
+                .unwrap();
+            conn.round_trip(&Request::post_json("/echo", "{}")).unwrap();
+        }
+        // The returned connection is reusable under the default policy.
+        let resp = p
+            .round_trip(server.addr, &Request::post_json("/echo", "{}"))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(p.stats().opened.get(), 1);
+        assert_eq!(p.stats().reused.get(), 1);
+    }
+
+    #[test]
+    fn concurrent_checkouts_share_the_pool_safely() {
+        let server = echo_server();
+        let p = Arc::new(pool());
+        let served = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let p = p.clone();
+                let served = served.clone();
+                let addr = server.addr;
+                std::thread::spawn(move || {
+                    for _ in 0..10 {
+                        let resp = p.round_trip(addr, &Request::post_json("/echo", "{}")).unwrap();
+                        assert_eq!(resp.status, 200);
+                        served.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(served.load(Ordering::SeqCst), 40);
+        assert_eq!(
+            p.stats().opened.get() + p.stats().reused.get(),
+            40,
+            "every round trip is either a connect or a reuse"
+        );
+        assert!(p.idle_conns() <= p.max_idle_per_peer);
+    }
+}

@@ -5,9 +5,10 @@
 
 use discedge::client::{Client, MobilityPolicy};
 use discedge::config::{ClusterConfig, ContextMode};
-use discedge::http::{Connection, Request as HttpRequest};
+use discedge::http::Request as HttpRequest;
 use discedge::netsim::{LinkModel, TrafficMeter};
 use discedge::server::EdgeCluster;
+use discedge::transport::PeerPool;
 
 const MODEL: &str = "discedge/tiny-chat";
 
@@ -147,13 +148,10 @@ fn metrics_expose_delta_counters() {
     client.chat("one").unwrap();
     client.chat("two").unwrap();
     cluster.quiesce();
-    let mut conn = Connection::open(
-        cluster.nodes[1].api_addr(),
-        TrafficMeter::new(),
-        LinkModel::ideal(),
-    )
-    .unwrap();
-    let m = conn.round_trip(&HttpRequest::get("/metrics")).unwrap();
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let m = pool
+        .round_trip(cluster.nodes[1].api_addr(), &HttpRequest::get("/metrics"))
+        .unwrap();
     let body = m.body_str().unwrap();
     assert!(body.contains("kv_delta_applies 1"), "{body}");
     assert!(body.contains("kv_delta_fallbacks"), "{body}");

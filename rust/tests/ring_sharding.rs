@@ -9,9 +9,10 @@ use std::net::SocketAddr;
 use discedge::client::{Client, MobilityPolicy};
 use discedge::config::{ClusterConfig, ContextMode};
 use discedge::context::{CompletionRequest, CompletionResponse};
-use discedge::http::{Connection, Request as HttpRequest};
+use discedge::http::Request as HttpRequest;
 use discedge::netsim::{LinkModel, TrafficMeter};
 use discedge::server::EdgeCluster;
+use discedge::transport::PeerPool;
 
 const MODEL: &str = "discedge/tiny-chat";
 
@@ -21,9 +22,9 @@ fn fleet(n: usize, replication_factor: Option<usize>) -> EdgeCluster {
 }
 
 fn post(addr: SocketAddr, req: &CompletionRequest) -> CompletionResponse {
-    let mut conn = Connection::open(addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
-    let resp = conn
-        .round_trip(&HttpRequest::post_json("/completion", &req.to_json()))
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let resp = pool
+        .round_trip(addr, &HttpRequest::post_json("/completion", &req.to_json()))
         .unwrap();
     assert_eq!(resp.status, 200, "{}", resp.body_str().unwrap_or("?"));
     CompletionResponse::from_json(resp.body_str().unwrap()).unwrap()

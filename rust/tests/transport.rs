@@ -1,0 +1,178 @@
+//! Transport-layer integration: the three pins of the pooled-connection
+//! refactor.
+//!
+//! (a) **Wire-format neutrality**: a steady-state fleet's metered
+//!     replication bytes are identical whether connections are pooled or
+//!     opened per request (the seed's behaviour) — pooling changes the
+//!     connect count, never the bytes the figures plot.
+//!
+//! (b) **Bounded server**: with more concurrent keep-alive clients than
+//!     `transport.max_server_conns`, every client is either served or
+//!     answered a clean `503`; nothing hangs and the live-connection
+//!     count never exceeds the budget.
+//!
+//! (c) **Client recovery** (the `client.rs` wedge regression): a cached
+//!     client connection killed under the client — here by the server's
+//!     idle reaper — used to wedge that endpoint forever; the pool
+//!     transparently reconnects on the next turn.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use discedge::client::{Client, MobilityPolicy};
+use discedge::config::{ClusterConfig, ContextMode};
+use discedge::http::{read_response, Request, Response, Server, ServerLimits};
+use discedge::netsim::{LinkModel, TrafficMeter};
+use discedge::server::EdgeCluster;
+use discedge::transport::PeerPool;
+
+const MODEL: &str = "discedge/tiny-chat";
+
+fn sticky_client(cluster: &EdgeCluster) -> Client {
+    Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(8)
+}
+
+#[test]
+fn pooled_fleet_wire_bytes_match_connect_per_request_fleet() {
+    // Same fleet, same conversation, with pooling on (default) and off
+    // (`max_idle_per_peer = 0`, a fresh connect per request — the
+    // seed's behaviour on every path): the replication byte counters
+    // must be identical on every node, because pooling is not allowed
+    // to change a single byte on the wire.
+    fn run(pooled: bool) -> (Vec<(String, u64, u64)>, u64) {
+        let mut cfg = ClusterConfig::mock_fleet(3, Some(2));
+        if !pooled {
+            cfg.transport.max_idle_per_peer = 0;
+        }
+        let cluster = EdgeCluster::launch(cfg).unwrap();
+        let mut client = sticky_client(&cluster);
+        for t in 1..6 {
+            client
+                .chat(&format!("turn {t}: tell me about robots"))
+                .unwrap_or_else(|e| panic!("turn {t} failed: {e}"));
+            cluster.quiesce();
+        }
+        let bytes = cluster
+            .nodes
+            .iter()
+            .map(|n| (n.name.clone(), n.kv.sync_rx_bytes(), n.kv.sync_tx_bytes()))
+            .collect();
+        let opened = cluster
+            .nodes
+            .iter()
+            .map(|n| n.kv.net_stats().opened.get())
+            .sum();
+        (bytes, opened)
+    }
+    let (pooled_bytes, pooled_opened) = run(true);
+    let (fresh_bytes, fresh_opened) = run(false);
+    assert_eq!(
+        pooled_bytes, fresh_bytes,
+        "pooling must not change replication wire traffic"
+    );
+    assert!(
+        pooled_opened < fresh_opened,
+        "pooling must reduce connects ({pooled_opened} vs {fresh_opened})"
+    );
+}
+
+#[test]
+fn server_saturation_serves_or_503s_within_budget() {
+    let limits = ServerLimits {
+        max_conns: 2,
+        ..ServerLimits::default()
+    };
+    let server = Server::serve_with(
+        0,
+        LinkModel::ideal(),
+        limits,
+        std::sync::Arc::new(|_req: &Request| Response::json("{\"ok\":true}")),
+    )
+    .unwrap();
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+
+    // Fill the budget with live keep-alive clients...
+    let mut held = Vec::new();
+    for _ in 0..2 {
+        let mut conn = pool.checkout(server.addr).unwrap();
+        assert_eq!(conn.round_trip(&Request::get("/x")).unwrap().status, 200);
+        held.push(conn);
+    }
+    assert_eq!(server.live_conns(), 2);
+
+    // ...then pile more clients on top: each is answered an immediate,
+    // clean 503 (sent on accept, before any request — a read-first
+    // client observes it deterministically), and the budget holds.
+    for _ in 0..3 {
+        let raw = TcpStream::connect(server.addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut reader = BufReader::new(raw);
+        let resp = read_response(&mut reader).expect("refused client must get a response");
+        assert_eq!(resp.status, 503);
+        assert!(server.live_conns() <= 2, "budget must never be exceeded");
+    }
+
+    // Releasing the held clients — and their pool, so the sockets
+    // actually close instead of idling client-side — frees the slots:
+    // a brand-new client is served again (the server reaps finished
+    // threads on its next accept, so poll briefly).
+    drop(held);
+    drop(pool);
+    let fresh = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        match fresh.round_trip(server.addr, &Request::get("/x")) {
+            Ok(resp) if resp.status == 200 => break,
+            _ if std::time::Instant::now() > deadline => {
+                panic!("freed budget slots must re-admit clients")
+            }
+            _ => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    assert!(server.live_conns() <= 2);
+}
+
+#[test]
+fn client_recovers_after_cached_connection_dies() {
+    // Regression for the client.rs wedge: the cached per-endpoint
+    // connection was inserted once and never reopened after an error,
+    // so one broken socket cut the client off from that node forever.
+    // Kill the cached socket (the server's idle reaper severs it), then
+    // retry. `/completion` is not replay-safe, so the client pool does
+    // NOT transparently re-send — the dead socket surfaces as one
+    // failed turn (the seed's retry-with-same-counter contract) and is
+    // discarded, and the retry reconnects instead of wedging.
+    let mut cfg = ClusterConfig::mock_fleet(1, None);
+    cfg.transport.idle_timeout = Duration::from_millis(50);
+    let cluster = EdgeCluster::launch(cfg).unwrap();
+    let mut client = sticky_client(&cluster);
+
+    client.chat("turn 1: hello").expect("first turn");
+    assert_eq!(client.net_stats().opened.get(), 1);
+
+    // Idle well past the reap bound: the server closes the socket the
+    // client still holds pooled.
+    std::thread::sleep(Duration::from_millis(300));
+
+    // The dead keep-alive costs exactly one failed attempt (the turn
+    // counter does not advance)...
+    assert!(
+        client.chat("turn 2: still there?").is_err(),
+        "dead socket surfaces as one failed turn, never silently re-sent"
+    );
+    assert_eq!(client.turns_done(), 1);
+    // ...and the caller's retry reconnects. Pre-fix, this retry — and
+    // every later one — failed on the same cached dead socket forever.
+    let r2 = client.chat("turn 2: still there?").expect("retry must reconnect");
+    assert_eq!(r2.response.turn, 2);
+    let r3 = client.chat("turn 3: good").expect("endpoint must not wedge");
+    assert_eq!(r3.response.turn, 3);
+    assert!(
+        client.net_stats().opened.get() >= 2,
+        "recovery must have opened a fresh connection"
+    );
+}
