@@ -105,6 +105,69 @@ fn main() {
         }),
     );
 
+    // Lock-striped store under concurrent writers: the same op count on
+    // one thread and spread over eight. With 16 stripes the eight-thread
+    // per-op cost should sit well below 8x the single-thread cost.
+    for threads in [1usize, 8] {
+        const OPS: usize = 2000;
+        let node = KvNode::start(
+            "stripe-bench",
+            KvConfig {
+                peer_link: LinkModel::ideal(),
+                ..KvConfig::default()
+            },
+        )
+        .unwrap();
+        node.create_keygroup("m");
+        let t = Instant::now();
+        std::thread::scope(|s| {
+            for tid in 0..threads {
+                let node = &node;
+                let doc = &doc;
+                s.spawn(move || {
+                    for i in 0..OPS {
+                        node.put("m", &format!("u{tid}/k{i}"), doc.clone(), 1).unwrap();
+                    }
+                });
+            }
+        });
+        add(
+            &format!("kv_put_5KB_striped_{threads}threads"),
+            t.elapsed().as_secs_f64() / (threads * OPS) as f64,
+        );
+    }
+
+    // The same put with the WAL journaling every write (fsync off): what
+    // opt-in durability costs on the hot path.
+    {
+        let dir = std::env::temp_dir().join(format!("discedge-bench-wal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let node = KvNode::start(
+            "wal-bench",
+            KvConfig {
+                peer_link: LinkModel::ideal(),
+                storage: discedge::kvstore::StorageConfig {
+                    enabled: true,
+                    dir: dir.clone(),
+                    ..Default::default()
+                },
+                ..KvConfig::default()
+            },
+        )
+        .unwrap();
+        node.create_keygroup("m");
+        let mut v = 0u64;
+        add(
+            "kv_put_5KB_wal",
+            time_per_op(2000, || {
+                v += 1;
+                node.put("m", "bench-key", doc.clone(), v).unwrap();
+            }),
+        );
+        drop(node);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // Replication round-trip (local TCP, ideal link).
     let peer = KvNode::start(
         "peer",

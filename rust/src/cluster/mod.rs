@@ -24,6 +24,13 @@
 //! replay hints, then swap the placement back in — so no window exists
 //! in which a write to the returning peer could be silently dropped.
 //!
+//! A restarting node with local storage adds a step *before* any of
+//! this: `KvNode::start` replays its snapshot+WAL into the store before
+//! the node registers with the cluster at all, so by the time the `Up`
+//! event fires, hint replay and the anti-entropy kick only have the
+//! outage-window tail to deliver — recovery-from-disk first, then hint
+//! replay, then anti-entropy (see `kvstore::storage`).
+//!
 //! Everything here is **off by default** (`membership.enabled = false`);
 //! a fleet in which no node ever fails behaves byte-for-byte like the
 //! static cluster, heartbeats included (they ride dedicated listeners

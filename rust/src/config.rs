@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use crate::cluster::{HintConfig, MembershipConfig};
 use crate::json::{self, Value};
-use crate::kvstore::{AntiEntropyConfig, ReplicationConfig};
+use crate::kvstore::{AntiEntropyConfig, ReplicationConfig, StorageConfig};
 use crate::netsim::LinkModel;
 use crate::profile::NodeProfile;
 use crate::transport::TransportConfig;
@@ -184,6 +184,11 @@ pub struct ClusterConfig {
     /// inbound connection budget (applies to every node's API, KV, and
     /// anti-entropy listeners).
     pub transport: TransportConfig,
+    /// Local KV persistence: WAL + snapshot + crash recovery (default
+    /// off: the seed's memory-only replica, no files touched). The
+    /// configured `dir` is the fleet root; each node persists under
+    /// `dir/<node-name>/`.
+    pub storage: StorageConfig,
     /// Turn-counter protocol settings.
     pub consistency: ConsistencyConfig,
     /// Generation settings.
@@ -225,6 +230,7 @@ impl ClusterConfig {
             hints: HintConfig::default(),
             antientropy: AntiEntropyConfig::default(),
             transport: TransportConfig::default(),
+            storage: StorageConfig::default(),
             consistency: ConsistencyConfig::default(),
             generation: GenerationConfig::default(),
             engine: EngineKind::Pjrt,
@@ -384,6 +390,20 @@ impl ClusterConfig {
                 cfg.antientropy.max_keys_per_round = k as usize;
             }
         }
+        if let Some(s) = v.get("storage") {
+            if let Some(e) = s.get("enabled").and_then(|x| x.as_bool()) {
+                cfg.storage.enabled = e;
+            }
+            if let Some(d) = s.get("dir").and_then(|x| x.as_str()) {
+                cfg.storage.dir = PathBuf::from(d);
+            }
+            if let Some(n) = s.get("snapshot_every").and_then(|x| x.as_u64()) {
+                cfg.storage.snapshot_every = n;
+            }
+            if let Some(f) = s.get("fsync").and_then(|x| x.as_bool()) {
+                cfg.storage.fsync = f;
+            }
+        }
         if let Some(t) = v.get("transport") {
             if let Some(n) = t.get("max_server_conns").and_then(|x| x.as_u64()) {
                 cfg.transport.max_server_conns = n as usize;
@@ -452,6 +472,14 @@ impl ClusterConfig {
                 return Err(Error::Config(
                     "antientropy.max_keys_per_round must be >= 1".into(),
                 ));
+            }
+        }
+        if self.storage.enabled {
+            if self.storage.dir.as_os_str().is_empty() {
+                return Err(Error::Config("storage.dir must be set".into()));
+            }
+            if self.storage.snapshot_every == 0 {
+                return Err(Error::Config("storage.snapshot_every must be >= 1".into()));
             }
         }
         Ok(())
@@ -647,6 +675,40 @@ mod tests {
         ] {
             assert!(ClusterConfig::from_json(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn storage_defaults_off_and_parses() {
+        // The seed's memory-only replica must stay the default: no WAL,
+        // no snapshot, no files.
+        let cfg = ClusterConfig::two_node_testbed();
+        assert!(!cfg.storage.enabled);
+        assert_eq!(cfg.storage.snapshot_every, 4096);
+        assert!(!cfg.storage.fsync);
+        let cfg = ClusterConfig::from_json(
+            r#"{
+              "engine": "mock",
+              "storage": {"enabled": true, "dir": "/tmp/discedge-t",
+                          "snapshot_every": 128, "fsync": true}
+            }"#,
+        )
+        .unwrap();
+        assert!(cfg.storage.enabled);
+        assert_eq!(cfg.storage.dir, PathBuf::from("/tmp/discedge-t"));
+        assert_eq!(cfg.storage.snapshot_every, 128);
+        assert!(cfg.storage.fsync);
+        // Degenerate knobs are rejected (only once enabled).
+        for bad in [
+            r#"{"engine": "mock", "storage": {"enabled": true, "dir": ""}}"#,
+            r#"{"engine": "mock", "storage": {"enabled": true, "snapshot_every": 0}}"#,
+        ] {
+            assert!(ClusterConfig::from_json(bad).is_err(), "{bad}");
+        }
+        assert!(
+            ClusterConfig::from_json(r#"{"engine": "mock", "storage": {"snapshot_every": 0}}"#)
+                .is_ok(),
+            "degenerate knobs are inert while storage is off"
+        );
     }
 
     #[test]

@@ -248,7 +248,6 @@ fn write_i64(mut v: i64, buf: &mut [u8; 20]) -> &str {
     }
     while v != 0 {
         i -= 1;
-        buf[i] = b'0' - (v % 10) as u8 as u8;
         // (v % 10) is <= 0 here
         let digit = (-(v % 10)) as u8;
         buf[i] = b'0' + digit;
@@ -704,5 +703,125 @@ mod tests {
         let v = Value::Float(2.0);
         assert_eq!(v.to_json(), "2.0");
         assert!(matches!(parse("2.0").unwrap(), Value::Float(_)));
+    }
+
+    // ---- property tests (testkit harness) -------------------------------
+    // This codec carries every replication, anti-entropy, and WAL payload;
+    // the generators below hammer the serialize→parse loop with the
+    // shapes the hand-written tests cannot enumerate.
+
+    use crate::testkit::{property, Rng};
+
+    /// A string biased toward everything the escaper must handle: the
+    /// two-char escapes, raw control chars, DEL, and multi-byte UTF-8.
+    fn nasty_string(rng: &mut Rng) -> String {
+        let mut s = rng.text(20);
+        for _ in 0..rng.range(0, 6) {
+            s.push(*rng.pick(&[
+                '"', '\\', '/', '\n', '\r', '\t', '\u{08}', '\u{0c}', '\u{01}', '\u{1f}',
+                '\u{7f}', 'é', '日', '😀', '\u{fffd}',
+            ]));
+        }
+        s
+    }
+
+    /// Random document tree. Arrays always carry a non-integer element so
+    /// reparsing cannot re-promote them onto the `IntArray` fast path
+    /// (token arrays are generated as `IntArray` directly) — equality
+    /// after a round trip is then exact.
+    fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+        match rng.below(if depth == 0 { 6 } else { 8 }) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::Int(match rng.below(6) {
+                0 => i64::MIN,
+                1 => i64::MAX,
+                2 => 0,
+                3 => -1,
+                _ => rng.next_u64() as i64,
+            }),
+            3 => Value::Float(rng.normal() * 1e3),
+            4 => Value::Str(nasty_string(rng)),
+            // Non-empty: `[]` parses as `Array`, not `IntArray`, by design.
+            5 => Value::IntArray(
+                (0..rng.range(1, 6)).map(|_| rng.next_u64() as u32).collect(),
+            ),
+            6 => {
+                let mut xs: Vec<Value> = (0..rng.range(0, 4))
+                    .map(|_| gen_value(rng, depth - 1))
+                    .collect();
+                xs.push(Value::Str(nasty_string(rng)));
+                Value::Array(xs)
+            }
+            _ => {
+                let mut obj = Value::obj();
+                for _ in 0..rng.range(0, 5) {
+                    obj = obj.set(&nasty_string(rng), gen_value(rng, depth - 1));
+                }
+                obj
+            }
+        }
+    }
+
+    #[test]
+    fn prop_random_documents_roundtrip() {
+        property(300, |rng| {
+            let v = gen_value(rng, 3);
+            let j = v.to_json();
+            let back = parse(&j).unwrap_or_else(|e| panic!("reparse of {j}: {e}"));
+            assert_eq!(back, v, "doc {j}");
+        });
+    }
+
+    #[test]
+    fn prop_string_escapes_roundtrip() {
+        property(500, |rng| {
+            let s = nasty_string(rng);
+            let v = Value::Str(s.clone());
+            assert_eq!(parse(&v.to_json()).unwrap().as_str().unwrap(), s);
+        });
+    }
+
+    #[test]
+    fn prop_i64_boundaries_roundtrip() {
+        property(500, |rng| {
+            let v = match rng.below(8) {
+                0 => i64::MIN,
+                1 => i64::MAX,
+                2 => i64::MIN + 1,
+                3 => i64::MAX - 1,
+                4 => 0,
+                5 => -1,
+                _ => rng.next_u64() as i64,
+            };
+            assert_eq!(parse(&Value::Int(v).to_json()).unwrap(), Value::Int(v), "{v}");
+        });
+    }
+
+    #[test]
+    fn prop_deep_nesting_roundtrips() {
+        property(20, |rng| {
+            let depth = rng.range(30, 80);
+            let mut v = gen_value(rng, 1);
+            for _ in 0..depth {
+                v = if rng.chance(0.5) {
+                    Value::Array(vec![v, Value::Bool(true)])
+                } else {
+                    Value::obj().set("inner", v)
+                };
+            }
+            assert_eq!(parse(&v.to_json()).unwrap(), v);
+        });
+    }
+
+    #[test]
+    fn prop_trailing_garbage_rejected() {
+        property(300, |rng| {
+            let v = gen_value(rng, 2);
+            let j = v.to_json();
+            let tail = ["x", "1", "{}", "null", ",", "]"][rng.range(0, 6)];
+            let doc = format!("{j} {tail}");
+            assert!(parse(&doc).is_err(), "accepted trailing garbage: {doc}");
+        });
     }
 }

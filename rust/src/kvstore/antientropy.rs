@@ -213,9 +213,11 @@ impl MerkleForest {
         if tree.any_dirty {
             let now = Instant::now();
             let mut fresh = vec![EMPTY_HASH; leaf_count];
-            let data = store.data.read().unwrap();
-            if let Some(kg) = data.get(keygroup) {
-                for (key, entry) in kg {
+            // The fold is order-sensitive, so iterate the keygroup in key
+            // order — the striped store merges its shards back into the
+            // single-BTreeMap order this digest was defined over.
+            store.with_keygroup_sorted(keygroup, |items| {
+                for (key, entry) in items {
                     if entry.is_expired(now) {
                         continue;
                     }
@@ -228,7 +230,7 @@ impl MerkleForest {
                         );
                     }
                 }
-            }
+            });
             for (bucket, dirty) in tree.dirty.iter_mut().enumerate() {
                 if *dirty {
                     tree.leaves[bucket] = fresh[bucket];
@@ -611,15 +613,14 @@ impl AeRuntime {
     fn records_for(&self, kg: &str, buckets: &[usize]) -> Vec<(String, u64, u64)> {
         let wanted: HashSet<usize> = buckets.iter().copied().collect();
         let now = Instant::now();
-        let data = self.store.data.read().unwrap();
-        let Some(map) = data.get(kg) else {
-            return Vec::new();
-        };
-        map.iter()
-            .filter(|(_, e)| !e.is_expired(now))
-            .filter(|(k, _)| wanted.contains(&self.forest.bucket_of(k)))
-            .map(|(k, e)| (k.clone(), e.version, content_hash(&e.value, e.version)))
-            .collect()
+        self.store.with_keygroup_sorted(kg, |items| {
+            items
+                .iter()
+                .filter(|(_, e)| !e.is_expired(now))
+                .filter(|(k, _)| wanted.contains(&self.forest.bucket_of(k)))
+                .map(|(k, e)| ((*k).clone(), e.version, content_hash(&e.value, e.version)))
+                .collect()
+        })
     }
 
     /// Pull every entry `source` holds a better copy of, version-aware:

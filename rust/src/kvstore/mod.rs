@@ -12,8 +12,10 @@
 //!   resolve last-writer-wins by version;
 //! - entries carry a **TTL** and are lazily evicted on read plus swept by a
 //!   background janitor;
-//! - all reads/writes are served from memory (FReD persists asynchronously;
-//!   the paper's evaluation is memory-only, and so are we).
+//! - all reads/writes are served from memory (FReD persists
+//!   asynchronously; so do we — see the **persistence** note below —
+//!   and by default, matching the paper's memory-only evaluation, not
+//!   at all).
 //!
 //! The session-level consistency that DisCEdge needs (read-your-writes as
 //! the user roams) is *not* provided here — exactly as in the paper, it is
@@ -48,14 +50,26 @@
 //! `rust/src/kvstore/antientropy.rs`) for tree shape and who-wins rules.
 //! Default **off**; with zero divergence the replication-port byte
 //! accounting is untouched.
+//!
+//! **Persistence.** The in-memory store is lock-striped (16 shards by
+//! key hash) so concurrent session writes scale with cores, and with
+//! `storage.enabled` each node keeps an opt-in write-ahead log plus
+//! periodic snapshot ([`storage`](self::StorageConfig),
+//! `rust/src/kvstore/storage.rs`). On restart a node recovers committed
+//! entries from local disk *first*; hint replay and an anti-entropy kick
+//! then reconcile only the tail written while it was down. Default
+//! **off**: no files, no write-path clones, the seed's behaviour
+//! byte-for-byte.
 
 mod antientropy;
 mod replication;
 mod ring;
+mod storage;
 
 pub use antientropy::{AeSink, AntiEntropyConfig, MerkleForest, TreeDigest};
 pub use replication::{ReplicationConfig, Replicator};
 pub use ring::{HashRing, Placement};
+pub use storage::{Storage, StorageConfig};
 
 use antientropy::{AeRuntime, AntiEntropy, Kick};
 
@@ -89,23 +103,54 @@ impl Entry {
     }
 }
 
+/// Number of lock stripes in [`Store`]. A power of two so the shard pick
+/// is a mask of the key hash; 16 stripes keep writer collisions rare at
+/// edge core counts without bloating per-node memory.
+const STORE_SHARDS: usize = 16;
+
+/// One lock stripe: an independent `keygroup -> key -> entry` map
+/// guarding the keys whose hash lands on this stripe.
+type Shard = RwLock<HashMap<String, BTreeMap<String, Entry>>>;
+
 /// In-memory replica state shared between the public API, the replication
 /// receiver, and the janitor.
-#[derive(Debug, Default)]
+///
+/// Lock-striped: keys spread over [`STORE_SHARDS`] independent maps by
+/// FNV-1a key hash, so concurrent session writes (distinct sessions ⇒
+/// distinct keys ⇒ almost always distinct stripes) no longer serialize on
+/// one global lock. Lock order, crate-wide: a thread holding a shard lock
+/// takes **no other lock** — forest marks and WAL appends happen strictly
+/// after the shard guard drops, and multi-shard readers (sweep, digest,
+/// snapshot) take shard locks in index order only.
+#[derive(Debug)]
 pub struct Store {
-    /// keygroup -> key -> entry
-    data: RwLock<HashMap<String, BTreeMap<String, Entry>>>,
+    /// The stripes; index = `fnv1a(key) & (STORE_SHARDS - 1)`.
+    shards: Vec<Shard>,
     /// known keygroups
     keygroups: RwLock<HashSet<String>>,
     /// Merkle forest for anti-entropy digests; installed when repair is
     /// enabled so every mutation marks the key's bucket dirty. `None`
     /// (the default) keeps mutations free of tracking work.
     forest: RwLock<Option<Arc<MerkleForest>>>,
+    /// Local persistence engine; installed (after recovery) when
+    /// `storage.enabled` so every applied mutation appends a WAL record.
+    /// `None` (the default) keeps the write path clone- and I/O-free.
+    storage: RwLock<Option<Arc<Storage>>>,
 }
 
 impl Store {
     fn new() -> Arc<Store> {
-        Arc::new(Store::default())
+        Arc::new(Store {
+            shards: (0..STORE_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            keygroups: RwLock::new(HashSet::new()),
+            forest: RwLock::new(None),
+            storage: RwLock::new(None),
+        })
+    }
+
+    /// The stripe guarding `key`.
+    fn shard(&self, key: &str) -> &Shard {
+        &self.shards[crate::testkit::fnv1a(key.as_bytes()) as usize & (STORE_SHARDS - 1)]
     }
 
     /// Attach the anti-entropy forest; from now on every mutation marks
@@ -114,7 +159,14 @@ impl Store {
         *self.forest.write().unwrap() = Some(forest);
     }
 
-    /// Dirty-mark `key`'s tree bucket. Called *after* the data lock is
+    /// Attach the persistence engine; from now on every applied mutation
+    /// is WAL-logged. Call *after* [`Storage::recover`] — replay must not
+    /// re-log itself.
+    fn install_storage(&self, storage: Arc<Storage>) {
+        *self.storage.write().unwrap() = Some(storage);
+    }
+
+    /// Dirty-mark `key`'s tree bucket. Called *after* the shard lock is
     /// released (the forest has its own lock; nesting them would deadlock
     /// against a concurrent digest rebuild reading the data).
     fn mark_ae(&self, keygroup: &str, key: &str) {
@@ -133,8 +185,13 @@ impl Store {
         version: u64,
         ttl: Option<Duration>,
     ) -> bool {
+        let storage = self.storage.read().unwrap().clone();
+        // The value moves into the map under the lock; keep a copy for
+        // the WAL only when one is attached (the default path stays
+        // allocation-identical to the seed).
+        let logged = storage.as_ref().map(|_| value.clone());
         let applied = {
-            let mut data = self.data.write().unwrap();
+            let mut data = self.shard(key).write().unwrap();
             let kg = data.entry(keygroup.to_string()).or_default();
             match kg.get(key) {
                 Some(existing) if existing.version > version => false,
@@ -152,6 +209,10 @@ impl Store {
             }
         };
         if applied {
+            if let Some(s) = &storage {
+                s.log_put(keygroup, key, logged.as_deref().unwrap_or(""), version, ttl);
+                s.maybe_snapshot(self);
+            }
             self.mark_ae(keygroup, key);
         }
         applied
@@ -159,7 +220,7 @@ impl Store {
 
     fn read(&self, keygroup: &str, key: &str) -> Option<Entry> {
         let now = Instant::now();
-        let data = self.data.read().unwrap();
+        let data = self.shard(key).read().unwrap();
         data.get(keygroup)
             .and_then(|kg| kg.get(key))
             .filter(|e| !e.is_expired(now))
@@ -168,8 +229,34 @@ impl Store {
 
     fn remove(&self, keygroup: &str, key: &str) -> bool {
         let removed = {
-            let mut data = self.data.write().unwrap();
-            data.get_mut(keygroup).map_or(false, |kg| kg.remove(key).is_some())
+            let mut data = self.shard(key).write().unwrap();
+            data.get_mut(keygroup).and_then(|kg| kg.remove(key))
+        };
+        let Some(entry) = removed else {
+            return false;
+        };
+        let storage = self.storage.read().unwrap().clone();
+        if let Some(s) = storage {
+            s.log_delete(keygroup, key, entry.version);
+            s.maybe_snapshot(self);
+        }
+        self.mark_ae(keygroup, key);
+        true
+    }
+
+    /// Recovery-only delete: remove iff the live entry's version is
+    /// `<= version` (the version captured when the delete was logged), so
+    /// replaying an old WAL delete never clobbers a newer snapshot entry.
+    fn remove_if_not_newer(&self, keygroup: &str, key: &str, version: u64) -> bool {
+        let removed = {
+            let mut data = self.shard(key).write().unwrap();
+            match data.get_mut(keygroup) {
+                Some(kg) => match kg.get(key) {
+                    Some(e) if e.version <= version => kg.remove(key).is_some(),
+                    _ => false,
+                },
+                None => false,
+            }
         };
         if removed {
             self.mark_ae(keygroup, key);
@@ -177,7 +264,9 @@ impl Store {
         removed
     }
 
-    /// Sweep expired entries; returns the number evicted.
+    /// Sweep expired entries; returns the number evicted. Evictions are
+    /// not WAL-logged: records persist absolute expiry deadlines, so
+    /// recovery re-drops anything past its deadline on its own.
     fn sweep(&self) -> usize {
         let now = Instant::now();
         // Evicted keys are collected only when a forest will consume
@@ -185,8 +274,8 @@ impl Store {
         let track = self.forest.read().unwrap().is_some();
         let mut evicted: Vec<(String, String)> = Vec::new();
         let mut count = 0usize;
-        {
-            let mut data = self.data.write().unwrap();
+        for shard in &self.shards {
+            let mut data = shard.write().unwrap();
             for (kg_name, kg) in data.iter_mut() {
                 kg.retain(|key, e| {
                     let keep = !e.is_expired(now);
@@ -207,7 +296,52 @@ impl Store {
     }
 
     fn len(&self) -> usize {
-        self.data.read().unwrap().values().map(|kg| kg.len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().values().map(|kg| kg.len()).sum::<usize>())
+            .sum()
+    }
+
+    /// Run `f` over the keygroup's entries in **key order** (the order the
+    /// anti-entropy digest fold is defined over — it was the single
+    /// BTreeMap's iteration order before striping). Holds every shard
+    /// read lock, in index order, for the duration of `f`.
+    fn with_keygroup_sorted<R>(
+        &self,
+        keygroup: &str,
+        f: impl FnOnce(&[(&String, &Entry)]) -> R,
+    ) -> R {
+        let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
+        let mut items: Vec<(&String, &Entry)> = Vec::new();
+        for g in &guards {
+            if let Some(kg) = g.get(keygroup) {
+                items.extend(kg.iter());
+            }
+        }
+        items.sort_unstable_by(|a, b| a.0.cmp(b.0));
+        f(&items)
+    }
+
+    /// Clone out every live entry with its remaining TTL — the snapshot
+    /// writer's state capture. Shard read locks are taken sequentially;
+    /// the WAL mutex (held by the caller) is what freezes the
+    /// snapshot/WAL cut line, not the shard locks.
+    fn dump_live(&self) -> Vec<(String, String, String, u64, Option<Duration>)> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let data = shard.read().unwrap();
+            for (kg_name, kg) in data.iter() {
+                for (key, e) in kg {
+                    if e.is_expired(now) {
+                        continue;
+                    }
+                    let remaining = e.expires_at.map(|t| t.saturating_duration_since(now));
+                    out.push((kg_name.clone(), key.clone(), e.value.clone(), e.version, remaining));
+                }
+            }
+        }
+        out
     }
 }
 
@@ -234,6 +368,9 @@ pub struct KvConfig {
     /// listener budget applied to this node's replication and
     /// anti-entropy listeners.
     pub transport: TransportConfig,
+    /// Local persistence: WAL + snapshot + crash recovery (default off:
+    /// memory-only, no files touched — the seed's behaviour).
+    pub storage: StorageConfig,
 }
 
 impl Default for KvConfig {
@@ -247,6 +384,7 @@ impl Default for KvConfig {
             hints: None,
             antientropy: AntiEntropyConfig::default(),
             transport: TransportConfig::default(),
+            storage: StorageConfig::default(),
         }
     }
 }
@@ -285,6 +423,8 @@ pub struct KvNode {
     delta_fallbacks: Arc<AtomicU64>,
     /// Hinted handoff shared with the replicator (membership mode only).
     handoff: Option<Arc<HintedHandoff>>,
+    /// Local persistence engine (None when `storage.enabled` is off).
+    storage: Option<Arc<Storage>>,
     config: KvConfig,
     janitor_stop: Arc<std::sync::atomic::AtomicBool>,
     janitor: Option<std::thread::JoinHandle<()>>,
@@ -320,6 +460,21 @@ impl KvNode {
     /// Start a node: replication listener + sender + janitor.
     pub fn start(name: &str, config: KvConfig) -> Result<KvNode> {
         let store = Store::new();
+        // Recovery-from-disk comes FIRST in the rejoin sequence: the
+        // store is repopulated from snapshot + WAL before the replication
+        // listener, hint replay, or anti-entropy can observe it, so the
+        // network paths only reconcile the tail written while this node
+        // was down. `install_storage` follows recovery so replay does not
+        // re-log itself; the forest (installed below) starts all-dirty,
+        // so its first digest covers every recovered entry.
+        let storage = if config.storage.enabled {
+            let s = Storage::open(&config.storage)?;
+            s.recover(&store)?;
+            store.install_storage(s.clone());
+            Some(s)
+        } else {
+            None
+        };
         let net = NetStats::new();
         let limits = config.transport.server_limits(Some(net.clone()));
         let fetch_pool = Arc::new(config.transport.pool(
@@ -397,6 +552,7 @@ impl KvNode {
         let janitor_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let jstop = janitor_stop.clone();
         let jstore = store.clone();
+        let jstorage = storage.clone();
         let interval = config.sweep_interval;
         let janitor = std::thread::Builder::new()
             .name(format!("kv-janitor-{name}"))
@@ -404,6 +560,11 @@ impl KvNode {
                 while !jstop.load(std::sync::atomic::Ordering::SeqCst) {
                     std::thread::sleep(interval);
                     jstore.sweep();
+                    // The janitor doubles as the snapshot pacer, so a
+                    // node that stops writing still compacts a due WAL.
+                    if let Some(s) = &jstorage {
+                        s.maybe_snapshot(&jstore);
+                    }
                 }
             })?;
         Ok(KvNode {
@@ -422,6 +583,7 @@ impl KvNode {
             delta_applies,
             delta_fallbacks,
             handoff,
+            storage,
             config,
             janitor_stop,
             janitor: Some(janitor),
@@ -771,6 +933,46 @@ impl KvNode {
     /// Hint records evicted by the per-peer bound.
     pub fn hints_dropped(&self) -> u64 {
         self.handoff.as_ref().map_or(0, |h| h.dropped())
+    }
+
+    /// Whether local persistence (WAL + snapshot) is running on this node.
+    pub fn storage_enabled(&self) -> bool {
+        self.storage.is_some()
+    }
+
+    /// WAL records appended (`kv_wal_appends`; 0 when storage is off).
+    pub fn wal_appends(&self) -> u64 {
+        self.storage.as_ref().map_or(0, |s| s.wal_appends())
+    }
+
+    /// Framed WAL bytes written (`kv_wal_bytes`).
+    pub fn wal_bytes(&self) -> u64 {
+        self.storage.as_ref().map_or(0, |s| s.wal_bytes())
+    }
+
+    /// Snapshots taken (`kv_snapshots`).
+    pub fn snapshots_taken(&self) -> u64 {
+        self.storage.as_ref().map_or(0, |s| s.snapshots())
+    }
+
+    /// Entries replayed from local disk at start (`kv_recovered_entries`).
+    pub fn recovered_entries(&self) -> u64 {
+        self.storage.as_ref().map_or(0, |s| s.recovered_entries())
+    }
+
+    /// Torn/corrupt log tails detected and truncated during recovery
+    /// (`kv_wal_truncations`).
+    pub fn wal_truncations(&self) -> u64 {
+        self.storage.as_ref().map_or(0, |s| s.wal_truncations())
+    }
+
+    /// Snapshot the store to disk now (tests, examples, orderly
+    /// shutdown). No-op without storage.
+    pub fn snapshot_now(&self) -> Result<()> {
+        match &self.storage {
+            Some(s) => s.snapshot(&self.store),
+            None => Ok(()),
+        }
     }
 
     /// Whether Merkle-tree anti-entropy repair is running on this node.
@@ -1742,5 +1944,176 @@ mod tests {
         assert_eq!(e.value, doc(&[1, 2], 2));
         assert_eq!(b.delta_applies(), 0);
         assert_eq!(b.delta_fallbacks(), 0);
+    }
+
+    /// One recorded mutation of the concurrency stress test below.
+    enum StressOp {
+        Put { kg: &'static str, key: String, val: String, ver: u64 },
+        PutTtl { kg: &'static str, key: String, val: String, ver: u64 },
+        Del { kg: &'static str, key: String },
+    }
+
+    /// `(keygroup, key, value, version)` of every live entry, sorted.
+    fn live_state(store: &Store, keygroups: &[&str]) -> Vec<(String, String, String, u64)> {
+        let mut out = Vec::new();
+        for kg in keygroups {
+            store.with_keygroup_sorted(kg, |items| {
+                let now = Instant::now();
+                for (key, e) in items {
+                    if !e.is_expired(now) {
+                        out.push((kg.to_string(), (*key).clone(), e.value.clone(), e.version));
+                    }
+                }
+            });
+        }
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn striped_store_concurrent_writers_match_single_threaded_replay() {
+        // The regression gate for lock striping: N writer threads hammer
+        // puts / gets / deletes / TTL writes across two keygroups while a
+        // sweeper loops, then the final state AND the Merkle digest must
+        // equal a single-threaded replay of the recorded operations.
+        //
+        // Determinism under interleaving is by construction: shared keys
+        // take LWW writes with versions unique across threads (so the max
+        // version — and its value — is interleaving-independent), deletes
+        // touch only keys owned by a single thread (so their order is
+        // program order), and TTL writes go to per-thread doomed keys that
+        // both stores agree are expired by comparison time.
+        const THREADS: usize = 8;
+        const OPS: usize = 300;
+        const KEYGROUPS: [&str; 2] = ["model-a", "model-b"];
+        let store = Store::new();
+        let forest = MerkleForest::new(4);
+        store.install_forest(forest.clone());
+
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let sweeper = {
+            let s = store.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    s.sweep();
+                    std::thread::yield_now();
+                }
+            })
+        };
+
+        let mut workers = Vec::new();
+        for t in 0..THREADS {
+            let s = store.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut rng = crate::testkit::Rng::new(0x57E55 + t as u64);
+                let mut log: Vec<StressOp> = Vec::new();
+                for i in 0..OPS {
+                    let kg = *rng.pick(&KEYGROUPS);
+                    match rng.below(10) {
+                        0..=5 => {
+                            // Shared key, thread-unique version: LWW makes
+                            // the outcome order-independent.
+                            let key = format!("shared-{}", rng.below(32));
+                            let ver = (i * THREADS + t + 1) as u64;
+                            let val = format!("v{ver}");
+                            s.apply(kg, &key, val.clone(), ver, None);
+                            log.push(StressOp::Put { kg, key, val, ver });
+                        }
+                        6 | 7 => {
+                            // Thread-owned key: put then sometimes delete;
+                            // single-writer, so program order replays.
+                            let key = format!("own-{t}-{}", rng.below(8));
+                            let ver = (i + 1) as u64;
+                            let val = format!("own-v{ver}");
+                            s.apply(kg, &key, val.clone(), ver, None);
+                            log.push(StressOp::Put { kg, key: key.clone(), val, ver });
+                            if rng.chance(0.3) {
+                                s.remove(kg, &key);
+                                log.push(StressOp::Del { kg, key });
+                            }
+                        }
+                        8 => {
+                            // Reads race the writers; the value, if any,
+                            // must be internally consistent.
+                            let key = format!("shared-{}", rng.below(32));
+                            if let Some(e) = s.read(kg, &key) {
+                                assert_eq!(e.value, format!("v{}", e.version));
+                            }
+                        }
+                        _ => {
+                            // Doomed TTL entry the sweeper races to evict.
+                            let key = format!("doomed-{t}-{i}");
+                            s.apply(kg, &key, "x".into(), 1, Some(Duration::from_millis(1)));
+                            log.push(StressOp::PutTtl {
+                                kg,
+                                key,
+                                val: "x".into(),
+                                ver: 1,
+                            });
+                        }
+                    }
+                }
+                log
+            }));
+        }
+        let logs: Vec<Vec<StressOp>> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+        stop.store(true, Ordering::SeqCst);
+        sweeper.join().unwrap();
+
+        // Single-threaded replay: each thread's log in program order.
+        let replay = Store::new();
+        let replay_forest = MerkleForest::new(4);
+        replay.install_forest(replay_forest.clone());
+        for log in &logs {
+            for op in log {
+                match op {
+                    StressOp::Put { kg, key, val, ver } => {
+                        replay.apply(kg, key, val.clone(), *ver, None);
+                    }
+                    StressOp::PutTtl { kg, key, val, ver } => {
+                        replay.apply(kg, key, val.clone(), *ver, Some(Duration::from_millis(1)));
+                    }
+                    StressOp::Del { kg, key } => {
+                        replay.remove(kg, key);
+                    }
+                }
+            }
+        }
+        // Let every doomed entry cross its 1 ms deadline before comparing.
+        std::thread::sleep(Duration::from_millis(10));
+
+        assert_eq!(
+            live_state(&store, &KEYGROUPS),
+            live_state(&replay, &KEYGROUPS),
+            "concurrent final state must equal the single-threaded replay"
+        );
+        for kg in KEYGROUPS {
+            assert_eq!(
+                forest.digest(kg, &store).root,
+                replay_forest.digest(kg, &replay).root,
+                "Merkle digest must agree for {kg}"
+            );
+        }
+    }
+
+    #[test]
+    fn striped_store_spreads_keys_and_keeps_len() {
+        // Cheap sanity on the striping itself: distinct keys land on
+        // multiple stripes and the aggregate count is exact.
+        let s = Store::new();
+        for i in 0..200 {
+            s.apply("m", &format!("u/s{i}"), "v".into(), 1, None);
+        }
+        assert_eq!(s.len(), 200);
+        let populated = s
+            .shards
+            .iter()
+            .filter(|sh| sh.read().unwrap().values().any(|kg| !kg.is_empty()))
+            .count();
+        assert!(populated > STORE_SHARDS / 2, "only {populated} stripes used");
+        for i in 0..200 {
+            assert!(s.read("m", &format!("u/s{i}")).is_some());
+        }
     }
 }

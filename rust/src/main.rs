@@ -44,6 +44,10 @@ fn main() {
                  \u{20}             --hints-max-per-peer N (parked updates per down peer, default 512)\n\
                  \u{20}             --antientropy (Merkle-tree background replica repair)\n\
                  \u{20}             --ae-interval-ms N / --ae-fanout F / --ae-max-keys K\n\
+                 \u{20}             --storage (persist the KV replica: WAL + snapshots)\n\
+                 \u{20}             --storage-dir D (fleet persistence root, default discedge-data)\n\
+                 \u{20}             --snapshot-every N (compact after N WAL appends, default 4096)\n\
+                 \u{20}             --fsync (fsync WAL appends and snapshots)\n\
                  \u{20}             --max-server-conns N (503 past this many live conns, default 256)\n\
                  \u{20}             --idle-timeout-ms N (reap idle server conns, default 60000)\n\
                  \u{20}             --pool-max-idle N (idle conns pooled per peer; 0 = no reuse)\n\
@@ -138,6 +142,21 @@ fn load_config(args: &Args) -> Result<ClusterConfig, String> {
         .map_err(|e| e.to_string())?
     {
         cfg.antientropy.max_keys_per_round = k;
+    }
+    if args.flag("storage") {
+        cfg.storage.enabled = true;
+    }
+    if let Some(d) = args.opt("storage-dir") {
+        cfg.storage.dir = std::path::PathBuf::from(d);
+    }
+    if let Some(n) = args
+        .opt_parse::<u64>("snapshot-every")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.storage.snapshot_every = n;
+    }
+    if args.flag("fsync") {
+        cfg.storage.fsync = true;
     }
     if let Some(n) = args
         .opt_parse::<usize>("max-server-conns")

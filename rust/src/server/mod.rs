@@ -67,6 +67,14 @@ impl EdgeNode {
                     .then(|| cluster_cfg.hints.clone()),
                 antientropy: cluster_cfg.antientropy.clone(),
                 transport: cluster_cfg.transport.clone(),
+                storage: {
+                    // The configured dir is the fleet root; each node
+                    // persists (and recovers) under its own name, so a
+                    // restarted node finds exactly its own WAL+snapshot.
+                    let mut s = cluster_cfg.storage.clone();
+                    s.dir = s.dir.join(&node_cfg.name);
+                    s
+                },
                 ..KvConfig::default()
             },
         )?);
@@ -216,6 +224,15 @@ fn dispatch(
             ));
             dump.push_str(&format!("kv_ae_digest_bytes {}\n", kv.ae_digest_bytes()));
             dump.push_str(&format!("kv_ae_conflicts {}\n", kv.ae_conflicts()));
+            // Local persistence (all 0 when storage is disabled).
+            dump.push_str(&format!("kv_wal_appends {}\n", kv.wal_appends()));
+            dump.push_str(&format!("kv_wal_bytes {}\n", kv.wal_bytes()));
+            dump.push_str(&format!("kv_snapshots {}\n", kv.snapshots_taken()));
+            dump.push_str(&format!(
+                "kv_recovered_entries {}\n",
+                kv.recovered_entries()
+            ));
+            dump.push_str(&format!("kv_wal_truncations {}\n", kv.wal_truncations()));
             // Transport layer: connection lifecycle across this node's
             // pools (replication, fetch, digest) and listeners.
             let net = kv.net_stats();
@@ -852,6 +869,11 @@ mod tests {
             "kv_ae_keys_repaired",
             "kv_ae_digest_bytes",
             "kv_ae_conflicts",
+            "kv_wal_appends",
+            "kv_wal_bytes",
+            "kv_snapshots",
+            "kv_recovered_entries",
+            "kv_wal_truncations",
             "net_conns_opened",
             "net_conns_reused",
             "net_conns_evicted",

@@ -114,6 +114,43 @@ impl Rng {
     }
 }
 
+/// Crash-injection helper: cut the last `n` bytes off a file, modelling a
+/// torn write (a record whose tail never reached the disk). Panics on
+/// I/O errors — this is test machinery.
+pub fn truncate_file_tail(path: &std::path::Path, n: u64) {
+    let len = std::fs::metadata(path)
+        .unwrap_or_else(|e| panic!("stat {}: {e}", path.display()))
+        .len();
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .unwrap_or_else(|e| panic!("open {}: {e}", path.display()));
+    f.set_len(len.saturating_sub(n))
+        .unwrap_or_else(|e| panic!("truncate {}: {e}", path.display()));
+}
+
+/// Crash-injection helper: flip bits in the last `n` bytes of a file,
+/// modelling tail corruption (a misdirected or bit-rotted sector). The
+/// length is unchanged, so only a per-record checksum can catch it.
+pub fn corrupt_file_tail(path: &std::path::Path, n: u64) {
+    use std::io::{Read, Seek, SeekFrom, Write};
+    let mut f = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(path)
+        .unwrap_or_else(|e| panic!("open {}: {e}", path.display()));
+    let len = f.metadata().unwrap().len();
+    let start = len.saturating_sub(n);
+    let mut tail = vec![0u8; (len - start) as usize];
+    f.seek(SeekFrom::Start(start)).unwrap();
+    f.read_exact(&mut tail).unwrap();
+    for b in &mut tail {
+        *b ^= 0xA5;
+    }
+    f.seek(SeekFrom::Start(start)).unwrap();
+    f.write_all(&tail).unwrap();
+}
+
 /// Outcome of a property run.
 #[derive(Debug)]
 pub struct PropertyFailure {

@@ -1,0 +1,371 @@
+//! Persistence integration: the crash-recovery contract of the striped
+//! storage engine. Pins that (a) a node hard-crashed mid-conversation
+//! recovers every committed turn from its local snapshot+WAL on restart
+//! and the fleet converges byte-for-byte with an uncrashed control run,
+//! (b) a torn or corrupt WAL tail is detected by the per-record checksum
+//! and truncated — never misapplied, (c) with `storage.enabled=false`
+//! the replication wire traffic and store behaviour are byte-identical
+//! to the seed (and nothing touches the disk), and (d) recovering from
+//! local disk beats hint-replay-from-peers on wall clock.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use discedge::client::{Client, MobilityPolicy};
+use discedge::cluster::{HintConfig, NodeState};
+use discedge::config::{ClusterConfig, ContextMode};
+use discedge::kvstore::{KvConfig, KvNode, ReplicationConfig, StorageConfig};
+use discedge::netsim::LinkModel;
+use discedge::server::EdgeCluster;
+use discedge::testkit::{corrupt_file_tail, truncate_file_tail};
+
+const MODEL: &str = "discedge/tiny-chat";
+
+/// Fresh per-test scratch directory under the system tmp root.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "discedge-persistence-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn kv_config(storage: Option<StorageConfig>) -> KvConfig {
+    KvConfig {
+        peer_link: LinkModel::ideal(),
+        storage: storage.unwrap_or_default(),
+        ..KvConfig::default()
+    }
+}
+
+fn wait_for<T>(mut f: impl FnMut() -> Option<T>, timeout: Duration) -> Option<T> {
+    let start = Instant::now();
+    while start.elapsed() < timeout {
+        if let Some(v) = f() {
+            return Some(v);
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    None
+}
+
+fn fleet(storage_dir: Option<PathBuf>) -> EdgeCluster {
+    let mut cfg = ClusterConfig::mock_fleet(3, Some(2));
+    cfg.enable_fast_membership();
+    // Same failover tuning as tests/failover.rs: a wide-enough detection
+    // window for deterministic hinting, fail-fast pushes during it.
+    cfg.membership.down_after = Duration::from_millis(400);
+    cfg.replication.max_attempts = 2;
+    cfg.replication.retry_backoff = Duration::from_millis(1);
+    if let Some(dir) = storage_dir {
+        cfg.storage.enabled = true;
+        cfg.storage.dir = dir;
+    }
+    EdgeCluster::launch(cfg).unwrap()
+}
+
+fn sticky_client(cluster: &EdgeCluster) -> Client {
+    Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(8)
+}
+
+fn run_turns(cluster: &EdgeCluster, client: &mut Client, from: usize, to: usize) {
+    for t in from..to {
+        client
+            .chat(&format!("turn {t}: tell me about robots"))
+            .unwrap_or_else(|e| panic!("turn {t} failed: {e}"));
+        cluster.quiesce();
+    }
+}
+
+/// (a) Crash mid-conversation, restart, recover from local disk, converge
+/// byte-for-byte with an uncrashed (and storage-less) control fleet.
+#[test]
+fn crashed_node_recovers_from_disk_and_converges_with_control() {
+    let root = tmp_dir("crash-recovery");
+    let mut cluster = fleet(Some(root.clone()));
+    let view = cluster.membership().unwrap().clone();
+    let mut client = sticky_client(&cluster);
+
+    // Turns 1-3 with the full fleet: every home replica persists them.
+    run_turns(&cluster, &mut client, 1, 4);
+    let (user, session) = client.session();
+    let key = format!("{}/{}", user.unwrap(), session.unwrap());
+
+    // Hard-crash a home replica that is not the serving node (the PR-3
+    // kill path: severed listeners, discarded queues — no flush, no
+    // goodbye; the WAL tail is whatever had been appended).
+    let placement = cluster.current_placement().unwrap();
+    let victim = placement
+        .replicas(MODEL, &key)
+        .iter()
+        .map(|(name, _)| name.clone())
+        .find(|name| name != "edge-0")
+        .expect("rf=2 over 3 nodes: some home replica is not edge-0");
+    let committed_at_crash = cluster
+        .node(&victim)
+        .unwrap()
+        .kv
+        .get(MODEL, &key)
+        .expect("victim replicated the pre-crash turns")
+        .version;
+    assert!(committed_at_crash >= 3);
+    let victim_cfg = cluster.kill_node(&victim).expect("victim config");
+    std::thread::sleep(Duration::from_millis(30));
+
+    // Outage-window turns park as hints on the serving node.
+    run_turns(&cluster, &mut client, 4, 6);
+    assert!(
+        view.wait_for_state(&victim, NodeState::Down, Duration::from_secs(10)),
+        "victim must be detected down"
+    );
+    run_turns(&cluster, &mut client, 6, 8);
+
+    // Restart on fresh ports, same name => same storage directory. The
+    // recovery counter is the proof the committed turns came back from
+    // the local snapshot+WAL, not from a peer.
+    cluster.add_node(victim_cfg).unwrap();
+    let restarted = cluster.node(&victim).unwrap();
+    assert!(
+        restarted.kv.storage_enabled(),
+        "restarted node must reopen its storage"
+    );
+    assert!(
+        restarted.kv.recovered_entries() >= 1,
+        "restart must replay the local WAL"
+    );
+    assert!(
+        restarted
+            .kv
+            .get(MODEL, &key)
+            .map_or(false, |e| e.version >= committed_at_crash),
+        "every turn committed before the crash must be readable right \
+         after start, before any hint replay is required"
+    );
+    assert!(view.wait_for_state(&victim, NodeState::Alive, Duration::from_secs(10)));
+
+    // Hint replay + AE close the outage-window gap on top.
+    wait_for(
+        || {
+            cluster
+                .node(&victim)
+                .unwrap()
+                .kv
+                .get(MODEL, &key)
+                .filter(|e| e.version >= 5)
+        },
+        Duration::from_secs(10),
+    )
+    .expect("hint replay must deliver the outage-window turns");
+    run_turns(&cluster, &mut client, 8, 9);
+
+    // Byte-for-byte convergence with an uncrashed, storage-less control
+    // fleet (same node names => same ids; deterministic mock engine).
+    let control = fleet(None);
+    let mut control_client = sticky_client(&control);
+    run_turns(&control, &mut control_client, 1, 9);
+    let expected = control
+        .node("edge-0")
+        .unwrap()
+        .kv
+        .get(MODEL, &key)
+        .expect("control holds the session");
+    assert_eq!(expected.version, 8);
+    let final_placement = cluster.current_placement().unwrap();
+    for (name, _) in final_placement.replicas(MODEL, &key) {
+        let entry = wait_for(
+            || {
+                cluster
+                    .node(&name)
+                    .unwrap()
+                    .kv
+                    .get(MODEL, &key)
+                    .filter(|e| e.version == expected.version)
+            },
+            Duration::from_secs(5),
+        )
+        .unwrap_or_else(|| panic!("replica {name} must reach v{}", expected.version));
+        assert_eq!(
+            entry.value, expected.value,
+            "replica {name} diverged from the no-crash control run"
+        );
+    }
+    drop(cluster);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// (b) Torn and corrupt WAL tails: detected by the per-record checksum,
+/// truncated at the last intact record, never misapplied.
+#[test]
+fn torn_wal_tail_is_truncated_never_misapplied() {
+    let dir = tmp_dir("torn-tail").join("node");
+    let storage = StorageConfig {
+        enabled: true,
+        dir: dir.clone(),
+        ..StorageConfig::default()
+    };
+    {
+        let node = KvNode::start("p", kv_config(Some(storage.clone()))).unwrap();
+        node.create_keygroup("m");
+        node.put("m", "u/a", "alpha".into(), 1).unwrap();
+        node.put("m", "u/b", "beta".into(), 1).unwrap();
+        node.put("m", "u/torn", "tail-casualty".into(), 1).unwrap();
+        assert_eq!(node.wal_appends(), 3);
+        node.kill(); // hard-crash: no snapshot, no orderly flush
+    }
+    // A torn write: the last record lost its final bytes.
+    truncate_file_tail(&dir.join("wal.log"), 7);
+    let node = KvNode::start("p", kv_config(Some(storage.clone()))).unwrap();
+    assert_eq!(node.wal_truncations(), 1, "torn tail must be detected");
+    assert_eq!(node.recovered_entries(), 2);
+    assert!(node.get("m", "u/a").is_some());
+    assert!(node.get("m", "u/b").is_some());
+    assert!(
+        node.get("m", "u/torn").is_none(),
+        "a half-written record must never be applied"
+    );
+
+    // Bit rot: same length, flipped bits — only the checksum can tell.
+    node.create_keygroup("m");
+    node.put("m", "u/c", "gamma".into(), 1).unwrap();
+    drop(node);
+    corrupt_file_tail(&dir.join("wal.log"), 3);
+    let node = KvNode::start("p", kv_config(Some(storage))).unwrap();
+    assert_eq!(node.wal_truncations(), 1, "corrupt tail must be detected");
+    assert!(node.get("m", "u/a").is_some());
+    assert!(
+        node.get("m", "u/c").is_none(),
+        "a checksum-failed record must never be applied"
+    );
+    drop(node);
+    let _ = std::fs::remove_dir_all(dir.parent().unwrap());
+}
+
+/// (c) `storage.enabled=false` is the seed, byte-for-byte: no files, no
+/// counters — and flipping it on changes nothing on the wire or in the
+/// stored bytes (persistence is strictly node-local).
+#[test]
+fn storage_off_is_seed_identical_and_on_never_touches_the_wire() {
+    fn run(storage_dir: Option<PathBuf>) -> (Vec<(String, u64, u64)>, String, u64) {
+        let enabled = storage_dir.is_some();
+        let cluster = fleet(storage_dir);
+        let mut client = sticky_client(&cluster);
+        run_turns(&cluster, &mut client, 1, 6);
+        cluster.quiesce();
+        let (user, session) = client.session();
+        let key = format!("{}/{}", user.unwrap(), session.unwrap());
+        let doc = cluster
+            .nodes
+            .iter()
+            .find_map(|n| n.kv.get(MODEL, &key))
+            .expect("some node holds the session")
+            .value;
+        let wire = cluster
+            .nodes
+            .iter()
+            .map(|n| (n.name.clone(), n.kv.sync_rx_bytes(), n.kv.sync_tx_bytes()))
+            .collect();
+        let wal: u64 = cluster.nodes.iter().map(|n| n.kv.wal_appends()).sum();
+        for node in &cluster.nodes {
+            assert_eq!(node.kv.storage_enabled(), enabled);
+            assert_eq!(node.kv.wal_truncations(), 0);
+            if !enabled {
+                assert_eq!(node.kv.wal_appends(), 0);
+                assert_eq!(node.kv.wal_bytes(), 0);
+                assert_eq!(node.kv.snapshots_taken(), 0);
+                assert_eq!(node.kv.recovered_entries(), 0);
+            }
+        }
+        (wire, doc, wal)
+    }
+    let off = run(None);
+    assert_eq!(off.2, 0, "storage off must write no WAL records");
+
+    let root = tmp_dir("wire-identical");
+    let on = run(Some(root.clone()));
+    assert!(on.2 > 0, "storage on must journal the session writes");
+    assert!(root.join("edge-0").join("wal.log").exists());
+    assert_eq!(
+        off.0, on.0,
+        "persistence must never change replication wire traffic"
+    );
+    assert_eq!(off.1, on.1, "stored session bytes must be identical");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// (d) Recovering N committed entries from the local snapshot+WAL is
+/// faster than pulling the same N entries back from a peer via hint
+/// replay — the reason recovery runs first in the rejoin path.
+#[test]
+fn recovery_from_disk_beats_hint_replay_on_wall_clock() {
+    const N: usize = 400;
+    let value = |i: usize| format!("{i:-<200}"); // ~200 B per entry
+    let root = tmp_dir("recovery-race");
+    let storage = StorageConfig {
+        enabled: true,
+        dir: root.join("node"),
+        ..StorageConfig::default()
+    };
+
+    // Path A: persist N entries, hard-crash, time the restart (recovery
+    // runs inside KvNode::start).
+    {
+        let node = KvNode::start("p", kv_config(Some(storage.clone()))).unwrap();
+        node.create_keygroup("m");
+        for i in 0..N {
+            node.put("m", &format!("u/s{i}"), value(i), 1).unwrap();
+        }
+        node.kill();
+    }
+    let t = Instant::now();
+    let recovered = KvNode::start("p", kv_config(Some(storage))).unwrap();
+    let recovery = t.elapsed();
+    assert_eq!(recovered.len(), N, "recovery must restore every entry");
+    assert_eq!(recovered.recovered_entries(), N as u64);
+
+    // Path B: the same N updates parked as hints for a down peer, then
+    // replayed to its replacement over the replication protocol.
+    let a = KvNode::start(
+        "a",
+        KvConfig {
+            peer_link: LinkModel::ideal(),
+            hints: Some(HintConfig { max_per_peer: 2 * N }),
+            replication: ReplicationConfig {
+                max_attempts: 1,
+                retry_backoff: Duration::from_millis(1),
+                ..ReplicationConfig::default()
+            },
+            ..KvConfig::default()
+        },
+    )
+    .unwrap();
+    a.create_keygroup("m");
+    let dead: SocketAddr = "127.0.0.1:9".parse().unwrap();
+    a.add_peer("m", dead);
+    a.mark_peer_down(dead);
+    for i in 0..N {
+        a.put("m", &format!("u/s{i}"), value(i), 1).unwrap();
+    }
+    a.quiesce();
+    assert!(a.hints_queued() >= N as u64, "pushes must park while down");
+    let b = KvNode::start("b", kv_config(None)).unwrap();
+    b.create_keygroup("m");
+    let t = Instant::now();
+    a.replace_peer(dead, b.replication_addr());
+    a.mark_peer_alive(dead, b.replication_addr());
+    wait_for(|| (b.len() == N).then_some(()), Duration::from_secs(30))
+        .expect("hint replay must restore the peer");
+    let replay = t.elapsed();
+
+    assert!(
+        recovery < replay,
+        "local recovery ({recovery:?}) must beat hint replay over the \
+         network ({replay:?}) for {N} entries"
+    );
+    drop(recovered);
+    let _ = std::fs::remove_dir_all(&root);
+}
