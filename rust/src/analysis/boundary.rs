@@ -1,0 +1,339 @@
+//! Boundary lints: rules about *where* things are allowed to happen.
+//!
+//! - `conn-outside-transport` — raw socket construction
+//!   (`TcpStream::connect*`, `Connection::open*`) belongs to the
+//!   transport layer (`transport.rs`, `http.rs`); anything else must go
+//!   through [`crate::transport::PeerPool`] so pooling, link modelling,
+//!   and timeout policy cannot be bypassed.
+//! - `unwrap-io` — `unwrap()`/`expect()` on network/disk code paths
+//!   turns an ordinary peer failure into a node panic. Applies to the
+//!   known I/O modules plus any file carrying the `io-path` marker
+//!   directive (see [`io_marker`]); guard acquisitions
+//!   (`.lock().unwrap()` and friends) are exempt — lock poisoning is a
+//!   deliberate crash-consistency choice, documented in
+//!   `docs/ARCHITECTURE.md`.
+//! - `default-on` — every optional subsystem ships default-off (the
+//!   crate's byte-for-byte seed-equivalence rule): a `Default` impl
+//!   must not set a known opt-in flag to `true`.
+
+use super::lexer::TokKind;
+use super::model::FileModel;
+use super::Finding;
+
+/// File-name suffixes that are always treated as I/O paths.
+const IO_FILES: &[&str] = &[
+    "transport.rs",
+    "http.rs",
+    "replication.rs",
+    "storage.rs",
+    "antientropy.rs",
+];
+
+/// Files allowed to construct raw connections.
+const TRANSPORT_FILES: &[&str] = &["transport.rs", "http.rs"];
+
+/// Callees whose returned `Result` may be unwrapped even on an I/O
+/// path: guard acquisition / condvar wakeup, where the `Err` is lock
+/// poisoning, not peer failure.
+const UNWRAP_EXEMPT: &[&str] = &[
+    "lock",
+    "read",
+    "write",
+    "wait",
+    "wait_timeout",
+    "wait_while",
+    "wait_timeout_while",
+];
+
+/// Opt-in subsystem flags that must stay `false` in `Default` impls.
+const OPT_FIELDS: &[&str] = &["enabled", "delta_sync", "fsync"];
+
+/// The marker directive that opts a file into the `unwrap-io` rule.
+/// Assembled at runtime so this source file does not mark itself.
+pub fn io_marker() -> String {
+    format!("pallas-lint: {}", "io-path")
+}
+
+fn has_suffix(path: &str, suffixes: &[&str]) -> bool {
+    suffixes.iter().any(|s| path.ends_with(s))
+}
+
+/// Run all boundary lints on one file. `src` is the raw source (for
+/// the marker-directive check).
+pub fn check_file(model: &FileModel, src: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    check_conn_sites(model, &mut findings);
+    if has_suffix(&model.path, IO_FILES) || src.contains(&io_marker()) {
+        check_unwraps(model, &mut findings);
+    }
+    check_default_on(model, &mut findings);
+    findings
+}
+
+fn check_conn_sites(model: &FileModel, findings: &mut Vec<Finding>) {
+    if has_suffix(&model.path, TRANSPORT_FILES) {
+        return;
+    }
+    let toks = &model.toks;
+    for i in 0..toks.len().saturating_sub(2) {
+        if model.in_tests(i) || !toks[i + 1].is_punct("::") {
+            continue;
+        }
+        let (ty, method) = (&toks[i], &toks[i + 2]);
+        if ty.kind != TokKind::Ident || method.kind != TokKind::Ident {
+            continue;
+        }
+        let raw = (ty.text == "TcpStream" && method.text.starts_with("connect"))
+            || (ty.text == "Connection" && method.text.starts_with("open"));
+        if raw {
+            let what = format!("{}::{}", ty.text, method.text);
+            findings.push(Finding {
+                rule: "conn-outside-transport",
+                file: model.path.clone(),
+                line: ty.line,
+                message: format!("{what} outside the transport layer — route through PeerPool"),
+            });
+        }
+    }
+}
+
+fn check_unwraps(model: &FileModel, findings: &mut Vec<Finding>) {
+    let toks = &model.toks;
+    for i in 0..toks.len().saturating_sub(2) {
+        if !toks[i].is_punct(".") || !toks[i + 2].is_punct("(") {
+            continue;
+        }
+        let m = &toks[i + 1];
+        let is_unwrap = m.is_ident("unwrap");
+        let is_expect = m.is_ident("expect");
+        if (!is_unwrap && !is_expect) || model.in_tests(i) {
+            continue;
+        }
+        if preceded_by_exempt_call(model, i) {
+            continue;
+        }
+        // For expect, carry the message literal so allowlist entries
+        // can target one site by its text.
+        let detail = if is_expect {
+            match toks.get(i + 3) {
+                Some(t) if t.kind == TokKind::Str => format!("expect(\"{}\")", t.text),
+                _ => "expect(..)".to_string(),
+            }
+        } else {
+            "unwrap()".to_string()
+        };
+        findings.push(Finding {
+            rule: "unwrap-io",
+            file: model.path.clone(),
+            line: m.line,
+            message: format!("{detail} on an I/O path — propagate or degrade instead"),
+        });
+    }
+}
+
+/// Is the `.` at `dot` preceded by a completed call `callee(...)` with
+/// `callee` in the exempt set? Covers `x.lock().unwrap()` and the
+/// multiline/chained spellings.
+fn preceded_by_exempt_call(model: &FileModel, dot: usize) -> bool {
+    let toks = &model.toks;
+    let mut j = dot as isize - 1;
+    if j < 0 || !toks[j as usize].is_punct(")") {
+        return false;
+    }
+    let mut depth = 1;
+    j -= 1;
+    while j >= 0 && depth > 0 {
+        let t = &toks[j as usize];
+        if t.is_punct(")") {
+            depth += 1;
+        } else if t.is_punct("(") {
+            depth -= 1;
+        }
+        j -= 1;
+    }
+    j >= 0
+        && toks[j as usize].kind == TokKind::Ident
+        && UNWRAP_EXEMPT.contains(&toks[j as usize].text.as_str())
+}
+
+fn check_default_on(model: &FileModel, findings: &mut Vec<Finding>) {
+    let toks = &model.toks;
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    // `impl Default for X { .. }` (with optional generics after `impl`).
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].is_ident("impl") {
+            let mut j = i + 1;
+            if j < toks.len() && toks[j].is_punct("<") {
+                let mut angle = 1;
+                j += 1;
+                while j < toks.len() && angle > 0 {
+                    if toks[j].is_punct("<") {
+                        angle += 1;
+                    } else if toks[j].is_punct(">") {
+                        angle -= 1;
+                    }
+                    j += 1;
+                }
+            }
+            if j < toks.len() && toks[j].is_ident("Default") {
+                let mut k = j;
+                while k < toks.len() && !toks[k].is_punct("{") {
+                    k += 1;
+                }
+                if k < toks.len() {
+                    let end = super::model::matching_brace(toks, k);
+                    spans.push((k, end));
+                    i = k + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    // Standalone `fn default` bodies count too.
+    for f in &model.fns {
+        if f.name == "default" && !f.in_tests {
+            spans.push((f.body_start, f.body_end));
+        }
+    }
+    // `fn default` inside `impl Default` makes the spans overlap — track
+    // flagged token indices so each site is reported once.
+    let mut flagged: Vec<usize> = Vec::new();
+    for &(lo, hi) in &spans {
+        for i in lo..hi.min(toks.len().saturating_sub(2)) {
+            if model.in_tests(i) || flagged.contains(&i) {
+                continue;
+            }
+            if toks[i].kind == TokKind::Ident
+                && OPT_FIELDS.contains(&toks[i].text.as_str())
+                && toks[i + 1].is_punct(":")
+                && toks[i + 2].is_ident("true")
+            {
+                flagged.push(i);
+                let field = &toks[i].text;
+                let message =
+                    format!("`{field}: true` in a Default impl — optional subsystems ship off");
+                findings.push(Finding {
+                    rule: "default-on",
+                    file: model.path.clone(),
+                    line: toks[i].line,
+                    message,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(path: &str, src: &str) -> Vec<Finding> {
+        check_file(&FileModel::build(path, src), src)
+    }
+
+    #[test]
+    fn raw_connect_flagged_outside_transport() {
+        let src = "fn f() { let s = TcpStream::connect(addr); }";
+        let f = check("src/cluster/mod.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "conn-outside-transport");
+        assert!(check("src/transport.rs", src).is_empty());
+        assert!(check("src/http.rs", src).is_empty());
+    }
+
+    #[test]
+    fn connection_open_flagged_outside_transport() {
+        let src = "fn f() { let c = Connection::open_timeout(addr, m, l, t); }";
+        assert_eq!(check("src/server/mod.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn raw_connect_in_tests_is_fine() {
+        let src = r#"
+            #[cfg(test)]
+            mod tests {
+                fn f() { let s = TcpStream::connect(addr); }
+            }
+        "#;
+        assert!(check("src/cluster/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_on_io_file_flagged() {
+        let src = "fn f() { let v = peer_response().unwrap(); }";
+        let f = check("src/kvstore/replication.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "unwrap-io");
+        // Same code on a non-I/O file: no finding.
+        assert!(check("src/metrics.rs", src).is_empty());
+    }
+
+    #[test]
+    fn marker_directive_opts_a_file_in() {
+        let src = format!("// {}\nfn f() {{ let v = resp().unwrap(); }}", io_marker());
+        assert_eq!(check("src/anywhere.rs", &src).len(), 1);
+    }
+
+    #[test]
+    fn lock_unwrap_is_exempt() {
+        let src = r#"
+            fn f(&self) {
+                let g = self.queue.lock().unwrap();
+                let r = self.map.read().unwrap();
+                let (mut fl, _) = self.cvar.wait_timeout_while(fl, t, |k| !*k).unwrap();
+            }
+        "#;
+        assert!(check("src/kvstore/replication.rs", src).is_empty());
+    }
+
+    #[test]
+    fn expect_message_lands_in_finding() {
+        let src = r#"fn f() { spawn_thread().expect("spawn replicator"); }"#;
+        let f = check("src/kvstore/replication.rs", src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("spawn replicator"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn default_on_flag_is_caught() {
+        let src = r#"
+            impl Default for RepairConfig {
+                fn default() -> RepairConfig {
+                    RepairConfig { enabled: true, interval: 10 }
+                }
+            }
+        "#;
+        let f = check("src/kvstore/antientropy.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "default-on");
+    }
+
+    #[test]
+    fn default_off_and_non_default_literals_pass() {
+        let src = r#"
+            impl Default for RepairConfig {
+                fn default() -> RepairConfig {
+                    RepairConfig { enabled: false }
+                }
+            }
+            fn make_test_cfg() -> RepairConfig {
+                RepairConfig { enabled: true }
+            }
+        "#;
+        assert!(check("src/kvstore/antientropy.rs", src).is_empty());
+    }
+
+    #[test]
+    fn generic_impl_default_is_handled() {
+        let src = r#"
+            impl<T: Clone> Default for Wrapper<T> {
+                fn default() -> Wrapper<T> {
+                    Wrapper { enabled: true, inner: None }
+                }
+            }
+        "#;
+        assert_eq!(check("src/config.rs", src).len(), 1);
+    }
+}

@@ -1,0 +1,8 @@
+// Known-bad fixture: raw connection construction outside the
+// transport layer. pallas_lint must report `conn-outside-transport`
+// for both sites.
+
+fn dial_directly(addr: &str) {
+    let s = TcpStream::connect(addr);
+    let c = Connection::open_timeout(addr, 3, 4, 5);
+}

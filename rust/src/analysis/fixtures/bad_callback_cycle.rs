@@ -1,0 +1,28 @@
+// Known-bad fixture: a cycle that only exists through the call graph.
+// `publish` holds the subscriber list and calls `deliver`, which takes
+// the member map; `update` holds the member map and calls `publish`.
+// No single function inverts the order, but the composition does —
+// pallas_lint must report `lock-cycle` (this is the notify-under-lock
+// shape that PR 7 removed from membership.rs).
+
+impl View {
+    fn publish(&self) {
+        let subs = self.subscribers.lock().unwrap();
+        for s in subs.iter() {
+            self.deliver(s);
+        }
+        drop(subs);
+    }
+
+    fn deliver(&self, s: &Subscriber) {
+        let m = self.members.lock().unwrap();
+        s.notice(m.len());
+        drop(m);
+    }
+
+    fn update(&self) {
+        let m = self.members.lock().unwrap();
+        self.publish();
+        drop(m);
+    }
+}

@@ -1,0 +1,18 @@
+// Known-bad fixture: direct AB/BA inversion between the replicator
+// queue and the pool idle list. pallas_lint must report `lock-cycle`.
+
+impl Node {
+    fn forward(&self) {
+        let q = self.queue.lock().unwrap();
+        let i = self.idle.lock().unwrap();
+        drop(i);
+        drop(q);
+    }
+
+    fn reclaim(&self) {
+        let i = self.idle.lock().unwrap();
+        let q = self.queue.lock().unwrap();
+        drop(q);
+        drop(i);
+    }
+}

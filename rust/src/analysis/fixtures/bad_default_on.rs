@@ -1,0 +1,13 @@
+// Known-bad fixture: an optional subsystem whose Default is on. The
+// crate ships every optional subsystem off (seed-equivalence rule);
+// pallas_lint must report `default-on`.
+
+impl Default for RepairConfig {
+    fn default() -> RepairConfig {
+        RepairConfig {
+            enabled: true,
+            interval_ms: 5_000,
+            fanout: 1,
+        }
+    }
+}

@@ -1,0 +1,12 @@
+// Known-bad fixture: the WAL mutex is acquired while a store stripe
+// is held. Stripes are terminal in the lock hierarchy, so pallas_lint
+// must report `stripe-held`.
+
+impl Store {
+    fn persist_under_stripe(&self) {
+        let shard = self.shards.read().unwrap();
+        let w = self.wal.lock().unwrap();
+        drop(w);
+        drop(shard);
+    }
+}

@@ -1,0 +1,12 @@
+// Known-bad fixture: unwrap on a network path. The directive below
+// opts this file into the rule; pallas_lint must report `unwrap-io`
+// for the unwrap and the expect, but not for the lock acquisition.
+//
+// pallas-lint: io-path
+
+fn fetch(&self) -> Vec<u8> {
+    let guard = self.state.lock().unwrap();
+    let resp = self.pool.round_trip(peer, req).unwrap();
+    let body = decode_frame(resp).expect("peer sent a valid frame");
+    body
+}

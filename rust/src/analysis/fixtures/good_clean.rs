@@ -1,0 +1,53 @@
+// Known-good fixture: every pattern here is allowed, so pallas_lint
+// must exit 0 on this file. Not part of the crate's module tree.
+
+struct Node {
+    queue: std::sync::Mutex<Vec<u64>>,
+    idle: std::sync::Mutex<Vec<u64>>,
+    wal: std::sync::Mutex<Vec<u8>>,
+    shards: std::sync::RwLock<Vec<u8>>,
+}
+
+impl Node {
+    // Consistent order on both paths: queue before idle.
+    fn drain(&self) {
+        let q = self.queue.lock().unwrap();
+        let i = self.idle.lock().unwrap();
+        drop(i);
+        drop(q);
+    }
+
+    fn refill(&self) {
+        let q = self.queue.lock().unwrap();
+        let i = self.idle.lock().unwrap();
+        drop(i);
+        drop(q);
+    }
+
+    // wal -> stripe matches the hierarchy (stripe is last).
+    fn snapshot(&self) {
+        let w = self.wal.lock().unwrap();
+        let shard = self.shards.read().unwrap();
+        drop(shard);
+        drop(w);
+    }
+
+    // Transient guard: released at the end of the statement, so the
+    // opposite-order acquisition below is not a cycle.
+    fn sizes(&self) -> usize {
+        let n = self.idle.lock().unwrap().len();
+        let q = self.queue.lock().unwrap();
+        q.len() + n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Test code may do what it likes: raw sockets, unwraps, reversed
+    // lock orders — all production-path rules are scoped out of here.
+    fn hammer(n: &super::Node) {
+        let s = TcpStream::connect("127.0.0.1:0");
+        let i = n.idle.lock().unwrap();
+        let q = n.queue.lock().unwrap();
+    }
+}

@@ -1,0 +1,366 @@
+//! Minimal hand-rolled Rust lexer for `pallas-lint`.
+//!
+//! Same zero-dependency style as `crate::json`: a single forward pass
+//! over the raw bytes that strips line comments, nested block comments,
+//! string/raw-string/byte-string literals, and char literals, and emits
+//! a flat token stream with source lines. It is *not* a full Rust lexer
+//! — it only has to be sound for the patterns the lint rules match
+//! (identifiers, `::` paths, punctuation, brace/paren structure), and it
+//! must never mistake comment or string contents for code, which is
+//! where naive grep-based invariant checking falls over.
+
+/// Kind of a lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (including `true`/`false`).
+    Ident,
+    /// Numeric literal (integer part only; `1.5` lexes as `1`, `.`, `5`).
+    Num,
+    /// String literal of any flavor; `text` holds the raw contents.
+    Str,
+    /// Character or byte literal (`'a'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Life,
+    /// Punctuation; one character, except `::` which lexes as one token.
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Token class.
+    pub kind: TokKind,
+    /// Identifier text, punctuation characters, or string contents.
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+impl Tok {
+    /// Shorthand: is this an identifier with exactly this text?
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == text
+    }
+
+    /// Shorthand: is this punctuation with exactly this text?
+    pub fn is_punct(&self, text: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == text
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Scan an escape-aware `"..."` body starting just past the opening
+/// quote; returns (contents, index past the closing quote, newlines).
+fn scan_string(b: &[u8], mut i: usize) -> (String, usize, u32) {
+    let start = i;
+    let mut nl = 0u32;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i = (i + 2).min(b.len()),
+            b'"' => {
+                let text = String::from_utf8_lossy(&b[start..i]).into_owned();
+                return (text, i + 1, nl);
+            }
+            b'\n' => {
+                nl += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (String::from_utf8_lossy(&b[start..]).into_owned(), b.len(), nl)
+}
+
+/// Scan a raw string body starting just past the opening quote, with
+/// `hashes` trailing `#`s required to close.
+fn scan_raw_string(b: &[u8], mut i: usize, hashes: usize) -> (String, usize, u32) {
+    let start = i;
+    let mut nl = 0u32;
+    while i < b.len() {
+        if b[i] == b'\n' {
+            nl += 1;
+        } else if b[i] == b'"' {
+            let end_hashes = b[i + 1..].iter().take_while(|&&c| c == b'#').count();
+            if end_hashes >= hashes {
+                let text = String::from_utf8_lossy(&b[start..i]).into_owned();
+                return (text, i + 1 + hashes, nl);
+            }
+        }
+        i += 1;
+    }
+    (String::from_utf8_lossy(&b[start..]).into_owned(), b.len(), nl)
+}
+
+/// Scan a char/byte literal body starting just past the opening `'`;
+/// returns the index past the closing quote.
+fn scan_char(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i = (i + 2).min(b.len()),
+            b'\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    b.len()
+}
+
+/// Lex `src` into a token stream. Unknown bytes (stray non-ASCII outside
+/// literals) are skipped rather than reported — the lint rules only need
+/// the surviving structure.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let push = |toks: &mut Vec<Tok>, kind: TokKind, text: String, line: u32| {
+        toks.push(Tok { kind, text, line });
+    };
+    while i < n {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                while i < n && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                let mut depth = 1u32;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                let at = line;
+                let (text, j, nl) = scan_string(b, i + 1);
+                push(&mut toks, TokKind::Str, text, at);
+                line += nl;
+                i = j;
+            }
+            b'\'' => {
+                // Char literal vs lifetime: an escape or a closing quote
+                // within reach means char; otherwise it is a lifetime.
+                let at = line;
+                if i + 1 < n && b[i + 1] == b'\\' {
+                    push(&mut toks, TokKind::Char, String::new(), at);
+                    i = scan_char(b, i + 1);
+                } else if i + 2 < n && b[i + 1] != b'\'' && b[i + 1] < 0x80 && b[i + 2] == b'\'' {
+                    push(&mut toks, TokKind::Char, String::new(), at);
+                    i += 3;
+                } else if i + 1 < n && b[i + 1] >= 0x80 {
+                    // Multi-byte char literal ('→'): find the close quote
+                    // within the next few bytes.
+                    push(&mut toks, TokKind::Char, String::new(), at);
+                    i = scan_char(b, i + 1);
+                } else {
+                    let start = i + 1;
+                    let mut j = start;
+                    while j < n && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    let text = String::from_utf8_lossy(&b[start..j]).into_owned();
+                    push(&mut toks, TokKind::Life, text, at);
+                    i = j;
+                }
+            }
+            b'r' if i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'#') => {
+                let hashes = b[i + 1..].iter().take_while(|&&c| c == b'#').count();
+                let q = i + 1 + hashes;
+                if q < n && b[q] == b'"' {
+                    let at = line;
+                    let (text, j, nl) = scan_raw_string(b, q + 1, hashes);
+                    push(&mut toks, TokKind::Str, text, at);
+                    line += nl;
+                    i = j;
+                } else {
+                    // Raw identifier (`r#type`): lex the name itself.
+                    let start = i + 2;
+                    let mut j = start;
+                    while j < n && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    let text = String::from_utf8_lossy(&b[start..j]).into_owned();
+                    push(&mut toks, TokKind::Ident, text, line);
+                    i = j.max(i + 1);
+                }
+            }
+            b'b' if i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'\'' || b[i + 1] == b'r') => {
+                let at = line;
+                if b[i + 1] == b'"' {
+                    let (text, j, nl) = scan_string(b, i + 2);
+                    push(&mut toks, TokKind::Str, text, at);
+                    line += nl;
+                    i = j;
+                } else if b[i + 1] == b'\'' {
+                    push(&mut toks, TokKind::Char, String::new(), at);
+                    i = scan_char(b, i + 2);
+                } else {
+                    // `br"` / `br#...#"` raw byte string — or an ident
+                    // that merely starts with `br`.
+                    let hashes = b[i + 2..].iter().take_while(|&&c| c == b'#').count();
+                    let q = i + 2 + hashes;
+                    if q < n && b[q] == b'"' {
+                        let (text, j, nl) = scan_raw_string(b, q + 1, hashes);
+                        push(&mut toks, TokKind::Str, text, at);
+                        line += nl;
+                        i = j;
+                    } else {
+                        let start = i;
+                        let mut j = start;
+                        while j < n && is_ident_cont(b[j]) {
+                            j += 1;
+                        }
+                        let text = String::from_utf8_lossy(&b[start..j]).into_owned();
+                        push(&mut toks, TokKind::Ident, text, line);
+                        i = j;
+                    }
+                }
+            }
+            c if is_ident_start(c) => {
+                let start = i;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                let text = String::from_utf8_lossy(&b[start..i]).into_owned();
+                push(&mut toks, TokKind::Ident, text, line);
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                let text = String::from_utf8_lossy(&b[start..i]).into_owned();
+                push(&mut toks, TokKind::Num, text, line);
+            }
+            b':' if i + 1 < n && b[i + 1] == b':' => {
+                push(&mut toks, TokKind::Punct, "::".to_string(), line);
+                i += 2;
+            }
+            c if c < 0x80 => {
+                push(&mut toks, TokKind::Punct, (c as char).to_string(), line);
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_never_leak_tokens() {
+        let src = r##"
+            // line comment with fn lock() "quote
+            /* block /* nested */ still comment fn */
+            let s = "string with // and /* and } braces {";
+            let r = r#"raw "quoted" with .lock() inside"#;
+            let b = b"byte string with 'x'";
+            call();
+        "##;
+        let toks = lex(src);
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "s", "let", "r", "let", "b", "call"]);
+        // String contents are preserved as Str tokens, not re-lexed.
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs.len(), 3);
+        assert!(strs[1].contains(".lock()"));
+    }
+
+    #[test]
+    fn braces_inside_literals_do_not_unbalance() {
+        let src = r##"fn f() { let s = "}}}{"; let c = '{'; let r = r#"}"#; }"##;
+        let toks = lex(src);
+        let opens = toks.iter().filter(|t| t.is_punct("{")).count();
+        let closes = toks.iter().filter(|t| t.is_punct("}")).count();
+        assert_eq!(opens, 1);
+        assert_eq!(closes, 1);
+    }
+
+    #[test]
+    fn lifetimes_and_chars_are_distinguished() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let e = '\\n'; }");
+        let lifes: Vec<_> = toks.iter().filter(|(k, _)| *k == TokKind::Life).collect();
+        assert_eq!(lifes.len(), 2, "{toks:?}");
+        let chars = toks.iter().filter(|(k, _)| *k == TokKind::Char).count();
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn generics_lex_as_plain_angle_puncts() {
+        let toks = lex("let x: Vec<Arc<Mutex<T>>> = Vec::new();");
+        assert!(toks.iter().any(|t| t.is_punct("<")));
+        assert!(toks.iter().any(|t| t.is_punct("::")));
+        // `>>` is two separate closes, not a shift token.
+        assert_eq!(toks.iter().filter(|t| t.is_punct(">")).count(), 3);
+    }
+
+    #[test]
+    fn tuple_field_access_keeps_dot_structure() {
+        let toks = lex("pair.0.lock()");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["pair", ".", "0", ".", "lock", "(", ")"]);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_literals() {
+        let src = "let a = \"one\ntwo\nthree\";\nlet b = 1;";
+        let toks = lex(src);
+        let b_tok = toks.iter().find(|t| t.is_ident("b")).expect("b token");
+        assert_eq!(b_tok.line, 4);
+    }
+
+    #[test]
+    fn random_ascii_never_panics_or_hangs() {
+        // Property sweep with the deterministic testkit generator: the
+        // lexer must terminate and stay panic-free on arbitrary input.
+        let mut rng = crate::testkit::Rng::new(0xA11CE);
+        for _ in 0..200 {
+            let len = (rng.next_u64() % 120) as usize;
+            let mut src = String::new();
+            for _ in 0..len {
+                src.push((rng.next_u64() % 96 + 32) as u8 as char);
+            }
+            let _ = lex(&src);
+        }
+    }
+}

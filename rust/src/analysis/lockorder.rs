@@ -1,0 +1,650 @@
+//! Lock-order analysis: per-function lock acquisitions propagated over
+//! an approximate call graph.
+//!
+//! The crate names every shared lock (see `crate::sync::classes`), and
+//! the receiver identifiers at acquisition sites are stable
+//! (`self.shards[i].read()`, `queue.lock()`, `self.wal.lock()`, ...),
+//! so a token-level pass can map `<receiver>.lock()/.read()/.write()`
+//! to a lock class without type information. Each function body is
+//! walked with a small held-guard state machine; acquisitions made
+//! while another class is held become edges in a global acquisition
+//! graph, and calls made under a held guard pull in the callee's
+//! transitive acquisitions. Two rules fire on the result:
+//!
+//! - `lock-cycle` — the acquisition graph has a cycle.
+//! - `stripe-held` — any lock is acquired (directly or via a call)
+//!   while a store stripe is held; stripes are terminal in the crate
+//!   hierarchy (`docs/ARCHITECTURE.md`, "Concurrency invariants").
+//!
+//! The pass is deliberately conservative in both directions: callee
+//! resolution is by bare name with a deny-list of ubiquitous std
+//! method names (`insert`, `len`, `clone`, ...) that would otherwise
+//! alias crate functions, and guard lifetimes are over-approximated to
+//! the enclosing block for scrutinee positions (matching Rust's
+//! temporary-lifetime extension in `if let`/`match`).
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use super::lexer::{Tok, TokKind};
+use super::model::FileModel;
+use super::Finding;
+
+/// The terminal lock class: nothing may be acquired while it is held.
+const TERMINAL: &str = "store.stripe";
+
+/// Map an acquisition receiver identifier to its lock class.
+fn class_for(recv: &str) -> Option<&'static str> {
+    match recv {
+        "subscribers" => Some("membership.subscribers"),
+        "members" => Some("membership.members"),
+        "queues" => Some("hints.queues"),
+        "down" => Some("hints.down"),
+        "forwards" => Some("hints.forwards"),
+        "on_evict" => Some("hints.on_evict"),
+        "queue" => Some("replicator.queue"),
+        "idle" => Some("pool.idle"),
+        "forest" => Some("merkle.forest"),
+        "trees" => Some("merkle.trees"),
+        "wal" => Some("storage.wal"),
+        "shard" | "shards" | "stripe" => Some(TERMINAL),
+        _ => None,
+    }
+}
+
+/// Callee names that are never resolved to crate functions: ubiquitous
+/// std container/guard method names whose bare-name union with crate
+/// items (`Store::len`, `Replicator::drop`, `MembershipView::join`,
+/// dozens of `fn new`s) would manufacture false call edges. Kept as one
+/// string literal so rustfmt cannot reflow it.
+const DENY: &str = "clone contains drop entry extend find flush get get_mut insert is_empty \
+    iter join len lock map new next open pop push read remove retain set take unwrap expect \
+    wait write";
+
+/// Keywords and value constructors that look like calls token-wise.
+const NOT_CALLS: &str = "if while for match return loop let mut ref move in as fn impl pub \
+    use mod where unsafe else break continue struct enum trait type const static crate self \
+    Self super dyn box async await Some None Ok Err";
+
+fn in_list(list: &str, name: &str) -> bool {
+    list.split_whitespace().any(|w| w == name)
+}
+
+/// How long an acquired guard is considered held.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HeldKind {
+    /// Transient chain (`x.lock().unwrap().len()`): until the `;` at
+    /// the acquisition depth, or the end of the enclosing block for a
+    /// tail expression.
+    Stmt,
+    /// Scrutinee position (`if let`/`match`): until the block that
+    /// opened at the acquisition depth closes.
+    Brace,
+    /// `let g = x.lock().unwrap();`: until the enclosing block closes
+    /// or an explicit `drop(g)`.
+    Binding,
+}
+
+#[derive(Debug, Clone)]
+struct Held {
+    class: &'static str,
+    kind: HeldKind,
+    depth: i32,
+    name: Option<String>,
+}
+
+/// One observed "B acquired while A held" pair with an example site.
+#[derive(Debug, Clone)]
+struct RawEdge {
+    from: &'static str,
+    to: &'static str,
+    file: String,
+    line: u32,
+    note: String,
+}
+
+/// A call made while locks were held; resolved after the whole table
+/// is built, using the callee's transitive acquisitions.
+#[derive(Debug, Clone)]
+struct HeldCall {
+    held: Vec<&'static str>,
+    callee: String,
+    file: String,
+    line: u32,
+    in_fn: String,
+}
+
+#[derive(Debug, Default)]
+struct FnData {
+    acquires: BTreeSet<&'static str>,
+    calls: BTreeSet<String>,
+}
+
+/// Cross-file function table; feed it every `FileModel`, then call
+/// [`FnTable::analyze`] once.
+#[derive(Debug, Default)]
+pub struct FnTable {
+    fns: HashMap<String, FnData>,
+    edges: Vec<RawEdge>,
+    held_calls: Vec<HeldCall>,
+}
+
+/// Walk backward from the `.` of `<recv>.lock()` to the receiver
+/// identifier, skipping balanced `(...)`/`[...]` groups and `.N` tuple
+/// indices.
+fn walk_back(toks: &[Tok], dot: usize) -> Option<String> {
+    let mut j = dot as isize - 1;
+    while j >= 0 {
+        let t = &toks[j as usize];
+        if t.is_punct(")") || t.is_punct("]") {
+            let (open, close) = if t.text == ")" { ("(", ")") } else { ("[", "]") };
+            let mut depth = 1;
+            j -= 1;
+            while j >= 0 && depth > 0 {
+                let u = &toks[j as usize];
+                if u.is_punct(close) {
+                    depth += 1;
+                } else if u.is_punct(open) {
+                    depth -= 1;
+                }
+                j -= 1;
+            }
+        } else if t.kind == TokKind::Num {
+            j -= 1;
+            if j >= 0 && toks[j as usize].is_punct(".") {
+                j -= 1;
+            }
+        } else if t.kind == TokKind::Ident {
+            return Some(t.text.clone());
+        } else {
+            return None;
+        }
+    }
+    None
+}
+
+fn is_acquire_method(t: &Tok) -> bool {
+    t.is_ident("lock") || t.is_ident("read") || t.is_ident("write")
+}
+
+/// Does the chain after the acquisition's `)` end as exactly
+/// `.unwrap()`/`.expect(..)` followed by `;`? (That is the shape of a
+/// guard binding; anything longer is a transient.)
+fn chain_ends_at_statement(toks: &[Tok], after: usize) -> bool {
+    if after + 2 >= toks.len() || !toks[after].is_punct(".") {
+        return false;
+    }
+    let m = &toks[after + 1];
+    if !(m.is_ident("unwrap") || m.is_ident("expect")) || !toks[after + 2].is_punct("(") {
+        return false;
+    }
+    let mut depth = 1;
+    let mut k = after + 3;
+    while k < toks.len() && depth > 0 {
+        if toks[k].is_punct("(") {
+            depth += 1;
+        } else if toks[k].is_punct(")") {
+            depth -= 1;
+        }
+        k += 1;
+    }
+    k < toks.len() && toks[k].is_punct(";")
+}
+
+impl FnTable {
+    /// Empty table.
+    pub fn new() -> FnTable {
+        FnTable::default()
+    }
+
+    /// Scan one file's functions into the table. Test-module functions
+    /// are skipped entirely.
+    pub fn add_file(&mut self, model: &FileModel) {
+        for f in &model.fns {
+            if f.in_tests {
+                continue;
+            }
+            self.scan_fn(model, &f.name, f.body_start, f.body_end);
+        }
+    }
+
+    fn scan_fn(&mut self, model: &FileModel, fn_name: &str, start: usize, end: usize) {
+        let toks = &model.toks;
+        let data = self.fns.entry(fn_name.to_string()).or_default();
+        let mut held: Vec<Held> = Vec::new();
+        let mut depth = 0i32;
+        let mut pending_bind: Option<(String, i32)> = None;
+        let mut i = start;
+        while i <= end && i < toks.len() {
+            let t = &toks[i];
+            // Explicit guard drop: `drop(g)` releases the binding g.
+            if t.is_ident("drop")
+                && i + 3 < toks.len()
+                && toks[i + 1].is_punct("(")
+                && toks[i + 2].kind == TokKind::Ident
+                && toks[i + 3].is_punct(")")
+            {
+                let g = toks[i + 2].text.clone();
+                held.retain(|h| {
+                    !(h.kind == HeldKind::Binding && h.name.as_deref() == Some(g.as_str()))
+                });
+                i += 4;
+                continue;
+            }
+            if t.is_punct("{") {
+                for h in held.iter_mut() {
+                    if h.kind == HeldKind::Stmt && h.depth == depth {
+                        h.kind = HeldKind::Brace;
+                    }
+                }
+                depth += 1;
+                i += 1;
+                continue;
+            }
+            if t.is_punct("}") {
+                depth -= 1;
+                held.retain(|h| match h.kind {
+                    HeldKind::Brace => depth > h.depth,
+                    // Tail-expression transients (`{ x.lock().unwrap().f() }`
+                    // with no `;`) die with their block too.
+                    HeldKind::Binding | HeldKind::Stmt => depth >= h.depth,
+                });
+                i += 1;
+                continue;
+            }
+            if t.is_punct(";") {
+                held.retain(|h| !(h.kind == HeldKind::Stmt && h.depth == depth));
+                pending_bind = None;
+                i += 1;
+                continue;
+            }
+            if t.is_ident("let") {
+                let mut j = i + 1;
+                if j < toks.len() && toks[j].is_ident("mut") {
+                    j += 1;
+                }
+                if j + 1 < toks.len() && toks[j].kind == TokKind::Ident && toks[j + 1].is_punct("=")
+                {
+                    pending_bind = Some((toks[j].text.clone(), depth));
+                }
+                i += 1;
+                continue;
+            }
+            // Acquisition: `.` lock|read|write `(` `)` (zero-arg only).
+            if t.is_punct(".")
+                && i + 3 < toks.len()
+                && is_acquire_method(&toks[i + 1])
+                && toks[i + 2].is_punct("(")
+                && toks[i + 3].is_punct(")")
+            {
+                if let Some(class) = walk_back(toks, i).as_deref().and_then(class_for) {
+                    let line = toks[i + 1].line;
+                    for h in &held {
+                        if h.class != class {
+                            self.edges.push(RawEdge {
+                                from: h.class,
+                                to: class,
+                                file: model.path.clone(),
+                                line,
+                                note: format!("in fn {fn_name}"),
+                            });
+                        }
+                    }
+                    data.acquires.insert(class);
+                    let mut kind = HeldKind::Stmt;
+                    let mut name = None;
+                    if let Some((n, d)) = &pending_bind {
+                        if *d == depth && chain_ends_at_statement(toks, i + 4) {
+                            kind = HeldKind::Binding;
+                            name = Some(n.clone());
+                        }
+                    }
+                    held.push(Held {
+                        class,
+                        kind,
+                        depth,
+                        name,
+                    });
+                }
+                i += 4;
+                continue;
+            }
+            // Call: Ident `(` — not a macro, keyword, or denied name.
+            if t.kind == TokKind::Ident
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct("(")
+                && !in_list(NOT_CALLS, &t.text)
+                && !in_list(DENY, &t.text)
+                && !(i > 0 && toks[i - 1].is_ident("fn"))
+            {
+                data.calls.insert(t.text.clone());
+                if !held.is_empty() {
+                    self.held_calls.push(HeldCall {
+                        held: held.iter().map(|h| h.class).collect(),
+                        callee: t.text.clone(),
+                        file: model.path.clone(),
+                        line: t.line,
+                        in_fn: fn_name.to_string(),
+                    });
+                }
+                i += 1;
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    /// Compute transitive acquisitions, materialize the acquisition
+    /// graph, and report cycle / stripe-held findings.
+    pub fn analyze(&self) -> Vec<Finding> {
+        // Fixpoint: acquires(f) = direct(f) ∪ acquires(every callee).
+        let mut trans: HashMap<&str, BTreeSet<&'static str>> = HashMap::new();
+        for (name, data) in &self.fns {
+            trans.insert(name.as_str(), data.acquires.clone());
+        }
+        loop {
+            let mut changed = false;
+            for (name, data) in &self.fns {
+                let mut acc = trans[name.as_str()].clone();
+                for callee in &data.calls {
+                    if let Some(sub) = trans.get(callee.as_str()) {
+                        for &c in sub {
+                            acc.insert(c);
+                        }
+                    }
+                }
+                if acc.len() > trans[name.as_str()].len() {
+                    trans.insert(name.as_str(), acc);
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+
+        // Edge set: direct nested acquisitions plus calls under guards.
+        let mut raw: Vec<RawEdge> = self.edges.clone();
+        for hc in &self.held_calls {
+            if let Some(sub) = trans.get(hc.callee.as_str()) {
+                for &to in sub {
+                    for &from in &hc.held {
+                        if from != to {
+                            raw.push(RawEdge {
+                                from,
+                                to,
+                                file: hc.file.clone(),
+                                line: hc.line,
+                                note: format!("in fn {} via call to {}", hc.in_fn, hc.callee),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        let mut adj: BTreeMap<&'static str, BTreeSet<&'static str>> = BTreeMap::new();
+        let mut example: BTreeMap<(&'static str, &'static str), &RawEdge> = BTreeMap::new();
+        for e in &raw {
+            adj.entry(e.from).or_default().insert(e.to);
+            example.entry((e.from, e.to)).or_insert(e);
+        }
+
+        let mut findings = Vec::new();
+        // Rule: nothing is acquired while a terminal (stripe) lock is
+        // held.
+        for (&(from, _to), e) in &example {
+            if from == TERMINAL {
+                findings.push(Finding {
+                    rule: "stripe-held",
+                    file: e.file.clone(),
+                    line: e.line,
+                    message: format!("{} acquired while {} held ({})", e.to, e.from, e.note),
+                });
+            }
+        }
+        // Rule: the acquisition graph is acyclic.
+        for cycle in find_cycles(&adj) {
+            let mut path = cycle.clone();
+            path.push(cycle[0]);
+            let from = cycle[0];
+            let to = path[1];
+            let (file, line, note) = match example.get(&(from, to)) {
+                Some(e) => (e.file.clone(), e.line, e.note.clone()),
+                None => (String::from("<unknown>"), 0, String::new()),
+            };
+            findings.push(Finding {
+                rule: "lock-cycle",
+                file,
+                line,
+                message: format!("lock acquisition cycle: {} ({note})", path.join(" -> ")),
+            });
+        }
+        findings
+    }
+}
+
+/// Cycles in the acquisition graph, deduplicated by node set (one
+/// report per strongly connected loop, not one per rotation).
+fn find_cycles(adj: &BTreeMap<&'static str, BTreeSet<&'static str>>) -> Vec<Vec<&'static str>> {
+    fn dfs(
+        node: &'static str,
+        adj: &BTreeMap<&'static str, BTreeSet<&'static str>>,
+        path: &mut Vec<&'static str>,
+        visited: &mut BTreeSet<&'static str>,
+        cycles: &mut Vec<Vec<&'static str>>,
+        seen: &mut BTreeSet<String>,
+    ) {
+        if let Some(pos) = path.iter().position(|&n| n == node) {
+            let cycle = path[pos..].to_vec();
+            let mut key = cycle.clone();
+            key.sort_unstable();
+            if seen.insert(key.join(">")) {
+                cycles.push(cycle);
+            }
+            return;
+        }
+        if !visited.insert(node) {
+            return;
+        }
+        path.push(node);
+        if let Some(nexts) = adj.get(node) {
+            for &n in nexts {
+                dfs(n, adj, path, visited, cycles, seen);
+            }
+        }
+        path.pop();
+    }
+    let mut cycles = Vec::new();
+    let mut visited = BTreeSet::new();
+    let mut seen = BTreeSet::new();
+    for &start in adj.keys() {
+        let mut path = Vec::new();
+        dfs(start, adj, &mut path, &mut visited, &mut cycles, &mut seen);
+    }
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn analyze_src(src: &str) -> Vec<Finding> {
+        let model = FileModel::build("test.rs", src);
+        let mut table = FnTable::new();
+        table.add_file(&model);
+        table.analyze()
+    }
+
+    #[test]
+    fn consistent_order_is_clean() {
+        let findings = analyze_src(
+            r#"
+            fn a(&self) {
+                let q = self.queue.lock().unwrap();
+                let i = self.idle.lock().unwrap();
+                drop(i);
+                drop(q);
+            }
+            fn b(&self) {
+                let q = self.queue.lock().unwrap();
+                let i = self.idle.lock().unwrap();
+            }
+            "#,
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn direct_ab_ba_cycle_is_reported() {
+        let findings = analyze_src(
+            r#"
+            fn a(&self) {
+                let q = self.queue.lock().unwrap();
+                let i = self.idle.lock().unwrap();
+            }
+            fn b(&self) {
+                let i = self.idle.lock().unwrap();
+                let q = self.queue.lock().unwrap();
+            }
+            "#,
+        );
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, "lock-cycle");
+    }
+
+    #[test]
+    fn transitive_cycle_through_calls_is_reported() {
+        let findings = analyze_src(
+            r#"
+            fn grab_idle(&self) { let i = self.idle.lock().unwrap(); }
+            fn grab_queue(&self) { let q = self.queue.lock().unwrap(); }
+            fn a(&self) {
+                let q = self.queue.lock().unwrap();
+                self.grab_idle();
+            }
+            fn b(&self) {
+                let i = self.idle.lock().unwrap();
+                self.grab_queue();
+            }
+            "#,
+        );
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, "lock-cycle");
+        assert!(findings[0].message.contains("via call to"));
+    }
+
+    #[test]
+    fn stripe_is_terminal() {
+        let findings = analyze_src(
+            r#"
+            fn bad(&self) {
+                let shard = self.shards.read().unwrap();
+                let w = self.wal.lock().unwrap();
+            }
+            "#,
+        );
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, "stripe-held");
+    }
+
+    #[test]
+    fn wal_then_stripe_is_allowed() {
+        let findings = analyze_src(
+            r#"
+            fn snapshot(&self) {
+                let w = self.wal.lock().unwrap();
+                let shard = self.shards.read().unwrap();
+            }
+            "#,
+        );
+        // wal -> stripe matches the hierarchy: no cycle, and the stripe
+        // is the target of the edge, not the source.
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn transient_guard_released_at_statement_end() {
+        let findings = analyze_src(
+            r#"
+            fn a(&self) {
+                let n = self.queue.lock().unwrap().len();
+                let i = self.idle.lock().unwrap();
+            }
+            fn b(&self) {
+                let n = self.idle.lock().unwrap().len();
+                let q = self.queue.lock().unwrap();
+            }
+            "#,
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn explicit_drop_releases_binding() {
+        let findings = analyze_src(
+            r#"
+            fn a(&self) {
+                let q = self.queue.lock().unwrap();
+                drop(q);
+                let i = self.idle.lock().unwrap();
+            }
+            fn b(&self) {
+                let i = self.idle.lock().unwrap();
+                drop(i);
+                let q = self.queue.lock().unwrap();
+            }
+            "#,
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn scrutinee_guard_is_held_through_block() {
+        let findings = analyze_src(
+            r#"
+            fn bad(&self) {
+                if let Some(v) = self.shards.read().unwrap().front() {
+                    let w = self.wal.lock().unwrap();
+                }
+            }
+            "#,
+        );
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, "stripe-held");
+    }
+
+    #[test]
+    fn test_modules_are_ignored() {
+        let findings = analyze_src(
+            r#"
+            #[cfg(test)]
+            mod tests {
+                fn helper(&self) {
+                    let shard = self.shards.read().unwrap();
+                    let w = self.wal.lock().unwrap();
+                }
+            }
+            "#,
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn cycle_finder_dedupes_rotations() {
+        let mut adj: BTreeMap<&'static str, BTreeSet<&'static str>> = BTreeMap::new();
+        adj.entry("a").or_default().insert("b");
+        adj.entry("b").or_default().insert("c");
+        adj.entry("c").or_default().insert("a");
+        let cycles = find_cycles(&adj);
+        assert_eq!(cycles.len(), 1);
+        assert_eq!(cycles[0].len(), 3);
+    }
+
+    #[test]
+    fn cycle_finder_clean_dag() {
+        let mut adj: BTreeMap<&'static str, BTreeSet<&'static str>> = BTreeMap::new();
+        adj.entry("a").or_default().insert("b");
+        adj.entry("a").or_default().insert("c");
+        adj.entry("b").or_default().insert("c");
+        assert!(find_cycles(&adj).is_empty());
+    }
+}

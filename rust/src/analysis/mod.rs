@@ -1,0 +1,245 @@
+//! `pallas-lint`: zero-dependency static analysis for this crate's
+//! concurrency and boundary invariants.
+//!
+//! The crate documents its locking hierarchy and layering rules in
+//! `docs/ARCHITECTURE.md` ("Concurrency invariants"), and the runtime
+//! lockdep wrapper in [`crate::sync`] enforces the lock-order part
+//! under `debug_assertions` — but only on paths a test actually
+//! executes. This module is the static half: a token-level analysis
+//! over `rust/src` that checks every path, run in CI as a blocking
+//! job and locally via `cargo run --bin pallas_lint -- src`.
+//!
+//! Rules:
+//!
+//! - `lock-cycle` / `stripe-held` — lock-order analysis over an
+//!   approximate call graph ([`lockorder`]).
+//! - `conn-outside-transport`, `unwrap-io`, `default-on` — layering
+//!   and robustness lints ([`boundary`]).
+//!
+//! Deliberate violations are suppressed through an allowlist file
+//! (`rust/lint-allow.txt`) with one `rule file-suffix
+//! message-substring` entry per line — suppressions are reviewable
+//! diffs, not inline attributes scattered through the tree.
+//!
+//! Known-bad inputs for every rule live under `src/analysis/fixtures/`;
+//! they are not part of the crate's module tree and are excluded from
+//! directory scans, but each one is covered by a regression test here
+//! asserting its rule still fires.
+
+pub mod boundary;
+pub mod lexer;
+pub mod lockorder;
+pub mod model;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Stable rule identifier (`lock-cycle`, `unwrap-io`, ...).
+    pub rule: &'static str,
+    /// Path of the offending file, as handed to the scanner.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+/// Reviewable suppressions for deliberate violations.
+///
+/// File format: one entry per line, `rule file-suffix
+/// message-substring`; blank lines and `#` comments are skipped. An
+/// entry matches a finding when the rule is equal, the finding's file
+/// path ends with the suffix, and its message contains the substring.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    entries: Vec<(String, String, String)>,
+}
+
+impl Allowlist {
+    /// Parse allowlist text.
+    pub fn parse(text: &str) -> Allowlist {
+        let mut entries = Vec::new();
+        for raw in text.lines() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(3, ' ');
+            let rule = parts.next();
+            let file = parts.next();
+            let msg = parts.next();
+            if let (Some(rule), Some(file), Some(msg)) = (rule, file, msg) {
+                entries.push((rule.to_string(), file.to_string(), msg.trim().to_string()));
+            }
+        }
+        Allowlist { entries }
+    }
+
+    /// Load an allowlist file; a missing file is an empty allowlist.
+    pub fn load(path: &Path) -> Allowlist {
+        match fs::read_to_string(path) {
+            Ok(text) => Allowlist::parse(&text),
+            Err(_) => Allowlist::default(),
+        }
+    }
+
+    /// Does any entry suppress this finding?
+    pub fn allows(&self, f: &Finding) -> bool {
+        self.entries.iter().any(|(rule, file, msg)| {
+            f.rule == rule.as_str()
+                && f.file.ends_with(file.as_str())
+                && f.message.contains(msg.as_str())
+        })
+    }
+
+    /// Drop every finding the allowlist suppresses.
+    pub fn filter(&self, findings: Vec<Finding>) -> Vec<Finding> {
+        findings.into_iter().filter(|f| !self.allows(f)).collect()
+    }
+
+    /// Number of entries (for reporting).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the allowlist has no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// All `.rs` files under `root`, sorted for deterministic output.
+/// Anything under a `fixtures` path component is skipped — those are
+/// the deliberately bad lint regression inputs.
+pub fn collect_rs_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    walk(root, &mut out);
+    out.sort();
+    out
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.components().any(|c| c.as_os_str() == "fixtures") {
+            continue;
+        }
+        if path.is_dir() {
+            walk(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Lint an explicit set of `.rs` files: per-file boundary rules, plus
+/// the lock-order analysis run across all of them as one call graph.
+pub fn run_files(paths: &[PathBuf]) -> io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    let mut table = lockorder::FnTable::new();
+    for path in paths {
+        let src = fs::read_to_string(path)?;
+        let display = path.display().to_string();
+        let model = model::FileModel::build(&display, &src);
+        findings.extend(boundary::check_file(&model, &src));
+        table.add_file(&model);
+    }
+    findings.extend(table.analyze());
+    Ok(findings)
+}
+
+/// Lint every `.rs` file under `root`.
+pub fn run(root: &Path) -> io::Result<Vec<Finding>> {
+    run_files(&collect_rs_files(root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("src/analysis/fixtures").join(name)
+    }
+
+    fn lint_fixture(name: &str) -> Vec<Finding> {
+        run_files(&[fixture(name)]).expect("fixture readable")
+    }
+
+    fn finding(rule: &'static str, file: &str, message: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line: 1,
+            message: message.to_string(),
+        }
+    }
+
+    #[test]
+    fn shipped_tree_is_clean_under_the_shipped_allowlist() {
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let allow = Allowlist::load(&manifest.join("lint-allow.txt"));
+        assert!(!allow.is_empty(), "shipped allowlist should parse");
+        let findings = allow.filter(run(&manifest.join("src")).expect("scan src"));
+        assert!(findings.is_empty(), "{findings:#?}");
+    }
+
+    #[test]
+    fn good_fixture_is_clean() {
+        let findings = lint_fixture("good_clean.rs");
+        assert!(findings.is_empty(), "{findings:#?}");
+    }
+
+    #[test]
+    fn bad_fixtures_each_trip_their_rule() {
+        let cases = [
+            ("bad_cycle.rs", "lock-cycle"),
+            ("bad_stripe_nested.rs", "stripe-held"),
+            ("bad_callback_cycle.rs", "lock-cycle"),
+            ("bad_boundary_connect.rs", "conn-outside-transport"),
+            ("bad_unwrap_io.rs", "unwrap-io"),
+            ("bad_default_on.rs", "default-on"),
+        ];
+        for (name, rule) in cases {
+            let findings = lint_fixture(name);
+            let hit = findings.iter().any(|f| f.rule == rule);
+            assert!(hit, "{name} should trip {rule}: {findings:?}");
+        }
+    }
+
+    #[test]
+    fn allowlist_matches_rule_suffix_and_substring() {
+        let allow = Allowlist::parse("unwrap-io replication.rs spawn replicator");
+        let hit = finding("unwrap-io", "src/kvstore/replication.rs", "spawn replicator here");
+        assert!(allow.allows(&hit));
+        let wrong_rule = finding("lock-cycle", "src/kvstore/replication.rs", "spawn replicator");
+        assert!(!allow.allows(&wrong_rule));
+        let wrong_file = finding("unwrap-io", "src/kvstore/storage.rs", "spawn replicator");
+        assert!(!allow.allows(&wrong_file));
+        let wrong_msg = finding("unwrap-io", "src/kvstore/replication.rs", "other thing");
+        assert!(!allow.allows(&wrong_msg));
+    }
+
+    #[test]
+    fn allowlist_skips_comments_and_blanks() {
+        let allow = Allowlist::parse("# a comment\n\n   \n");
+        assert!(allow.is_empty());
+        assert!(!allow.allows(&finding("unwrap-io", "x.rs", "m")));
+    }
+
+    #[test]
+    fn collect_skips_fixture_dirs() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let files = collect_rs_files(&src);
+        assert!(!files.is_empty());
+        let clean = files.iter().all(|p| !p.to_string_lossy().contains("fixtures"));
+        assert!(clean);
+    }
+}

@@ -1,0 +1,212 @@
+//! Structural model of one source file, built from the token stream.
+//!
+//! The lint passes need just enough shape to reason per-function:
+//! where each `fn` body starts and ends (token indices of its braces),
+//! and which token ranges live inside `#[cfg(test)] mod ... { }` blocks
+//! so test-only code can be exempted from production-path rules.
+
+use super::lexer::{lex, Tok, TokKind};
+
+/// One `fn` item: its name and the token range of its body.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    /// Function name as written (no path qualification).
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Token index of the body's opening `{`.
+    pub body_start: usize,
+    /// Token index of the body's matching `}`.
+    pub body_end: usize,
+    /// True when the item sits inside a `#[cfg(test)]` module.
+    pub in_tests: bool,
+}
+
+/// Lexed file plus the derived function and test-module structure.
+#[derive(Debug)]
+pub struct FileModel {
+    /// Display path used in findings.
+    pub path: String,
+    /// Full token stream.
+    pub toks: Vec<Tok>,
+    /// All `fn` items with resolvable bodies.
+    pub fns: Vec<FnSpan>,
+    /// Token ranges `[start, end]` covered by test modules.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+/// Find the matching `}` for the `{` at `open`, or the last token index
+/// if the stream is truncated.
+pub fn matching_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct("{") {
+            depth += 1;
+        } else if t.is_punct("}") {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Locate `mod <name> {` items that sit under a `#[cfg(test)]`-style
+/// attribute, by scanning a small token window before the `mod` keyword
+/// for `cfg` and `test` identifiers.
+fn find_test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].is_ident("mod")
+            && toks[i + 1].kind == TokKind::Ident
+            && toks[i + 2].is_punct("{")
+        {
+            let lo = i.saturating_sub(10);
+            let window = &toks[lo..i];
+            let has_cfg = window.iter().any(|t| t.is_ident("cfg"));
+            let has_test = window.iter().any(|t| t.is_ident("test") || t.is_ident("tests"));
+            if has_cfg && has_test {
+                let end = matching_brace(toks, i + 2);
+                spans.push((i, end));
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Extract every `fn` item with a body. The body is the first `{` after
+/// the name at zero paren/bracket depth (skipping the argument list,
+/// generics, return type, and where clause); a `;` at that depth means
+/// a bodiless declaration, which is skipped.
+fn find_fns(toks: &[Tok], test_spans: &[(usize, usize)]) -> Vec<FnSpan> {
+    let mut fns = Vec::new();
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        if toks[i].is_ident("fn") && toks[i + 1].kind == TokKind::Ident {
+            let name = toks[i + 1].text.clone();
+            let line = toks[i].line;
+            let mut paren = 0i32;
+            let mut bracket = 0i32;
+            let mut j = i + 2;
+            let mut body = None;
+            while j < toks.len() {
+                let t = &toks[j];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "(" => paren += 1,
+                        ")" => paren -= 1,
+                        "[" => bracket += 1,
+                        "]" => bracket -= 1,
+                        "{" if paren == 0 && bracket == 0 => {
+                            body = Some(j);
+                            break;
+                        }
+                        ";" if paren == 0 && bracket == 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            if let Some(start) = body {
+                let end = matching_brace(toks, start);
+                let in_tests = test_spans.iter().any(|&(lo, hi)| i >= lo && i <= hi);
+                fns.push(FnSpan {
+                    name,
+                    line,
+                    body_start: start,
+                    body_end: end,
+                    in_tests,
+                });
+                i = start + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    fns
+}
+
+impl FileModel {
+    /// Lex and model one file's source text.
+    pub fn build(path: &str, src: &str) -> FileModel {
+        let toks = lex(src);
+        let test_spans = find_test_spans(&toks);
+        let fns = find_fns(&toks, &test_spans);
+        FileModel {
+            path: path.to_string(),
+            toks,
+            fns,
+            test_spans,
+        }
+    }
+
+    /// Is token index `i` inside a test module?
+    pub fn in_tests(&self, i: usize) -> bool {
+        self.test_spans.iter().any(|&(lo, hi)| i >= lo && i <= hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_bodies_are_spanned_and_named() {
+        let src = r#"
+            fn alpha(x: u32) -> u32 { x + 1 }
+            pub fn beta<T: Clone>(v: Vec<T>) where T: Send { let _ = v; }
+            fn declared_only();
+            impl Foo {
+                fn gamma(&self) { if true { nested(); } }
+            }
+        "#;
+        let m = FileModel::build("x.rs", src);
+        let names: Vec<&str> = m.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "beta", "gamma"]);
+        for f in &m.fns {
+            assert!(m.toks[f.body_start].is_punct("{"));
+            assert!(m.toks[f.body_end].is_punct("}"));
+            assert!(f.body_end > f.body_start);
+        }
+    }
+
+    #[test]
+    fn braces_in_fn_signature_defaults_do_not_confuse_body_detection() {
+        // Array types in the arg list put `[` `]` in play; the const
+        // generic braces live inside brackets, so the body is found.
+        let src = "fn f(xs: [u8; 4]) -> [u8; 4] { xs }";
+        let m = FileModel::build("x.rs", src);
+        assert_eq!(m.fns.len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_modules_are_flagged() {
+        let src = r#"
+            fn prod() { work(); }
+            #[cfg(test)]
+            mod tests {
+                fn helper() { prod(); }
+                #[test]
+                fn case() { helper(); }
+            }
+        "#;
+        let m = FileModel::build("x.rs", src);
+        let by_name = |n: &str| m.fns.iter().find(|f| f.name == n).expect("fn present");
+        assert!(!by_name("prod").in_tests);
+        assert!(by_name("helper").in_tests);
+        assert!(by_name("case").in_tests);
+    }
+
+    #[test]
+    fn non_test_module_is_not_a_test_span() {
+        let src = "mod inner { fn f() {} }";
+        let m = FileModel::build("x.rs", src);
+        assert!(m.test_spans.is_empty());
+        assert!(!m.fns[0].in_tests);
+    }
+}

@@ -1,0 +1,132 @@
+//! `pallas_lint` — static concurrency & invariant analysis for this
+//! crate (see `discedge::analysis` and `docs/ARCHITECTURE.md`,
+//! "Concurrency invariants").
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --bin pallas_lint -- [PATH ...] [--json] [--allow FILE]
+//! ```
+//!
+//! Each PATH is a directory to scan recursively or a single `.rs` file
+//! (how the bad fixtures under `src/analysis/fixtures/` are linted).
+//! With no PATH, `src` (when run from `rust/`) or `rust/src` (from the
+//! repo root) is scanned. Suppressions load from `lint-allow.txt` next
+//! to the scanned `src` unless `--allow` overrides. Exit status is 0
+//! when no findings survive the allowlist, 1 otherwise, 2 on I/O
+//! errors.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use discedge::analysis::{self, Allowlist, Finding};
+use discedge::cli::Args;
+use discedge::json::Value;
+
+fn main() -> ExitCode {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("pallas-lint: bad arguments: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut paths: Vec<String> = Vec::new();
+    if let Some(c) = &args.command {
+        paths.push(c.clone());
+    }
+    paths.extend(args.positional.iter().cloned());
+    // The tiny cli parser treats `--json PATH` as an option with a
+    // value; recover the path and keep --json a pure flag.
+    let json_out = args.flag("json") || args.opt("json").is_some();
+    if let Some(v) = args.opt("json") {
+        paths.push(v.to_string());
+    }
+    if paths.is_empty() {
+        let default = if Path::new("src/lib.rs").exists() {
+            "src"
+        } else {
+            "rust/src"
+        };
+        paths.push(default.to_string());
+    }
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in &paths {
+        let path = PathBuf::from(p);
+        if path.is_dir() {
+            files.extend(analysis::collect_rs_files(&path));
+        } else {
+            files.push(path);
+        }
+    }
+    if files.is_empty() {
+        eprintln!("pallas-lint: nothing to scan under {paths:?}");
+        return ExitCode::from(2);
+    }
+
+    let allow = match args.opt("allow") {
+        Some(p) => Allowlist::load(Path::new(p)),
+        None => Allowlist::load(&default_allow_path(&paths)),
+    };
+
+    let all = match analysis::run_files(&files) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("pallas-lint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let total = all.len();
+    let findings = allow.filter(all);
+    let suppressed = total - findings.len();
+
+    if json_out {
+        println!("{}", render_json(&findings, suppressed));
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+        }
+        if findings.is_empty() {
+            println!("pallas-lint: clean ({} files, {suppressed} suppressed)", files.len());
+        } else {
+            println!("pallas-lint: {} finding(s), {suppressed} suppressed", findings.len());
+        }
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+/// `lint-allow.txt` next to the first scanned `src` directory: the
+/// conventional location is `rust/lint-allow.txt`, sibling of
+/// `rust/src`.
+fn default_allow_path(paths: &[String]) -> PathBuf {
+    for p in paths {
+        let parent = Path::new(p).parent().unwrap_or_else(|| Path::new("."));
+        let candidate = parent.join("lint-allow.txt");
+        if candidate.exists() {
+            return candidate;
+        }
+    }
+    PathBuf::from("lint-allow.txt")
+}
+
+fn render_json(findings: &[Finding], suppressed: usize) -> String {
+    let mut arr: Vec<Value> = Vec::new();
+    for f in findings {
+        let obj = Value::obj()
+            .set("rule", f.rule)
+            .set("file", f.file.as_str())
+            .set("line", f.line)
+            .set("message", f.message.as_str());
+        arr.push(obj);
+    }
+    Value::obj()
+        .set("findings", Value::Array(arr))
+        .set("suppressed", suppressed)
+        .to_json()
+}

@@ -23,7 +23,9 @@
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::sync::{classes, OrderedMutex};
 
 /// Hinted-handoff tuning (`hints` config section).
 #[derive(Debug, Clone)]
@@ -77,21 +79,23 @@ pub struct Hint {
 /// Callback invoked with every hint the per-peer bound evicts — the
 /// record is lost to replay, so the subscriber (anti-entropy repair)
 /// takes over responsibility for the divergence it leaves behind.
-pub type EvictionHook = Box<dyn Fn(SocketAddr, &Hint) + Send + Sync>;
+/// `Arc` (not `Box`) so the hook can be cloned out of its slot and
+/// invoked with no handoff lock held.
+pub type EvictionHook = Arc<dyn Fn(SocketAddr, &Hint) + Send + Sync>;
 
 /// Per-node hint storage plus the down-peer set the replicator consults
 /// before every send.
 pub struct HintedHandoff {
     cfg: HintConfig,
-    queues: Mutex<HashMap<SocketAddr, VecDeque<Hint>>>,
-    down: Mutex<HashSet<SocketAddr>>,
+    queues: OrderedMutex<HashMap<SocketAddr, VecDeque<Hint>>>,
+    down: OrderedMutex<HashSet<SocketAddr>>,
     /// Old address → current address for restarted peers. A push job
     /// that was already in flight to the old listener when the peer
     /// rejoined would otherwise park under a queue key no future replay
     /// ever drains; forwarding parks it where the next replay looks.
-    forwards: Mutex<HashMap<SocketAddr, SocketAddr>>,
+    forwards: OrderedMutex<HashMap<SocketAddr, SocketAddr>>,
     /// Observer of bound-evicted hints (anti-entropy damage handoff).
-    on_evict: Mutex<Option<EvictionHook>>,
+    on_evict: OrderedMutex<Option<EvictionHook>>,
     queued: AtomicU64,
     replayed: AtomicU64,
     dropped: AtomicU64,
@@ -112,10 +116,10 @@ impl HintedHandoff {
     pub fn new(cfg: HintConfig) -> Arc<HintedHandoff> {
         Arc::new(HintedHandoff {
             cfg,
-            queues: Mutex::new(HashMap::new()),
-            down: Mutex::new(HashSet::new()),
-            forwards: Mutex::new(HashMap::new()),
-            on_evict: Mutex::new(None),
+            queues: OrderedMutex::new(&classes::HINT_QUEUES, HashMap::new()),
+            down: OrderedMutex::new(&classes::HINT_DOWN, HashSet::new()),
+            forwards: OrderedMutex::new(&classes::HINT_FORWARDS, HashMap::new()),
+            on_evict: OrderedMutex::new(&classes::HINT_EVICT, None),
             queued: AtomicU64::new(0),
             replayed: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
@@ -229,11 +233,13 @@ impl HintedHandoff {
             q.push_back(hint);
             evicted
         };
-        // The hook runs outside the queues lock: it marks Merkle buckets
-        // dirty and kicks the repair thread, neither of which may nest
-        // under this lock.
+        // The hook runs with *no* handoff lock held — not the queues lock
+        // (released above) and not the on_evict slot either: it marks
+        // Merkle buckets dirty and kicks the repair thread, and anything
+        // it reaches must stay free to park or re-register concurrently.
         if let Some(hint) = evicted {
-            if let Some(hook) = self.on_evict.lock().unwrap().as_ref() {
+            let hook = self.on_evict.lock().unwrap().clone();
+            if let Some(hook) = hook {
                 hook(peer, &hint);
             }
         }

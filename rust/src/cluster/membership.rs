@@ -33,13 +33,14 @@
 
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::http::{Request, Response, Server};
 use crate::json::Value;
 use crate::kvstore::HashRing;
 use crate::netsim::{LinkModel, TrafficMeter};
+use crate::sync::{classes, OrderedMutex};
 use crate::transport::PeerPool;
 use crate::Result;
 
@@ -153,15 +154,17 @@ pub enum MembershipEvent {
     },
 }
 
-type Subscriber = Box<dyn Fn(&[MembershipEvent]) + Send + Sync>;
+/// Membership-event callback. `Arc` (not `Box`) so `notify` can snapshot
+/// the list and invoke callbacks with the subscriber lock released.
+type Subscriber = Arc<dyn Fn(&[MembershipEvent]) + Send + Sync>;
 
 /// Cluster-wide membership: per-member state, the topology epoch, and the
 /// subscriber list notified on every transition.
 pub struct MembershipView {
     cfg: MembershipConfig,
-    members: Mutex<Vec<MemberInfo>>,
+    members: OrderedMutex<Vec<MemberInfo>>,
     epoch: AtomicU64,
-    subscribers: Mutex<Vec<Subscriber>>,
+    subscribers: OrderedMutex<Vec<Subscriber>>,
 }
 
 impl MembershipView {
@@ -169,9 +172,9 @@ impl MembershipView {
     pub fn new(cfg: MembershipConfig) -> Arc<MembershipView> {
         Arc::new(MembershipView {
             cfg,
-            members: Mutex::new(Vec::new()),
+            members: OrderedMutex::new(&classes::MEMBERSHIP_MEMBERS, Vec::new()),
             epoch: AtomicU64::new(0),
-            subscribers: Mutex::new(Vec::new()),
+            subscribers: OrderedMutex::new(&classes::MEMBERSHIP_SUBSCRIBERS, Vec::new()),
         })
     }
 
@@ -368,9 +371,12 @@ impl MembershipView {
         if events.is_empty() {
             return;
         }
-        // Subscribers run outside the members lock: they may read the
-        // view and swap placements on KV nodes.
-        for sub in self.subscribers.lock().unwrap().iter() {
+        // Subscribers run outside *both* view locks: they may read the
+        // view, swap placements on KV nodes, and (re)subscribe — a
+        // callback invoked under the subscriber lock would deadlock on
+        // any of those. Snapshot the Arc list, release, then invoke.
+        let subs: Vec<Subscriber> = self.subscribers.lock().unwrap().clone();
+        for sub in &subs {
             sub(events);
         }
     }
@@ -483,6 +489,7 @@ fn probe(pool: &PeerPool, addr: SocketAddr) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
 
     fn addr(port: u16) -> SocketAddr {
         format!("127.0.0.1:{port}").parse().unwrap()
@@ -502,7 +509,7 @@ mod tests {
         let view = MembershipView::new(fast_cfg());
         let seen = Arc::new(Mutex::new(Vec::<String>::new()));
         let s2 = seen.clone();
-        view.subscribe(Box::new(move |events| {
+        view.subscribe(Arc::new(move |events| {
             for e in events {
                 s2.lock().unwrap().push(format!("{e:?}"));
             }
@@ -563,7 +570,7 @@ mod tests {
         view.join("b", addr(3), addr(4), &[]);
         let events = Arc::new(Mutex::new(Vec::<MembershipEvent>::new()));
         let e2 = events.clone();
-        view.subscribe(Box::new(move |evs| {
+        view.subscribe(Arc::new(move |evs| {
             e2.lock().unwrap().extend(evs.iter().cloned());
         }));
         // Take b down, then rejoin at a fresh address.

@@ -86,7 +86,7 @@ impl ClusterCoordinator {
         // Weak subscription: the view must not keep the coordinator (and
         // through it every KvNode) alive after the cluster is dropped.
         let weak = Arc::downgrade(&coordinator);
-        view.subscribe(Box::new(move |events| {
+        view.subscribe(Arc::new(move |events| {
             if let Some(c) = weak.upgrade() {
                 c.apply_events(events);
             }

@@ -73,6 +73,7 @@ use crate::cluster::HintedHandoff;
 use crate::http::{Handler, Request, Response, Server, ServerLimits};
 use crate::json::{self, Value};
 use crate::netsim::LinkModel;
+use crate::sync::{classes, OrderedMutex};
 use crate::testkit::fnv1a;
 use crate::transport::PeerPool;
 use crate::Result;
@@ -161,7 +162,7 @@ pub struct TreeDigest {
 #[derive(Debug)]
 pub struct MerkleForest {
     fanout: usize,
-    trees: Mutex<HashMap<String, Tree>>,
+    trees: OrderedMutex<HashMap<String, Tree>>,
 }
 
 impl MerkleForest {
@@ -169,7 +170,7 @@ impl MerkleForest {
     pub fn new(fanout: usize) -> Arc<MerkleForest> {
         Arc::new(MerkleForest {
             fanout: fanout.max(2),
-            trees: Mutex::new(HashMap::new()),
+            trees: OrderedMutex::new(&classes::MERKLE_TREES, HashMap::new()),
         })
     }
 

@@ -83,6 +83,7 @@ use crate::cluster::{HintConfig, HintedHandoff};
 use crate::http::{Handler, Request, Response, Server};
 use crate::json::{self, Value};
 use crate::netsim::{LinkModel, TrafficMeter};
+use crate::sync::{classes, OrderedRwLock};
 use crate::transport::{NetStats, PeerPool, TransportConfig};
 use crate::{Error, Result};
 
@@ -109,8 +110,10 @@ impl Entry {
 const STORE_SHARDS: usize = 16;
 
 /// One lock stripe: an independent `keygroup -> key -> entry` map
-/// guarding the keys whose hash lands on this stripe.
-type Shard = RwLock<HashMap<String, BTreeMap<String, Entry>>>;
+/// guarding the keys whose hash lands on this stripe. The lockdep rank
+/// is the stripe index, so debug builds panic on out-of-index-order
+/// multi-stripe acquisition as well as on any lock nested under a stripe.
+type Shard = OrderedRwLock<HashMap<String, BTreeMap<String, Entry>>>;
 
 /// In-memory replica state shared between the public API, the replication
 /// receiver, and the janitor.
@@ -141,7 +144,9 @@ pub struct Store {
 impl Store {
     fn new() -> Arc<Store> {
         Arc::new(Store {
-            shards: (0..STORE_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            shards: (0..STORE_SHARDS)
+                .map(|i| OrderedRwLock::with_rank(&classes::STORE_STRIPE, i as u32, HashMap::new()))
+                .collect(),
             keygroups: RwLock::new(HashSet::new()),
             forest: RwLock::new(None),
             storage: RwLock::new(None),
@@ -298,7 +303,7 @@ impl Store {
     fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.read().unwrap().values().map(|kg| kg.len()).sum::<usize>())
+            .map(|shard| shard.read().unwrap().values().map(|kg| kg.len()).sum::<usize>())
             .sum()
     }
 
@@ -311,7 +316,7 @@ impl Store {
         keygroup: &str,
         f: impl FnOnce(&[(&String, &Entry)]) -> R,
     ) -> R {
-        let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
+        let guards: Vec<_> = self.shards.iter().map(|shard| shard.read().unwrap()).collect();
         let mut items: Vec<(&String, &Entry)> = Vec::new();
         for g in &guards {
             if let Some(kg) = g.get(keygroup) {
@@ -510,7 +515,7 @@ impl KvNode {
                 // A hint evicted by the per-peer bound is data the push
                 // pipeline can no longer deliver: hand it to repair.
                 let s = sink.clone();
-                h.set_eviction_hook(Box::new(move |peer, hint| {
+                h.set_eviction_hook(Arc::new(move |peer, hint| {
                     s.note_lost(peer, &hint.keygroup, &hint.key);
                 }));
             }

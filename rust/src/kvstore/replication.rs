@@ -36,7 +36,7 @@
 use std::collections::VecDeque;
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::Duration;
 
 use super::antientropy::AeSink;
@@ -44,6 +44,7 @@ use crate::cluster::{Hint, HintUpdate, HintedHandoff};
 use crate::http::Request;
 use crate::json::Value;
 use crate::netsim::TrafficMeter;
+use crate::sync::{classes, OrderedMutex};
 use crate::transport::PeerPool;
 
 /// Replication engine configuration.
@@ -206,7 +207,7 @@ fn coalesce_into(jobs: &mut VecDeque<Job>, job: Job) -> Option<Job> {
 
 /// Handle to the background replication sender.
 pub struct Replicator {
-    queue: Arc<(Mutex<Queue>, Condvar)>,
+    queue: Arc<(OrderedMutex<Queue>, Condvar)>,
     thread: Option<std::thread::JoinHandle<()>>,
     meter: Arc<TrafficMeter>,
     queued: Arc<AtomicU64>,
@@ -244,10 +245,13 @@ impl Replicator {
         ae: Option<Arc<AeSink>>,
     ) -> Replicator {
         let queue = Arc::new((
-            Mutex::new(Queue {
-                jobs: VecDeque::new(),
-                open: true,
-            }),
+            OrderedMutex::new(
+                &classes::REPL_QUEUE,
+                Queue {
+                    jobs: VecDeque::new(),
+                    open: true,
+                },
+            ),
             Condvar::new(),
         ));
         let meter = pool.meter().clone();
@@ -278,8 +282,8 @@ impl Replicator {
                     crate::testkit::Rng::new(0x5EED ^ crate::testkit::fnv1a(name.as_bytes()));
                 loop {
                     let job = {
-                        let (lock, cvar) = &*t_queue;
-                        let mut q = lock.lock().unwrap();
+                        let (queue, cvar) = &*t_queue;
+                        let mut q = queue.lock().unwrap();
                         loop {
                             if t_abort.load(Ordering::SeqCst) {
                                 // Hard kill: whatever is still queued
@@ -298,7 +302,7 @@ impl Replicator {
                             if !q.open {
                                 break None;
                             }
-                            q = cvar.wait(q).unwrap();
+                            q = q.wait(cvar).unwrap();
                         }
                     };
                     let Some(job) = job else { break };
@@ -455,8 +459,8 @@ impl Replicator {
 
     fn enqueue(&self, job: Job) {
         let n_targets = job.peers.len() as u64;
-        let (lock, cvar) = &*self.queue;
-        let mut q = lock.lock().unwrap();
+        let (queue, cvar) = &*self.queue;
+        let mut q = queue.lock().unwrap();
         if !q.open {
             // Late push after shutdown: nobody will ever drain it. Count a
             // drop per addressed peer and bail out so quiesce() cannot
@@ -542,9 +546,9 @@ impl Replicator {
     /// joined later by `shutdown()`/`Drop`.
     pub fn abort(&self) {
         self.abort_flag.store(true, Ordering::SeqCst);
-        let (lock, cvar) = &*self.queue;
+        let (queue, cvar) = &*self.queue;
         {
-            let mut q = lock.lock().unwrap();
+            let mut q = queue.lock().unwrap();
             q.open = false;
         }
         cvar.notify_all();
@@ -553,8 +557,8 @@ impl Replicator {
     /// Stop the sender thread (drains remaining queue first).
     pub fn shutdown(&mut self) {
         {
-            let (lock, cvar) = &*self.queue;
-            let mut q = lock.lock().unwrap();
+            let (queue, cvar) = &*self.queue;
+            let mut q = queue.lock().unwrap();
             q.open = false;
             cvar.notify_all();
         }
@@ -569,7 +573,7 @@ impl Replicator {
 /// queue closed are accounted as shutdown drops — they can never be
 /// delivered by this sender again.
 fn requeue_hints(
-    queue: &Arc<(Mutex<Queue>, Condvar)>,
+    queue: &Arc<(OrderedMutex<Queue>, Condvar)>,
     queued: &Arc<AtomicU64>,
     dropped: &Arc<AtomicU64>,
     dropped_shutdown: &Arc<AtomicU64>,
@@ -581,8 +585,8 @@ fn requeue_hints(
     if hints.is_empty() {
         return;
     }
-    let (lock, cvar) = &**queue;
-    let mut q = lock.lock().unwrap();
+    let (queue, cvar) = &**queue;
+    let mut q = queue.lock().unwrap();
     if !q.open {
         let n = hints.len() as u64;
         dropped_shutdown.fetch_add(n, Ordering::SeqCst);

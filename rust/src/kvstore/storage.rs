@@ -40,11 +40,12 @@ use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 use super::Store;
 use crate::json::{self, Value};
+use crate::sync::{classes, OrderedMutex};
 use crate::testkit::fnv1a;
 use crate::{Error, Result};
 
@@ -101,7 +102,7 @@ pub struct Storage {
     dir: PathBuf,
     fsync: bool,
     snapshot_every: u64,
-    wal: Mutex<Wal>,
+    wal: OrderedMutex<Wal>,
     wal_appends: AtomicU64,
     wal_bytes: AtomicU64,
     snapshots: AtomicU64,
@@ -173,8 +174,14 @@ fn scan(file: &mut File, mut apply: impl FnMut(Record)) -> Result<(u64, bool)> {
         if rest < HEADER_LEN {
             return Ok((pos as u64, true));
         }
-        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
-        let sum = u64::from_le_bytes(buf[pos + 4..pos + 12].try_into().unwrap());
+        // Infallible header decode: the `rest >= HEADER_LEN` check above
+        // guarantees the slices exist, so no unwrap on the recovery path.
+        let mut len_b = [0u8; 4];
+        len_b.copy_from_slice(&buf[pos..pos + 4]);
+        let len = u32::from_le_bytes(len_b);
+        let mut sum_b = [0u8; 8];
+        sum_b.copy_from_slice(&buf[pos + 4..pos + 12]);
+        let sum = u64::from_le_bytes(sum_b);
         if len > MAX_PAYLOAD || rest - HEADER_LEN < len as usize {
             return Ok((pos as u64, true));
         }
@@ -212,7 +219,7 @@ impl Storage {
             dir: cfg.dir.clone(),
             fsync: cfg.fsync,
             snapshot_every: cfg.snapshot_every.max(1),
-            wal: Mutex::new(Wal { file, appends: 0 }),
+            wal: OrderedMutex::new(&classes::STORAGE_WAL, Wal { file, appends: 0 }),
             wal_appends: AtomicU64::new(0),
             wal_bytes: AtomicU64::new(0),
             snapshots: AtomicU64::new(0),

@@ -28,6 +28,7 @@
 //! `docs/ARCHITECTURE.md` walks the request path and the replication path
 //! (including ring placement) end to end.
 
+pub mod analysis;
 pub mod benchkit;
 pub mod cli;
 pub mod client;
@@ -43,6 +44,7 @@ pub mod netsim;
 pub mod profile;
 pub mod runtime;
 pub mod server;
+pub mod sync;
 pub mod testkit;
 pub mod tokenizer;
 pub mod transport;

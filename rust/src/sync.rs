@@ -1,0 +1,554 @@
+//! Runtime lock-order verification ("lockdep") for the crate's named
+//! locks.
+//!
+//! [`OrderedMutex`] and [`OrderedRwLock`] are drop-in wrappers around the
+//! std primitives that, **in debug builds only**, maintain a per-thread
+//! stack of held locks plus one process-global acquisition-order graph,
+//! and panic the moment a thread:
+//!
+//! - acquires any lock while holding a **terminal** lock (the store
+//!   stripes — the crate-wide rule is "a thread holding a shard lock
+//!   takes no other lock");
+//! - acquires two locks of the same class out of **rank order** (the
+//!   multi-stripe readers take stripes in index order only);
+//! - closes a **cycle** in the global acquisition graph — the classic
+//!   AB/BA inversion, caught even when the two orders happen on
+//!   different threads in different tests, long before an actual
+//!   deadlock needs the unlucky interleaving.
+//!
+//! With `debug_assertions` off (the release profile) the wrappers
+//! compile down to the bare std lock: no thread-local, no graph, no
+//! branches — release binaries and wire bytes are untouched.
+//!
+//! Every lock class the static analyzer (`crate::analysis`) knows about
+//! is predeclared in [`classes`] with its level in the documented lock
+//! hierarchy (low level = outermost). The levels are documentation and
+//! diagnostics; enforcement is purely observational (graph cycles), so a
+//! legitimate new nesting never trips it — only a contradictory pair
+//! does.
+
+use std::fmt;
+use std::sync::{
+    Condvar, LockResult, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+/// Identity of a family of locks for ordering purposes (all 16 store
+/// stripes share one class, distinguished by rank).
+pub struct LockClass {
+    name: &'static str,
+    level: u16,
+    terminal: bool,
+}
+
+impl LockClass {
+    /// A non-terminal class at `level` in the documented hierarchy
+    /// (lower level = taken first / outermost).
+    pub const fn new(name: &'static str, level: u16) -> LockClass {
+        LockClass {
+            name,
+            level,
+            terminal: false,
+        }
+    }
+
+    /// A terminal class: while any lock of this class is held the thread
+    /// may take nothing except a higher-rank lock of the same class.
+    pub const fn terminal(name: &'static str, level: u16) -> LockClass {
+        LockClass {
+            name,
+            level,
+            terminal: true,
+        }
+    }
+
+    /// Class name as it appears in panics and lint findings.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Position in the documented lock hierarchy (low = outermost).
+    pub fn level(&self) -> u16 {
+        self.level
+    }
+
+    /// Whether this class is terminal (innermost; nothing nests under it).
+    pub fn is_terminal(&self) -> bool {
+        self.terminal
+    }
+}
+
+impl fmt::Debug for LockClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LockClass")
+            .field("name", &self.name)
+            .field("level", &self.level)
+            .field("terminal", &self.terminal)
+            .finish()
+    }
+}
+
+/// The crate's named lock classes, one static per family, ordered by
+/// level: outermost (taken first) at the top. This is the machine
+/// countersignature of the "Concurrency invariants" section in
+/// ARCHITECTURE.md.
+pub mod classes {
+    use super::LockClass;
+
+    /// Membership subscriber list (snapshot-then-invoke; callbacks never
+    /// run under it).
+    pub static MEMBERSHIP_SUBSCRIBERS: LockClass = LockClass::new("membership.subscribers", 10);
+    /// Membership member table (held across ring construction only).
+    pub static MEMBERSHIP_MEMBERS: LockClass = LockClass::new("membership.members", 11);
+    /// Hinted-handoff per-peer queues (eviction hooks run after release).
+    pub static HINT_QUEUES: LockClass = LockClass::new("hints.queues", 20);
+    /// Hinted-handoff down-peer set.
+    pub static HINT_DOWN: LockClass = LockClass::new("hints.down", 21);
+    /// Hinted-handoff restart-forwarding table.
+    pub static HINT_FORWARDS: LockClass = LockClass::new("hints.forwards", 22);
+    /// Hinted-handoff eviction-hook slot (cloned out before invoking).
+    pub static HINT_EVICT: LockClass = LockClass::new("hints.on_evict", 23);
+    /// Replicator job queue (the Condvar-coupled sender queue).
+    pub static REPL_QUEUE: LockClass = LockClass::new("replicator.queue", 30);
+    /// Peer-pool idle connection map (never held across connect or IO).
+    pub static POOL_IDLE: LockClass = LockClass::new("pool.idle", 40);
+    /// Merkle forest tree table (held across the store digest read).
+    pub static MERKLE_TREES: LockClass = LockClass::new("merkle.trees", 50);
+    /// WAL writer state (the snapshotter holds it across the store dump).
+    pub static STORAGE_WAL: LockClass = LockClass::new("storage.wal", 60);
+    /// Store stripes — terminal: a thread holding a shard lock takes no
+    /// other lock; multi-stripe readers go in index (= rank) order.
+    pub static STORE_STRIPE: LockClass = LockClass::terminal("store.stripe", 70);
+}
+
+#[cfg(debug_assertions)]
+mod lockdep {
+    use super::LockClass;
+    use std::cell::RefCell;
+    use std::collections::{HashMap, HashSet};
+    use std::sync::{Mutex, OnceLock};
+
+    thread_local! {
+        /// Stack of (class, rank) pairs this thread currently holds.
+        static HELD: RefCell<Vec<(&'static LockClass, u32)>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Process-global acquisition-order graph: an edge `a -> b` means
+    /// some thread acquired a `b` lock while holding an `a` lock.
+    static EDGES: OnceLock<Mutex<HashMap<&'static str, HashSet<&'static str>>>> = OnceLock::new();
+
+    fn edges() -> &'static Mutex<HashMap<&'static str, HashSet<&'static str>>> {
+        EDGES.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    fn reaches(
+        graph: &HashMap<&'static str, HashSet<&'static str>>,
+        from: &'static str,
+        to: &'static str,
+    ) -> bool {
+        let mut stack = vec![from];
+        let mut seen: HashSet<&'static str> = HashSet::new();
+        while let Some(node) = stack.pop() {
+            if node == to {
+                return true;
+            }
+            if seen.insert(node) {
+                if let Some(next) = graph.get(node) {
+                    stack.extend(next.iter().copied());
+                }
+            }
+        }
+        false
+    }
+
+    pub fn acquired(class: &'static LockClass, rank: u32) {
+        HELD.with(|h| {
+            {
+                let held = h.borrow();
+                for &(held_class, held_rank) in held.iter() {
+                    if std::ptr::eq(held_class, class) {
+                        assert!(
+                            rank > held_rank,
+                            "lockdep: same-class locks must be taken in increasing rank \
+                             order: acquiring {} rank {rank} while rank {held_rank} is held",
+                            class.name(),
+                        );
+                    } else if held_class.is_terminal() {
+                        panic!(
+                            "lockdep: {} acquired while terminal lock {} is held — a thread \
+                             holding a {} lock takes no other lock",
+                            class.name(),
+                            held_class.name(),
+                            held_class.name(),
+                        );
+                    } else {
+                        let mut graph = edges().lock().unwrap();
+                        let inserted = graph
+                            .entry(held_class.name())
+                            .or_default()
+                            .insert(class.name());
+                        if inserted && reaches(&graph, class.name(), held_class.name()) {
+                            panic!(
+                                "lockdep: lock-order inversion: acquiring {} (level {}) while \
+                                 holding {} (level {}), but the opposite order was already \
+                                 observed",
+                                class.name(),
+                                class.level(),
+                                held_class.name(),
+                                held_class.level(),
+                            );
+                        }
+                    }
+                }
+            }
+            h.borrow_mut().push((class, rank));
+        });
+    }
+
+    pub fn released(class: &'static LockClass, rank: u32) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(pos) = held
+                .iter()
+                .rposition(|&(c, r)| std::ptr::eq(c, class) && r == rank)
+            {
+                held.remove(pos);
+            }
+        });
+    }
+}
+
+#[cfg(debug_assertions)]
+fn note_acquired(class: &'static LockClass, rank: u32) {
+    lockdep::acquired(class, rank);
+}
+
+#[cfg(not(debug_assertions))]
+fn note_acquired(_class: &'static LockClass, _rank: u32) {}
+
+#[cfg(debug_assertions)]
+fn note_released(class: &'static LockClass, rank: u32) {
+    lockdep::released(class, rank);
+}
+
+#[cfg(not(debug_assertions))]
+fn note_released(_class: &'static LockClass, _rank: u32) {}
+
+/// [`Mutex`] wrapper that checks lock ordering in debug builds. The
+/// order check runs *before* blocking on the inner mutex, so a would-be
+/// deadlock panics with both class names instead of hanging.
+pub struct OrderedMutex<T> {
+    class: &'static LockClass,
+    rank: u32,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    /// Wrap `value` under `class` at rank 0.
+    pub const fn new(class: &'static LockClass, value: T) -> OrderedMutex<T> {
+        OrderedMutex {
+            class,
+            rank: 0,
+            inner: Mutex::new(value),
+        }
+    }
+
+    /// Wrap `value` under `class` at `rank` — same-class locks may only
+    /// be nested in strictly increasing rank order.
+    pub const fn with_rank(class: &'static LockClass, rank: u32, value: T) -> OrderedMutex<T> {
+        OrderedMutex {
+            class,
+            rank,
+            inner: Mutex::new(value),
+        }
+    }
+
+    /// Acquire, recording the hold on this thread's lockdep stack.
+    /// Poisoning behaves exactly like [`Mutex::lock`].
+    pub fn lock(&self) -> LockResult<OrderedMutexGuard<'_, T>> {
+        note_acquired(self.class, self.rank);
+        match self.inner.lock() {
+            Ok(guard) => Ok(OrderedMutexGuard {
+                owner: self,
+                inner: Some(guard),
+            }),
+            Err(poisoned) => Err(PoisonError::new(OrderedMutexGuard {
+                owner: self,
+                inner: Some(poisoned.into_inner()),
+            })),
+        }
+    }
+}
+
+impl<T> fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OrderedMutex")
+            .field("class", &self.class.name())
+            .finish_non_exhaustive()
+    }
+}
+
+/// Guard returned by [`OrderedMutex::lock`]; releases the lockdep hold
+/// on drop.
+pub struct OrderedMutexGuard<'a, T> {
+    owner: &'a OrderedMutex<T>,
+    /// `None` only transiently inside [`OrderedMutexGuard::wait`].
+    inner: Option<MutexGuard<'a, T>>,
+}
+
+impl<'a, T> OrderedMutexGuard<'a, T> {
+    /// Block on `cvar`, releasing the mutex (and the lockdep hold) for
+    /// the duration of the wait and re-acquiring both on wake — the
+    /// ordered equivalent of [`Condvar::wait`].
+    pub fn wait(mut self, cvar: &Condvar) -> LockResult<OrderedMutexGuard<'a, T>> {
+        let owner = self.owner;
+        let guard = self.inner.take().expect("guard present outside wait");
+        note_released(owner.class, owner.rank);
+        match cvar.wait(guard) {
+            Ok(guard) => {
+                note_acquired(owner.class, owner.rank);
+                Ok(OrderedMutexGuard {
+                    owner,
+                    inner: Some(guard),
+                })
+            }
+            Err(poisoned) => {
+                note_acquired(owner.class, owner.rank);
+                Err(PoisonError::new(OrderedMutexGuard {
+                    owner,
+                    inner: Some(poisoned.into_inner()),
+                }))
+            }
+        }
+    }
+}
+
+impl<T> std::ops::Deref for OrderedMutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard present outside wait")
+    }
+}
+
+impl<T> std::ops::DerefMut for OrderedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard present outside wait")
+    }
+}
+
+impl<T> Drop for OrderedMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            note_released(self.owner.class, self.owner.rank);
+        }
+    }
+}
+
+/// [`RwLock`] wrapper that checks lock ordering in debug builds. Reads
+/// and writes count the same for ordering purposes (either holds the
+/// stripe against the other side).
+pub struct OrderedRwLock<T> {
+    class: &'static LockClass,
+    rank: u32,
+    inner: RwLock<T>,
+}
+
+impl<T> OrderedRwLock<T> {
+    /// Wrap `value` under `class` at rank 0.
+    pub const fn new(class: &'static LockClass, value: T) -> OrderedRwLock<T> {
+        OrderedRwLock {
+            class,
+            rank: 0,
+            inner: RwLock::new(value),
+        }
+    }
+
+    /// Wrap `value` under `class` at `rank` (stripe index for the store
+    /// shards — index order is rank order).
+    pub const fn with_rank(class: &'static LockClass, rank: u32, value: T) -> OrderedRwLock<T> {
+        OrderedRwLock {
+            class,
+            rank,
+            inner: RwLock::new(value),
+        }
+    }
+
+    /// Acquire shared, recording the hold on this thread's lockdep
+    /// stack. Poisoning behaves exactly like [`RwLock::read`].
+    pub fn read(&self) -> LockResult<OrderedRwLockReadGuard<'_, T>> {
+        note_acquired(self.class, self.rank);
+        match self.inner.read() {
+            Ok(guard) => Ok(OrderedRwLockReadGuard {
+                owner: self,
+                inner: guard,
+            }),
+            Err(poisoned) => Err(PoisonError::new(OrderedRwLockReadGuard {
+                owner: self,
+                inner: poisoned.into_inner(),
+            })),
+        }
+    }
+
+    /// Acquire exclusive, recording the hold on this thread's lockdep
+    /// stack. Poisoning behaves exactly like [`RwLock::write`].
+    pub fn write(&self) -> LockResult<OrderedRwLockWriteGuard<'_, T>> {
+        note_acquired(self.class, self.rank);
+        match self.inner.write() {
+            Ok(guard) => Ok(OrderedRwLockWriteGuard {
+                owner: self,
+                inner: guard,
+            }),
+            Err(poisoned) => Err(PoisonError::new(OrderedRwLockWriteGuard {
+                owner: self,
+                inner: poisoned.into_inner(),
+            })),
+        }
+    }
+}
+
+impl<T> fmt::Debug for OrderedRwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OrderedRwLock")
+            .field("class", &self.class.name())
+            .finish_non_exhaustive()
+    }
+}
+
+/// Shared guard returned by [`OrderedRwLock::read`].
+pub struct OrderedRwLockReadGuard<'a, T> {
+    owner: &'a OrderedRwLock<T>,
+    inner: RwLockReadGuard<'a, T>,
+}
+
+impl<T> std::ops::Deref for OrderedRwLockReadGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> Drop for OrderedRwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        note_released(self.owner.class, self.owner.rank);
+    }
+}
+
+/// Exclusive guard returned by [`OrderedRwLock::write`].
+pub struct OrderedRwLockWriteGuard<'a, T> {
+    owner: &'a OrderedRwLock<T>,
+    inner: RwLockWriteGuard<'a, T>,
+}
+
+impl<T> std::ops::Deref for OrderedRwLockWriteGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> std::ops::DerefMut for OrderedRwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T> Drop for OrderedRwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        note_released(self.owner.class, self.owner.rank);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    // Dedicated classes so these tests cannot contaminate the global
+    // graph edges of the production classes (tests share one process).
+    static T_OUTER: LockClass = LockClass::new("test.sync.outer", 1);
+    static T_INNER: LockClass = LockClass::new("test.sync.inner", 2);
+    static T_TERM: LockClass = LockClass::terminal("test.sync.term", 3);
+    static T_AFTER_TERM: LockClass = LockClass::new("test.sync.after_term", 4);
+    static T_RANKED: LockClass = LockClass::new("test.sync.ranked", 5);
+    static T_WAIT: LockClass = LockClass::new("test.sync.wait", 6);
+
+    #[test]
+    fn consistent_nesting_is_silent() {
+        let a = OrderedMutex::new(&T_OUTER, 1u32);
+        let b = OrderedMutex::new(&T_INNER, 2u32);
+        for _ in 0..3 {
+            let ga = a.lock().unwrap();
+            let gb = b.lock().unwrap();
+            assert_eq!(*ga + *gb, 3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "lock-order inversion")]
+    fn ab_ba_inversion_panics() {
+        static A: LockClass = LockClass::new("test.sync.ab_a", 1);
+        static B: LockClass = LockClass::new("test.sync.ab_b", 2);
+        let a = OrderedMutex::new(&A, ());
+        let b = OrderedMutex::new(&B, ());
+        {
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+        }
+        // The reversed order closes the cycle; lockdep panics before
+        // blocking, whether or not the deadlock interleaving ever fires.
+        let _gb = b.lock().unwrap();
+        let _ga = a.lock().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "takes no other lock")]
+    fn terminal_lock_admits_nothing_under_it() {
+        let stripe = OrderedRwLock::new(&T_TERM, ());
+        let other = OrderedMutex::new(&T_AFTER_TERM, ());
+        let _g = stripe.write().unwrap();
+        let _h = other.lock().unwrap();
+    }
+
+    #[test]
+    fn same_class_in_rank_order_is_allowed() {
+        let stripes: Vec<OrderedRwLock<u32>> = (0..4)
+            .map(|i| OrderedRwLock::with_rank(&T_RANKED, i, i))
+            .collect();
+        let guards: Vec<_> = stripes.iter().map(|s| s.read().unwrap()).collect();
+        let total: u32 = guards.iter().map(|g| **g).sum();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "increasing rank order")]
+    fn same_class_out_of_rank_order_panics() {
+        static RANKED: LockClass = LockClass::new("test.sync.rank_rev", 5);
+        let lo = OrderedMutex::with_rank(&RANKED, 0, ());
+        let hi = OrderedMutex::with_rank(&RANKED, 1, ());
+        let _g_hi = hi.lock().unwrap();
+        let _g_lo = lo.lock().unwrap();
+    }
+
+    #[test]
+    fn guard_wait_releases_and_reacquires() {
+        let pair = Arc::new((OrderedMutex::new(&T_WAIT, false), Condvar::new()));
+        let signaller = pair.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let (lock, cvar) = &*signaller;
+            *lock.lock().unwrap() = true;
+            cvar.notify_all();
+        });
+        let (lock, cvar) = &*pair;
+        let mut ready = lock.lock().unwrap();
+        while !*ready {
+            ready = ready.wait(cvar).unwrap();
+        }
+        assert!(*ready);
+        drop(ready);
+        t.join().unwrap();
+    }
+}

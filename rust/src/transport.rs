@@ -29,12 +29,13 @@
 
 use std::collections::HashMap;
 use std::net::SocketAddr;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::http::{Connection, Request, Response, ServerLimits};
 use crate::metrics::Counter;
 use crate::netsim::{LinkModel, TrafficMeter};
+use crate::sync::{classes, OrderedMutex};
 use crate::Result;
 
 /// Transport tuning (`transport` config section): the outbound pools'
@@ -157,7 +158,7 @@ pub struct PeerPool {
     /// leak its parked sockets past the next pool operation.
     idle_expiry: Duration,
     retry_stale: bool,
-    idle: Mutex<HashMap<SocketAddr, Vec<(Connection, Instant)>>>,
+    idle: OrderedMutex<HashMap<SocketAddr, Vec<(Connection, Instant)>>>,
     stats: Arc<NetStats>,
 }
 
@@ -171,7 +172,7 @@ impl PeerPool {
             max_idle_per_peer: TransportConfig::default().max_idle_per_peer,
             idle_expiry: Duration::from_secs(30),
             retry_stale: true,
-            idle: Mutex::new(HashMap::new()),
+            idle: OrderedMutex::new(&classes::POOL_IDLE, HashMap::new()),
             stats: NetStats::new(),
         }
     }
@@ -389,8 +390,8 @@ impl PooledConn<'_> {
                 // Stale keep-alive: reconnect once and retry.
                 self.unproven_reuse = false;
                 self.pool.stats.evicted.add(1);
-                self.conn = Some(self.pool.open_fresh(self.addr, self.timeout)?);
-                let resp = self.conn.as_mut().unwrap().round_trip(req)?;
+                let conn = self.conn.insert(self.pool.open_fresh(self.addr, self.timeout)?);
+                let resp = conn.round_trip(req)?;
                 self.healthy = resp.headers.get("connection").map(String::as_str) != Some("close");
                 Ok(resp)
             }
