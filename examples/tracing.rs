@@ -1,0 +1,145 @@
+//! Distributed tracing — follow one roaming turn across the fleet.
+//!
+//! Launches a four-node sharded fleet with observability enabled, roams
+//! a client across all four nodes, then scrapes every node's
+//! `GET /trace` ring and stitches the spans back into per-trace trees:
+//! the serving node's `turn` root with its tokenize/prefill/decode/fetch
+//! phase children, plus the `remote_fetch`/`serve_fetch` pair when a
+//! handover forced the context to be pulled from its home replica.
+//! Finishes with each node's `GET /status` one-call summary.
+//!
+//! ```sh
+//! cargo run --release --example tracing
+//! ```
+
+use std::collections::BTreeMap;
+
+use discedge::client::{Client, MobilityPolicy};
+use discedge::config::{ClusterConfig, ContextMode};
+use discedge::http::Request;
+use discedge::json::{self, Value};
+use discedge::netsim::{LinkModel, TrafficMeter};
+use discedge::server::EdgeCluster;
+use discedge::transport::PeerPool;
+use discedge::workload::Scenario;
+
+/// One span row scraped from a node's `/trace` ring.
+struct Row {
+    node: String,
+    name: String,
+    trace_id: String,
+    span_id: String,
+    parent: Option<String>,
+    start_us: u64,
+    dur_us: u64,
+    detail: Option<String>,
+}
+
+fn scrape(pool: &PeerPool, addr: std::net::SocketAddr, path: &str) -> Value {
+    let resp = pool
+        .round_trip(addr, &Request::get(path))
+        .expect("node reachable");
+    json::parse(resp.body_str().expect("utf8 body")).expect("valid JSON")
+}
+
+fn main() -> discedge::Result<()> {
+    let mut cfg = ClusterConfig::mock_fleet(4, Some(2));
+    cfg.observability.enabled = true;
+    eprintln!("[tracing] launching a 4-node fleet (rf=2, tracing on)...");
+    let cluster = EdgeCluster::launch(cfg)?;
+
+    let model = "discedge/tiny-chat";
+    let mut client = Client::connect(
+        cluster.endpoints(),
+        MobilityPolicy::Alternate {
+            nodes: vec![0, 1, 2, 3],
+            every: 1,
+        },
+    )
+    .with_mode(ContextMode::Tokenized)
+    .with_model(model)
+    .with_max_tokens(16);
+
+    let scenario = Scenario::robotics_9turn();
+    for turn in scenario.turns().iter().take(6) {
+        let r = client.chat(&turn.prompt)?;
+        println!("turn {} served by {}", turn.number, r.node);
+        cluster.quiesce();
+    }
+
+    // Stitch: every node's ring, grouped by trace id.
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let mut rows: Vec<Row> = Vec::new();
+    for node in &cluster.nodes {
+        let v = scrape(&pool, node.api_addr(), "/trace");
+        for s in v.get("spans").and_then(Value::as_array).unwrap() {
+            rows.push(Row {
+                node: s.req_str("node").unwrap(),
+                name: s.req_str("name").unwrap(),
+                trace_id: s.req_str("trace_id").unwrap(),
+                span_id: s.req_str("span_id").unwrap(),
+                parent: s.get("parent").and_then(Value::as_str).map(str::to_string),
+                start_us: s.req_u64("start_us").unwrap(),
+                dur_us: s.req_u64("dur_us").unwrap(),
+                detail: s.get("detail").and_then(Value::as_str).map(str::to_string),
+            });
+        }
+    }
+    rows.sort_by_key(|r| r.start_us);
+
+    let mut traces: BTreeMap<&str, Vec<&Row>> = BTreeMap::new();
+    for row in &rows {
+        traces.entry(&row.trace_id).or_default().push(row);
+    }
+    println!("\n{} spans across {} traces:", rows.len(), traces.len());
+    for (trace_id, spans) in &traces {
+        let mut nodes: Vec<&str> = spans.iter().map(|s| s.node.as_str()).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        let plural = if nodes.len() == 1 { "" } else { "s" };
+        println!("\ntrace {}… ({} node{plural})", &trace_id[..8], nodes.len());
+        // Indent each span one level under its parent (two when the
+        // parent itself has a parent — this repo's traces are ≤3 deep).
+        let parents: BTreeMap<&str, Option<&str>> = spans
+            .iter()
+            .map(|s| (s.span_id.as_str(), s.parent.as_deref()))
+            .collect();
+        for s in spans {
+            let mut depth = 0;
+            let mut cur = s.parent.as_deref();
+            while let Some(p) = cur {
+                depth += 1;
+                cur = parents.get(p).copied().flatten();
+                if depth > 8 {
+                    break;
+                }
+            }
+            println!(
+                "  {:indent$}{:<14} {:>8} us  [{}]{}",
+                "",
+                s.name,
+                s.dur_us,
+                s.node,
+                s.detail.as_deref().map(|d| format!("  {d}")).unwrap_or_default(),
+                indent = depth * 2,
+            );
+        }
+    }
+
+    println!("\nper-node status:");
+    for node in &cluster.nodes {
+        let v = scrape(&pool, node.api_addr(), "/status");
+        let obs = v.get("obs").unwrap();
+        let net = v.get("net").unwrap();
+        println!(
+            "  {:<9} spans started={} exported={} dropped={}  conns opened={} reused={}",
+            v.req_str("node").unwrap(),
+            obs.req_u64("spans_started").unwrap(),
+            obs.req_u64("spans_exported").unwrap(),
+            obs.req_u64("spans_dropped").unwrap(),
+            net.req_u64("opened").unwrap(),
+            net.req_u64("reused").unwrap(),
+        );
+    }
+    Ok(())
+}

@@ -21,10 +21,10 @@ pub const MODEL: &str = "discedge/tiny-chat";
 /// Paper generation settings.
 pub const MAX_TOKENS: usize = 128;
 
-/// Launch the paper's two-node testbed (edge-m2 + edge-tx2) with the PJRT
-/// engine, or the mock engine when `DISCEDGE_BENCH_ENGINE=mock` (CI runs
-/// without artifacts).
-pub fn testbed() -> EdgeCluster {
+/// The paper's two-node testbed config (edge-m2 + edge-tx2, LAN client
+/// link) with the PJRT engine, or the mock engine when
+/// `DISCEDGE_BENCH_ENGINE=mock` (CI runs without artifacts).
+pub fn testbed_cfg() -> ClusterConfig {
     let mut cfg = ClusterConfig::two_node_testbed();
     cfg.client_link = LinkModel::lan();
     if std::env::var("DISCEDGE_BENCH_ENGINE").as_deref() == Ok("mock") {
@@ -35,8 +35,13 @@ pub fn testbed() -> EdgeCluster {
             decode_ns_per_token: 2_000_000,
         };
     }
+    cfg
+}
+
+/// Launch [`testbed_cfg`].
+pub fn testbed() -> EdgeCluster {
     eprintln!("[bench] launching testbed (engine compile ~15 s)...");
-    EdgeCluster::launch(cfg).expect("testbed launch (run `make artifacts` first)")
+    EdgeCluster::launch(testbed_cfg()).expect("testbed launch (run `make artifacts` first)")
 }
 
 /// Launch an `n`-node mock fleet (one shared model) with the given

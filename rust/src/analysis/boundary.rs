@@ -15,6 +15,11 @@
 //! - `default-on` — every optional subsystem ships default-off (the
 //!   crate's byte-for-byte seed-equivalence rule): a `Default` impl
 //!   must not set a known opt-in flag to `true`.
+//! - `raw-print` — `println!`/`eprintln!` in library code bypasses the
+//!   structured event layer ([`crate::obs::Obs::event`]), so the output
+//!   has no level, no subsystem, and no counter. CLI surfaces (`bin/`,
+//!   `main.rs` via the allowlist) and the bench harness (`benchkit.rs`)
+//!   are exempt — stdout *is* their interface.
 
 use super::lexer::TokKind;
 use super::model::FileModel;
@@ -67,7 +72,47 @@ pub fn check_file(model: &FileModel, src: &str) -> Vec<Finding> {
         check_unwraps(model, &mut findings);
     }
     check_default_on(model, &mut findings);
+    check_raw_prints(model, &mut findings);
     findings
+}
+
+/// Files whose job is to print: binaries and the bench harness.
+fn print_exempt(path: &str) -> bool {
+    path.contains("/bin/") || path.starts_with("bin/") || path.ends_with("benchkit.rs")
+}
+
+fn check_raw_prints(model: &FileModel, findings: &mut Vec<Finding>) {
+    if print_exempt(&model.path) {
+        return;
+    }
+    let toks = &model.toks;
+    for i in 0..toks.len().saturating_sub(1) {
+        if model.in_tests(i) || !toks[i + 1].is_punct("!") {
+            continue;
+        }
+        let mac = &toks[i];
+        if !(mac.is_ident("println") || mac.is_ident("eprintln")) {
+            continue;
+        }
+        // `x!` only counts as a macro invocation when followed by an
+        // opening delimiter — rules out `a != b` never, since `!=` lexes
+        // as one punct, but keep the guard for odd token streams.
+        let invoked = toks
+            .get(i + 2)
+            .is_some_and(|t| t.is_punct("(") || t.is_punct("[") || t.is_punct("{"));
+        if !invoked {
+            continue;
+        }
+        findings.push(Finding {
+            rule: "raw-print",
+            file: model.path.clone(),
+            line: mac.line,
+            message: format!(
+                "{}! outside the logging layer — use obs::event (leveled, counted) instead",
+                mac.text
+            ),
+        });
+    }
 }
 
 fn check_conn_sites(model: &FileModel, findings: &mut Vec<Finding>) {
@@ -323,6 +368,35 @@ mod tests {
             }
         "#;
         assert!(check("src/kvstore/antientropy.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_print_flagged_in_library_code() {
+        let src = r#"fn f() { eprintln!("peer {p} lost"); println!("ok"); }"#;
+        let f = check("src/kvstore/replication.rs", src);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "raw-print"));
+        assert!(f[0].message.contains("outside the logging layer"));
+    }
+
+    #[test]
+    fn raw_print_exempt_in_bins_benchkit_and_tests() {
+        let src = r#"fn f() { println!("report"); }"#;
+        assert!(check("src/bin/discedge.rs", src).is_empty());
+        assert!(check("src/benchkit.rs", src).is_empty());
+        let in_tests = r#"
+            #[cfg(test)]
+            mod tests {
+                fn f() { eprintln!("debugging a test"); }
+            }
+        "#;
+        assert!(check("src/kvstore/mod.rs", in_tests).is_empty());
+    }
+
+    #[test]
+    fn negation_is_not_a_print() {
+        let src = "fn f(println: bool) -> bool { !println }";
+        assert!(check("src/server/mod.rs", src).is_empty());
     }
 
     #[test]

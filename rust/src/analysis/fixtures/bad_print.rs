@@ -1,0 +1,9 @@
+// Known-bad fixture: raw prints in library code. Diagnostics must go
+// through the structured event layer (obs::event) so they carry a
+// level, a subsystem, and a counter; pallas_lint must report
+// `raw-print` for both macros below.
+
+fn on_replication_failure(&self, peer: SocketAddr) {
+    eprintln!("replication to {peer} failed");
+    println!("retrying");
+}

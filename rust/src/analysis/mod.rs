@@ -13,8 +13,8 @@
 //!
 //! - `lock-cycle` / `stripe-held` — lock-order analysis over an
 //!   approximate call graph ([`lockorder`]).
-//! - `conn-outside-transport`, `unwrap-io`, `default-on` — layering
-//!   and robustness lints ([`boundary`]).
+//! - `conn-outside-transport`, `unwrap-io`, `default-on`, `raw-print`
+//!   — layering and robustness lints ([`boundary`]).
 //!
 //! Deliberate violations are suppressed through an allowlist file
 //! (`rust/lint-allow.txt`) with one `rule file-suffix
@@ -206,6 +206,7 @@ mod tests {
             ("bad_boundary_connect.rs", "conn-outside-transport"),
             ("bad_unwrap_io.rs", "unwrap-io"),
             ("bad_default_on.rs", "default-on"),
+            ("bad_print.rs", "raw-print"),
         ];
         for (name, rule) in cases {
             let findings = lint_fixture(name);

@@ -189,6 +189,10 @@ pub struct ClusterConfig {
     /// configured `dir` is the fleet root; each node persists under
     /// `dir/<node-name>/`.
     pub storage: StorageConfig,
+    /// Distributed tracing + leveled events (default off: no spans, no
+    /// trace header on the wire — replication/fetch/AE bytes identical
+    /// to the seed).
+    pub observability: crate::obs::ObservabilityConfig,
     /// Turn-counter protocol settings.
     pub consistency: ConsistencyConfig,
     /// Generation settings.
@@ -231,6 +235,7 @@ impl ClusterConfig {
             antientropy: AntiEntropyConfig::default(),
             transport: TransportConfig::default(),
             storage: StorageConfig::default(),
+            observability: crate::obs::ObservabilityConfig::default(),
             consistency: ConsistencyConfig::default(),
             generation: GenerationConfig::default(),
             engine: EngineKind::Pjrt,
@@ -404,6 +409,17 @@ impl ClusterConfig {
                 cfg.storage.fsync = f;
             }
         }
+        if let Some(o) = v.get("observability") {
+            if let Some(e) = o.get("enabled").and_then(|x| x.as_bool()) {
+                cfg.observability.enabled = e;
+            }
+            if let Some(n) = o.get("trace_buffer").and_then(|x| x.as_u64()) {
+                cfg.observability.trace_buffer = n as usize;
+            }
+            if let Some(l) = o.get("level").and_then(|x| x.as_str()) {
+                cfg.observability.level = l.to_string();
+            }
+        }
         if let Some(t) = v.get("transport") {
             if let Some(n) = t.get("max_server_conns").and_then(|x| x.as_u64()) {
                 cfg.transport.max_server_conns = n as usize;
@@ -480,6 +496,19 @@ impl ClusterConfig {
             }
             if self.storage.snapshot_every == 0 {
                 return Err(Error::Config("storage.snapshot_every must be >= 1".into()));
+            }
+        }
+        if self.observability.enabled {
+            if self.observability.trace_buffer == 0 {
+                return Err(Error::Config(
+                    "observability.trace_buffer must be >= 1".into(),
+                ));
+            }
+            if crate::obs::LevelFilter::parse(&self.observability.level).is_none() {
+                return Err(Error::Config(format!(
+                    "observability.level {:?} is not a valid level spec",
+                    self.observability.level
+                )));
             }
         }
         Ok(())
@@ -675,6 +704,38 @@ mod tests {
         ] {
             assert!(ClusterConfig::from_json(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn observability_defaults_off_and_parses() {
+        // The seed wire format (no trace header) must stay the default.
+        let cfg = ClusterConfig::two_node_testbed();
+        assert!(!cfg.observability.enabled);
+        assert_eq!(cfg.observability.trace_buffer, 1024);
+        assert_eq!(cfg.observability.level, "info");
+        let cfg = ClusterConfig::from_json(
+            r#"{
+              "engine": "mock",
+              "observability": {"enabled": true, "trace_buffer": 64,
+                                "level": "warn,ae=debug"}
+            }"#,
+        )
+        .unwrap();
+        assert!(cfg.observability.enabled);
+        assert_eq!(cfg.observability.trace_buffer, 64);
+        assert_eq!(cfg.observability.level, "warn,ae=debug");
+        // Degenerate knobs are rejected (only once enabled).
+        for bad in [
+            r#"{"engine": "mock", "observability": {"enabled": true, "trace_buffer": 0}}"#,
+            r#"{"engine": "mock", "observability": {"enabled": true, "level": "loud"}}"#,
+        ] {
+            assert!(ClusterConfig::from_json(bad).is_err(), "{bad}");
+        }
+        assert!(
+            ClusterConfig::from_json(r#"{"engine": "mock", "observability": {"level": "loud"}}"#)
+                .is_ok(),
+            "degenerate knobs are inert while observability is off"
+        );
     }
 
     #[test]

@@ -403,9 +403,14 @@ impl ContextManager {
         let done = self.updates_done.clone();
         let pending_map = self.pending_updates.clone();
         let registry = self.registry.clone();
+        // Carry the turn's trace context into the update thread so the
+        // async write (and its replication push) stitches under the
+        // originating /completion trace instead of appearing orphaned.
+        let trace = crate::obs::current();
         let _ = std::thread::Builder::new()
             .name("cm-update".into())
             .spawn(move || {
+                let _trace = crate::obs::set_current(trace);
                 let t = Instant::now();
                 // The turn's new content is an append-only fragment on top
                 // of the stored history; when this node replicates deltas

@@ -693,6 +693,11 @@ fn accept_loop(
                     }
                     match parsed {
                         Ok(req) => {
+                            // Adopt the caller's trace context (if the
+                            // request carries one) for the handler's
+                            // duration, so remote work stitches under
+                            // the originating turn's trace id.
+                            let _trace = crate::obs::enter_inbound(&req);
                             let resp = handler(&req);
                             let bytes = resp.to_bytes();
                             if reader.get_mut().write_all(&bytes).is_err() {

@@ -302,18 +302,19 @@ impl Kick {
 /// only [`Store`] mutations touch the forest.)
 #[derive(Debug)]
 pub struct AeSink {
-    node: String,
     kick: Arc<Kick>,
+    obs: Arc<crate::obs::Obs>,
     lost: AtomicU64,
     logged: Mutex<HashSet<SocketAddr>>,
 }
 
 impl AeSink {
-    /// Create the sink over a node's round latch.
-    pub(crate) fn new(node: &str, kick: Arc<Kick>) -> Arc<AeSink> {
+    /// Create the sink over a node's round latch, reporting losses as
+    /// structured events through `obs`.
+    pub(crate) fn new(kick: Arc<Kick>, obs: Arc<crate::obs::Obs>) -> Arc<AeSink> {
         Arc::new(AeSink {
-            node: node.to_string(),
             kick,
+            obs,
             lost: AtomicU64::new(0),
             logged: Mutex::new(HashSet::new()),
         })
@@ -324,11 +325,14 @@ impl AeSink {
     pub fn note_lost(&self, peer: SocketAddr, keygroup: &str, key: &str) {
         self.lost.fetch_add(1, Ordering::SeqCst);
         if self.logged.lock().unwrap().insert(peer) {
-            eprintln!(
-                "[kv-ae {}] replication to {peer} lost an update for \
-                 {keygroup}/{key}; anti-entropy will repair (further losses \
-                 to this peer not logged)",
-                self.node
+            self.obs.event(
+                crate::obs::Level::Warn,
+                "ae",
+                &format!(
+                    "replication to {peer} lost an update for {keygroup}/{key}; \
+                     anti-entropy will repair (further losses to this peer \
+                     not logged)"
+                ),
             );
         }
         self.kick.kick();
@@ -382,6 +386,11 @@ pub struct AeRuntime {
     round_lock: Mutex<()>,
     /// Round-robin cursor over sync partners.
     next_peer: AtomicU64,
+    /// Span recording + `ae_round` trace roots (`/status` freshness).
+    obs: Arc<crate::obs::Obs>,
+    /// When the last round started (terminal leaf state; `/status`
+    /// reports its age so an operator can spot a wedged round loop).
+    last_round: Mutex<Option<Instant>>,
 }
 
 impl AeRuntime {
@@ -402,6 +411,7 @@ impl AeRuntime {
         kv_addr: SocketAddr,
         fetch_pool: Arc<PeerPool>,
         digest_pool: PeerPool,
+        obs: Arc<crate::obs::Obs>,
     ) -> Arc<AeRuntime> {
         Arc::new(AeRuntime {
             name: name.to_string(),
@@ -421,6 +431,8 @@ impl AeRuntime {
             conflicts: AtomicU64::new(0),
             round_lock: Mutex::new(()),
             next_peer: AtomicU64::new(0),
+            obs,
+            last_round: Mutex::new(None),
         })
     }
 
@@ -445,12 +457,24 @@ impl AeRuntime {
         self.digest_pool.meter().total()
     }
 
+    /// Time since the last round started (`None` before the first one).
+    pub fn last_round_age(&self) -> Option<Duration> {
+        self.last_round.lock().unwrap().map(|t| t.elapsed())
+    }
+
     /// Run one full round now: for every keygroup, pick the next sync
     /// partner round-robin and walk its tree. Returns entries repaired
     /// on this (initiating) side. Serialized against the background
     /// thread; safe to call from tests/benches/examples.
     pub fn run_once(&self) -> u64 {
         let _guard = self.round_lock.lock().unwrap();
+        let started = Instant::now();
+        *self.last_round.lock().unwrap() = Some(started);
+        // Each background round is its own trace root: the digest walk's
+        // round trips (and any repair pulls) stitch under it on both
+        // nodes. None while observability is off — no header, seed wire.
+        let trace = self.obs.begin_trace();
+        let _ctx = crate::obs::set_current(trace);
         let mut keygroups: Vec<String> = self
             .store
             .keygroups
@@ -477,6 +501,16 @@ impl AeRuntime {
                 }
             }
             repaired += self.sync_keygroup(&kg, &peer).unwrap_or(0);
+        }
+        if let Some(ctx) = trace {
+            self.obs.record_span(
+                ctx,
+                None,
+                "ae_round",
+                &format!("repaired={repaired}"),
+                started,
+                started.elapsed(),
+            );
         }
         repaired
     }
@@ -1013,7 +1047,7 @@ mod tests {
     #[test]
     fn sink_counts_losses_and_logs_once_per_peer() {
         let kick = Kick::new();
-        let sink = AeSink::new("t", kick);
+        let sink = AeSink::new(kick, crate::obs::Obs::disabled());
         let peer: SocketAddr = "127.0.0.1:1".parse().unwrap();
         sink.note_lost(peer, "m", "u/s1");
         sink.note_lost(peer, "m", "u/s2");

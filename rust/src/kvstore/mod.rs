@@ -376,6 +376,10 @@ pub struct KvConfig {
     /// Local persistence: WAL + snapshot + crash recovery (default off:
     /// memory-only, no files touched — the seed's behaviour).
     pub storage: StorageConfig,
+    /// Node observability state shared with the owning server (spans,
+    /// events). The default disabled state records nothing and never
+    /// originates a trace header.
+    pub obs: Arc<crate::obs::Obs>,
 }
 
 impl Default for KvConfig {
@@ -390,6 +394,7 @@ impl Default for KvConfig {
             antientropy: AntiEntropyConfig::default(),
             transport: TransportConfig::default(),
             storage: StorageConfig::default(),
+            obs: crate::obs::Obs::disabled(),
         }
     }
 }
@@ -459,6 +464,9 @@ struct ReplicaCtx {
     /// Deltas that could not apply (gap/mismatch) and were recovered via a
     /// full-state fetch from the sender.
     delta_fallbacks: Arc<AtomicU64>,
+    /// Serve-side span recording: an inbound request carrying a trace
+    /// context gets its handling recorded as a child span on this node.
+    obs: Arc<crate::obs::Obs>,
 }
 
 impl KvNode {
@@ -494,9 +502,31 @@ impl KvNode {
             fetch_pool: fetch_pool.clone(),
             delta_applies: delta_applies.clone(),
             delta_fallbacks: delta_fallbacks.clone(),
+            obs: config.obs.clone(),
         };
         let handler: Handler = Arc::new(move |req: &Request| {
-            replication_endpoint(&ctx, req)
+            let started = Instant::now();
+            let resp = replication_endpoint(&ctx, req);
+            // An inbound push/fetch carrying a trace context (installed
+            // by the HTTP server from `x-pallas-trace`) records its
+            // handling as this node's child span — the remote half of a
+            // roaming turn's stitched trace. No-op otherwise.
+            if let Some(parent) = crate::obs::current() {
+                let name = match req.path.as_str() {
+                    "/fetch" => "serve_fetch",
+                    _ => "repl_apply",
+                };
+                let child = ctx.obs.child(parent);
+                ctx.obs.record_span(
+                    child,
+                    Some(parent.span_id),
+                    name,
+                    &req.path,
+                    started,
+                    started.elapsed(),
+                );
+            }
+            resp
         });
         let server =
             Server::serve_with(config.port, config.peer_link.clone(), limits.clone(), handler)?;
@@ -510,7 +540,7 @@ impl KvNode {
             let forest = MerkleForest::new(config.antientropy.fanout);
             store.install_forest(forest.clone());
             let kick = Kick::new();
-            let sink = AeSink::new(name, kick.clone());
+            let sink = AeSink::new(kick.clone(), config.obs.clone());
             if let Some(h) = &handoff {
                 // A hint evicted by the per-peer bound is data the push
                 // pipeline can no longer deliver: hand it to repair.
@@ -534,6 +564,7 @@ impl KvNode {
                 server.addr,
                 fetch_pool.clone(),
                 digest_pool,
+                config.obs.clone(),
             );
             let ae_server = antientropy::serve(runtime.clone(), limits)?;
             let engine = AntiEntropy::start(runtime.clone(), kick.clone());
@@ -823,6 +854,8 @@ impl KvNode {
         }
         let local_version = local.as_ref().map(|e| e.version);
         let mut best = local;
+        let trace = crate::obs::current();
+        let fetch_started = Instant::now();
         for (_, addr) in replicas {
             self.fetches.fetch_add(1, Ordering::SeqCst);
             if let Ok(Some(remote)) = self.fetch_from(addr, keygroup, key) {
@@ -833,6 +866,20 @@ impl KvNode {
                     break;
                 }
             }
+        }
+        // The mobility read is the phase the paper's roaming penalty
+        // lives in — record it as a child span of the turn's trace.
+        if let Some(parent) = trace {
+            let obs = &self.config.obs;
+            let child = obs.child(parent);
+            obs.record_span(
+                child,
+                Some(parent.span_id),
+                "remote_fetch",
+                &format!("{keygroup}/{key}"),
+                fetch_started,
+                fetch_started.elapsed(),
+            );
         }
         if let Some(e) = &best {
             if local_version.map_or(true, |v| e.version > v) {
@@ -971,6 +1018,15 @@ impl KvNode {
         self.storage.as_ref().map_or(0, |s| s.wal_truncations())
     }
 
+    /// Milliseconds since the last snapshot completed (`None` before the
+    /// first snapshot or with storage off) — `/status` freshness.
+    pub fn snapshot_age_ms(&self) -> Option<u64> {
+        self.storage
+            .as_ref()
+            .and_then(|s| s.snapshot_age())
+            .map(|d| d.as_millis() as u64)
+    }
+
     /// Snapshot the store to disk now (tests, examples, orderly
     /// shutdown). No-op without storage.
     pub fn snapshot_now(&self) -> Result<()> {
@@ -1008,6 +1064,20 @@ impl KvNode {
     /// Digest exchanges initiated by this node's repair engine.
     pub fn ae_rounds(&self) -> u64 {
         self.ae.as_ref().map_or(0, |parts| parts.runtime.rounds())
+    }
+
+    /// Milliseconds since the last anti-entropy round started (`None`
+    /// before the first round or with repair off) — `/status` freshness.
+    pub fn ae_last_round_age_ms(&self) -> Option<u64> {
+        self.ae
+            .as_ref()
+            .and_then(|parts| parts.runtime.last_round_age())
+            .map(|d| d.as_millis() as u64)
+    }
+
+    /// This node's observability state (shared with the owning server).
+    pub fn obs(&self) -> &Arc<crate::obs::Obs> {
+        &self.config.obs
     }
 
     /// Entries pulled and applied by anti-entropy repair.

@@ -110,6 +110,11 @@ struct Job {
     /// How many pushes were folded into this job (1 + coalesced deltas);
     /// completing the job credits this many toward `done`.
     merged: u64,
+    /// Trace context of the turn that enqueued this push, carried across
+    /// the queue so the async sender's round trips stitch under the
+    /// originating trace (None with observability off — and then no
+    /// header ever reaches the wire).
+    trace: Option<crate::obs::TraceCtx>,
 }
 
 impl Job {
@@ -306,6 +311,9 @@ impl Replicator {
                         }
                     };
                     let Some(job) = job else { break };
+                    // Re-adopt the enqueuing turn's trace context for the
+                    // pushes below, so the pool injects its header.
+                    let _trace = crate::obs::set_current(job.trace);
                     if !config.delay.is_zero() {
                         std::thread::sleep(config.delay);
                     }
@@ -424,6 +432,7 @@ impl Replicator {
             version,
             ttl_ms: ttl.map(|t| t.as_millis() as u64),
             merged: 1,
+            trace: crate::obs::current(),
         });
     }
 
@@ -454,6 +463,7 @@ impl Replicator {
             version,
             ttl_ms: ttl.map(|t| t.as_millis() as u64),
             merged: 1,
+            trace: crate::obs::current(),
         });
     }
 
@@ -606,6 +616,7 @@ fn requeue_hints(
             version: hint.version,
             ttl_ms: hint.ttl_ms,
             merged: 1,
+            trace: None,
         };
         q.jobs.insert(i, job);
     }
@@ -667,6 +678,7 @@ mod tests {
             version: 3,
             ttl_ms: Some(1500),
             merged: 1,
+            trace: None,
         };
         // Value::Object serializes keys sorted ("key" < "kg").
         assert_eq!(
@@ -890,6 +902,7 @@ mod tests {
             version: ver,
             ttl_ms: None,
             merged: 1,
+            trace: None,
         }
     }
 

@@ -40,8 +40,8 @@ use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::{Duration, SystemTime, UNIX_EPOCH};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use super::Store;
 use crate::json::{self, Value};
@@ -108,6 +108,9 @@ pub struct Storage {
     snapshots: AtomicU64,
     recovered: AtomicU64,
     truncations: AtomicU64,
+    /// Completion time of the most recent snapshot (terminal leaf state:
+    /// plain mutex, never held across another lock). Feeds `/status`.
+    last_snapshot: Mutex<Option<Instant>>,
 }
 
 impl std::fmt::Debug for Storage {
@@ -225,6 +228,7 @@ impl Storage {
             snapshots: AtomicU64::new(0),
             recovered: AtomicU64::new(0),
             truncations: AtomicU64::new(0),
+            last_snapshot: Mutex::new(None),
         }))
     }
 
@@ -395,6 +399,7 @@ impl Storage {
         wal.appends = 0;
         drop(wal);
         self.snapshots.fetch_add(1, Ordering::SeqCst);
+        *self.last_snapshot.lock().unwrap() = Some(Instant::now());
         Ok(())
     }
 
@@ -423,6 +428,11 @@ impl Storage {
     /// (`kv_wal_truncations`).
     pub fn wal_truncations(&self) -> u64 {
         self.truncations.load(Ordering::SeqCst)
+    }
+
+    /// Time since the last snapshot completed; `None` before the first.
+    pub fn snapshot_age(&self) -> Option<Duration> {
+        self.last_snapshot.lock().unwrap().map(|t| t.elapsed())
     }
 }
 

@@ -41,6 +41,7 @@ pub mod kvstore;
 pub mod llm;
 pub mod metrics;
 pub mod netsim;
+pub mod obs;
 pub mod profile;
 pub mod runtime;
 pub mod server;

@@ -51,6 +51,9 @@ fn main() {
                  \u{20}             --max-server-conns N (503 past this many live conns, default 256)\n\
                  \u{20}             --idle-timeout-ms N (reap idle server conns, default 60000)\n\
                  \u{20}             --pool-max-idle N (idle conns pooled per peer; 0 = no reuse)\n\
+                 \u{20}             --trace (per-turn tracing: GET /trace and GET /status)\n\
+                 \u{20}             --trace-buffer N (spans kept per node, default 1024)\n\
+                 \u{20}             --trace-level L (event filter, e.g. info or warn,ae=debug)\n\
                  run-scenario  --mode tokenized|raw|client_side (default tokenized)\n\
                  \u{20}             --mobility sticky|paper (default sticky)\n\
                  \u{20}             --engine mock|pjrt (default pjrt)\n\
@@ -175,6 +178,18 @@ fn load_config(args: &Args) -> Result<ClusterConfig, String> {
         .map_err(|e| e.to_string())?
     {
         cfg.transport.max_idle_per_peer = n;
+    }
+    if args.flag("trace") {
+        cfg.observability.enabled = true;
+    }
+    if let Some(n) = args
+        .opt_parse::<usize>("trace-buffer")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.observability.trace_buffer = n;
+    }
+    if let Some(l) = args.opt("trace-level") {
+        cfg.observability.level = l.to_string();
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)

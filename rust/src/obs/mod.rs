@@ -1,0 +1,619 @@
+//! Zero-dependency observability: per-turn distributed trace spans, a
+//! bounded per-node span ring buffer, and structured leveled events.
+//!
+//! The paper's headline numbers are end-to-end medians; this module is
+//! what lets a slow turn be *attributed* — tokenize vs inference vs a
+//! roaming remote fetch vs replication — without pulling in a tracing
+//! framework (the default build stays at zero external dependencies).
+//!
+//! **Span model.** A [`TraceCtx`] (128-bit trace id + 64-bit span id) is
+//! minted at `/completion` admission and carried across threads via a
+//! scoped thread-local ([`set_current`]) and across *node boundaries*
+//! via the [`TRACE_HEADER`] request header: [`crate::transport`] injects
+//! it on every pooled round trip when a context is installed, and
+//! [`crate::http`]'s server extracts it before invoking the handler. A
+//! roaming turn's remote fetch, async delta push, and anti-entropy
+//! repair pull therefore stitch under one trace id spanning every node
+//! they touched.
+//!
+//! **Header wire format.** `x-pallas-trace: <32 hex trace id>-<16 hex
+//! span id>` — 49 bytes of value, injected **only** when a trace context
+//! is installed. With `observability.enabled = false` (the default) no
+//! context is ever created, so replication/fetch/AE wire bytes are
+//! byte-for-byte the seed protocol; a test pins this.
+//!
+//! **Ring buffer.** Completed spans land in a bounded per-node ring
+//! (`observability.trace_buffer` entries, default 1024); the oldest span
+//! is evicted on overflow and counted in `obs_spans_dropped`. `GET
+//! /trace` serves the ring as JSON, filterable by trace id.
+//!
+//! **Events.** [`Obs::event`] replaces ad-hoc `eprintln!` on the
+//! replication/AE/cluster paths (a pallas-lint rule keeps it that way):
+//! leveled, per-subsystem filterable (`observability.level`, e.g.
+//! `"info,ae=debug"`), counted by level in `/metrics`. Events still
+//! reach stderr when observability is disabled — they are operator
+//! output, not wire traffic — so the seed's warning behaviour is
+//! preserved by the default `info` threshold.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::http::Request;
+use crate::json::Value;
+
+/// Request header carrying the trace context across node boundaries.
+pub const TRACE_HEADER: &str = "x-pallas-trace";
+
+/// `observability` config section. Default **off**: no spans, no ring,
+/// no header injection — wire bytes identical to the seed.
+#[derive(Debug, Clone)]
+pub struct ObservabilityConfig {
+    /// Master switch for span recording and trace propagation.
+    pub enabled: bool,
+    /// Ring-buffer capacity in spans (`trace_buffer`).
+    pub trace_buffer: usize,
+    /// Event threshold spec: a default level optionally followed by
+    /// per-subsystem overrides, e.g. `"info"` or `"warn,ae=debug"`.
+    pub level: String,
+}
+
+impl Default for ObservabilityConfig {
+    fn default() -> ObservabilityConfig {
+        ObservabilityConfig {
+            enabled: false,
+            trace_buffer: 1024,
+            level: "info".into(),
+        }
+    }
+}
+
+/// Event severity, ordered `Debug < Info < Warn < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Diagnostic chatter (suppressed by the default threshold).
+    Debug,
+    /// Normal operational milestones.
+    Info,
+    /// Something degraded but handled (e.g. a lost replication push).
+    Warn,
+    /// Something failed.
+    Error,
+}
+
+impl Level {
+    /// Parse a level name.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+
+    /// Canonical lower-case name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+/// Parsed event threshold: a default level plus per-subsystem overrides.
+#[derive(Debug, Clone)]
+pub struct LevelFilter {
+    default: Level,
+    overrides: Vec<(String, Level)>,
+}
+
+impl LevelFilter {
+    /// Parse a spec like `"info"` or `"warn,ae=debug,repl=error"`.
+    /// `None` on any malformed segment.
+    pub fn parse(spec: &str) -> Option<LevelFilter> {
+        let mut parts = spec.split(',');
+        let default = Level::parse(parts.next()?.trim())?;
+        let mut overrides = Vec::new();
+        for part in parts {
+            let (subsystem, level) = part.split_once('=')?;
+            let subsystem = subsystem.trim();
+            if subsystem.is_empty() {
+                return None;
+            }
+            overrides.push((subsystem.to_string(), Level::parse(level.trim())?));
+        }
+        Some(LevelFilter { default, overrides })
+    }
+
+    /// Threshold for a subsystem (the default unless overridden).
+    pub fn threshold(&self, subsystem: &str) -> Level {
+        self.overrides
+            .iter()
+            .find(|(s, _)| s == subsystem)
+            .map(|(_, l)| *l)
+            .unwrap_or(self.default)
+    }
+}
+
+/// A trace context: which trace this work belongs to and which span is
+/// its parent. Copied freely across threads and encoded into the
+/// [`TRACE_HEADER`] across nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// 128-bit trace id shared by every span of one logical turn.
+    pub trace_id: u128,
+    /// The current span id (children record it as their parent).
+    pub span_id: u64,
+}
+
+impl TraceCtx {
+    /// Header wire encoding: `<32 hex>-<16 hex>`.
+    pub fn encode(&self) -> String {
+        format!("{:032x}-{:016x}", self.trace_id, self.span_id)
+    }
+
+    /// Parse the header wire encoding; `None` on any malformation.
+    pub fn decode(s: &str) -> Option<TraceCtx> {
+        let (trace, span) = s.split_once('-')?;
+        if trace.len() != 32 || span.len() != 16 {
+            return None;
+        }
+        Some(TraceCtx {
+            trace_id: u128::from_str_radix(trace, 16).ok()?,
+            span_id: u64::from_str_radix(span, 16).ok()?,
+        })
+    }
+}
+
+/// One completed span as held in the ring buffer.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Owning trace.
+    pub trace_id: u128,
+    /// This span's id.
+    pub span_id: u64,
+    /// Parent span id (`None` for a trace root).
+    pub parent: Option<u64>,
+    /// Node that recorded the span.
+    pub node: String,
+    /// Operation name (`turn`, `remote_fetch`, `repl_apply`, ...).
+    pub name: String,
+    /// Free-form detail (keygroup/key, peer address, ...).
+    pub detail: String,
+    /// Start offset in microseconds on the recording node's monotonic
+    /// clock (offsets are comparable within a node, not across nodes —
+    /// stitching across nodes uses parent ids, not clocks).
+    pub start_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+}
+
+impl Span {
+    /// JSON object served by `GET /trace`.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj()
+            .set("trace_id", format!("{:032x}", self.trace_id))
+            .set("span_id", format!("{:016x}", self.span_id))
+            .set("node", self.node.as_str())
+            .set("name", self.name.as_str())
+            .set("start_us", self.start_us)
+            .set("dur_us", self.dur_us);
+        if let Some(p) = self.parent {
+            v = v.set("parent", format!("{p:016x}"));
+        }
+        if !self.detail.is_empty() {
+            v = v.set("detail", self.detail.as_str());
+        }
+        v
+    }
+}
+
+/// splitmix64 finalizer — id whitening, module-private (the kvstore has
+/// its own copy scoped to ring placement).
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Per-node observability state: the span ring buffer, id generator,
+/// event filter, and the counters `/metrics` exports as `obs_*`.
+#[derive(Debug)]
+pub struct Obs {
+    enabled: bool,
+    node: String,
+    epoch: Instant,
+    cap: usize,
+    filter: LevelFilter,
+    ring: Mutex<VecDeque<Span>>,
+    /// Monotonic id source, whitened per draw with the node-derived seed.
+    next_id: AtomicU64,
+    seed: u64,
+    spans_started: AtomicU64,
+    spans_exported: AtomicU64,
+    spans_dropped: AtomicU64,
+    /// Event counts indexed by [`Level`] discriminant order.
+    events: [AtomicU64; 4],
+}
+
+impl Obs {
+    /// Build a node's observability state from its config section. An
+    /// unparseable `level` spec falls back to `info` (config validation
+    /// rejects it up front when the section is enabled).
+    pub fn new(node: &str, cfg: &ObservabilityConfig) -> Arc<Obs> {
+        let filter = LevelFilter::parse(&cfg.level)
+            .unwrap_or_else(|| LevelFilter::parse("info").expect("static spec parses"));
+        Arc::new(Obs {
+            enabled: cfg.enabled,
+            node: node.to_string(),
+            epoch: Instant::now(),
+            cap: cfg.trace_buffer.max(1),
+            filter,
+            ring: Mutex::new(VecDeque::new()),
+            next_id: AtomicU64::new(1),
+            seed: crate::testkit::fnv1a(node.as_bytes()) ^ u64::from(std::process::id()),
+            spans_started: AtomicU64::new(0),
+            spans_exported: AtomicU64::new(0),
+            spans_dropped: AtomicU64::new(0),
+            events: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        })
+    }
+
+    /// The default-off state every [`crate::kvstore::KvConfig`] starts
+    /// with: events flow, spans and header injection stay off.
+    pub fn disabled() -> Arc<Obs> {
+        Obs::new("-", &ObservabilityConfig::default())
+    }
+
+    /// Is span recording (and thus trace propagation) on?
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Node name this state belongs to.
+    pub fn node(&self) -> &str {
+        &self.node
+    }
+
+    fn next_span_id(&self) -> u64 {
+        // Whitened counter: unique within the node, seed-separated
+        // across nodes sharing a test process.
+        mix(self.next_id.fetch_add(1, Ordering::Relaxed) ^ self.seed).max(1)
+    }
+
+    /// Mint a fresh trace root context; `None` while disabled (the
+    /// single gate keeping every downstream path wire-silent).
+    pub fn begin_trace(&self) -> Option<TraceCtx> {
+        if !self.enabled {
+            return None;
+        }
+        let hi = mix(self.next_id.fetch_add(1, Ordering::Relaxed) ^ self.seed.rotate_left(17));
+        let lo = self.next_span_id();
+        Some(TraceCtx {
+            trace_id: (u128::from(hi) << 64) | u128::from(lo),
+            span_id: lo,
+        })
+    }
+
+    /// A child context of `ctx`: same trace, fresh span id.
+    pub fn child(&self, ctx: TraceCtx) -> TraceCtx {
+        TraceCtx {
+            trace_id: ctx.trace_id,
+            span_id: self.next_span_id(),
+        }
+    }
+
+    /// Record a completed span into the ring (no-op while disabled).
+    /// `ctx` names the span itself; `parent` its parent span id.
+    pub fn record_span(
+        &self,
+        ctx: TraceCtx,
+        parent: Option<u64>,
+        name: &str,
+        detail: &str,
+        start: Instant,
+        dur: Duration,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.spans_started.fetch_add(1, Ordering::Relaxed);
+        let span = Span {
+            trace_id: ctx.trace_id,
+            span_id: ctx.span_id,
+            parent,
+            node: self.node.clone(),
+            name: name.to_string(),
+            detail: detail.to_string(),
+            start_us: start.saturating_duration_since(self.epoch).as_micros() as u64,
+            dur_us: dur.as_micros() as u64,
+        };
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= self.cap {
+            ring.pop_front();
+            self.spans_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(span);
+    }
+
+    /// Snapshot the ring, oldest first, optionally filtered to one
+    /// trace. Counts the returned spans as exported.
+    pub fn spans(&self, trace_id: Option<u128>) -> Vec<Span> {
+        let ring = self.ring.lock().unwrap();
+        let out: Vec<Span> = ring
+            .iter()
+            .filter(|s| trace_id.is_none_or(|t| s.trace_id == t))
+            .cloned()
+            .collect();
+        drop(ring);
+        self.spans_exported
+            .fetch_add(out.len() as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Emit a leveled event. Always counted (the `obs_events_*`
+    /// counters in `/metrics`); written to stderr when `level` clears
+    /// the subsystem's threshold. Active regardless of `enabled` —
+    /// events are operator output, not wire traffic, and the seed's
+    /// replication-loss warning must keep printing by default.
+    pub fn event(&self, level: Level, subsystem: &str, msg: &str) {
+        self.events[level as usize].fetch_add(1, Ordering::Relaxed);
+        if level >= self.filter.threshold(subsystem) {
+            eprintln!("[{} {} {subsystem}] {msg}", level.as_str(), self.node);
+        }
+    }
+
+    /// Spans recorded into the ring since start.
+    pub fn spans_started(&self) -> u64 {
+        self.spans_started.load(Ordering::Relaxed)
+    }
+
+    /// Spans returned by `GET /trace` scrapes since start.
+    pub fn spans_exported(&self) -> u64 {
+        self.spans_exported.load(Ordering::Relaxed)
+    }
+
+    /// Spans evicted from the full ring since start.
+    pub fn spans_dropped(&self) -> u64 {
+        self.spans_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events emitted at `level` since start (filtered or not).
+    pub fn events_at(&self, level: Level) -> u64 {
+        self.events[level as usize].load(Ordering::Relaxed)
+    }
+}
+
+thread_local! {
+    /// The trace context of the work this thread is currently doing.
+    static CURRENT: Cell<Option<TraceCtx>> = const { Cell::new(None) };
+}
+
+/// The thread's installed trace context, if any. The transport layer
+/// injects [`TRACE_HEADER`] on outbound round trips exactly when this
+/// is `Some`.
+pub fn current() -> Option<TraceCtx> {
+    CURRENT.with(|c| c.get())
+}
+
+/// Scope guard restoring the previously-installed context on drop, so
+/// nesting (a traced request handled on a long-lived server thread)
+/// unwinds correctly.
+pub struct CtxGuard {
+    prev: Option<TraceCtx>,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+/// Install `ctx` as the thread's trace context until the guard drops.
+pub fn set_current(ctx: Option<TraceCtx>) -> CtxGuard {
+    let prev = CURRENT.with(|c| c.replace(ctx));
+    CtxGuard { prev }
+}
+
+/// Extract the trace context from an inbound request's [`TRACE_HEADER`]
+/// (if present and well-formed) and install it for the handler's
+/// duration. Called by the HTTP server's connection loop.
+pub fn enter_inbound(req: &Request) -> CtxGuard {
+    set_current(req.headers.get(TRACE_HEADER).and_then(|v| TraceCtx::decode(v)))
+}
+
+/// Clone `req` with the [`TRACE_HEADER`] carrying `ctx`. The transport
+/// layer calls this only when a context is installed, so the
+/// observability-off wire format is untouched.
+pub fn with_trace_header(req: &Request, ctx: TraceCtx) -> Request {
+    let mut out = req.clone();
+    out.headers.insert(TRACE_HEADER.into(), ctx.encode());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled_obs(buffer: usize) -> Arc<Obs> {
+        Obs::new(
+            "t",
+            &ObservabilityConfig {
+                enabled: true,
+                trace_buffer: buffer,
+                level: "info".into(),
+            },
+        )
+    }
+
+    #[test]
+    fn header_encoding_round_trips() {
+        let obs = enabled_obs(16);
+        let ctx = obs.begin_trace().unwrap();
+        let encoded = ctx.encode();
+        assert_eq!(encoded.len(), 32 + 1 + 16);
+        assert_eq!(TraceCtx::decode(&encoded), Some(ctx));
+        // Extremes survive the hex framing.
+        let edge = TraceCtx {
+            trace_id: u128::MAX,
+            span_id: 1,
+        };
+        assert_eq!(TraceCtx::decode(&edge.encode()), Some(edge));
+        // Malformed inputs are rejected, not mis-parsed.
+        for bad in ["", "xyz", "00-00", &encoded[1..], &encoded.replace('-', "_")] {
+            assert_eq!(TraceCtx::decode(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_first() {
+        let obs = enabled_obs(3);
+        let ctx = obs.begin_trace().unwrap();
+        let t0 = Instant::now();
+        for i in 0..5u64 {
+            let child = obs.child(ctx);
+            obs.record_span(child, Some(ctx.span_id), &format!("s{i}"), "", t0, Duration::ZERO);
+        }
+        let spans = obs.spans(None);
+        assert_eq!(spans.len(), 3);
+        // The two oldest (s0, s1) were evicted; order is preserved.
+        let names: Vec<&str> = spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["s2", "s3", "s4"]);
+        assert_eq!(obs.spans_dropped(), 2);
+        assert_eq!(obs.spans_started(), 5);
+        assert_eq!(obs.spans_exported(), 3);
+    }
+
+    #[test]
+    fn spans_filter_by_trace_id() {
+        let obs = enabled_obs(16);
+        let a = obs.begin_trace().unwrap();
+        let b = obs.begin_trace().unwrap();
+        assert_ne!(a.trace_id, b.trace_id);
+        let t0 = Instant::now();
+        obs.record_span(a, None, "a", "", t0, Duration::ZERO);
+        obs.record_span(b, None, "b", "", t0, Duration::ZERO);
+        let only_a = obs.spans(Some(a.trace_id));
+        assert_eq!(only_a.len(), 1);
+        assert_eq!(only_a[0].name, "a");
+    }
+
+    #[test]
+    fn disabled_state_records_nothing() {
+        let obs = Obs::disabled();
+        assert!(!obs.enabled());
+        assert!(obs.begin_trace().is_none());
+        let ctx = TraceCtx {
+            trace_id: 7,
+            span_id: 7,
+        };
+        obs.record_span(ctx, None, "x", "", Instant::now(), Duration::ZERO);
+        assert!(obs.spans(None).is_empty());
+        assert_eq!(obs.spans_started(), 0);
+    }
+
+    #[test]
+    fn thread_local_guard_nests_and_restores() {
+        assert_eq!(current(), None);
+        let outer = TraceCtx {
+            trace_id: 1,
+            span_id: 1,
+        };
+        let inner = TraceCtx {
+            trace_id: 2,
+            span_id: 2,
+        };
+        let _g1 = set_current(Some(outer));
+        assert_eq!(current(), Some(outer));
+        {
+            let _g2 = set_current(Some(inner));
+            assert_eq!(current(), Some(inner));
+        }
+        assert_eq!(current(), Some(outer));
+        drop(_g1);
+        assert_eq!(current(), None);
+    }
+
+    #[test]
+    fn inbound_extraction_and_header_injection() {
+        let req = Request::post_json("/replicate", "{}");
+        {
+            // No header -> no context installed.
+            let _g = enter_inbound(&req);
+            assert_eq!(current(), None);
+        }
+        let ctx = TraceCtx {
+            trace_id: 0xabc,
+            span_id: 0xdef,
+        };
+        let traced = with_trace_header(&req, ctx);
+        // Only the one header differs from the original request.
+        assert_eq!(traced.headers.len(), req.headers.len() + 1);
+        assert_eq!(traced.body, req.body);
+        {
+            let _g = enter_inbound(&traced);
+            assert_eq!(current(), Some(ctx));
+        }
+        assert_eq!(current(), None);
+    }
+
+    #[test]
+    fn level_filter_parses_and_thresholds() {
+        let f = LevelFilter::parse("warn,ae=debug").unwrap();
+        assert_eq!(f.threshold("repl"), Level::Warn);
+        assert_eq!(f.threshold("ae"), Level::Debug);
+        assert!(LevelFilter::parse("info").is_some());
+        for bad in ["", "verbose", "info,ae", "info,=debug", "info,ae=nope"] {
+            assert!(LevelFilter::parse(bad).is_none(), "{bad:?}");
+        }
+        assert!(Level::Debug < Level::Info && Level::Warn < Level::Error);
+    }
+
+    #[test]
+    fn events_count_by_level_even_when_filtered() {
+        let obs = Obs::new(
+            "t",
+            &ObservabilityConfig {
+                enabled: false,
+                trace_buffer: 1,
+                level: "error".into(),
+            },
+        );
+        obs.event(Level::Debug, "ae", "quiet");
+        obs.event(Level::Warn, "repl", "also quiet");
+        obs.event(Level::Error, "repl", "loud");
+        assert_eq!(obs.events_at(Level::Debug), 1);
+        assert_eq!(obs.events_at(Level::Info), 0);
+        assert_eq!(obs.events_at(Level::Warn), 1);
+        assert_eq!(obs.events_at(Level::Error), 1);
+    }
+
+    #[test]
+    fn ids_are_distinct_across_nodes_and_draws() {
+        let a = enabled_obs(4);
+        let b = Obs::new(
+            "other",
+            &ObservabilityConfig {
+                enabled: true,
+                trace_buffer: 4,
+                level: "info".into(),
+            },
+        );
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            assert!(seen.insert(a.begin_trace().unwrap().trace_id));
+            assert!(seen.insert(b.begin_trace().unwrap().trace_id));
+        }
+    }
+}

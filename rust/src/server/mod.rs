@@ -17,6 +17,7 @@
 use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::cluster::{ClusterCoordinator, MembershipView};
 use crate::config::{ClusterConfig, EngineKind, NodeConfig};
@@ -54,6 +55,11 @@ impl EdgeNode {
         template: ChatTemplate,
         membership: Option<Arc<MembershipView>>,
     ) -> Result<EdgeNode> {
+        // One observability state per node, shared with the KV layer so
+        // serve-side spans and the /trace ring live in one place. The
+        // default (disabled) state records nothing and keeps the wire
+        // byte-identical to an observability-less build.
+        let obs = crate::obs::Obs::new(&node_cfg.name, &cluster_cfg.observability);
         let kv = Arc::new(KvNode::start(
             &node_cfg.name,
             KvConfig {
@@ -75,6 +81,7 @@ impl EdgeNode {
                     s.dir = s.dir.join(&node_cfg.name);
                     s
                 },
+                obs,
                 ..KvConfig::default()
             },
         )?);
@@ -173,8 +180,26 @@ fn dispatch(
                     )
                 }
             };
+            // Trace root at admission (or a child of an inbound trace,
+            // when an upstream node forwarded the turn). The guard keeps
+            // the context installed across the whole handle() call so the
+            // KV remote fetch and the async update's replication push
+            // stitch under this turn's trace id.
+            let obs = kv.obs();
+            let inbound = crate::obs::current();
+            let trace = match inbound {
+                Some(parent) => Some(obs.child(parent)),
+                None => obs.begin_trace(),
+            };
+            let _trace = crate::obs::set_current(trace);
+            let started = Instant::now();
             match cm.handle(&parsed, engine.as_ref()) {
-                Ok(resp) => Response::json(&resp.to_json()),
+                Ok(resp) => {
+                    if let Some(ctx) = trace {
+                        record_turn_spans(obs, ctx, inbound, &resp, started);
+                    }
+                    Response::json(&resp.to_json())
+                }
                 Err(Error::BadRequest(m)) => Response::error(400, &m),
                 Err(Error::Consistency(m)) => Response::error(409, &m),
                 Err(e) => Response::error(500, &e.to_string()),
@@ -249,7 +274,113 @@ fn dispatch(
             };
             dump.push_str(&format!("cluster_epoch {epoch}\n"));
             dump.push_str(&format!("cluster_alive {alive}\n"));
+            // Observability self-accounting (all 0 when tracing is off,
+            // except event counts, which are always kept).
+            let obs = kv.obs();
+            dump.push_str(&format!("obs_spans_started {}\n", obs.spans_started()));
+            dump.push_str(&format!("obs_spans_exported {}\n", obs.spans_exported()));
+            dump.push_str(&format!("obs_spans_dropped {}\n", obs.spans_dropped()));
+            dump.push_str(&format!(
+                "obs_events_debug {}\n",
+                obs.events_at(crate::obs::Level::Debug)
+            ));
+            dump.push_str(&format!(
+                "obs_events_info {}\n",
+                obs.events_at(crate::obs::Level::Info)
+            ));
+            dump.push_str(&format!(
+                "obs_events_warn {}\n",
+                obs.events_at(crate::obs::Level::Warn)
+            ));
+            dump.push_str(&format!(
+                "obs_events_error {}\n",
+                obs.events_at(crate::obs::Level::Error)
+            ));
             Response::text(&dump)
+        }
+        ("GET", path) if path == "/trace" || path.starts_with("/trace?") => {
+            // Span export: the whole ring, or one trace via
+            // `/trace?trace_id=<32 hex>`. Oldest first.
+            let obs = kv.obs();
+            let filter = path
+                .split_once('?')
+                .and_then(|(_, q)| {
+                    q.split('&').find_map(|p| p.strip_prefix("trace_id="))
+                })
+                .and_then(|hex| u128::from_str_radix(hex, 16).ok());
+            let spans: Vec<Value> =
+                obs.spans(filter).iter().map(|s| s.to_json()).collect();
+            Response::json(
+                &Value::obj()
+                    .set("node", obs.node())
+                    .set("enabled", obs.enabled())
+                    .set("spans", spans)
+                    .to_json(),
+            )
+        }
+        ("GET", "/status") => {
+            // One-shot node status plane: everything an operator (or the
+            // failover bench) needs in a single response, regardless of
+            // which optional subsystems are enabled (disabled ones read
+            // 0 / null).
+            let obs = kv.obs();
+            let (epoch, alive) = match membership {
+                Some(view) => (view.epoch(), view.alive_count() as u64),
+                None => (kv.placement().map_or(0, |p| p.epoch()), 0),
+            };
+            let net = kv.net_stats();
+            let opt_ms = |v: Option<u64>| v.map_or(Value::Null, Value::from);
+            Response::json(
+                &Value::obj()
+                    .set("node", cm.node_name())
+                    .set(
+                        "cluster",
+                        Value::obj().set("epoch", epoch).set("alive", alive),
+                    )
+                    .set(
+                        "hints",
+                        Value::obj()
+                            .set("queued", kv.hints_queued())
+                            .set("replayed", kv.hints_replayed())
+                            .set("dropped", kv.hints_dropped()),
+                    )
+                    .set(
+                        "wal",
+                        Value::obj()
+                            .set("appends", kv.wal_appends())
+                            .set("bytes", kv.wal_bytes())
+                            .set("snapshots", kv.snapshots_taken())
+                            .set("snapshot_age_ms", opt_ms(kv.snapshot_age_ms())),
+                    )
+                    .set(
+                        "net",
+                        Value::obj()
+                            .set("opened", net.opened.get())
+                            .set("reused", net.reused.get())
+                            .set("evicted", net.evicted.get())
+                            .set("rejected", net.rejected.get()),
+                    )
+                    .set(
+                        "ae",
+                        Value::obj()
+                            .set("rounds", kv.ae_rounds())
+                            .set("keys_repaired", kv.ae_keys_repaired())
+                            .set("lost_updates", kv.ae_lost_updates())
+                            .set(
+                                "last_round_age_ms",
+                                opt_ms(kv.ae_last_round_age_ms()),
+                            ),
+                    )
+                    .set(
+                        "obs",
+                        Value::obj()
+                            .set("enabled", obs.enabled())
+                            .set("spans_started", obs.spans_started())
+                            .set("spans_exported", obs.spans_exported())
+                            .set("spans_dropped", obs.spans_dropped()),
+                    )
+                    .to_json(),
+            )
         }
         ("GET", "/cluster/members") => match membership {
             Some(view) => {
@@ -315,6 +446,44 @@ fn dispatch(
         },
         _ => Response::error(404, "not found"),
     }
+}
+
+/// Record one completed turn into the trace ring: a root `turn` span plus
+/// one child per measured phase. Phase children share the turn's start
+/// instant and carry only their measured duration — the breakdown benches
+/// consume durations, not offsets.
+fn record_turn_spans(
+    obs: &Arc<crate::obs::Obs>,
+    ctx: crate::obs::TraceCtx,
+    inbound: Option<crate::obs::TraceCtx>,
+    resp: &crate::context::CompletionResponse,
+    started: Instant,
+) {
+    let t = &resp.timings;
+    for (name, secs) in [
+        ("tokenize", t.tokenize_s),
+        ("prefill", t.prefill_s),
+        ("decode", t.decode_s),
+        ("fetch", t.fetch_s),
+    ] {
+        let child = obs.child(ctx);
+        obs.record_span(
+            child,
+            Some(ctx.span_id),
+            name,
+            "",
+            started,
+            std::time::Duration::from_secs_f64(secs.max(0.0)),
+        );
+    }
+    obs.record_span(
+        ctx,
+        inbound.map(|p| p.span_id),
+        "turn",
+        &format!("session={} turn={}", resp.session_id, resp.turn),
+        started,
+        started.elapsed(),
+    );
 }
 
 /// A launched multi-node cluster.
@@ -880,12 +1049,137 @@ mod tests {
             "net_conns_rejected",
             "cluster_epoch",
             "cluster_alive",
+            "obs_spans_started",
+            "obs_spans_exported",
+            "obs_spans_dropped",
+            "obs_events_debug",
+            "obs_events_info",
+            "obs_events_warn",
+            "obs_events_error",
         ] {
             assert!(
                 body.lines().any(|l| l.starts_with(&format!("{key} "))),
                 "metric {key} missing from /metrics:\n{body}"
             );
         }
+    }
+
+    #[test]
+    fn status_returns_every_documented_field() {
+        // The one-shot status plane: every field the docs promise, in a
+        // single response, even with every optional subsystem disabled.
+        let cluster = mock_cluster(1);
+        let r = api_pool()
+            .round_trip(cluster.nodes[0].api_addr(), &HttpRequest::get("/status"))
+            .unwrap();
+        assert_eq!(r.status, 200);
+        let v = crate::json::parse(r.body_str().unwrap()).unwrap();
+        assert_eq!(v.req_str("node").unwrap(), "edge-m2");
+        for (section, fields) in [
+            ("cluster", &["epoch", "alive"][..]),
+            ("hints", &["queued", "replayed", "dropped"][..]),
+            ("wal", &["appends", "bytes", "snapshots", "snapshot_age_ms"][..]),
+            ("net", &["opened", "reused", "evicted", "rejected"][..]),
+            (
+                "ae",
+                &["rounds", "keys_repaired", "lost_updates", "last_round_age_ms"][..],
+            ),
+            (
+                "obs",
+                &["enabled", "spans_started", "spans_exported", "spans_dropped"][..],
+            ),
+        ] {
+            let s = v.get(section).unwrap_or_else(|| panic!("{section} missing"));
+            for f in fields {
+                assert!(s.get(f).is_some(), "/status {section}.{f} missing");
+            }
+        }
+        // Never-snapshotted storage and never-run AE read null, not 0 —
+        // "no data yet" must stay distinguishable from "age zero".
+        assert_eq!(
+            v.get("wal").and_then(|w| w.get("snapshot_age_ms")),
+            Some(&Value::Null)
+        );
+        assert!(!v
+            .get("obs")
+            .and_then(|o| o.get("enabled"))
+            .and_then(|e| e.as_bool())
+            .unwrap());
+    }
+
+    #[test]
+    fn trace_endpoint_empty_when_disabled() {
+        let cluster = mock_cluster(1);
+        let req = CompletionRequest::new("discedge/tiny-chat", "hi", 1, ContextMode::Tokenized);
+        let _ = post(cluster.nodes[0].api_addr(), &req);
+        let r = api_pool()
+            .round_trip(cluster.nodes[0].api_addr(), &HttpRequest::get("/trace"))
+            .unwrap();
+        assert_eq!(r.status, 200);
+        let v = crate::json::parse(r.body_str().unwrap()).unwrap();
+        assert!(!v.get("enabled").and_then(|e| e.as_bool()).unwrap());
+        assert_eq!(
+            v.get("spans").and_then(|s| s.as_array()).unwrap().len(),
+            0,
+            "default-off build must record nothing"
+        );
+    }
+
+    #[test]
+    fn traced_turn_exports_phase_spans() {
+        let mut cfg = ClusterConfig::two_node_testbed();
+        cfg.engine = EngineKind::Mock {
+            prefill_ns_per_token: 0,
+            decode_ns_per_token: 0,
+        };
+        cfg.peer_link = LinkModel::ideal();
+        cfg.client_link = LinkModel::ideal();
+        cfg.nodes.truncate(1);
+        cfg.nodes[0].profile = NodeProfile::m2_native();
+        cfg.observability.enabled = true;
+        let cluster = EdgeCluster::launch(cfg).unwrap();
+        let req = CompletionRequest::new("discedge/tiny-chat", "hi", 1, ContextMode::Tokenized);
+        let _ = post(cluster.nodes[0].api_addr(), &req);
+        let r = api_pool()
+            .round_trip(cluster.nodes[0].api_addr(), &HttpRequest::get("/trace"))
+            .unwrap();
+        let v = crate::json::parse(r.body_str().unwrap()).unwrap();
+        let spans = v.get("spans").and_then(|s| s.as_array()).unwrap();
+        let names: Vec<&str> = spans
+            .iter()
+            .filter_map(|s| s.get("name").and_then(|n| n.as_str()))
+            .collect();
+        for expect in ["turn", "tokenize", "prefill", "decode", "fetch"] {
+            assert!(names.contains(&expect), "span {expect} missing: {names:?}");
+        }
+        let turn = spans
+            .iter()
+            .find(|s| s.get("name").and_then(|n| n.as_str()) == Some("turn"))
+            .unwrap();
+        let trace_id = turn.req_str("trace_id").unwrap();
+        // Phase spans are children of the turn span, same trace.
+        let phase = spans
+            .iter()
+            .find(|s| s.get("name").and_then(|n| n.as_str()) == Some("prefill"))
+            .unwrap();
+        assert_eq!(phase.req_str("trace_id").unwrap(), trace_id);
+        assert_eq!(
+            phase.req_str("parent").unwrap(),
+            turn.req_str("span_id").unwrap()
+        );
+        // The filter view returns exactly this trace's spans.
+        let rf = api_pool()
+            .round_trip(
+                cluster.nodes[0].api_addr(),
+                &HttpRequest::get(&format!("/trace?trace_id={trace_id}")),
+            )
+            .unwrap();
+        let vf = crate::json::parse(rf.body_str().unwrap()).unwrap();
+        let filtered = vf.get("spans").and_then(|s| s.as_array()).unwrap();
+        assert!(!filtered.is_empty());
+        assert!(filtered
+            .iter()
+            .all(|s| s.req_str("trace_id").unwrap() == trace_id));
     }
 
     #[test]

@@ -372,6 +372,21 @@ impl PooledConn<'_> {
     /// the pool was built [`PeerPool::without_stale_retry`], for
     /// requests that must not be replayed.
     pub fn round_trip(&mut self, req: &Request) -> Result<Response> {
+        // Single cross-node injection point for distributed tracing:
+        // when the calling thread carries a trace context, the request
+        // goes out with the `x-pallas-trace` header so the remote node
+        // stitches its work under the same trace id. No context — the
+        // default, and always the case with observability disabled —
+        // leaves the request untouched: wire bytes stay exactly the
+        // seed's (pinned by `tests/tracing.rs`).
+        let traced;
+        let req = match crate::obs::current() {
+            Some(ctx) => {
+                traced = crate::obs::with_trace_header(req, ctx);
+                &traced
+            }
+            None => req,
+        };
         let conn = self.conn.as_mut().expect("pooled connection present");
         match conn.round_trip(req) {
             Ok(resp) => {

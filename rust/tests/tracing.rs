@@ -1,0 +1,281 @@
+//! Distributed-tracing integration: the two pins of the observability
+//! layer.
+//!
+//! (a) **Stitched roaming trace**: with tracing enabled, a roaming turn
+//!     served by a node outside the session's preference list produces
+//!     ONE trace id whose spans appear on at least two nodes — the
+//!     serving node's `turn`/`remote_fetch` spans and the home replica's
+//!     serve-side span — all linked by the `x-pallas-trace` header the
+//!     transport injects and the HTTP server extracts.
+//!
+//! (b) **Wire neutrality when off**: with the default (disabled)
+//!     config, replication traffic is byte-for-byte what an
+//!     observability-less build sends — no trace header, no extra
+//!     bytes. Pinned by capturing a real replication push on a stub
+//!     peer and asserting the exact header set and framing.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use discedge::client::{Client, MobilityPolicy};
+use discedge::config::{ClusterConfig, ContextMode};
+use discedge::http::{Request as HttpRequest, Response, Server, ServerLimits};
+use discedge::kvstore::{KvConfig, KvNode};
+use discedge::netsim::{LinkModel, TrafficMeter};
+use discedge::obs;
+use discedge::server::EdgeCluster;
+use discedge::transport::PeerPool;
+
+const MODEL: &str = "discedge/tiny-chat";
+
+/// Scrape `GET /trace` and return `(node, name, trace_id, parent)` rows.
+fn scrape_trace(
+    pool: &PeerPool,
+    addr: std::net::SocketAddr,
+) -> Vec<(String, String, String, Option<String>)> {
+    let r = pool.round_trip(addr, &HttpRequest::get("/trace")).unwrap();
+    assert_eq!(r.status, 200);
+    let v = discedge::json::parse(r.body_str().unwrap()).unwrap();
+    let node = v.req_str("node").unwrap();
+    v.get("spans")
+        .and_then(|s| s.as_array())
+        .unwrap()
+        .iter()
+        .map(|s| {
+            (
+                node.clone(),
+                s.req_str("name").unwrap(),
+                s.req_str("trace_id").unwrap(),
+                s.get("parent").and_then(|p| p.as_str()).map(str::to_string),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn roaming_turn_yields_one_trace_spanning_two_nodes() {
+    // Sharded fleet (rf=2 of 4) so an alternate-roaming client is
+    // guaranteed to serve some turn from a node outside the session's
+    // preference list — the remote-fetch path the paper's mobility
+    // penalty measures.
+    let mut cfg = ClusterConfig::mock_fleet(4, Some(2));
+    cfg.observability.enabled = true;
+    let cluster = EdgeCluster::launch(cfg).unwrap();
+    let mut client = Client::connect(
+        cluster.endpoints(),
+        MobilityPolicy::Alternate {
+            nodes: vec![0, 1, 2, 3],
+            every: 1,
+        },
+    )
+    .with_mode(ContextMode::Tokenized)
+    .with_model(MODEL)
+    .with_max_tokens(8);
+    for t in 0..6 {
+        client.chat(&format!("turn {t}: tell me about rovers")).unwrap();
+        cluster.quiesce();
+    }
+
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let mut spans = Vec::new();
+    for n in &cluster.nodes {
+        spans.extend(scrape_trace(&pool, n.api_addr()));
+    }
+    // Index trace id -> (nodes it appears on, span names).
+    let mut by_trace: BTreeMap<&str, (Vec<&str>, Vec<&str>)> = BTreeMap::new();
+    for (node, name, trace_id, _) in &spans {
+        let e = by_trace.entry(trace_id).or_default();
+        if !e.0.contains(&node.as_str()) {
+            e.0.push(node);
+        }
+        e.1.push(name);
+    }
+    let stitched = by_trace
+        .iter()
+        .find(|(_, (nodes, names))| {
+            nodes.len() >= 2 && names.contains(&"remote_fetch")
+        })
+        .unwrap_or_else(|| {
+            panic!("no trace spans two nodes with a remote_fetch child: {by_trace:#?}")
+        });
+    let (trace_id, (nodes, names)) = stitched;
+    assert!(names.contains(&"turn"), "root span missing for {trace_id}: {names:?}");
+    // The remote fetch's serve side landed on a *different* node under
+    // the same trace id — the header crossed the node boundary.
+    assert!(
+        names.contains(&"serve_fetch"),
+        "home replica must record the serve side of {trace_id} ({nodes:?}): {names:?}"
+    );
+    // And the remote_fetch span is parented, i.e. a child of the turn —
+    // not an orphan that happened to share the id.
+    assert!(
+        spans
+            .iter()
+            .any(|(_, name, tid, _)| name == "turn" && tid == trace_id),
+        "turn root present somewhere in the fleet for {trace_id}"
+    );
+    let fetch_parent = spans
+        .iter()
+        .find(|(_, name, tid, _)| name == "remote_fetch" && tid == trace_id)
+        .and_then(|(_, _, _, parent)| parent.clone());
+    assert!(fetch_parent.is_some(), "remote_fetch must have a parent span");
+}
+
+#[test]
+fn async_update_replication_stitches_under_the_turn_trace() {
+    // Replicate-to-all pair: the turn's async context write pushes to
+    // the peer, which must record the apply under the originating
+    // turn's trace id (the context carried across the replication
+    // queue, then the wire).
+    let mut cfg = ClusterConfig::mock_fleet(2, None);
+    cfg.observability.enabled = true;
+    let cluster = EdgeCluster::launch(cfg).unwrap();
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(8);
+    client.chat("hello").unwrap();
+    cluster.quiesce();
+
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let origin = scrape_trace(&pool, cluster.nodes[0].api_addr());
+    let peer = scrape_trace(&pool, cluster.nodes[1].api_addr());
+    let turn_trace = origin
+        .iter()
+        .find(|(_, name, _, _)| name == "turn")
+        .map(|(_, _, tid, _)| tid.clone())
+        .expect("origin records the turn root");
+    assert!(
+        peer.iter()
+            .any(|(_, name, tid, _)| name == "repl_apply" && *tid == turn_trace),
+        "peer must record the replication apply under the turn's trace: {peer:?}"
+    );
+}
+
+/// Stub replication peer that records every request it receives.
+#[allow(clippy::type_complexity)]
+fn capture_server() -> (Server, Arc<Mutex<Vec<(String, BTreeMap<String, String>, Vec<u8>)>>>) {
+    let seen: Arc<Mutex<Vec<(String, BTreeMap<String, String>, Vec<u8>)>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let sink = seen.clone();
+    let server = Server::serve_with(
+        0,
+        LinkModel::ideal(),
+        ServerLimits::default(),
+        Arc::new(move |req: &HttpRequest| {
+            sink.lock().unwrap().push((
+                req.path.clone(),
+                req.headers.clone(),
+                req.body.clone(),
+            ));
+            Response::json("{\"ok\":true}")
+        }),
+    )
+    .unwrap();
+    (server, seen)
+}
+
+#[test]
+fn observability_off_replication_is_byte_identical_to_seed() {
+    // A default-config node (observability off — the shipped default)
+    // pushing to a captured peer must emit EXACTLY the seed's request:
+    // the deterministic `post_json` framing with content-type and
+    // content-length and nothing else. A trace header here would change
+    // every byte count Fig 5 plots.
+    let (server, seen) = capture_server();
+    let node = KvNode::start(
+        "origin",
+        KvConfig {
+            peer_link: LinkModel::ideal(),
+            ..KvConfig::default()
+        },
+    )
+    .unwrap();
+    node.create_keygroup(MODEL);
+    node.add_peer(MODEL, server.addr);
+    node.put(MODEL, "u1/s1", "doc-v1".to_string(), 1).unwrap();
+    node.quiesce();
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while seen.lock().unwrap().is_empty() {
+        assert!(std::time::Instant::now() < deadline, "push must arrive");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let captured = seen.lock().unwrap();
+    for (path, headers, body) in captured.iter() {
+        assert_eq!(path, "/replicate");
+        let keys: Vec<&str> = headers.keys().map(String::as_str).collect();
+        assert_eq!(
+            keys,
+            ["content-length", "content-type"],
+            "observability-off push must carry the seed's exact header set"
+        );
+        assert_eq!(
+            headers.get("content-length").unwrap(),
+            &body.len().to_string()
+        );
+        // Reconstructing the request from what arrived reproduces the
+        // seed serializer's bytes — nothing rode the wire beyond them.
+        let reconstructed =
+            HttpRequest::post_json(path, std::str::from_utf8(body).unwrap()).to_bytes();
+        let resent = discedge::http::Request {
+            method: "POST".into(),
+            path: path.clone(),
+            headers: headers.clone(),
+            body: body.clone(),
+        }
+        .to_bytes();
+        assert_eq!(resent, reconstructed, "wire framing must match the seed");
+    }
+}
+
+#[test]
+fn traced_push_carries_the_header_and_untraced_does_not() {
+    // Same node, observability ENABLED: a push replicated outside any
+    // turn still carries no header (nothing to stitch to), while a push
+    // made under an active trace carries exactly one `x-pallas-trace`.
+    let (server, seen) = capture_server();
+    let obs_cfg = discedge::obs::ObservabilityConfig {
+        enabled: true,
+        ..Default::default()
+    };
+    let node = KvNode::start(
+        "origin",
+        KvConfig {
+            peer_link: LinkModel::ideal(),
+            obs: obs::Obs::new("origin", &obs_cfg),
+            ..KvConfig::default()
+        },
+    )
+    .unwrap();
+    node.create_keygroup(MODEL);
+    node.add_peer(MODEL, server.addr);
+
+    node.put(MODEL, "u1/s1", "v1".to_string(), 1).unwrap();
+    node.quiesce();
+    let ctx = node.obs().begin_trace().expect("enabled node originates");
+    {
+        let _g = obs::set_current(Some(ctx));
+        node.put(MODEL, "u1/s1", "v2".to_string(), 2).unwrap();
+    }
+    node.quiesce();
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while seen.lock().unwrap().len() < 2 {
+        assert!(std::time::Instant::now() < deadline, "both pushes must arrive");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let captured = seen.lock().unwrap();
+    let untraced = &captured[0].1;
+    assert!(
+        !untraced.contains_key(obs::TRACE_HEADER),
+        "no active trace -> no header, even when enabled"
+    );
+    let traced = &captured[1].1;
+    let header = traced
+        .get(obs::TRACE_HEADER)
+        .expect("traced push must carry the trace header");
+    let decoded = obs::TraceCtx::decode(header).expect("header must round-trip");
+    assert_eq!(decoded.trace_id, ctx.trace_id, "same trace across the wire");
+}
