@@ -35,6 +35,22 @@ pub fn testbed_cfg() -> ClusterConfig {
             decode_ns_per_token: 2_000_000,
         };
     }
+    with_fleet_health(cfg)
+}
+
+/// Fleet observability on bench runs: when `DISCEDGE_BENCH_FLEET` is
+/// set (non-empty, not `0`), turn on windowed metrics (250 ms rings)
+/// and the fleet aggregator, which appends per-node health rows to
+/// `results/fleet_health.csv` while the bench runs (plus one final
+/// poll when the cluster drops). Off by default, so plain bench runs
+/// keep the seed's exact wire behaviour.
+pub fn with_fleet_health(mut cfg: ClusterConfig) -> ClusterConfig {
+    let on = std::env::var("DISCEDGE_BENCH_FLEET").is_ok_and(|v| !v.is_empty() && v != "0");
+    if on {
+        cfg.observability.window_ms = 250;
+        cfg.fleet.enabled = true;
+        cfg.fleet.poll_ms = 250;
+    }
     cfg
 }
 
@@ -61,6 +77,7 @@ pub fn launch_fleet_with(cfg: ClusterConfig) -> EdgeCluster {
     use discedge::llm::{ChatTemplate, Engine};
     use std::collections::HashMap;
     use std::sync::{Arc, OnceLock};
+    let cfg = with_fleet_health(cfg);
     static STACK: OnceLock<(Arc<HashMap<String, Arc<dyn Engine>>>, ChatTemplate)> =
         OnceLock::new();
     let (engines, template) = STACK.get_or_init(|| {

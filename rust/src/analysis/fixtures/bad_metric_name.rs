@@ -1,0 +1,20 @@
+//! Deliberately bad input for the `metric-name` rule: one camelCase
+//! name with an unknown prefix, and a pair of well-formed names one
+//! edit apart (typo-duplicate). Not part of the crate's module tree;
+//! linted standalone by the regression test in `analysis/mod.rs`.
+
+pub struct Registry;
+
+impl Registry {
+    pub fn incr(&self, _name: &str, _by: u64) {}
+    pub fn observe(&self, _name: &str, _v: f64) {}
+}
+
+pub fn record(r: &Registry) {
+    // Unknown prefix + camelCase: not on any dashboard's grep path.
+    r.incr("ctxManager_Requests", 1);
+    // Edit distance 1: the second name is a typo of the first, so half
+    // the samples land under a metric nobody reads.
+    r.observe("kv_fetch_s", 0.1);
+    r.observe("kv_fetch_z", 0.2);
+}

@@ -1,0 +1,201 @@
+//! `metric-name` — metric registry naming lint.
+//!
+//! Every string literal passed to `Registry::incr` / `Registry::observe`
+//! becomes a line on the `/metrics` scrape surface, gets matched by
+//! exact name in the fleet aggregator's parser, and ends up in dashboards
+//! and CSV headers. A typo there fails silently: the counter registers
+//! under the wrong name and every consumer reads 0 forever. Two checks
+//! keep that from shipping:
+//!
+//! - each metric literal must be snake_case (`[a-z0-9_]`, no leading /
+//!   trailing / doubled underscore) and start with a known subsystem
+//!   prefix ([`PREFIXES`]), so the scrape stays greppable by subsystem;
+//! - two distinct metric names in one file at edit distance 1 are
+//!   flagged as a likely typo-duplicate (`rx`/`tx` counterparts are the
+//!   deliberate exception).
+//!
+//! Test code is exempt — unit tests name throwaway metrics freely.
+
+use super::lexer::TokKind;
+use super::model::FileModel;
+use super::Finding;
+
+/// Subsystem prefixes a metric name may start with.
+pub const PREFIXES: &[&str] = &["cm_", "kv_", "net_", "cluster_", "obs_", "pallas_", "fleet_"];
+
+/// Run the metric-name lint over one file.
+pub fn check_file(model: &FileModel) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let toks = &model.toks;
+    // (name, line) of every metric literal, in file order, for the
+    // near-miss pass. Deduplicated: repeated use of one name is normal.
+    let mut seen: Vec<(String, u32)> = Vec::new();
+    for i in 0..toks.len().saturating_sub(3) {
+        if model.in_tests(i) || !toks[i].is_punct(".") {
+            continue;
+        }
+        let m = &toks[i + 1];
+        if !(m.is_ident("incr") || m.is_ident("observe")) || !toks[i + 2].is_punct("(") {
+            continue;
+        }
+        let lit = &toks[i + 3];
+        if lit.kind != TokKind::Str {
+            continue;
+        }
+        let name = lit.text.clone();
+        if !well_formed(&name) {
+            findings.push(Finding {
+                rule: "metric-name",
+                file: model.path.clone(),
+                line: lit.line,
+                message: format!(
+                    "metric name \"{name}\" is not snake_case with a known subsystem \
+                     prefix ({})",
+                    PREFIXES.join(" ")
+                ),
+            });
+        }
+        if !seen.iter().any(|(n, _)| *n == name) {
+            seen.push((name, lit.line));
+        }
+    }
+    for (i, (a, _)) in seen.iter().enumerate() {
+        for (b, line_b) in seen.iter().skip(i + 1) {
+            if edit_distance_one(a, b) && !rx_tx_pair(a, b) {
+                findings.push(Finding {
+                    rule: "metric-name",
+                    file: model.path.clone(),
+                    line: *line_b,
+                    message: format!(
+                        "metric names \"{a}\" and \"{b}\" differ by one character — \
+                         likely a typo-duplicate registering under two names"
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// snake_case with a known subsystem prefix.
+fn well_formed(name: &str) -> bool {
+    PREFIXES.iter().any(|p| name.starts_with(p))
+        && !name.ends_with('_')
+        && !name.contains("__")
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Exactly one substitution, insertion, or deletion apart.
+fn edit_distance_one(a: &str, b: &str) -> bool {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    if a == b {
+        return false;
+    }
+    if a.len() == b.len() {
+        return a.iter().zip(b).filter(|(x, y)| x != y).count() == 1;
+    }
+    let (short, long) = if a.len() < b.len() { (a, b) } else { (b, a) };
+    if long.len() - short.len() != 1 {
+        return false;
+    }
+    let mut i = 0;
+    while i < short.len() && short[i] == long[i] {
+        i += 1;
+    }
+    short[i..] == long[i + 1..]
+}
+
+/// `rx`/`tx` counterparts are the one legitimate distance-1 pair
+/// (`kv_sync_rx_bytes` / `kv_sync_tx_bytes` and friends).
+fn rx_tx_pair(a: &str, b: &str) -> bool {
+    a.replace("rx", "tx") == b || a.replace("tx", "rx") == b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(src: &str) -> Vec<Finding> {
+        let model = FileModel::build("src/some/module.rs", src);
+        check_file(&model)
+    }
+
+    #[test]
+    fn well_prefixed_snake_case_is_clean() {
+        let src = r#"
+            fn record(r: &Registry) {
+                r.incr("kv_hints_queued", 1);
+                r.observe("cm_request_s", 0.5);
+                r.incr("fleet_polls_total", 1);
+            }
+        "#;
+        assert!(check(src).is_empty(), "{:?}", check(src));
+    }
+
+    #[test]
+    fn bad_case_and_unknown_prefix_are_flagged() {
+        let src = r#"
+            fn record(r: &Registry) {
+                r.incr("ctxManager_Requests", 1);
+                r.observe("kv_trailing_", 0.5);
+                r.incr("kv__double", 1);
+                r.incr("sessions_total", 1);
+            }
+        "#;
+        let f = check(src);
+        assert_eq!(f.len(), 4, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "metric-name"));
+        assert!(f[0].message.contains("ctxManager_Requests"));
+    }
+
+    #[test]
+    fn near_miss_pair_is_flagged_once() {
+        let src = r#"
+            fn record(r: &Registry) {
+                r.observe("kv_fetch_s", 0.1);
+                r.observe("kv_fetch_z", 0.2);
+                r.observe("kv_fetch_z", 0.3);
+            }
+        "#;
+        let f = check(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("differ by one character"));
+    }
+
+    #[test]
+    fn rx_tx_counterparts_are_exempt() {
+        let src = r#"
+            fn record(r: &Registry) {
+                r.incr("kv_sync_rx_bytes", 1);
+                r.incr("kv_sync_tx_bytes", 1);
+            }
+        "#;
+        assert!(check(src).is_empty(), "{:?}", check(src));
+    }
+
+    #[test]
+    fn test_code_names_metrics_freely() {
+        let src = r#"
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn t() {
+                    r.incr("whatever_Name", 1);
+                }
+            }
+        "#;
+        assert!(check(src).is_empty(), "{:?}", check(src));
+    }
+
+    #[test]
+    fn edit_distance_one_cases() {
+        assert!(edit_distance_one("kv_a_total", "kv_b_total"));
+        assert!(edit_distance_one("kv_total", "kv_totals"));
+        assert!(edit_distance_one("kv_totals", "kv_total"));
+        assert!(!edit_distance_one("kv_total", "kv_total"));
+        assert!(!edit_distance_one("kv_total", "cm_total_s"));
+        assert!(!edit_distance_one("kv_requests", "kv_retries"));
+    }
+}

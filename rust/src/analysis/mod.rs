@@ -15,6 +15,9 @@
 //!   approximate call graph ([`lockorder`]).
 //! - `conn-outside-transport`, `unwrap-io`, `default-on`, `raw-print`
 //!   — layering and robustness lints ([`boundary`]).
+//! - `metric-name` — metric literals passed to the registry must be
+//!   snake_case with a known subsystem prefix; distance-1 near-miss
+//!   pairs are typo-duplicates ([`metricname`]).
 //!
 //! Deliberate violations are suppressed through an allowlist file
 //! (`rust/lint-allow.txt`) with one `rule file-suffix
@@ -29,6 +32,7 @@
 pub mod boundary;
 pub mod lexer;
 pub mod lockorder;
+pub mod metricname;
 pub mod model;
 
 use std::fs;
@@ -150,6 +154,7 @@ pub fn run_files(paths: &[PathBuf]) -> io::Result<Vec<Finding>> {
         let display = path.display().to_string();
         let model = model::FileModel::build(&display, &src);
         findings.extend(boundary::check_file(&model, &src));
+        findings.extend(metricname::check_file(&model));
         table.add_file(&model);
     }
     findings.extend(table.analyze());
@@ -207,6 +212,7 @@ mod tests {
             ("bad_unwrap_io.rs", "unwrap-io"),
             ("bad_default_on.rs", "default-on"),
             ("bad_print.rs", "raw-print"),
+            ("bad_metric_name.rs", "metric-name"),
         ];
         for (name, rule) in cases {
             let findings = lint_fixture(name);

@@ -1,0 +1,81 @@
+//! `pallas_top` — live fleet health table over a running cluster.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --bin pallas_top -- [NAME=HOST:PORT ...] [options]
+//!
+//!   --poll-ms N   refresh period (default 1000)
+//!   --out PATH    health CSV to append (default results/fleet_health.csv)
+//!   --once        poll a single time and exit
+//! ```
+//!
+//! Each positional argument is a node API endpoint, `host:port` or
+//! `name=host:port` (the names `discedge cluster` prints at startup).
+//! Every refresh polls each node's `GET /status` + `GET /metrics`,
+//! renders the fleet table (windowed request rates and percentiles,
+//! hint backlog, replication lag, anti-entropy age, wire-byte rates),
+//! and appends one CSV row per node to `--out`.
+
+use std::net::SocketAddr;
+use std::process::ExitCode;
+
+use discedge::cli::Args;
+use discedge::obs::fleet::{FleetAggregator, FleetConfig};
+
+fn main() -> ExitCode {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("pallas-top: bad arguments: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let mut endpoints: Vec<String> = Vec::new();
+    if let Some(c) = &args.command {
+        endpoints.push(c.clone());
+    }
+    endpoints.extend(args.positional.iter().cloned());
+    if endpoints.is_empty() {
+        eprintln!(
+            "usage: pallas_top NAME=HOST:PORT [NAME=HOST:PORT ...] \
+             [--poll-ms N] [--out CSV] [--once]"
+        );
+        return ExitCode::from(2);
+    }
+    let mut targets: Vec<(String, SocketAddr)> = Vec::new();
+    for e in &endpoints {
+        let (name, addr) = match e.split_once('=') {
+            Some((n, a)) => (n.to_string(), a),
+            None => (e.clone(), e.as_str()),
+        };
+        match addr.parse::<SocketAddr>() {
+            Ok(a) => targets.push((name, a)),
+            Err(_) => {
+                eprintln!("pallas-top: bad endpoint {e} (want name=host:port)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let poll_ms = args.opt_parse_or("poll-ms", 1000u64).unwrap_or(1000);
+    let cfg = FleetConfig {
+        enabled: true,
+        poll_ms,
+        out: std::path::PathBuf::from(args.opt_or("out", "results/fleet_health.csv")),
+    };
+    let once = args.flag("once");
+    let agg = FleetAggregator::new(&cfg, targets);
+    loop {
+        match agg.poll_once() {
+            Ok(snap) => {
+                print!("{}", FleetAggregator::render_table(&snap));
+                println!();
+            }
+            Err(e) => eprintln!("pallas-top: poll failed: {e}"),
+        }
+        if once {
+            return ExitCode::SUCCESS;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(poll_ms.max(1)));
+    }
+}

@@ -193,6 +193,10 @@ pub struct ClusterConfig {
     /// trace header on the wire — replication/fetch/AE bytes identical
     /// to the seed).
     pub observability: crate::obs::ObservabilityConfig,
+    /// Fleet aggregator: poll every node's `/status` + `/metrics` and
+    /// append rollup snapshots to a CSV (default off: no poller thread,
+    /// no scrape traffic, no files).
+    pub fleet: crate::obs::fleet::FleetConfig,
     /// Turn-counter protocol settings.
     pub consistency: ConsistencyConfig,
     /// Generation settings.
@@ -236,6 +240,7 @@ impl ClusterConfig {
             transport: TransportConfig::default(),
             storage: StorageConfig::default(),
             observability: crate::obs::ObservabilityConfig::default(),
+            fleet: crate::obs::fleet::FleetConfig::default(),
             consistency: ConsistencyConfig::default(),
             generation: GenerationConfig::default(),
             engine: EngineKind::Pjrt,
@@ -419,6 +424,20 @@ impl ClusterConfig {
             if let Some(l) = o.get("level").and_then(|x| x.as_str()) {
                 cfg.observability.level = l.to_string();
             }
+            if let Some(w) = o.get("window_ms").and_then(|x| x.as_u64()) {
+                cfg.observability.window_ms = w;
+            }
+        }
+        if let Some(f) = v.get("fleet") {
+            if let Some(e) = f.get("enabled").and_then(|x| x.as_bool()) {
+                cfg.fleet.enabled = e;
+            }
+            if let Some(p) = f.get("poll_ms").and_then(|x| x.as_u64()) {
+                cfg.fleet.poll_ms = p;
+            }
+            if let Some(o) = f.get("out").and_then(|x| x.as_str()) {
+                cfg.fleet.out = PathBuf::from(o);
+            }
         }
         if let Some(t) = v.get("transport") {
             if let Some(n) = t.get("max_server_conns").and_then(|x| x.as_u64()) {
@@ -509,6 +528,14 @@ impl ClusterConfig {
                     "observability.level {:?} is not a valid level spec",
                     self.observability.level
                 )));
+            }
+        }
+        if self.fleet.enabled {
+            if self.fleet.poll_ms == 0 {
+                return Err(Error::Config("fleet.poll_ms must be >= 1".into()));
+            }
+            if self.fleet.out.as_os_str().is_empty() {
+                return Err(Error::Config("fleet.out must be set".into()));
             }
         }
         Ok(())
@@ -713,17 +740,19 @@ mod tests {
         assert!(!cfg.observability.enabled);
         assert_eq!(cfg.observability.trace_buffer, 1024);
         assert_eq!(cfg.observability.level, "info");
+        assert_eq!(cfg.observability.window_ms, 0, "windowed metrics default off");
         let cfg = ClusterConfig::from_json(
             r#"{
               "engine": "mock",
               "observability": {"enabled": true, "trace_buffer": 64,
-                                "level": "warn,ae=debug"}
+                                "level": "warn,ae=debug", "window_ms": 250}
             }"#,
         )
         .unwrap();
         assert!(cfg.observability.enabled);
         assert_eq!(cfg.observability.trace_buffer, 64);
         assert_eq!(cfg.observability.level, "warn,ae=debug");
+        assert_eq!(cfg.observability.window_ms, 250);
         // Degenerate knobs are rejected (only once enabled).
         for bad in [
             r#"{"engine": "mock", "observability": {"enabled": true, "trace_buffer": 0}}"#,
@@ -735,6 +764,37 @@ mod tests {
             ClusterConfig::from_json(r#"{"engine": "mock", "observability": {"level": "loud"}}"#)
                 .is_ok(),
             "degenerate knobs are inert while observability is off"
+        );
+    }
+
+    #[test]
+    fn fleet_defaults_off_and_parses() {
+        // No poller thread, no scrape traffic by default.
+        let cfg = ClusterConfig::two_node_testbed();
+        assert!(!cfg.fleet.enabled);
+        assert_eq!(cfg.fleet.poll_ms, 1000);
+        assert_eq!(cfg.fleet.out, PathBuf::from("results/fleet_health.csv"));
+        let cfg = ClusterConfig::from_json(
+            r#"{
+              "engine": "mock",
+              "fleet": {"enabled": true, "poll_ms": 200,
+                        "out": "/tmp/fh.csv"}
+            }"#,
+        )
+        .unwrap();
+        assert!(cfg.fleet.enabled);
+        assert_eq!(cfg.fleet.poll_ms, 200);
+        assert_eq!(cfg.fleet.out, PathBuf::from("/tmp/fh.csv"));
+        // Degenerate knobs are rejected (only once enabled).
+        for bad in [
+            r#"{"engine": "mock", "fleet": {"enabled": true, "poll_ms": 0}}"#,
+            r#"{"engine": "mock", "fleet": {"enabled": true, "out": ""}}"#,
+        ] {
+            assert!(ClusterConfig::from_json(bad).is_err(), "{bad}");
+        }
+        assert!(
+            ClusterConfig::from_json(r#"{"engine": "mock", "fleet": {"poll_ms": 0}}"#).is_ok(),
+            "degenerate knobs are inert while the aggregator is off"
         );
     }
 

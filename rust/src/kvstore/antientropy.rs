@@ -391,6 +391,10 @@ pub struct AeRuntime {
     /// When the last round started (terminal leaf state; `/status`
     /// reports its age so an operator can spot a wedged round loop).
     last_round: Mutex<Option<Instant>>,
+    /// Replication-lag tracker shared with the owning node: an
+    /// equal-roots digest round proves a `(peer, keygroup)` slice
+    /// converged and clears its recorded lag (None with tracking off).
+    lag: Option<Arc<super::lag::LagTracker>>,
 }
 
 impl AeRuntime {
@@ -412,6 +416,7 @@ impl AeRuntime {
         fetch_pool: Arc<PeerPool>,
         digest_pool: PeerPool,
         obs: Arc<crate::obs::Obs>,
+        lag: Option<Arc<super::lag::LagTracker>>,
     ) -> Arc<AeRuntime> {
         Arc::new(AeRuntime {
             name: name.to_string(),
@@ -433,6 +438,7 @@ impl AeRuntime {
             next_peer: AtomicU64::new(0),
             obs,
             last_round: Mutex::new(None),
+            lag,
         })
     }
 
@@ -570,6 +576,12 @@ impl AeRuntime {
             return Ok(0);
         }
         if parse_hash(&v, "root")? == mine.root {
+            // Equal roots prove this (peer, keygroup) slice converged:
+            // whatever replication lag was recorded against it is
+            // healed, whichever path (replay, repair, late ack) did it.
+            if let Some(l) = &self.lag {
+                l.clear_converged(peer.kv, kg);
+            }
             return Ok(0);
         }
         // Step 2: internal level — find mismatched subtrees.

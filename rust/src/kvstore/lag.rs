@@ -1,0 +1,276 @@
+//! Replication-lag / staleness bookkeeping (sender-side).
+//!
+//! The paper's consistency story is "replicas converge quickly"; this
+//! module turns that into a measurable quantity. The [`Replicator`]'s
+//! sender thread records, per `(peer, keygroup, key)`, the highest
+//! version it has *addressed* to the peer (the local head) and the
+//! highest version the peer has *acknowledged* (a 200 on the push). A
+//! key whose head runs ahead of its ack is **lagging**: the peer would
+//! serve stale context for it. `GET /status` and `/metrics` surface
+//!
+//! - `max_lag_versions` — the largest `head - acked` gap over all keys,
+//! - `lag_keys` — how many keys are behind on at least one peer,
+//! - `staleness_ms` — age of the oldest unacknowledged head,
+//!
+//! so "how far behind is replica B right now?" has a live answer.
+//!
+//! Entries are dropped the moment the ack catches the head, so the map
+//! is bounded by in-flight pushes plus keys on genuinely unreachable
+//! peers (parked hints / anti-entropy debt). Healing clears lag through
+//! two doors: hint replay delivers and acks each parked update, and an
+//! anti-entropy round that proves equal Merkle roots clears the whole
+//! `(peer, keygroup)` slice (see [`LagTracker::clear_converged`]).
+//!
+//! Purely local bookkeeping: nothing here touches the wire, so the
+//! seed's replication byte stream is unchanged whether or not a tracker
+//! is attached.
+//!
+//! [`Replicator`]: super::replication::Replicator
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Per-key lag record: local head vs. highest peer ack.
+#[derive(Debug, Clone, Copy)]
+struct KeyLag {
+    /// Highest version addressed to the peer for this key.
+    head: u64,
+    /// Highest version the peer acknowledged.
+    acked: u64,
+    /// When the currently-unacknowledged head was first recorded.
+    since: Instant,
+}
+
+/// One peer's aggregated lag, as reported in `GET /status`.
+#[derive(Debug, Clone)]
+pub struct PeerLag {
+    /// The peer's replication address.
+    pub peer: SocketAddr,
+    /// Largest `head - acked` gap over the peer's lagging keys.
+    pub max_lag_versions: u64,
+    /// Number of keys behind on this peer.
+    pub lag_keys: u64,
+    /// Age in ms of the oldest unacknowledged head (`None` when clean).
+    pub staleness_ms: Option<u64>,
+}
+
+/// Sender-side replication-lag tracker shared between the
+/// [`Replicator`](super::replication::Replicator) thread, the
+/// anti-entropy heal hook, and the `/status`/`/metrics` accessors.
+#[derive(Debug, Default)]
+pub struct LagTracker {
+    /// peer → (keygroup, key) → lag record. Only *lagging* keys are
+    /// held; a full ack removes its entry.
+    inner: Mutex<BTreeMap<SocketAddr, BTreeMap<(String, String), KeyLag>>>,
+}
+
+impl LagTracker {
+    /// Fresh tracker (attached to a node when observability is on).
+    pub fn new() -> Arc<LagTracker> {
+        Arc::new(LagTracker::default())
+    }
+
+    /// Record that `version` of `keygroup/key` is now addressed to
+    /// `peer`. A key first seen here is assumed caught up through
+    /// `version - 1` (its previous entry was removed by a full ack), so
+    /// the version gap is an estimate that never *under*-counts a
+    /// freshly-diverging key at less than one version behind.
+    pub fn record_head(&self, peer: SocketAddr, keygroup: &str, key: &str, version: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner
+            .entry(peer)
+            .or_default()
+            .entry((keygroup.to_string(), key.to_string()))
+            .or_insert(KeyLag {
+                head: version,
+                acked: version.saturating_sub(1),
+                since: Instant::now(),
+            });
+        if version > entry.head {
+            entry.head = version;
+        }
+    }
+
+    /// Record that `peer` acknowledged `version` of `keygroup/key`.
+    /// Catching the head removes the entry — the peer is current again.
+    pub fn record_ack(&self, peer: SocketAddr, keygroup: &str, key: &str, version: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(keys) = inner.get_mut(&peer) else {
+            return;
+        };
+        let k = (keygroup.to_string(), key.to_string());
+        if let Some(entry) = keys.get_mut(&k) {
+            if version >= entry.head {
+                keys.remove(&k);
+            } else if version > entry.acked {
+                entry.acked = version;
+            }
+        }
+        if keys.is_empty() {
+            inner.remove(&peer);
+        }
+    }
+
+    /// Move `old`'s lag records to `new` — a peer restarted on a new
+    /// address and its parked hints were re-addressed there. Existing
+    /// records under `new` win on conflict (they are newer).
+    pub fn forward(&self, old: SocketAddr, new: SocketAddr) {
+        if old == new {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let Some(moved) = inner.remove(&old) else {
+            return;
+        };
+        let dst = inner.entry(new).or_default();
+        for (k, v) in moved {
+            dst.entry(k).or_insert(v);
+        }
+        if dst.is_empty() {
+            inner.remove(&new);
+        }
+    }
+
+    /// An anti-entropy round proved `peer`'s Merkle root for `keygroup`
+    /// equals ours: every key in that slice converged, drop its lag.
+    pub fn clear_converged(&self, peer: SocketAddr, keygroup: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(keys) = inner.get_mut(&peer) {
+            keys.retain(|(kg, _), _| kg != keygroup);
+            if keys.is_empty() {
+                inner.remove(&peer);
+            }
+        }
+    }
+
+    /// Largest `head - acked` gap over every peer and key (0 = caught
+    /// up everywhere).
+    pub fn max_lag_versions(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .values()
+            .flat_map(|keys| keys.values())
+            .map(|e| e.head - e.acked)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Distinct `(peer, keygroup, key)` records currently behind.
+    pub fn lag_keys(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.values().map(|keys| keys.len() as u64).sum()
+    }
+
+    /// Age in ms of the oldest unacknowledged head over the whole map
+    /// (`None` when every peer is caught up) — the node's estimated
+    /// worst-case staleness window.
+    pub fn staleness_ms(&self) -> Option<u64> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .values()
+            .flat_map(|keys| keys.values())
+            .map(|e| e.since.elapsed().as_millis() as u64)
+            .max()
+    }
+
+    /// Per-peer rollup for `GET /status`, sorted by peer address.
+    pub fn per_peer(&self) -> Vec<PeerLag> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .iter()
+            .map(|(peer, keys)| PeerLag {
+                peer: *peer,
+                max_lag_versions: keys.values().map(|e| e.head - e.acked).max().unwrap_or(0),
+                lag_keys: keys.len() as u64,
+                staleness_ms: keys
+                    .values()
+                    .map(|e| e.since.elapsed().as_millis() as u64)
+                    .max(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    #[test]
+    fn ack_catching_head_clears_the_entry() {
+        let lag = LagTracker::new();
+        assert_eq!(lag.max_lag_versions(), 0);
+        assert_eq!(lag.lag_keys(), 0);
+        assert_eq!(lag.staleness_ms(), None);
+        lag.record_head(addr(1), "kg", "k", 5);
+        assert_eq!(lag.max_lag_versions(), 1, "fresh head is one behind");
+        assert_eq!(lag.lag_keys(), 1);
+        assert!(lag.staleness_ms().is_some());
+        lag.record_ack(addr(1), "kg", "k", 5);
+        assert_eq!(lag.max_lag_versions(), 0);
+        assert_eq!(lag.lag_keys(), 0);
+        assert_eq!(lag.staleness_ms(), None);
+        assert!(lag.per_peer().is_empty(), "clean peers are not reported");
+    }
+
+    #[test]
+    fn unacked_heads_accumulate_version_gap() {
+        let lag = LagTracker::new();
+        lag.record_head(addr(1), "kg", "k", 5);
+        lag.record_head(addr(1), "kg", "k", 6);
+        lag.record_head(addr(1), "kg", "k", 7);
+        // Assumed caught up through 4, head now 7.
+        assert_eq!(lag.max_lag_versions(), 3);
+        assert_eq!(lag.lag_keys(), 1, "same key, one record");
+        // A partial ack narrows but does not clear.
+        lag.record_ack(addr(1), "kg", "k", 6);
+        assert_eq!(lag.max_lag_versions(), 1);
+        assert_eq!(lag.lag_keys(), 1);
+        // Stale ack below the recorded floor is ignored.
+        lag.record_ack(addr(1), "kg", "k", 2);
+        assert_eq!(lag.max_lag_versions(), 1);
+    }
+
+    #[test]
+    fn per_peer_rollup_separates_peers() {
+        let lag = LagTracker::new();
+        lag.record_head(addr(1), "kg", "a", 3);
+        lag.record_head(addr(1), "kg", "b", 9);
+        lag.record_head(addr(2), "kg", "a", 4);
+        lag.record_ack(addr(2), "kg", "a", 4);
+        let peers = lag.per_peer();
+        assert_eq!(peers.len(), 1, "caught-up peer dropped from the map");
+        assert_eq!(peers[0].peer, addr(1));
+        assert_eq!(peers[0].lag_keys, 2);
+        assert_eq!(peers[0].max_lag_versions, 1);
+    }
+
+    #[test]
+    fn converged_keygroup_clears_only_its_slice() {
+        let lag = LagTracker::new();
+        lag.record_head(addr(1), "kg-a", "k", 2);
+        lag.record_head(addr(1), "kg-b", "k", 2);
+        lag.clear_converged(addr(1), "kg-a");
+        assert_eq!(lag.lag_keys(), 1);
+        lag.clear_converged(addr(1), "kg-b");
+        assert_eq!(lag.lag_keys(), 0);
+        assert!(lag.per_peer().is_empty());
+    }
+
+    #[test]
+    fn forward_moves_records_to_the_new_address() {
+        let lag = LagTracker::new();
+        lag.record_head(addr(1), "kg", "k", 2);
+        lag.forward(addr(1), addr(2));
+        assert_eq!(lag.lag_keys(), 1);
+        assert_eq!(lag.per_peer()[0].peer, addr(2));
+        // Acks arriving at the new address now clear it.
+        lag.record_ack(addr(2), "kg", "k", 2);
+        assert_eq!(lag.lag_keys(), 0);
+    }
+}

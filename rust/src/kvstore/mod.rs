@@ -62,11 +62,13 @@
 //! byte-for-byte.
 
 mod antientropy;
+mod lag;
 mod replication;
 mod ring;
 mod storage;
 
 pub use antientropy::{AeSink, AntiEntropyConfig, MerkleForest, TreeDigest};
+pub use lag::{LagTracker, PeerLag};
 pub use replication::{ReplicationConfig, Replicator};
 pub use ring::{HashRing, Placement};
 pub use storage::{Storage, StorageConfig};
@@ -433,6 +435,10 @@ pub struct KvNode {
     delta_fallbacks: Arc<AtomicU64>,
     /// Hinted handoff shared with the replicator (membership mode only).
     handoff: Option<Arc<HintedHandoff>>,
+    /// Replication-lag tracker shared with the replicator and the
+    /// anti-entropy heal hook (None with observability off — the seed's
+    /// bookkeeping-free push path).
+    lag: Option<Arc<LagTracker>>,
     /// Local persistence engine (None when `storage.enabled` is off).
     storage: Option<Arc<Storage>>,
     config: KvConfig,
@@ -536,6 +542,13 @@ impl KvNode {
             Arc::new(Mutex::new(HashMap::new()));
         let ae_map: Arc<Mutex<HashMap<SocketAddr, SocketAddr>>> =
             Arc::new(Mutex::new(HashMap::new()));
+        // Lag bookkeeping rides the observability switch: purely local
+        // (never on the wire), but still zero work on the default path.
+        let lag = if config.obs.enabled() {
+            Some(LagTracker::new())
+        } else {
+            None
+        };
         let ae = if config.antientropy.enabled {
             let forest = MerkleForest::new(config.antientropy.fanout);
             store.install_forest(forest.clone());
@@ -565,6 +578,7 @@ impl KvNode {
                 fetch_pool.clone(),
                 digest_pool,
                 config.obs.clone(),
+                lag.clone(),
             );
             let ae_server = antientropy::serve(runtime.clone(), limits)?;
             let engine = AntiEntropy::start(runtime.clone(), kick.clone());
@@ -584,6 +598,7 @@ impl KvNode {
             config.transport.pool(TrafficMeter::new(), config.peer_link.clone(), net.clone()),
             handoff.clone(),
             ae.as_ref().map(|parts| parts.sink.clone()),
+            lag.clone(),
         );
         let janitor_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let jstop = janitor_stop.clone();
@@ -619,6 +634,7 @@ impl KvNode {
             delta_applies,
             delta_fallbacks,
             handoff,
+            lag,
             storage,
             config,
             janitor_stop,
@@ -972,6 +988,12 @@ impl KvNode {
         self.delta_fallbacks.load(Ordering::SeqCst)
     }
 
+    /// Whether hinted handoff is configured on this node (it rides
+    /// cluster membership; without it writes to down peers just drop).
+    pub fn hints_enabled(&self) -> bool {
+        self.handoff.is_some()
+    }
+
     /// Updates parked as hints for unreachable peers (0 when disabled).
     pub fn hints_queued(&self) -> u64 {
         self.handoff.as_ref().map_or(0, |h| h.queued())
@@ -985,6 +1007,35 @@ impl KvNode {
     /// Hint records evicted by the per-peer bound.
     pub fn hints_dropped(&self) -> u64 {
         self.handoff.as_ref().map_or(0, |h| h.dropped())
+    }
+
+    /// Whether replication-lag bookkeeping is attached (observability
+    /// on). The accessors below read 0/`None` when it is not.
+    pub fn lag_tracking_enabled(&self) -> bool {
+        self.lag.is_some()
+    }
+
+    /// Largest version gap between this node's head and any peer's last
+    /// ack, over every key (`kv_repl_max_lag_versions`).
+    pub fn max_lag_versions(&self) -> u64 {
+        self.lag.as_ref().map_or(0, |l| l.max_lag_versions())
+    }
+
+    /// Keys currently behind on at least one peer (`kv_repl_lag_keys`).
+    pub fn lag_keys(&self) -> u64 {
+        self.lag.as_ref().map_or(0, |l| l.lag_keys())
+    }
+
+    /// Age in ms of the oldest unacknowledged update (`None` when every
+    /// peer is caught up or tracking is off) — the node's estimated
+    /// worst-case staleness window in `/status`.
+    pub fn staleness_ms(&self) -> Option<u64> {
+        self.lag.as_ref().and_then(|l| l.staleness_ms())
+    }
+
+    /// Per-peer lag rollup for `/status` (empty when clean or off).
+    pub fn lag_per_peer(&self) -> Vec<PeerLag> {
+        self.lag.as_ref().map_or_else(Vec::new, |l| l.per_peer())
     }
 
     /// Whether local persistence (WAL + snapshot) is running on this node.

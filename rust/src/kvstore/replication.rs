@@ -40,6 +40,7 @@ use std::sync::{Arc, Condvar};
 use std::time::Duration;
 
 use super::antientropy::AeSink;
+use super::lag::LagTracker;
 use crate::cluster::{Hint, HintUpdate, HintedHandoff};
 use crate::http::Request;
 use crate::json::Value;
@@ -233,6 +234,9 @@ pub struct Replicator {
     abort_flag: Arc<AtomicBool>,
     /// Hinted handoff for unreachable peers (None = seed drop behaviour).
     handoff: Option<Arc<HintedHandoff>>,
+    /// Per-peer replication-lag bookkeeping (None = no tracking — the
+    /// seed's zero-overhead path).
+    lag: Option<Arc<LagTracker>>,
 }
 
 impl Replicator {
@@ -242,12 +246,16 @@ impl Replicator {
     /// there instead of dropped. With an [`AeSink`], every exhausted
     /// drop is also reported to anti-entropy repair — the damage this
     /// sender can no longer fix is handed off instead of lost silently.
+    /// With a [`LagTracker`], every addressed push records the peer's
+    /// head and every 200 records its ack, so `/status` can report how
+    /// far each replica is behind.
     pub fn start(
         name: String,
         config: ReplicationConfig,
         pool: PeerPool,
         handoff: Option<Arc<HintedHandoff>>,
         ae: Option<Arc<AeSink>>,
+        lag: Option<Arc<LagTracker>>,
     ) -> Replicator {
         let queue = Arc::new((
             OrderedMutex::new(
@@ -277,6 +285,7 @@ impl Replicator {
         let t_abort = abort_flag.clone();
         let t_handoff = handoff.clone();
         let t_ae = ae;
+        let t_lag = lag.clone();
         let thread = std::thread::Builder::new()
             .name(format!("kv-repl-{name}"))
             .spawn(move || {
@@ -320,6 +329,12 @@ impl Replicator {
                     let req = Request::post_json("/replicate", &job.payload());
                     let mut replay_to: Vec<SocketAddr> = Vec::new();
                     for peer in &job.peers {
+                        // Whatever happens below — delivery, park, or
+                        // drop — this version is now the peer's head
+                        // for the key; only an ack moves it forward.
+                        if let Some(l) = &t_lag {
+                            l.record_head(*peer, &job.keygroup, &job.key, job.version);
+                        }
                         if let Some(h) = &t_handoff {
                             // A peer the failure detector declared down:
                             // park immediately, no doomed attempts.
@@ -350,6 +365,9 @@ impl Replicator {
                             }
                         }
                         if ok {
+                            if let Some(l) = &t_lag {
+                                l.record_ack(*peer, &job.keygroup, &job.key, job.version);
+                            }
                             // The peer answered: if older hints are still
                             // parked for it (it died and came back before
                             // the detector noticed), requeue them now.
@@ -409,6 +427,7 @@ impl Replicator {
             dropped_shutdown,
             abort_flag,
             handoff,
+            lag,
         }
     }
 
@@ -531,6 +550,12 @@ impl Replicator {
     /// coordinator when the failure detector reports the peer up.
     pub fn replay_hints(&self, parked_at: SocketAddr, deliver_to: SocketAddr) {
         if let Some(h) = &self.handoff {
+            // The peer moved: its lag records must follow, or the old
+            // address would read as lagging forever while the acks land
+            // on the new one.
+            if let Some(l) = &self.lag {
+                l.forward(parked_at, deliver_to);
+            }
             requeue_hints(
                 &self.queue,
                 &self.queued,
@@ -656,8 +681,14 @@ mod tests {
             }),
         )
         .unwrap();
-        let repl =
-            Replicator::start("t".into(), ReplicationConfig::default(), ideal_pool(), None, None);
+        let repl = Replicator::start(
+            "t".into(),
+            ReplicationConfig::default(),
+            ideal_pool(),
+            None,
+            None,
+            None,
+        );
         repl.push(vec![server.addr], "kg", "k", "v", 1, None);
         repl.quiesce();
         let msgs = received.lock().unwrap();
@@ -693,7 +724,7 @@ mod tests {
             drop_probability: 1.0,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None, None);
         // Peer doesn't even need to exist: drop happens first.
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -711,7 +742,7 @@ mod tests {
             retry_backoff: Duration::ZERO,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None, None);
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
         assert_eq!(repl.dropped.load(Ordering::SeqCst), 1);
@@ -729,7 +760,7 @@ mod tests {
             retry_backoff: Duration::from_millis(20),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None, None);
         let t = std::time::Instant::now();
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -742,8 +773,14 @@ mod tests {
     fn push_after_shutdown_drops_instead_of_deadlocking() {
         // Regression: `push()` used to increment `queued` before noticing
         // the closed channel, so a late push made quiesce() spin forever.
-        let mut repl =
-            Replicator::start("t".into(), ReplicationConfig::default(), ideal_pool(), None, None);
+        let mut repl = Replicator::start(
+            "t".into(),
+            ReplicationConfig::default(),
+            ideal_pool(),
+            None,
+            None,
+            None,
+        );
         repl.shutdown();
         repl.push(vec!["127.0.0.1:1".parse().unwrap()], "kg", "k", "v", 1, None);
         repl.quiesce(); // must return immediately
@@ -764,7 +801,7 @@ mod tests {
             retry_backoff: Duration::ZERO,
             ..ReplicationConfig::default()
         };
-        let mut repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
+        let mut repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None, None);
         let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
         for i in 0..3 {
             repl.push(vec![dead], "kg", &format!("k{i}"), "v", 1, None);
@@ -789,13 +826,53 @@ mod tests {
             retry_backoff: Duration::ZERO,
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, ideal_pool(), Some(handoff.clone()), None);
+        let repl =
+            Replicator::start("t".into(), cfg, ideal_pool(), Some(handoff.clone()), None, None);
         let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
         repl.push(vec![dead], "kg", "k", "v", 3, None);
         repl.quiesce();
         assert_eq!(repl.dropped.load(Ordering::SeqCst), 0, "hinted, not dropped");
         assert_eq!(handoff.queued(), 1);
         assert_eq!(handoff.len(dead), 1);
+    }
+
+    #[test]
+    fn lag_is_recorded_on_park_and_cleared_by_replay() {
+        use super::super::lag::LagTracker;
+        use crate::cluster::{HintConfig, HintedHandoff};
+        let handoff = HintedHandoff::new(HintConfig::default());
+        let lag = LagTracker::new();
+        let cfg = ReplicationConfig {
+            max_attempts: 1,
+            retry_backoff: Duration::ZERO,
+            ..ReplicationConfig::default()
+        };
+        let repl = Replicator::start(
+            "t".into(),
+            cfg,
+            ideal_pool(),
+            Some(handoff.clone()),
+            None,
+            Some(lag.clone()),
+        );
+        // Unreachable peer: the push parks and the key reads as lagging.
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        repl.push(vec![dead], "kg", "k", "v", 3, None);
+        repl.quiesce();
+        assert_eq!(lag.lag_keys(), 1);
+        assert!(lag.max_lag_versions() >= 1);
+        // The peer "restarts" on a live address: replay delivers the
+        // parked hint, the ack clears the lag.
+        let server = Server::serve(
+            0,
+            LinkModel::ideal(),
+            Arc::new(|_req: &Request| Response::json("{\"applied\":true}")),
+        )
+        .unwrap();
+        repl.replay_hints(dead, server.addr);
+        repl.quiesce();
+        assert_eq!(lag.lag_keys(), 0, "delivered + acked => caught up");
+        assert_eq!(lag.max_lag_versions(), 0);
     }
 
     #[test]
@@ -810,7 +887,8 @@ mod tests {
             retry_backoff: Duration::from_millis(2),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, ideal_pool(), Some(handoff.clone()), None);
+        let repl =
+            Replicator::start("t".into(), cfg, ideal_pool(), Some(handoff.clone()), None, None);
         let t = std::time::Instant::now();
         repl.push(vec![dead], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -855,6 +933,7 @@ mod tests {
             ideal_pool(),
             Some(handoff.clone()),
             None,
+            None,
         );
         repl.replay_hints(old, server.addr);
         repl.quiesce();
@@ -882,7 +961,7 @@ mod tests {
             delay: Duration::from_millis(30),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None, None);
         let t = std::time::Instant::now();
         repl.push(vec![server.addr], "kg", "k", "v", 1, None);
         repl.quiesce();
@@ -956,7 +1035,7 @@ mod tests {
             delay: Duration::from_millis(40),
             ..ReplicationConfig::default()
         };
-        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None);
+        let repl = Replicator::start("t".into(), cfg, ideal_pool(), None, None, None);
         let frag = |id: u32| StoredContext::Tokens(vec![id]).to_fragment(TokenCodec::BinaryU16);
         let from: SocketAddr = "127.0.0.1:9".parse().unwrap();
         repl.push(vec![server.addr], "kg", "k", "v1", 1, None);

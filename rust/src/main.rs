@@ -54,6 +54,10 @@ fn main() {
                  \u{20}             --trace (per-turn tracing: GET /trace and GET /status)\n\
                  \u{20}             --trace-buffer N (spans kept per node, default 1024)\n\
                  \u{20}             --trace-level L (event filter, e.g. info or warn,ae=debug)\n\
+                 \u{20}             --metrics-window-ms N (windowed rates/percentiles on /metrics)\n\
+                 \u{20}             --fleet (fleet aggregator: poll nodes, append health CSV)\n\
+                 \u{20}             --fleet-poll-ms N (aggregator period, default 1000)\n\
+                 \u{20}             --fleet-out P (health CSV path, default results/fleet_health.csv)\n\
                  run-scenario  --mode tokenized|raw|client_side (default tokenized)\n\
                  \u{20}             --mobility sticky|paper (default sticky)\n\
                  \u{20}             --engine mock|pjrt (default pjrt)\n\
@@ -190,6 +194,24 @@ fn load_config(args: &Args) -> Result<ClusterConfig, String> {
     }
     if let Some(l) = args.opt("trace-level") {
         cfg.observability.level = l.to_string();
+    }
+    if let Some(ms) = args
+        .opt_parse::<u64>("metrics-window-ms")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.observability.window_ms = ms;
+    }
+    if args.flag("fleet") {
+        cfg.fleet.enabled = true;
+    }
+    if let Some(ms) = args
+        .opt_parse::<u64>("fleet-poll-ms")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.fleet.poll_ms = ms;
+    }
+    if let Some(p) = args.opt("fleet-out") {
+        cfg.fleet.out = std::path::PathBuf::from(p);
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)

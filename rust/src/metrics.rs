@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// A sample series (latencies in seconds, byte counts, token rates...).
@@ -279,6 +279,188 @@ impl Reservoir {
     }
 }
 
+/// Number of fixed-duration windows each ring keeps. With the default
+/// 1 s window this covers the last 16 seconds — enough for `_rate10s`
+/// plus slack for scrape jitter, small enough that a fleet of nodes
+/// holds kilobytes, not megabytes.
+pub const WINDOW_SLOTS: usize = 16;
+
+/// Samples retained per window. Windows are short (seconds), so a small
+/// uniform sample per window keeps recent-percentile estimates tight
+/// without letting a hot path grow the ring.
+const WINDOW_SAMPLE_CAP: usize = 256;
+
+/// One fixed-duration window of a [`WindowRing`]: the window index it
+/// currently holds data for, exact count/sum, and a bounded uniform
+/// sample for percentiles.
+#[derive(Debug, Clone, Default)]
+struct WindowSlot {
+    /// Absolute window index (`now_ms / window_ms`) this slot's data
+    /// belongs to. A push with a different index resets the slot first —
+    /// lazy expiry, no sweeper thread.
+    index: u64,
+    /// True once the slot has been claimed for `index` (index 0 is a
+    /// valid window, so emptiness needs its own bit).
+    live: bool,
+    count: u64,
+    sum: f64,
+    samples: Vec<f64>,
+    rng: u64,
+}
+
+impl WindowSlot {
+    fn reset(&mut self, index: u64, seed: u64) {
+        self.index = index;
+        self.live = true;
+        self.count = 0;
+        self.sum = 0.0;
+        self.samples.clear();
+        self.rng = (seed ^ index) | 1;
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.rng = self
+            .rng
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.rng
+    }
+
+    /// Record one sample (Algorithm R over this window's observations).
+    fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        if self.samples.len() < WINDOW_SAMPLE_CAP {
+            self.samples.push(v);
+        } else {
+            let j = (self.next_u64() % self.count) as usize;
+            if j < WINDOW_SAMPLE_CAP {
+                self.samples[j] = v;
+            }
+        }
+    }
+}
+
+/// Ring of [`WINDOW_SLOTS`] fixed-duration windows over one metric.
+///
+/// The cumulative [`Reservoir`] answers "what happened since start";
+/// this ring answers "what is happening *now*": event rates over the
+/// most recent complete windows and percentiles over the samples the
+/// ring still holds. Slots are claimed lazily by window index, so an
+/// idle series costs nothing and stale windows age out by being
+/// overwritten — there is no background expiry.
+#[derive(Debug, Clone)]
+pub struct WindowRing {
+    /// Window duration in milliseconds (fixed at ring creation).
+    window_ms: u64,
+    seed: u64,
+    slots: Vec<WindowSlot>,
+}
+
+impl WindowRing {
+    /// Empty ring with `window_ms`-wide windows. `seed` keeps per-window
+    /// sample replacement deterministic per series.
+    pub fn new(window_ms: u64, seed: u64) -> WindowRing {
+        WindowRing {
+            window_ms: window_ms.max(1),
+            seed,
+            slots: vec![WindowSlot::default(); WINDOW_SLOTS],
+        }
+    }
+
+    /// The slot for the window containing `now_ms`, reset if it still
+    /// holds an older window's data.
+    fn slot_at(&mut self, now_ms: u64) -> &mut WindowSlot {
+        let index = now_ms / self.window_ms;
+        let seed = self.seed;
+        let slot = &mut self.slots[(index % WINDOW_SLOTS as u64) as usize];
+        if !slot.live || slot.index != index {
+            slot.reset(index, seed);
+        }
+        slot
+    }
+
+    /// Record `by` events at `now_ms` (counter increments).
+    pub fn add(&mut self, now_ms: u64, by: u64) {
+        self.slot_at(now_ms).count += by;
+    }
+
+    /// Record one sample at `now_ms` (series observations).
+    pub fn observe(&mut self, now_ms: u64, v: f64) {
+        self.slot_at(now_ms).observe(v);
+    }
+
+    /// Events per second over the last `span` *complete* windows before
+    /// the one containing `now_ms`. The current (partial) window is
+    /// excluded so the rate never underestimates mid-window; `span` is
+    /// clamped to what the ring can actually hold.
+    pub fn rate(&self, now_ms: u64, span: u64) -> f64 {
+        let now_index = now_ms / self.window_ms;
+        let span = span.clamp(1, WINDOW_SLOTS as u64 - 1);
+        let lo = now_index.saturating_sub(span);
+        let events: u64 = self
+            .slots
+            .iter()
+            .filter(|s| s.live && s.index >= lo && s.index < now_index)
+            .map(|s| s.count)
+            .sum();
+        events as f64 / (span * self.window_ms) as f64 * 1000.0
+    }
+
+    /// All samples the ring still holds for windows at or before
+    /// `now_ms` (including the current partial window) — the "recent"
+    /// population behind `_p50_w` / `_p99_w`.
+    pub fn recent(&self, now_ms: u64) -> Series {
+        let now_index = now_ms / self.window_ms;
+        let lo = now_index.saturating_sub(WINDOW_SLOTS as u64 - 1);
+        let mut out = Series::new();
+        for s in &self.slots {
+            if s.live && s.index >= lo && s.index <= now_index {
+                for &v in &s.samples {
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Events counted in windows `[now - span, now)`, complete windows
+    /// only (the numerator of [`WindowRing::rate`]).
+    pub fn recent_count(&self, now_ms: u64, span: u64) -> u64 {
+        let now_index = now_ms / self.window_ms;
+        let span = span.clamp(1, WINDOW_SLOTS as u64 - 1);
+        let lo = now_index.saturating_sub(span);
+        self.slots
+            .iter()
+            .filter(|s| s.live && s.index >= lo && s.index < now_index)
+            .map(|s| s.count)
+            .sum()
+    }
+}
+
+/// Monotonic millisecond clock driving a registry's window rings.
+/// Injectable so tests can shift time deterministically instead of
+/// sleeping through wall-clock windows.
+pub type WindowClock = Arc<dyn Fn() -> u64 + Send + Sync>;
+
+/// Window state of a [`Registry`]: the shared clock plus one ring per
+/// counter / series that recorded anything since windows were enabled.
+#[derive(Default)]
+struct Windows {
+    clock: Option<WindowClock>,
+    counters: BTreeMap<String, WindowRing>,
+    series: BTreeMap<String, WindowRing>,
+}
+
+impl std::fmt::Debug for Windows {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Windows")
+            .field("counters", &self.counters.len())
+            .field("series", &self.series.len())
+            .finish_non_exhaustive()
+    }
+}
+
 /// Thread-safe monotonically-increasing byte/ops counter.
 #[derive(Debug, Default)]
 pub struct Counter {
@@ -312,6 +494,10 @@ impl Counter {
 pub struct Registry {
     counters: Mutex<BTreeMap<String, u64>>,
     series: Mutex<BTreeMap<String, Reservoir>>,
+    /// Window duration; 0 (the default) disables the window rings and
+    /// keeps the record paths free of any windowing work or lock.
+    window_ms: AtomicU64,
+    windows: Mutex<Windows>,
 }
 
 impl Registry {
@@ -320,19 +506,91 @@ impl Registry {
         Registry::default()
     }
 
+    /// Enable windowed metrics: every subsequent `incr`/`observe` also
+    /// lands in a [`WindowRing`] of `window_ms`-wide windows, and
+    /// [`Registry::dump`] gains `_rate1s`/`_rate10s`/`_p50_w`/`_p99_w`
+    /// lines. `window_ms == 0` leaves windows off (the default; the dump
+    /// stays byte-identical to the unwindowed registry). The clock
+    /// starts at enable time.
+    pub fn enable_windows(&self, window_ms: u64) {
+        let epoch = Instant::now();
+        self.enable_windows_with_clock(
+            window_ms,
+            Arc::new(move || epoch.elapsed().as_millis() as u64),
+        );
+    }
+
+    /// [`Registry::enable_windows`] with an injected monotonic
+    /// millisecond clock, so tests shift time instead of sleeping.
+    pub fn enable_windows_with_clock(&self, window_ms: u64, clock: WindowClock) {
+        if window_ms == 0 {
+            self.window_ms.store(0, Ordering::SeqCst);
+            return;
+        }
+        {
+            let mut w = self.windows.lock().unwrap();
+            w.clock = Some(clock);
+        }
+        // Publish the duration last: a concurrent `incr` that sees a
+        // nonzero window_ms must find the clock installed.
+        self.window_ms.store(window_ms, Ordering::SeqCst);
+    }
+
+    /// Whether windowed metrics are being recorded.
+    pub fn windows_enabled(&self) -> bool {
+        self.window_ms.load(Ordering::SeqCst) > 0
+    }
+
+    /// The configured window duration (0 = windows off).
+    pub fn window_ms(&self) -> u64 {
+        self.window_ms.load(Ordering::SeqCst)
+    }
+
     /// Increment a named counter.
     pub fn incr(&self, name: &str, by: u64) {
-        let mut m = self.counters.lock().unwrap();
-        *m.entry(name.to_string()).or_insert(0) += by;
+        {
+            let mut m = self.counters.lock().unwrap();
+            *m.entry(name.to_string()).or_insert(0) += by;
+        }
+        let window_ms = self.window_ms.load(Ordering::SeqCst);
+        if window_ms > 0 {
+            let mut w = self.windows.lock().unwrap();
+            let now_ms = match &w.clock {
+                Some(c) => c(),
+                None => return,
+            };
+            w.counters
+                .entry(name.to_string())
+                .or_insert_with(|| {
+                    WindowRing::new(window_ms, crate::testkit::fnv1a(name.as_bytes()))
+                })
+                .add(now_ms, by);
+        }
     }
 
     /// Record a sample into a named series. Bounded: each series keeps
     /// streaming aggregates plus at most [`RESERVOIR_CAP`] samples.
     pub fn observe(&self, name: &str, v: f64) {
-        let mut m = self.series.lock().unwrap();
-        m.entry(name.to_string())
-            .or_insert_with(|| Reservoir::new(crate::testkit::fnv1a(name.as_bytes())))
-            .push(v);
+        {
+            let mut m = self.series.lock().unwrap();
+            m.entry(name.to_string())
+                .or_insert_with(|| Reservoir::new(crate::testkit::fnv1a(name.as_bytes())))
+                .push(v);
+        }
+        let window_ms = self.window_ms.load(Ordering::SeqCst);
+        if window_ms > 0 {
+            let mut w = self.windows.lock().unwrap();
+            let now_ms = match &w.clock {
+                Some(c) => c(),
+                None => return,
+            };
+            w.series
+                .entry(name.to_string())
+                .or_insert_with(|| {
+                    WindowRing::new(window_ms, crate::testkit::fnv1a(name.as_bytes()))
+                })
+                .observe(now_ms, v);
+        }
     }
 
     /// Read a counter (0 when absent).
@@ -354,7 +612,10 @@ impl Registry {
 
     /// Flat text dump (Prometheus-ish) for the `/metrics` endpoint.
     /// `count`/`mean` are exact streaming values; the percentiles are
-    /// reservoir estimates.
+    /// reservoir estimates. With windows enabled the cumulative block is
+    /// followed by the windowed lines — rates over the last complete
+    /// second(s) and percentiles over the ring's recent samples — so a
+    /// scrape reflects *now*, not the whole run.
     pub fn dump(&self) -> String {
         let mut out = String::new();
         for (k, v) in self.counters.lock().unwrap().iter() {
@@ -372,8 +633,80 @@ impl Registry {
                 ));
             }
         }
+        let window_ms = self.window_ms.load(Ordering::SeqCst);
+        if window_ms > 0 {
+            let w = self.windows.lock().unwrap();
+            if let Some(clock) = &w.clock {
+                let now_ms = clock();
+                let (span1, span10) = rate_spans(window_ms);
+                for (k, ring) in w.counters.iter() {
+                    out.push_str(&format!(
+                        "{k}_rate1s {:.6}\n{k}_rate10s {:.6}\n",
+                        ring.rate(now_ms, span1),
+                        ring.rate(now_ms, span10)
+                    ));
+                }
+                for (k, ring) in w.series.iter() {
+                    out.push_str(&format!(
+                        "{k}_rate1s {:.6}\n{k}_rate10s {:.6}\n",
+                        ring.rate(now_ms, span1),
+                        ring.rate(now_ms, span10)
+                    ));
+                    let recent = ring.recent(now_ms);
+                    if !recent.is_empty() {
+                        out.push_str(&format!(
+                            "{k}_p50_w {:.6}\n{k}_p99_w {:.6}\n",
+                            recent.percentile(50.0),
+                            recent.percentile(99.0)
+                        ));
+                    }
+                }
+            }
+        }
         out
     }
+
+    /// Events per second of `name` (counter or series) over the last
+    /// complete ~1 s of windows. NaN when windows are off or the metric
+    /// never recorded since enabling.
+    pub fn window_rate1s(&self, name: &str) -> f64 {
+        self.with_ring(name, |ring, now_ms, window_ms| {
+            ring.rate(now_ms, rate_spans(window_ms).0)
+        })
+    }
+
+    /// Recent-percentile estimate of series `name` over the samples the
+    /// window ring still holds. NaN when windows are off, the series
+    /// never recorded, or every window already aged out.
+    pub fn window_percentile(&self, name: &str, p: f64) -> f64 {
+        self.with_ring(name, |ring, now_ms, _| ring.recent(now_ms).percentile(p))
+    }
+
+    /// Run `f` over `name`'s window ring (series first, then counters)
+    /// with the current clock reading; NaN when unavailable.
+    fn with_ring(&self, name: &str, f: impl Fn(&WindowRing, u64, u64) -> f64) -> f64 {
+        let window_ms = self.window_ms.load(Ordering::SeqCst);
+        if window_ms == 0 {
+            return f64::NAN;
+        }
+        let w = self.windows.lock().unwrap();
+        let Some(clock) = &w.clock else {
+            return f64::NAN;
+        };
+        let now_ms = clock();
+        match w.series.get(name).or_else(|| w.counters.get(name)) {
+            Some(ring) => f(ring, now_ms, window_ms),
+            None => f64::NAN,
+        }
+    }
+}
+
+/// Window spans (in windows) approximating 1 s and 10 s for a given
+/// window duration, both clamped to what the ring holds.
+fn rate_spans(window_ms: u64) -> (u64, u64) {
+    let span1 = (1000 / window_ms).clamp(1, WINDOW_SLOTS as u64 - 1);
+    let span10 = (10_000 / window_ms).clamp(1, WINDOW_SLOTS as u64 - 1);
+    (span1, span10)
 }
 
 /// One row of a result table: label -> per-column values.
@@ -629,6 +962,103 @@ mod tests {
             "dump count stays exact:\n{dump}"
         );
         assert!(dump.contains("hot_path_s_p999 "), "p999 joins the dump");
+    }
+
+    /// Manually-advanced clock for deterministic window tests.
+    fn test_clock() -> (Arc<AtomicU64>, WindowClock) {
+        let t = Arc::new(AtomicU64::new(0));
+        let c = t.clone();
+        (t, Arc::new(move || c.load(Ordering::SeqCst)))
+    }
+
+    #[test]
+    fn windows_off_keeps_dump_byte_identical() {
+        let plain = Registry::new();
+        let silent = Registry::new();
+        // enable_windows(0) must be a no-op, not a half-enabled state.
+        silent.enable_windows(0);
+        for r in [&plain, &silent] {
+            r.incr("kv_ops_total", 2);
+            r.observe("cm_request_s", 0.25);
+        }
+        assert!(!silent.windows_enabled());
+        assert_eq!(plain.dump(), silent.dump());
+        assert!(!plain.dump().contains("_rate1s"));
+        assert!(plain.window_rate1s("kv_ops_total").is_nan());
+        assert!(plain.window_percentile("cm_request_s", 50.0).is_nan());
+    }
+
+    #[test]
+    fn window_rates_reflect_recent_complete_windows() {
+        let (t, clock) = test_clock();
+        let r = Registry::new();
+        r.enable_windows_with_clock(1000, clock);
+        assert!(r.windows_enabled());
+        assert_eq!(r.window_ms(), 1000);
+        // 5 events in window 0, none afterwards.
+        for _ in 0..5 {
+            r.incr("kv_ops_total", 1);
+        }
+        // Mid-window the rate only sees complete windows: nothing yet.
+        t.store(500, Ordering::SeqCst);
+        assert_eq!(r.window_rate1s("kv_ops_total"), 0.0);
+        // One second later window 0 is complete: 5 events/s.
+        t.store(1500, Ordering::SeqCst);
+        assert_eq!(r.window_rate1s("kv_ops_total"), 5.0);
+        let dump = r.dump();
+        assert!(dump.contains("kv_ops_total_rate1s 5.000000"), "{dump}");
+        assert!(dump.contains("kv_ops_total_rate10s 0.500000"), "{dump}");
+        // Twenty seconds later every window has aged out.
+        t.store(20_000, Ordering::SeqCst);
+        assert_eq!(r.window_rate1s("kv_ops_total"), 0.0);
+    }
+
+    #[test]
+    fn windowed_percentiles_track_a_shift_the_reservoir_smears() {
+        let (t, clock) = test_clock();
+        let r = Registry::new();
+        r.enable_windows_with_clock(1000, clock);
+        // A long fast phase dominates the cumulative reservoir...
+        for _ in 0..2000 {
+            r.observe("cm_request_s", 0.01);
+        }
+        // ...then the workload shifts, far enough ahead that the fast
+        // phase's windows have all aged out of the ring.
+        t.store(100_000, Ordering::SeqCst);
+        for _ in 0..50 {
+            r.observe("cm_request_s", 1.0);
+        }
+        let cumulative_p50 = r.series("cm_request_s").percentile(50.0);
+        let windowed_p50 = r.window_percentile("cm_request_s", 50.0);
+        assert!(cumulative_p50 < 0.05, "reservoir smears: {cumulative_p50}");
+        assert_eq!(windowed_p50, 1.0, "window sees only the slow phase");
+        let dump = r.dump();
+        assert!(dump.contains("cm_request_s_p50_w 1.000000"), "{dump}");
+        assert!(dump.contains("cm_request_s_p99_w 1.000000"), "{dump}");
+    }
+
+    #[test]
+    fn window_ring_slot_reuse_drops_stale_data() {
+        let mut ring = WindowRing::new(1000, 7);
+        ring.observe(500, 1.0);
+        // WINDOW_SLOTS seconds later the same slot holds a new window;
+        // the old sample must not leak into the recent population.
+        let later = 500 + (WINDOW_SLOTS as u64) * 1000;
+        ring.observe(later, 2.0);
+        let recent = ring.recent(later);
+        assert_eq!(recent.samples(), &[2.0]);
+        assert_eq!(ring.recent_count(later + 1000, 1), 1);
+    }
+
+    #[test]
+    fn window_samples_stay_bounded() {
+        let mut ring = WindowRing::new(1000, 9);
+        for i in 0..10_000 {
+            ring.observe(100, i as f64);
+        }
+        assert!(ring.recent(100).len() <= WINDOW_SAMPLE_CAP);
+        // The count stays exact even though the sample is bounded.
+        assert_eq!(ring.recent_count(1100, 1), 10_000);
     }
 
     #[test]

@@ -1,0 +1,498 @@
+//! Fleet aggregator: one live view over every node's `/status` and
+//! `/metrics`.
+//!
+//! A single [`FleetAggregator`] polls each node's API endpoint over a
+//! pooled keep-alive client ([`PeerPool`]), parses the scrape text and
+//! the status JSON into one [`NodeHealth`] per node, and rolls the fleet
+//! up into a [`FleetSnapshot`]: fleet-wide windowed p50/p99, total
+//! request rate, total hint backlog, the worst replication lag, and the
+//! oldest anti-entropy round. Each poll appends one CSV row per node to
+//! `fleet.out` (default `results/fleet_health.csv`) so a bench run
+//! leaves a health timeline next to its figures, and
+//! [`FleetAggregator::render_table`] formats the same snapshot as a
+//! one-screen operator table (the `pallas_top` binary's refresh loop).
+//!
+//! Default off (`fleet.enabled = false`). When enabled,
+//! [`EdgeCluster::launch_with`](crate::server::EdgeCluster::launch_with)
+//! starts the poll thread and stops it when the cluster drops. The
+//! aggregator is a pure *client* of the observability plane: it rides
+//! the API port, so replication / fetch / anti-entropy wire bytes are
+//! untouched whether or not it runs.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::http::Request;
+use crate::json;
+use crate::netsim::{LinkModel, TrafficMeter};
+use crate::transport::PeerPool;
+use crate::Result;
+
+/// Fleet aggregator configuration (config file section `fleet`).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Run the aggregator poll thread alongside the cluster.
+    pub enabled: bool,
+    /// Poll period in milliseconds.
+    pub poll_ms: u64,
+    /// CSV output path; one row per node per poll is appended.
+    pub out: PathBuf,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            enabled: false,
+            poll_ms: 1000,
+            out: PathBuf::from("results/fleet_health.csv"),
+        }
+    }
+}
+
+/// One node's health, parsed from a single `/status` + `/metrics` poll.
+#[derive(Debug, Clone)]
+pub struct NodeHealth {
+    /// Node name (config order).
+    pub node: String,
+    /// Completed requests per second over the last windowed second
+    /// (`cm_requests_total_rate1s`; 0 when windows are off).
+    pub rate1s: f64,
+    /// Windowed p50 request latency in seconds (`cm_request_s_p50_w`).
+    pub p50_w_s: Option<f64>,
+    /// Windowed p99 request latency in seconds (`cm_request_s_p99_w`).
+    pub p99_w_s: Option<f64>,
+    /// Hinted-handoff backlog (`kv_hints_queued`).
+    pub hints_queued: u64,
+    /// Worst replication version gap (`kv_repl_max_lag_versions`).
+    pub max_lag_versions: u64,
+    /// Keys behind on at least one peer (`kv_repl_lag_keys`).
+    pub lag_keys: u64,
+    /// Age of the oldest unacknowledged update, ms (`None` when clean
+    /// or lag tracking is off).
+    pub staleness_ms: Option<u64>,
+    /// Ms since the last anti-entropy round (`None` when AE is off or
+    /// has not run).
+    pub ae_round_age_ms: Option<u64>,
+    /// Cumulative replication-port bytes, both directions
+    /// (`kv_sync_bytes`).
+    pub wire_bytes: u64,
+    /// Replication-port byte rate since the previous poll (0 on the
+    /// first sample).
+    pub wire_rate_bps: f64,
+}
+
+/// One poll of the whole fleet, with rollups.
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot {
+    /// Ms since the aggregator started.
+    pub elapsed_ms: u64,
+    /// Per-node health, in target order. Unreachable nodes are skipped.
+    pub nodes: Vec<NodeHealth>,
+    /// Targets that did not answer this poll.
+    pub unreachable: u64,
+    /// Sum of per-node request rates.
+    pub total_rate1s: f64,
+    /// Worst windowed p50 across the fleet.
+    pub fleet_p50_w_s: Option<f64>,
+    /// Worst windowed p99 across the fleet.
+    pub fleet_p99_w_s: Option<f64>,
+    /// Total hinted-handoff backlog.
+    pub total_hints_queued: u64,
+    /// Worst replication version gap anywhere.
+    pub max_lag_versions: u64,
+    /// Oldest anti-entropy round age across the fleet.
+    pub max_ae_round_age_ms: Option<u64>,
+}
+
+/// CSV header written once per output file (see `docs/ARCHITECTURE.md`,
+/// "Fleet observability", for the column semantics).
+pub const CSV_HEADER: &str = "elapsed_ms,node,rate1s,p50_w_s,p99_w_s,hints_queued,\
+max_lag_versions,lag_keys,staleness_ms,ae_round_age_ms,wire_bytes,wire_rate_bps";
+
+/// Polls every node's `/status` + `/metrics`, rolls the fleet up, and
+/// appends health rows to the configured CSV.
+pub struct FleetAggregator {
+    targets: Vec<(String, SocketAddr)>,
+    out: PathBuf,
+    epoch: Instant,
+    pool: PeerPool,
+    /// node → (wire_bytes, elapsed_ms) at the previous poll, for rate
+    /// computation.
+    prev: Mutex<HashMap<String, (u64, u64)>>,
+}
+
+impl FleetAggregator {
+    /// Build an aggregator over named API endpoints (cluster node order).
+    pub fn new(cfg: &FleetConfig, targets: Vec<(String, SocketAddr)>) -> Arc<FleetAggregator> {
+        Arc::new(FleetAggregator {
+            targets,
+            out: cfg.out.clone(),
+            epoch: Instant::now(),
+            pool: PeerPool::new(TrafficMeter::new(), LinkModel::ideal()),
+            prev: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Poll every target once, append one CSV row per reachable node,
+    /// and return the snapshot. Unreachable nodes are counted, not
+    /// fatal; only the CSV write can fail.
+    pub fn poll_once(&self) -> Result<FleetSnapshot> {
+        let elapsed_ms = self.epoch.elapsed().as_millis() as u64;
+        let mut nodes = Vec::with_capacity(self.targets.len());
+        let mut unreachable = 0u64;
+        for (name, addr) in &self.targets {
+            match self.poll_node(name, *addr, elapsed_ms) {
+                Some(h) => nodes.push(h),
+                None => unreachable += 1,
+            }
+        }
+        let snap = rollup(elapsed_ms, nodes, unreachable);
+        self.append_csv(&snap)?;
+        Ok(snap)
+    }
+
+    /// Where the CSV rows go.
+    pub fn out_path(&self) -> &std::path::Path {
+        &self.out
+    }
+
+    fn poll_node(&self, name: &str, addr: SocketAddr, elapsed_ms: u64) -> Option<NodeHealth> {
+        let status = self.pool.round_trip(addr, &Request::get("/status")).ok()?;
+        let metrics = self.pool.round_trip(addr, &Request::get("/metrics")).ok()?;
+        if status.status != 200 || metrics.status != 200 {
+            return None;
+        }
+        let status = json::parse(status.body_str().ok()?).ok()?;
+        let text = metrics.body_str().ok()?;
+        let wire_bytes = metric(text, "kv_sync_bytes").unwrap_or(0.0) as u64;
+        let wire_rate_bps = {
+            let mut prev = self.prev.lock().unwrap();
+            let rate = prev.get(name).map_or(0.0, |(bytes, at)| {
+                let dt_ms = elapsed_ms.saturating_sub(*at);
+                if dt_ms == 0 {
+                    0.0
+                } else {
+                    wire_bytes.saturating_sub(*bytes) as f64 * 1000.0 / dt_ms as f64
+                }
+            });
+            prev.insert(name.to_string(), (wire_bytes, elapsed_ms));
+            rate
+        };
+        let opt_u64 = |section: &str, field: &str| {
+            status
+                .get(section)
+                .and_then(|s| s.get(field))
+                .and_then(|v| v.as_u64())
+        };
+        Some(NodeHealth {
+            node: name.to_string(),
+            rate1s: metric(text, "cm_requests_total_rate1s").unwrap_or(0.0),
+            p50_w_s: metric(text, "cm_request_s_p50_w"),
+            p99_w_s: metric(text, "cm_request_s_p99_w"),
+            hints_queued: metric(text, "kv_hints_queued").unwrap_or(0.0) as u64,
+            max_lag_versions: metric(text, "kv_repl_max_lag_versions").unwrap_or(0.0) as u64,
+            lag_keys: metric(text, "kv_repl_lag_keys").unwrap_or(0.0) as u64,
+            staleness_ms: opt_u64("replication", "staleness_ms"),
+            ae_round_age_ms: opt_u64("ae", "last_round_age_ms"),
+            wire_bytes,
+            wire_rate_bps,
+        })
+    }
+
+    fn append_csv(&self, snap: &FleetSnapshot) -> Result<()> {
+        if let Some(parent) = self.out.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let fresh = match std::fs::metadata(&self.out) {
+            Ok(m) => m.len() == 0,
+            Err(_) => true,
+        };
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.out)?;
+        let mut buf = String::new();
+        if fresh {
+            buf.push_str(CSV_HEADER);
+            buf.push('\n');
+        }
+        for n in &snap.nodes {
+            buf.push_str(&csv_row(snap.elapsed_ms, n));
+            buf.push('\n');
+        }
+        f.write_all(buf.as_bytes())?;
+        Ok(())
+    }
+
+    /// Render a snapshot as a one-screen operator table: one row per
+    /// node plus a fleet rollup row.
+    pub fn render_table(snap: &FleetSnapshot) -> String {
+        let fmt_opt_s = |v: Option<f64>| v.map_or("-".to_string(), |s| format!("{s:.4}"));
+        let fmt_opt_ms = |v: Option<u64>| v.map_or("-".to_string(), |ms| ms.to_string());
+        let mut out = format!(
+            "fleet health @ {} ms ({} node(s), {} unreachable)\n",
+            snap.elapsed_ms,
+            snap.nodes.len(),
+            snap.unreachable
+        );
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>9} {:>9} {:>6} {:>6} {:>6} {:>10} {:>11} {:>12}\n",
+            "node",
+            "req/s",
+            "p50_w(s)",
+            "p99_w(s)",
+            "hints",
+            "lag_v",
+            "lag_k",
+            "stale(ms)",
+            "ae_age(ms)",
+            "wire(B/s)"
+        ));
+        for n in &snap.nodes {
+            out.push_str(&format!(
+                "{:<12} {:>8.1} {:>9} {:>9} {:>6} {:>6} {:>6} {:>10} {:>11} {:>12.0}\n",
+                n.node,
+                n.rate1s,
+                fmt_opt_s(n.p50_w_s),
+                fmt_opt_s(n.p99_w_s),
+                n.hints_queued,
+                n.max_lag_versions,
+                n.lag_keys,
+                fmt_opt_ms(n.staleness_ms),
+                fmt_opt_ms(n.ae_round_age_ms),
+                n.wire_rate_bps,
+            ));
+        }
+        out.push_str(&format!(
+            "{:<12} {:>8.1} {:>9} {:>9} {:>6} {:>6} {:>6}\n",
+            "fleet",
+            snap.total_rate1s,
+            fmt_opt_s(snap.fleet_p50_w_s),
+            fmt_opt_s(snap.fleet_p99_w_s),
+            snap.total_hints_queued,
+            snap.max_lag_versions,
+            snap.nodes.iter().map(|n| n.lag_keys).sum::<u64>(),
+        ));
+        out
+    }
+
+    /// Start the background poll loop. The returned handle stops and
+    /// joins the thread on drop.
+    pub fn start(cfg: &FleetConfig, targets: Vec<(String, SocketAddr)>) -> FleetHandle {
+        let agg = FleetAggregator::new(cfg, targets);
+        let stop = Arc::new(AtomicBool::new(false));
+        let t_agg = agg.clone();
+        let t_stop = stop.clone();
+        let poll_ms = cfg.poll_ms.max(1);
+        let thread = std::thread::Builder::new()
+            .name("fleet-aggregator".into())
+            .spawn(move || {
+                while !t_stop.load(Ordering::Relaxed) {
+                    // Sleep in short slices so drop never waits a full
+                    // poll period for the join.
+                    let deadline = Instant::now() + Duration::from_millis(poll_ms);
+                    while Instant::now() < deadline {
+                        if t_stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    // Unreachable nodes and CSV errors must not kill the
+                    // loop mid-run; the next poll retries both.
+                    let _ = t_agg.poll_once();
+                }
+            })
+            .expect("spawn fleet-aggregator thread");
+        FleetHandle {
+            agg,
+            stop,
+            thread: Some(thread),
+        }
+    }
+}
+
+/// Running aggregator poll thread; stops and joins on drop.
+pub struct FleetHandle {
+    agg: Arc<FleetAggregator>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FleetHandle {
+    /// The aggregator behind the thread (for on-demand polls in tests
+    /// and benches).
+    pub fn aggregator(&self) -> &Arc<FleetAggregator> {
+        &self.agg
+    }
+}
+
+impl Drop for FleetHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        // One final poll, so a run shorter than a poll period still
+        // leaves health rows behind (the cluster drops this handle
+        // before severing the node listeners).
+        let _ = self.agg.poll_once();
+    }
+}
+
+/// Extract one value from `/metrics` scrape text (`name value` lines).
+fn metric(text: &str, name: &str) -> Option<f64> {
+    text.lines().find_map(|line| {
+        let (k, v) = line.split_once(' ')?;
+        if k == name {
+            v.trim().parse().ok()
+        } else {
+            None
+        }
+    })
+}
+
+/// Roll per-node health up into a fleet snapshot.
+fn rollup(elapsed_ms: u64, nodes: Vec<NodeHealth>, unreachable: u64) -> FleetSnapshot {
+    let max_opt = |pick: fn(&NodeHealth) -> Option<f64>| {
+        nodes.iter().filter_map(pick).max_by(|a, b| a.total_cmp(b))
+    };
+    FleetSnapshot {
+        elapsed_ms,
+        unreachable,
+        total_rate1s: nodes.iter().map(|n| n.rate1s).sum(),
+        fleet_p50_w_s: max_opt(|n| n.p50_w_s),
+        fleet_p99_w_s: max_opt(|n| n.p99_w_s),
+        total_hints_queued: nodes.iter().map(|n| n.hints_queued).sum(),
+        max_lag_versions: nodes.iter().map(|n| n.max_lag_versions).max().unwrap_or(0),
+        max_ae_round_age_ms: nodes.iter().filter_map(|n| n.ae_round_age_ms).max(),
+        nodes,
+    }
+}
+
+/// One CSV row (no trailing newline). Optional columns render empty.
+fn csv_row(elapsed_ms: u64, n: &NodeHealth) -> String {
+    let opt_s = |v: Option<f64>| v.map_or(String::new(), |x| format!("{x:.6}"));
+    let opt_ms = |v: Option<u64>| v.map_or(String::new(), |x| x.to_string());
+    format!(
+        "{},{},{:.3},{},{},{},{},{},{},{},{},{:.1}",
+        elapsed_ms,
+        n.node,
+        n.rate1s,
+        opt_s(n.p50_w_s),
+        opt_s(n.p99_w_s),
+        n.hints_queued,
+        n.max_lag_versions,
+        n.lag_keys,
+        opt_ms(n.staleness_ms),
+        opt_ms(n.ae_round_age_ms),
+        n.wire_bytes,
+        n.wire_rate_bps,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn health(node: &str) -> NodeHealth {
+        NodeHealth {
+            node: node.into(),
+            rate1s: 2.0,
+            p50_w_s: Some(0.010),
+            p99_w_s: Some(0.030),
+            hints_queued: 1,
+            max_lag_versions: 0,
+            lag_keys: 0,
+            staleness_ms: None,
+            ae_round_age_ms: Some(40),
+            wire_bytes: 1000,
+            wire_rate_bps: 500.0,
+        }
+    }
+
+    #[test]
+    fn metric_parses_exact_names_only() {
+        let text = "kv_hints_queued 3\nkv_hints_queued_total 9\ncm_request_s_p99_w 0.125000\n";
+        assert_eq!(metric(text, "kv_hints_queued"), Some(3.0));
+        assert_eq!(metric(text, "cm_request_s_p99_w"), Some(0.125));
+        assert_eq!(metric(text, "kv_hints"), None, "prefixes must not match");
+        assert_eq!(metric(text, "absent"), None);
+    }
+
+    #[test]
+    fn rollup_sums_and_maxes_across_nodes() {
+        let mut a = health("a");
+        let mut b = health("b");
+        a.max_lag_versions = 2;
+        a.p99_w_s = Some(0.5);
+        b.hints_queued = 4;
+        b.ae_round_age_ms = Some(90);
+        let snap = rollup(7, vec![a, b], 1);
+        assert_eq!(snap.elapsed_ms, 7);
+        assert_eq!(snap.unreachable, 1);
+        assert_eq!(snap.total_rate1s, 4.0);
+        assert_eq!(snap.total_hints_queued, 5);
+        assert_eq!(snap.max_lag_versions, 2);
+        assert_eq!(snap.fleet_p99_w_s, Some(0.5));
+        assert_eq!(snap.max_ae_round_age_ms, Some(90));
+    }
+
+    #[test]
+    fn rollup_of_empty_fleet_is_clean() {
+        let snap = rollup(0, Vec::new(), 2);
+        assert_eq!(snap.max_lag_versions, 0);
+        assert_eq!(snap.fleet_p50_w_s, None);
+        assert_eq!(snap.max_ae_round_age_ms, None);
+    }
+
+    #[test]
+    fn csv_row_renders_optionals_empty() {
+        let mut n = health("edge-a");
+        n.p50_w_s = None;
+        n.staleness_ms = Some(12);
+        let row = csv_row(42, &n);
+        assert_eq!(row, "42,edge-a,2.000,,0.030000,1,0,0,12,40,1000,500.0");
+        assert_eq!(
+            row.matches(',').count(),
+            CSV_HEADER.matches(',').count(),
+            "row and header column counts must agree"
+        );
+    }
+
+    #[test]
+    fn render_table_lists_nodes_and_rollup() {
+        let snap = rollup(5, vec![health("edge-a"), health("edge-b")], 0);
+        let table = FleetAggregator::render_table(&snap);
+        assert!(table.contains("edge-a"));
+        assert!(table.contains("edge-b"));
+        assert!(table.lines().next().unwrap().contains("2 node(s)"));
+        assert!(table.lines().last().unwrap().starts_with("fleet"));
+    }
+
+    #[test]
+    fn aggregator_with_no_targets_writes_header_once() {
+        let name = format!("discedge-fleet-test-{}.csv", std::process::id());
+        let out = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_file(&out);
+        let cfg = FleetConfig {
+            enabled: true,
+            poll_ms: 1000,
+            out: out.clone(),
+        };
+        let agg = FleetAggregator::new(&cfg, Vec::new());
+        let snap = agg.poll_once().unwrap();
+        assert_eq!(snap.nodes.len(), 0);
+        agg.poll_once().unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(text.lines().count(), 1, "header only, written once");
+        assert_eq!(text.lines().next().unwrap(), CSV_HEADER);
+        let _ = std::fs::remove_file(&out);
+    }
+}

@@ -35,6 +35,8 @@
 //! output, not wire traffic — so the seed's warning behaviour is
 //! preserved by the default `info` threshold.
 
+pub mod fleet;
+
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -58,6 +60,10 @@ pub struct ObservabilityConfig {
     /// Event threshold spec: a default level optionally followed by
     /// per-subsystem overrides, e.g. `"info"` or `"warn,ae=debug"`.
     pub level: String,
+    /// Width of one metrics window in milliseconds (`window_ms`). `0`
+    /// (the default) keeps windowed metrics off: `/metrics` emits only
+    /// the seed's cumulative lines, byte-for-byte.
+    pub window_ms: u64,
 }
 
 impl Default for ObservabilityConfig {
@@ -66,6 +72,7 @@ impl Default for ObservabilityConfig {
             enabled: false,
             trace_buffer: 1024,
             level: "info".into(),
+            window_ms: 0,
         }
     }
 }
@@ -452,7 +459,7 @@ mod tests {
             &ObservabilityConfig {
                 enabled: true,
                 trace_buffer: buffer,
-                level: "info".into(),
+                ..Default::default()
             },
         )
     }
@@ -588,6 +595,7 @@ mod tests {
                 enabled: false,
                 trace_buffer: 1,
                 level: "error".into(),
+                ..Default::default()
             },
         );
         obs.event(Level::Debug, "ae", "quiet");
@@ -607,7 +615,7 @@ mod tests {
             &ObservabilityConfig {
                 enabled: true,
                 trace_buffer: 4,
-                level: "info".into(),
+                ..Default::default()
             },
         );
         let mut seen = std::collections::HashSet::new();

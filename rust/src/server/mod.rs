@@ -98,12 +98,19 @@ impl EdgeNode {
             cluster_cfg.session_ttl,
             TokenCodec::BinaryU16,
         ));
+        // Windowed metrics (default off): ring of fixed-width windows
+        // behind every counter/series, so `/metrics` can report rates
+        // and percentiles over the last seconds instead of since boot.
+        if cluster_cfg.observability.window_ms > 0 {
+            cm.registry.enable_windows(cluster_cfg.observability.window_ms);
+        }
         let h_cm = cm.clone();
         let h_engines = engines.clone();
         let h_kv = kv.clone();
         let h_membership = membership.clone();
+        let started_at = Instant::now();
         let handler: Handler = Arc::new(move |req: &Request| {
-            dispatch(req, &h_cm, &h_engines, &h_kv, &h_membership)
+            dispatch(req, &h_cm, &h_engines, &h_kv, &h_membership, started_at)
         });
         // The API listener shares the node's transport budget and
         // reports into the same `net_conns_*` stats as the KV pools.
@@ -161,6 +168,7 @@ fn dispatch(
     engines: &Arc<HashMap<String, Arc<dyn Engine>>>,
     kv: &Arc<KvNode>,
     membership: &Option<Arc<MembershipView>>,
+    started_at: Instant,
 ) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/completion") => {
@@ -296,6 +304,24 @@ fn dispatch(
                 "obs_events_error {}\n",
                 obs.events_at(crate::obs::Level::Error)
             ));
+            // Replication lag, sender-side (all 0 when lag tracking is
+            // off, i.e. observability disabled).
+            dump.push_str(&format!(
+                "kv_repl_max_lag_versions {}\n",
+                kv.max_lag_versions()
+            ));
+            dump.push_str(&format!("kv_repl_lag_keys {}\n", kv.lag_keys()));
+            // Build identity and process uptime, so a fleet scrape can
+            // tell which build answered and how long it has been up.
+            dump.push_str(&format!(
+                "pallas_build_info{{version=\"{}\",features=\"{}\"}} 1\n",
+                env!("CARGO_PKG_VERSION"),
+                if cfg!(feature = "pjrt") { "pjrt" } else { "" }
+            ));
+            dump.push_str(&format!(
+                "pallas_uptime_seconds {:.3}\n",
+                started_at.elapsed().as_secs_f64()
+            ));
             Response::text(&dump)
         }
         ("GET", path) if path == "/trace" || path.starts_with("/trace?") => {
@@ -320,9 +346,10 @@ fn dispatch(
         }
         ("GET", "/status") => {
             // One-shot node status plane: everything an operator (or the
-            // failover bench) needs in a single response, regardless of
-            // which optional subsystems are enabled (disabled ones read
-            // 0 / null).
+            // fleet aggregator) needs in a single response. Sections for
+            // optional subsystems appear only when the subsystem is
+            // enabled, so absence is distinguishable from "enabled but
+            // idle" and a minimal node returns a minimal document.
             let obs = kv.obs();
             let (epoch, alive) = match membership {
                 Some(view) => (view.epoch(), view.alive_count() as u64),
@@ -330,57 +357,79 @@ fn dispatch(
             };
             let net = kv.net_stats();
             let opt_ms = |v: Option<u64>| v.map_or(Value::Null, Value::from);
-            Response::json(
-                &Value::obj()
-                    .set("node", cm.node_name())
-                    .set(
-                        "cluster",
-                        Value::obj().set("epoch", epoch).set("alive", alive),
-                    )
-                    .set(
-                        "hints",
+            let mut v = Value::obj()
+                .set("node", cm.node_name())
+                .set(
+                    "cluster",
+                    Value::obj().set("epoch", epoch).set("alive", alive),
+                )
+                .set(
+                    "net",
+                    Value::obj()
+                        .set("opened", net.opened.get())
+                        .set("reused", net.reused.get())
+                        .set("evicted", net.evicted.get())
+                        .set("rejected", net.rejected.get()),
+                )
+                .set(
+                    "obs",
+                    Value::obj()
+                        .set("enabled", obs.enabled())
+                        .set("spans_started", obs.spans_started())
+                        .set("spans_exported", obs.spans_exported())
+                        .set("spans_dropped", obs.spans_dropped()),
+                );
+            if kv.hints_enabled() {
+                v = v.set(
+                    "hints",
+                    Value::obj()
+                        .set("queued", kv.hints_queued())
+                        .set("replayed", kv.hints_replayed())
+                        .set("dropped", kv.hints_dropped()),
+                );
+            }
+            if kv.storage_enabled() {
+                v = v.set(
+                    "wal",
+                    Value::obj()
+                        .set("appends", kv.wal_appends())
+                        .set("bytes", kv.wal_bytes())
+                        .set("snapshots", kv.snapshots_taken())
+                        .set("snapshot_age_ms", opt_ms(kv.snapshot_age_ms())),
+                );
+            }
+            if kv.ae_addr().is_some() {
+                v = v.set(
+                    "ae",
+                    Value::obj()
+                        .set("rounds", kv.ae_rounds())
+                        .set("keys_repaired", kv.ae_keys_repaired())
+                        .set("lost_updates", kv.ae_lost_updates())
+                        .set("last_round_age_ms", opt_ms(kv.ae_last_round_age_ms())),
+                );
+            }
+            if kv.lag_tracking_enabled() {
+                let peers: Vec<Value> = kv
+                    .lag_per_peer()
+                    .iter()
+                    .map(|p| {
                         Value::obj()
-                            .set("queued", kv.hints_queued())
-                            .set("replayed", kv.hints_replayed())
-                            .set("dropped", kv.hints_dropped()),
-                    )
-                    .set(
-                        "wal",
-                        Value::obj()
-                            .set("appends", kv.wal_appends())
-                            .set("bytes", kv.wal_bytes())
-                            .set("snapshots", kv.snapshots_taken())
-                            .set("snapshot_age_ms", opt_ms(kv.snapshot_age_ms())),
-                    )
-                    .set(
-                        "net",
-                        Value::obj()
-                            .set("opened", net.opened.get())
-                            .set("reused", net.reused.get())
-                            .set("evicted", net.evicted.get())
-                            .set("rejected", net.rejected.get()),
-                    )
-                    .set(
-                        "ae",
-                        Value::obj()
-                            .set("rounds", kv.ae_rounds())
-                            .set("keys_repaired", kv.ae_keys_repaired())
-                            .set("lost_updates", kv.ae_lost_updates())
-                            .set(
-                                "last_round_age_ms",
-                                opt_ms(kv.ae_last_round_age_ms()),
-                            ),
-                    )
-                    .set(
-                        "obs",
-                        Value::obj()
-                            .set("enabled", obs.enabled())
-                            .set("spans_started", obs.spans_started())
-                            .set("spans_exported", obs.spans_exported())
-                            .set("spans_dropped", obs.spans_dropped()),
-                    )
-                    .to_json(),
-            )
+                            .set("peer", p.peer.to_string())
+                            .set("max_lag_versions", p.max_lag_versions)
+                            .set("lag_keys", p.lag_keys)
+                            .set("staleness_ms", opt_ms(p.staleness_ms))
+                    })
+                    .collect();
+                v = v.set(
+                    "replication",
+                    Value::obj()
+                        .set("max_lag_versions", kv.max_lag_versions())
+                        .set("lag_keys", kv.lag_keys())
+                        .set("staleness_ms", opt_ms(kv.staleness_ms()))
+                        .set("peers", peers),
+                );
+            }
+            Response::json(&v.to_json())
         }
         ("GET", "/cluster/members") => match membership {
             Some(view) => {
@@ -488,6 +537,9 @@ fn record_turn_spans(
 
 /// A launched multi-node cluster.
 pub struct EdgeCluster {
+    // Declared before `nodes` so the aggregator (and its final drop-time
+    // poll) runs while the node listeners are still up.
+    fleet: Option<crate::obs::fleet::FleetHandle>,
     /// The running nodes, in config order.
     pub nodes: Vec<EdgeNode>,
     /// Ring placement installed at launch, when sharding is enabled
@@ -618,7 +670,20 @@ impl EdgeCluster {
                 (placement, None)
             }
         };
+        // Fleet aggregator (default off): a background thread polling
+        // every node's `/status` + `/metrics` over the API port and
+        // appending health rows to `fleet.out`. Stops when the cluster
+        // drops. It is a pure API client, so the replication / fetch /
+        // anti-entropy wire is untouched either way.
+        let fleet = cfg.fleet.enabled.then(|| {
+            let targets = nodes
+                .iter()
+                .map(|n| (n.name.clone(), n.api_addr()))
+                .collect();
+            crate::obs::fleet::FleetAggregator::start(&cfg.fleet, targets)
+        });
         Ok(EdgeCluster {
+            fleet,
             nodes,
             placement,
             cfg,
@@ -644,6 +709,12 @@ impl EdgeCluster {
     /// The membership view, when membership is enabled.
     pub fn membership(&self) -> Option<&Arc<MembershipView>> {
         self.coordinator.as_ref().map(|c| c.view())
+    }
+
+    /// The running fleet aggregator, when `fleet.enabled` (tests and
+    /// benches use it for deterministic on-demand polls).
+    pub fn fleet(&self) -> Option<&crate::obs::fleet::FleetHandle> {
+        self.fleet.as_ref()
     }
 
     /// The placement currently installed on the nodes (tracks membership
@@ -1056,25 +1127,48 @@ mod tests {
             "obs_events_info",
             "obs_events_warn",
             "obs_events_error",
+            "kv_repl_max_lag_versions",
+            "kv_repl_lag_keys",
+            "pallas_uptime_seconds",
         ] {
             assert!(
                 body.lines().any(|l| l.starts_with(&format!("{key} "))),
                 "metric {key} missing from /metrics:\n{body}"
             );
         }
+        // Build info carries its version/features as labels, so match
+        // the line by prefix instead of `name value`.
+        let build = body
+            .lines()
+            .find(|l| l.starts_with("pallas_build_info{"))
+            .expect("pallas_build_info missing from /metrics");
+        assert!(
+            build.contains(&format!("version=\"{}\"", env!("CARGO_PKG_VERSION"))),
+            "build info must carry the crate version: {build}"
+        );
+        assert!(build.ends_with("} 1"), "build info is a constant 1 gauge");
     }
 
     #[test]
     fn status_returns_every_documented_field() {
-        // The one-shot status plane: every field the docs promise, in a
-        // single response, even with every optional subsystem disabled.
-        let cluster = mock_cluster(1);
+        // The one-shot status plane: with every optional subsystem
+        // enabled, every field the docs promise appears in a single
+        // response.
+        let mut cfg = ClusterConfig::mock_fleet(2, Some(2));
+        cfg.enable_fast_membership();
+        cfg.observability.enabled = true;
+        cfg.antientropy.enabled = true;
+        cfg.storage.enabled = true;
+        let tag = format!("discedge-status-test-{}", std::process::id());
+        let dir = std::env::temp_dir().join(tag);
+        cfg.storage.dir = dir.clone();
+        let cluster = EdgeCluster::launch(cfg).unwrap();
         let r = api_pool()
             .round_trip(cluster.nodes[0].api_addr(), &HttpRequest::get("/status"))
             .unwrap();
         assert_eq!(r.status, 200);
         let v = crate::json::parse(r.body_str().unwrap()).unwrap();
-        assert_eq!(v.req_str("node").unwrap(), "edge-m2");
+        assert_eq!(v.req_str("node").unwrap(), "edge-0");
         for (section, fields) in [
             ("cluster", &["epoch", "alive"][..]),
             ("hints", &["queued", "replayed", "dropped"][..]),
@@ -1088,23 +1182,52 @@ mod tests {
                 "obs",
                 &["enabled", "spans_started", "spans_exported", "spans_dropped"][..],
             ),
+            (
+                "replication",
+                &["max_lag_versions", "lag_keys", "staleness_ms", "peers"][..],
+            ),
         ] {
             let s = v.get(section).unwrap_or_else(|| panic!("{section} missing"));
             for f in fields {
                 assert!(s.get(f).is_some(), "/status {section}.{f} missing");
             }
         }
-        // Never-snapshotted storage and never-run AE read null, not 0 —
-        // "no data yet" must stay distinguishable from "age zero".
+        // Never-snapshotted storage reads null, not 0 — "no data yet"
+        // must stay distinguishable from "age zero".
         assert_eq!(
             v.get("wal").and_then(|w| w.get("snapshot_age_ms")),
             Some(&Value::Null)
         );
-        assert!(!v
+        assert!(v
             .get("obs")
             .and_then(|o| o.get("enabled"))
             .and_then(|e| e.as_bool())
             .unwrap());
+        drop(cluster);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn status_omits_disabled_subsystem_sections() {
+        // With every optional subsystem off (the testbed default), the
+        // status document is still well-formed JSON — the disabled
+        // sections are simply absent, never partial and never a panic.
+        let cluster = mock_cluster(1);
+        let r = api_pool()
+            .round_trip(cluster.nodes[0].api_addr(), &HttpRequest::get("/status"))
+            .unwrap();
+        assert_eq!(r.status, 200);
+        let v = crate::json::parse(r.body_str().unwrap()).unwrap();
+        assert_eq!(v.req_str("node").unwrap(), "edge-m2");
+        for always in ["cluster", "net", "obs"] {
+            assert!(v.get(always).is_some(), "/status {always} missing");
+        }
+        for gated in ["hints", "wal", "ae", "replication"] {
+            assert!(
+                v.get(gated).is_none(),
+                "/status {gated} must be absent when its subsystem is off"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Fleet-observability integration: the four pins of the health plane.
+//!
+//! (a) **Windowed stats track shifts**: after a workload shift, the
+//!     windowed rate/percentile lines reflect only the recent phase,
+//!     while the cumulative reservoir still smears the old one — the
+//!     reason `/metrics` grows `_rate1s`/`_p50_w` lines at all.
+//!
+//! (b) **Lag probes see an outage**: parking pushes for a down peer
+//!     drives `replication.max_lag_versions` in `/status` above zero,
+//!     and hint replay on recovery brings it back to exactly zero.
+//!
+//! (c) **Aggregator writes rows**: a cluster launched with the fleet
+//!     aggregator enabled produces a non-empty health CSV — header plus
+//!     one row per node per poll.
+//!
+//! (d) **Wire neutrality when off**: with the shipped default config
+//!     (no windows, no lag tracking, no aggregator) a replication push
+//!     is byte-for-byte the seed's framing — the observability plane
+//!     must be free when unused.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use discedge::client::{Client, MobilityPolicy};
+use discedge::config::{ClusterConfig, ContextMode};
+use discedge::http::{Request as HttpRequest, Response, Server, ServerLimits};
+use discedge::json::Value;
+use discedge::kvstore::{KvConfig, KvNode};
+use discedge::metrics::Registry;
+use discedge::netsim::{LinkModel, TrafficMeter};
+use discedge::obs::fleet::CSV_HEADER;
+use discedge::server::EdgeCluster;
+use discedge::transport::PeerPool;
+
+const MODEL: &str = "discedge/tiny-chat";
+
+/// Fetch and parse `GET /status` from a node's API listener.
+fn status_json(pool: &PeerPool, addr: std::net::SocketAddr) -> Value {
+    let r = pool.round_trip(addr, &HttpRequest::get("/status")).unwrap();
+    assert_eq!(r.status, 200);
+    discedge::json::parse(r.body_str().unwrap()).unwrap()
+}
+
+fn max_lag(status: &Value) -> Option<u64> {
+    status
+        .get("replication")
+        .and_then(|r| r.get("max_lag_versions"))
+        .and_then(|v| v.as_u64())
+}
+
+#[test]
+fn windowed_stats_track_a_workload_shift_the_reservoir_smears() {
+    // Injected clock: shift time instead of sleeping, so the assertion
+    // on "the old phase aged out" is deterministic.
+    let now = Arc::new(AtomicU64::new(0));
+    let clock = now.clone();
+    let r = Registry::new();
+    r.enable_windows_with_clock(250, Arc::new(move || clock.load(Ordering::SeqCst)));
+
+    // Fast phase: many quick requests dominate the cumulative series.
+    for _ in 0..2000 {
+        r.observe("cm_request_s", 0.01);
+        r.incr("cm_requests_total", 1);
+    }
+    // The workload shifts; far enough ahead that every fast-phase
+    // window has aged out of the ring.
+    now.store(60_000, Ordering::SeqCst);
+    for i in 0..40 {
+        r.observe("cm_request_s", 1.0);
+        r.incr("cm_requests_total", 1);
+        // Spread the slow phase over ~1 s of windows so the 1 s rate
+        // sees complete windows behind `now`.
+        now.store(60_000 + i * 25, Ordering::SeqCst);
+    }
+    now.store(61_100, Ordering::SeqCst);
+
+    let cumulative_p50 = r.series("cm_request_s").percentile(50.0);
+    let windowed_p50 = r.window_percentile("cm_request_s", 50.0);
+    assert!(cumulative_p50 < 0.05, "cumulative p50 smears: {cumulative_p50}");
+    assert_eq!(windowed_p50, 1.0, "window sees only the current phase");
+
+    // The 1 s rate reflects the slow phase (~40 events/s), not the
+    // lifetime average the cumulative counter implies.
+    let rate = r.window_rate1s("cm_requests_total");
+    assert!((10.0..80.0).contains(&rate), "windowed rate ~40/s, got {rate}");
+    let dump = r.dump();
+    assert!(dump.contains("cm_request_s_p50_w 1.000000"), "{dump}");
+    assert!(dump.contains("cm_requests_total_rate1s"), "{dump}");
+}
+
+#[test]
+fn replication_outage_surfaces_lag_in_status_and_heals_to_zero() {
+    // Two-node mock fleet, observability on (lag probes), membership on
+    // (hinted handoff) with the default conservative failure-detector
+    // timings so no spurious Down/Up event races the assertions.
+    let mut cfg = ClusterConfig::mock_fleet(2, None);
+    cfg.membership.enabled = true;
+    cfg.observability.enabled = true;
+    let cluster = EdgeCluster::launch(cfg).unwrap();
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let kv0 = &cluster.nodes[0].kv;
+    let peer = cluster.nodes[1].kv.replication_addr();
+
+    // Baseline: a replicated write acks and leaves no lag.
+    kv0.put(MODEL, "u1/s-lag", "v1".to_string(), 1).unwrap();
+    kv0.quiesce();
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let lag = max_lag(&status_json(&pool, cluster.nodes[0].api_addr()));
+        if lag == Some(0) {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "baseline lag must drain: {lag:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Outage: the failure-detector downcall parks pushes as hints.
+    // Heads advance with no acks, so the probe sees versions 2..3
+    // outstanding.
+    kv0.mark_peer_down(peer);
+    kv0.put(MODEL, "u1/s-lag", "v2".to_string(), 2).unwrap();
+    kv0.put(MODEL, "u1/s-lag", "v3".to_string(), 3).unwrap();
+    kv0.quiesce();
+    let status = status_json(&pool, cluster.nodes[0].api_addr());
+    let lag = max_lag(&status).expect("replication section present when obs on");
+    assert!(lag >= 2, "two unacked versions must show as lag, got {lag} ({status:?})");
+    let keys = status
+        .get("replication")
+        .and_then(|r| r.get("lag_keys"))
+        .and_then(|v| v.as_u64())
+        .unwrap();
+    assert!(keys >= 1, "the lagging key is counted");
+
+    // Recovery: replaying the parked hints acks the outstanding
+    // versions and the probe returns to exactly zero.
+    kv0.mark_peer_alive(peer, peer);
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let lag = max_lag(&status_json(&pool, cluster.nodes[0].api_addr()));
+        if lag == Some(0) {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "lag must heal to zero: {lag:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn fleet_aggregator_writes_health_csv_rows() {
+    let name = format!("discedge-fleet-obs-{}.csv", std::process::id());
+    let out = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_file(&out);
+
+    let mut cfg = ClusterConfig::mock_fleet(2, None);
+    cfg.observability.window_ms = 250;
+    cfg.fleet.enabled = true;
+    // Long period: the background poller stays quiet and the test
+    // drives polls explicitly (plus the final drop-time poll).
+    cfg.fleet.poll_ms = 60_000;
+    cfg.fleet.out = out.clone();
+    let cluster = EdgeCluster::launch(cfg).unwrap();
+
+    // One real turn so the nodes have traffic to report.
+    let mut client = Client::connect(cluster.endpoints(), MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(8);
+    client.chat("hello fleet").unwrap();
+    cluster.quiesce();
+
+    let fleet = cluster.fleet().expect("fleet handle when enabled");
+    let snap = fleet.aggregator().poll_once().unwrap();
+    assert_eq!(snap.nodes.len(), 2, "one health row per node");
+    assert_eq!(snap.unreachable, 0, "both nodes answer their status plane");
+    assert!(
+        snap.nodes.iter().any(|n| n.wire_bytes > 0),
+        "a replicated turn leaves sync bytes: {snap:?}"
+    );
+
+    let text = std::fs::read_to_string(&out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines[0], CSV_HEADER, "header written once, first");
+    assert!(lines.len() >= 3, "header + one row per node: {text}");
+    let header_cols = CSV_HEADER.split(',').count();
+    for row in &lines[1..] {
+        assert_eq!(row.split(',').count(), header_cols, "ragged row: {row}");
+    }
+    assert!(lines[1..].iter().any(|l| l.contains("edge-0")));
+    assert!(lines[1..].iter().any(|l| l.contains("edge-1")));
+
+    drop(cluster);
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn fleet_plumbing_off_keeps_replication_byte_identical_to_seed() {
+    // Same pin as the tracing suite, re-asserted against this PR's
+    // plumbing: a default-config node (no windows, no lag tracker, no
+    // aggregator) pushing to a captured peer emits EXACTLY the seed's
+    // `post_json` framing — the probes must cost zero wire bytes when
+    // off.
+    type Seen = Arc<Mutex<Vec<(String, BTreeMap<String, String>, Vec<u8>)>>>;
+    let seen: Seen = Arc::new(Mutex::new(Vec::new()));
+    let sink = seen.clone();
+    let server = Server::serve_with(
+        0,
+        LinkModel::ideal(),
+        ServerLimits::default(),
+        Arc::new(move |req: &HttpRequest| {
+            sink.lock().unwrap().push((
+                req.path.clone(),
+                req.headers.clone(),
+                req.body.clone(),
+            ));
+            Response::json("{\"ok\":true}")
+        }),
+    )
+    .unwrap();
+
+    let node = KvNode::start(
+        "origin",
+        KvConfig {
+            peer_link: LinkModel::ideal(),
+            ..KvConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(!node.lag_tracking_enabled(), "default config keeps the probes off");
+    node.create_keygroup(MODEL);
+    node.add_peer(MODEL, server.addr);
+    node.put(MODEL, "u1/s1", "doc-v1".to_string(), 1).unwrap();
+    node.quiesce();
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while seen.lock().unwrap().is_empty() {
+        assert!(std::time::Instant::now() < deadline, "push must arrive");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let captured = seen.lock().unwrap();
+    for (path, headers, body) in captured.iter() {
+        assert_eq!(path, "/replicate");
+        let keys: Vec<&str> = headers.keys().map(String::as_str).collect();
+        assert_eq!(
+            keys,
+            ["content-length", "content-type"],
+            "probes-off push must carry the seed's exact header set"
+        );
+        let reconstructed =
+            HttpRequest::post_json(path, std::str::from_utf8(body).unwrap()).to_bytes();
+        let resent = discedge::http::Request {
+            method: "POST".into(),
+            path: path.clone(),
+            headers: headers.clone(),
+            body: body.clone(),
+        }
+        .to_bytes();
+        assert_eq!(resent, reconstructed, "wire framing must match the seed");
+    }
+}
