@@ -11,9 +11,15 @@
 //! tokenize / inference / fetch shares of the measured turn, plus the
 //! off-path replication sync time stitched from the peer's spans.
 //!
+//! A second supplement sweeps time-to-first-token against concurrency
+//! with the continuous-batching scheduler off vs on (streamed): batching
+//! should hold p50 TTFT near-flat from 1 to 16 concurrent clients while
+//! the sequential path degrades roughly linearly.
+//!
 //! Run: `cargo bench --bench fig3_response_time`
-//! Output: per-turn table + headline medians; CSVs in `results/fig3.csv`
-//! and `results/fig3_breakdown.csv`.
+//! (`DISCEDGE_BENCH_FIG3=ttft` runs only the TTFT sweep — the CI smoke.)
+//! Output: per-turn table + headline medians; CSVs in `results/fig3.csv`,
+//! `results/fig3_breakdown.csv`, and `results/fig3_ttft.csv`.
 
 #[path = "common.rs"]
 mod common;
@@ -30,6 +36,10 @@ use discedge::transport::PeerPool;
 use discedge::workload::Scenario;
 
 fn main() {
+    if std::env::var("DISCEDGE_BENCH_FIG3").as_deref() == Ok("ttft") {
+        ttft_sweep();
+        return;
+    }
     let cluster = common::testbed();
     let scenario = Scenario::robotics_9turn();
     let reps = common::repetitions();
@@ -87,6 +97,114 @@ fn main() {
     }
 
     phase_breakdown();
+    ttft_sweep();
+}
+
+/// TTFT-vs-concurrency sweep: single mock node with realistic per-token
+/// step costs; each point drives N concurrent closed-loop clients (4
+/// turns each, first turn per client discarded as warmup) and records
+/// the client-observed time-to-first-token. The "on" variant enables the
+/// batch scheduler *and* streamed responses — without streaming the
+/// first response byte only leaves the node when decode ends, so TTFT
+/// would be meaningless.
+fn ttft_sweep() {
+    use discedge::client::Client;
+    use discedge::config::{ClusterConfig, EngineKind};
+    use std::sync::{Arc, Barrier};
+
+    const CONCURRENCY: &[usize] = &[1, 2, 4, 8, 16];
+    const TURNS: usize = 4;
+    const MAX_TOKENS: usize = 32;
+    let reps = common::repetitions();
+    eprintln!("[fig3] ttft sweep: conc {CONCURRENCY:?} x batching off/on, {reps} reps");
+
+    let mut table = Table::new(
+        "Fig 3 supplement — TTFT vs concurrency, batching off/on (s)",
+        &["ttft_p50_s", "ttft_p99_s", "e2e_p50_s", "samples"],
+    );
+    let mut p50s: Vec<(String, f64)> = Vec::new();
+    for (mode, batch) in [("off", false), ("on", true)] {
+        for &conc in CONCURRENCY {
+            let mut ttft = Series::new();
+            let mut e2e = Series::new();
+            for _ in 0..reps {
+                let mut cfg = ClusterConfig::single_node_mock();
+                cfg.engine = EngineKind::Mock {
+                    prefill_ns_per_token: 50_000,
+                    decode_ns_per_token: 1_000_000,
+                };
+                if batch {
+                    cfg.inference.enabled = true;
+                    cfg.inference.max_batch = 16;
+                    cfg.inference.queue_depth = 256;
+                    cfg.inference.stream = true;
+                }
+                let cluster = common::launch_fleet_with(cfg);
+                let barrier = Arc::new(Barrier::new(conc));
+                let endpoints = cluster.endpoints();
+                let handles: Vec<_> = (0..conc)
+                    .map(|c| {
+                        let endpoints = endpoints.clone();
+                        let barrier = barrier.clone();
+                        std::thread::spawn(move || {
+                            let mut client =
+                                Client::connect(endpoints, MobilityPolicy::Sticky(0))
+                                    .with_mode(ContextMode::Tokenized)
+                                    .with_model(common::MODEL)
+                                    .with_max_tokens(MAX_TOKENS);
+                            barrier.wait();
+                            let mut samples = Vec::new();
+                            for t in 1..=TURNS {
+                                let r = client
+                                    .chat(&format!("client {c} turn {t}: status report"))
+                                    .expect("sweep turn");
+                                if t > 1 {
+                                    samples.push((r.ttft_s, r.e2e_s));
+                                }
+                            }
+                            samples
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    for (t, e) in h.join().expect("sweep client") {
+                        ttft.push(t);
+                        e2e.push(e);
+                    }
+                }
+            }
+            let label = format!("{mode}/c{conc}");
+            eprintln!(
+                "[fig3]   {label}: ttft p50 {:.4}s p99 {:.4}s ({} samples)",
+                ttft.percentile(50.0),
+                ttft.percentile(99.0),
+                ttft.len()
+            );
+            p50s.push((label.clone(), ttft.percentile(50.0)));
+            table.row(
+                &label,
+                &[
+                    ttft.percentile(50.0),
+                    ttft.percentile(99.0),
+                    e2e.percentile(50.0),
+                    ttft.len() as f64,
+                ],
+            );
+        }
+    }
+    emit(&table, "fig3_ttft.csv");
+
+    let p50 = |label: &str| {
+        p50s.iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN)
+    };
+    println!("\nTTFT headline (batching holds p50 near-flat as concurrency grows):");
+    for mode in ["off", "on"] {
+        let (c1, c16) = (p50(&format!("{mode}/c1")), p50(&format!("{mode}/c16")));
+        println!("  {mode}: c1 {c1:.4}s -> c16 {c16:.4}s  ({:.1}x)", c16 / c1.max(1e-9));
+    }
 }
 
 /// One span as scraped from a node's `GET /trace` ring.

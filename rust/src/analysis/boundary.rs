@@ -20,6 +20,14 @@
 //!   has no level, no subsystem, and no counter. CLI surfaces (`bin/`,
 //!   `main.rs` via the allowlist) and the bench harness (`benchkit.rs`)
 //!   are exempt — stdout *is* their interface.
+//! - `generate-outside-scheduler` — `Engine::generate` /
+//!   `generate_streamed` calls belong to the engine implementations
+//!   (`llm/`) and the batching layer (`runtime/`); anywhere else must
+//!   hold the engine handed down by the server, which is the
+//!   [`crate::runtime::scheduler::BatchScheduler`] wrapper when
+//!   `inference.enabled` is set — a raw engine call there bypasses
+//!   admission control and batch coalescing. The context manager is the
+//!   sanctioned caller and rides the allowlist.
 
 use super::lexer::TokKind;
 use super::model::FileModel;
@@ -73,7 +81,49 @@ pub fn check_file(model: &FileModel, src: &str) -> Vec<Finding> {
     }
     check_default_on(model, &mut findings);
     check_raw_prints(model, &mut findings);
+    check_generate_sites(model, &mut findings);
     findings
+}
+
+/// Layers allowed to call an engine's generate methods directly: the
+/// engine implementations and the batch scheduler. Path-component
+/// match, not suffix — both directories hold several files.
+fn engine_layer(path: &str) -> bool {
+    path.contains("/llm/") || path.contains("/runtime/")
+}
+
+fn check_generate_sites(model: &FileModel, findings: &mut Vec<Finding>) {
+    if engine_layer(&model.path) {
+        return;
+    }
+    let toks = &model.toks;
+    for i in 1..toks.len().saturating_sub(1) {
+        if model.in_tests(i) {
+            continue;
+        }
+        let m = &toks[i];
+        if !(m.is_ident("generate") || m.is_ident("generate_streamed")) {
+            continue;
+        }
+        // A *call* — `x.generate(..)` or `Engine::generate(..)` — not a
+        // definition (`fn generate`) or a bare mention.
+        let called = (toks[i - 1].is_punct(".") || toks[i - 1].is_punct("::"))
+            && toks[i + 1].is_punct("(");
+        if !called {
+            continue;
+        }
+        findings.push(Finding {
+            rule: "generate-outside-scheduler",
+            file: model.path.clone(),
+            line: m.line,
+            message: format!(
+                "{}() on an Engine outside llm/ or runtime/ — use the engine handed \
+                 down by the server (the BatchScheduler wrapper when batching is on) \
+                 so admission control and batch coalescing apply",
+                m.text
+            ),
+        });
+    }
 }
 
 /// Files whose job is to print: binaries and the bench harness.
@@ -397,6 +447,44 @@ mod tests {
     fn negation_is_not_a_print() {
         let src = "fn f(println: bool) -> bool { !println }";
         assert!(check("src/server/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn generate_call_flagged_outside_engine_layer() {
+        let src = "fn f(e: &dyn Engine) { let g = e.generate(&ids, 64, 0); }";
+        let f = check("src/server/mod.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "generate-outside-scheduler");
+        assert!(f[0].message.contains("generate()"), "{}", f[0].message);
+        // The engine and scheduler layers are exempt.
+        assert!(check("src/llm/mock.rs", src).is_empty());
+        assert!(check("src/runtime/scheduler.rs", src).is_empty());
+    }
+
+    #[test]
+    fn generate_streamed_and_path_form_are_flagged() {
+        let src = r#"
+            fn f(e: &dyn Engine) {
+                e.generate_streamed(&ids, 64, 0, &mut cb);
+                let g = Engine::generate(e, &ids, 64, 0);
+            }
+        "#;
+        let f = check("src/cluster/mod.rs", src);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f[0].message.contains("generate_streamed()"));
+    }
+
+    #[test]
+    fn generate_definitions_and_tests_are_not_calls() {
+        let defs = "impl Engine for MockEngine { fn generate(&self, ids: &[u32]) -> G { todo!() } }";
+        assert!(check("src/server/mod.rs", defs).is_empty());
+        let in_tests = r#"
+            #[cfg(test)]
+            mod tests {
+                fn t(e: &dyn Engine) { e.generate(&[1], 4, 0); }
+            }
+        "#;
+        assert!(check("src/server/mod.rs", in_tests).is_empty());
     }
 
     #[test]

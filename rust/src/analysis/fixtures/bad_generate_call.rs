@@ -1,0 +1,16 @@
+//! pallas-lint fixture: raw `Engine::generate` calls outside the
+//! `llm/` and `runtime/` layers must trip `generate-outside-scheduler`
+//! — they bypass the BatchScheduler's admission queue and batch
+//! coalescing when `inference.enabled` is set.
+//!
+//! Not part of the crate — exercised by the lint regression tests.
+
+fn answer_inline(engine: &dyn Engine, ids: &[u32]) -> Generation {
+    // Bad: sidesteps whatever wrapper the server installed.
+    engine.generate(ids, 64, 0)
+}
+
+fn stream_inline(engine: &dyn Engine, ids: &[u32], cb: &mut dyn FnMut(u32)) {
+    // Bad: same, streamed spelling.
+    engine.generate_streamed(ids, 64, 0, cb);
+}

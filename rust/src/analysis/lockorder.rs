@@ -42,6 +42,7 @@ fn class_for(recv: &str) -> Option<&'static str> {
         "forwards" => Some("hints.forwards"),
         "on_evict" => Some("hints.on_evict"),
         "queue" => Some("replicator.queue"),
+        "admission" => Some("scheduler.admission"),
         "idle" => Some("pool.idle"),
         "forest" => Some("merkle.forest"),
         "trees" => Some("merkle.trees"),

@@ -21,7 +21,9 @@ use super::model::FileModel;
 use super::Finding;
 
 /// Subsystem prefixes a metric name may start with.
-pub const PREFIXES: &[&str] = &["cm_", "kv_", "net_", "cluster_", "obs_", "pallas_", "fleet_"];
+pub const PREFIXES: &[&str] = &[
+    "cm_", "kv_", "net_", "cluster_", "obs_", "pallas_", "fleet_", "llm_",
+];
 
 /// Run the metric-name lint over one file.
 pub fn check_file(model: &FileModel) -> Vec<Finding> {

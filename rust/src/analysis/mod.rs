@@ -13,8 +13,9 @@
 //!
 //! - `lock-cycle` / `stripe-held` — lock-order analysis over an
 //!   approximate call graph ([`lockorder`]).
-//! - `conn-outside-transport`, `unwrap-io`, `default-on`, `raw-print`
-//!   — layering and robustness lints ([`boundary`]).
+//! - `conn-outside-transport`, `unwrap-io`, `default-on`, `raw-print`,
+//!   `generate-outside-scheduler` — layering and robustness lints
+//!   ([`boundary`]).
 //! - `metric-name` — metric literals passed to the registry must be
 //!   snake_case with a known subsystem prefix; distance-1 near-miss
 //!   pairs are typo-duplicates ([`metricname`]).
@@ -213,6 +214,7 @@ mod tests {
             ("bad_default_on.rs", "default-on"),
             ("bad_print.rs", "raw-print"),
             ("bad_metric_name.rs", "metric-name"),
+            ("bad_generate_call.rs", "generate-outside-scheduler"),
         ];
         for (name, rule) in cases {
             let findings = lint_fixture(name);

@@ -80,6 +80,12 @@ pub struct TurnResult {
     pub response: CompletionResponse,
     /// End-to-end client-observed seconds.
     pub e2e_s: f64,
+    /// Seconds from finishing the request write to the first response
+    /// byte. Against a streaming server the response head is only sent
+    /// once the first token exists, so this is the client-observed
+    /// time-to-first-token; against a buffered server head and body
+    /// arrive together and this converges to `e2e_s`.
+    pub ttft_s: f64,
     /// Request bytes on the wire (HTTP head + body).
     pub request_bytes: u64,
     /// Response bytes on the wire.
@@ -215,7 +221,10 @@ impl Client {
         let tx0 = meter.tx.get();
         let rx0 = meter.rx.get();
         let t = Instant::now();
-        let http_resp = pool.round_trip(addr, &Request::post_json("/completion", &req.to_json()))?;
+        let (http_resp, ttft_s) = {
+            let mut conn = pool.checkout(addr)?;
+            conn.round_trip_ttft(&Request::post_json("/completion", &req.to_json()))?
+        };
         let e2e_s = t.elapsed().as_secs_f64();
         if http_resp.status != 200 {
             return Err(Error::Http(format!(
@@ -240,6 +249,7 @@ impl Client {
 
         Ok(TurnResult {
             e2e_s,
+            ttft_s,
             request_bytes: meter.tx.get() - tx0,
             response_bytes: meter.rx.get() - rx0,
             node: node_name,

@@ -109,6 +109,34 @@ impl Default for GenerationConfig {
     }
 }
 
+/// Inference scheduler: admission queue + continuous batching in front of
+/// the engine, and streamed (chunked) `/completion` responses (default off:
+/// every request runs solo through `Engine::generate` and the response is
+/// buffered — byte-for-byte the seed's wire behaviour).
+#[derive(Debug, Clone)]
+pub struct InferenceConfig {
+    /// Route completions through the batch scheduler.
+    pub enabled: bool,
+    /// Max sequences decoded together per step.
+    pub max_batch: usize,
+    /// Admission queue bound; requests beyond it are rejected with 503.
+    pub queue_depth: usize,
+    /// Stream tokens to the client as decode steps complete (chunked
+    /// transfer) instead of buffering the full response.
+    pub stream: bool,
+}
+
+impl Default for InferenceConfig {
+    fn default() -> InferenceConfig {
+        InferenceConfig {
+            enabled: false,
+            max_batch: 8,
+            queue_depth: 64,
+            stream: false,
+        }
+    }
+}
+
 /// Session placement across the nodes of a keygroup (consistent-hash ring,
 /// see [`crate::kvstore::HashRing`]).
 #[derive(Debug, Clone)]
@@ -197,6 +225,10 @@ pub struct ClusterConfig {
     /// append rollup snapshots to a CSV (default off: no poller thread,
     /// no scrape traffic, no files).
     pub fleet: crate::obs::fleet::FleetConfig,
+    /// Inference scheduler: admission queue, continuous batching, and
+    /// streamed responses (default off: solo `generate` per request,
+    /// buffered responses — the seed's wire behaviour).
+    pub inference: InferenceConfig,
     /// Turn-counter protocol settings.
     pub consistency: ConsistencyConfig,
     /// Generation settings.
@@ -241,6 +273,7 @@ impl ClusterConfig {
             storage: StorageConfig::default(),
             observability: crate::obs::ObservabilityConfig::default(),
             fleet: crate::obs::fleet::FleetConfig::default(),
+            inference: InferenceConfig::default(),
             consistency: ConsistencyConfig::default(),
             generation: GenerationConfig::default(),
             engine: EngineKind::Pjrt,
@@ -439,6 +472,20 @@ impl ClusterConfig {
                 cfg.fleet.out = PathBuf::from(o);
             }
         }
+        if let Some(i) = v.get("inference") {
+            if let Some(e) = i.get("enabled").and_then(|x| x.as_bool()) {
+                cfg.inference.enabled = e;
+            }
+            if let Some(b) = i.get("max_batch").and_then(|x| x.as_u64()) {
+                cfg.inference.max_batch = b as usize;
+            }
+            if let Some(q) = i.get("queue_depth").and_then(|x| x.as_u64()) {
+                cfg.inference.queue_depth = q as usize;
+            }
+            if let Some(s) = i.get("stream").and_then(|x| x.as_bool()) {
+                cfg.inference.stream = s;
+            }
+        }
         if let Some(t) = v.get("transport") {
             if let Some(n) = t.get("max_server_conns").and_then(|x| x.as_u64()) {
                 cfg.transport.max_server_conns = n as usize;
@@ -536,6 +583,14 @@ impl ClusterConfig {
             }
             if self.fleet.out.as_os_str().is_empty() {
                 return Err(Error::Config("fleet.out must be set".into()));
+            }
+        }
+        if self.inference.enabled {
+            if self.inference.max_batch == 0 {
+                return Err(Error::Config("inference.max_batch must be >= 1".into()));
+            }
+            if self.inference.queue_depth == 0 {
+                return Err(Error::Config("inference.queue_depth must be >= 1".into()));
             }
         }
         Ok(())
@@ -795,6 +850,41 @@ mod tests {
         assert!(
             ClusterConfig::from_json(r#"{"engine": "mock", "fleet": {"poll_ms": 0}}"#).is_ok(),
             "degenerate knobs are inert while the aggregator is off"
+        );
+    }
+
+    #[test]
+    fn inference_defaults_off_and_parses() {
+        // The seed's serving path (solo generate, buffered responses)
+        // must stay the default.
+        let cfg = ClusterConfig::two_node_testbed();
+        assert!(!cfg.inference.enabled);
+        assert_eq!(cfg.inference.max_batch, 8);
+        assert_eq!(cfg.inference.queue_depth, 64);
+        assert!(!cfg.inference.stream);
+        let cfg = ClusterConfig::from_json(
+            r#"{
+              "engine": "mock",
+              "inference": {"enabled": true, "max_batch": 16,
+                            "queue_depth": 256, "stream": true}
+            }"#,
+        )
+        .unwrap();
+        assert!(cfg.inference.enabled);
+        assert_eq!(cfg.inference.max_batch, 16);
+        assert_eq!(cfg.inference.queue_depth, 256);
+        assert!(cfg.inference.stream);
+        // Degenerate knobs are rejected (only once enabled).
+        for bad in [
+            r#"{"engine": "mock", "inference": {"enabled": true, "max_batch": 0}}"#,
+            r#"{"engine": "mock", "inference": {"enabled": true, "queue_depth": 0}}"#,
+        ] {
+            assert!(ClusterConfig::from_json(bad).is_err(), "{bad}");
+        }
+        assert!(
+            ClusterConfig::from_json(r#"{"engine": "mock", "inference": {"max_batch": 0}}"#)
+                .is_ok(),
+            "degenerate knobs are inert while the scheduler is off"
         );
     }
 

@@ -23,7 +23,7 @@ pub mod codec;
 mod protocol;
 
 pub use codec::{base64_decode, base64_encode, StoredContext, TokenCodec};
-pub use protocol::{CompletionRequest, CompletionResponse, Timings};
+pub use protocol::{CompletionRequest, CompletionResponse, StreamFraming, Timings};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -103,6 +103,24 @@ impl ContextManager {
 
     /// Handle one `/completion` request against `engine`.
     pub fn handle(&self, req: &CompletionRequest, engine: &dyn Engine) -> Result<CompletionResponse> {
+        self.handle_with_sink(req, engine, None)
+    }
+
+    /// [`ContextManager::handle`] with optional incremental output: when
+    /// `sink` is given, response **body bytes** are pushed to it as the
+    /// engine produces tokens, framed by [`StreamFraming`] so the
+    /// concatenated frames equal the buffered `to_json` body exactly.
+    /// The sink is first called when the first token exists (never for
+    /// a zero-token generation — the caller falls back to the buffered
+    /// response it gets back from this method), and last called with
+    /// the body tail after the context update has been queued, so the
+    /// turn-commit ordering matches the buffered path.
+    pub fn handle_with_sink(
+        &self,
+        req: &CompletionRequest,
+        engine: &dyn Engine,
+        mut sink: Option<&mut dyn FnMut(&str)>,
+    ) -> Result<CompletionResponse> {
         let start = Instant::now();
         if req.model != engine.model_name() {
             return Err(Error::BadRequest(format!(
@@ -203,7 +221,56 @@ impl ContextManager {
         // wall time to the emulated device class and the timings expose
         // the device-perceived cost (what the paper's TPS metric divides
         // by).
-        let gen = engine.generate(&input_ids, max_tokens, self.template.stop_id())?;
+        let stop_id = self.template.stop_id();
+        let mut framing: Option<StreamFraming> = None;
+        let gen = match &mut sink {
+            None => engine.generate(&input_ids, max_tokens, stop_id)?,
+            Some(sink) => {
+                // Streamed inference. Every field of the body head that
+                // serializes before `text` is already final here: the
+                // ids are assigned and prefill covers exactly the input
+                // ids (every engine reports its full input as
+                // `prefill_tokens`). Token ids re-decode in full each
+                // step and only the stable extension past what was
+                // already emitted goes out — a token can end mid-UTF-8
+                // sequence, where the lossy decode's trailing
+                // replacement chars are provisional, so those are held
+                // back until a later token completes them.
+                let head = CompletionResponse {
+                    text: String::new(),
+                    user_id: user_id.clone(),
+                    session_id: session_id.clone(),
+                    turn: req.turn,
+                    tokens_generated: 0,
+                    prefill_tokens: input_ids.len(),
+                    node: self.node.clone(),
+                    timings: Timings::default(),
+                };
+                let mut ids: Vec<u32> = Vec::new();
+                let mut emitted = String::new();
+                let mut on_token = |id: u32| {
+                    ids.push(id);
+                    let framing = framing.get_or_insert_with(|| {
+                        let (framing, head_bytes) = StreamFraming::begin(&head);
+                        sink(&head_bytes);
+                        framing
+                    });
+                    let text = self.template.decode(&ids);
+                    let stable = text.trim_end_matches('\u{fffd}');
+                    if let Some(suffix) = stable.strip_prefix(emitted.as_str()) {
+                        if !suffix.is_empty() {
+                            sink(&framing.fragment(suffix));
+                            emitted.push_str(suffix);
+                        }
+                    }
+                };
+                engine.generate_streamed(&input_ids, max_tokens, stop_id, &mut on_token)?
+            }
+        };
+        debug_assert!(
+            framing.is_none() || gen.prefill_tokens == input_ids.len(),
+            "streamed body head fixed prefill_tokens before the engine reported a different count"
+        );
         self.profile.extend_inference(gen.prefill_s + gen.decode_s);
         timings.prefill_s = self.profile.scaled_inference_s(gen.prefill_s);
         timings.decode_s = self.profile.scaled_inference_s(gen.decode_s);
@@ -226,7 +293,7 @@ impl ContextManager {
         self.registry.observe("cm_request_s", timings.total_s);
         self.registry
             .incr("cm_retries_total", timings.retries);
-        Ok(CompletionResponse {
+        let resp = CompletionResponse {
             text: response_text,
             user_id,
             session_id,
@@ -235,7 +302,14 @@ impl ContextManager {
             prefill_tokens: gen.prefill_tokens,
             node: self.node.clone(),
             timings,
-        })
+        };
+        // Streamed and at least one token went out: close the body with
+        // everything past the emitted bytes (unsent text tail, closing
+        // quote, timings and counters).
+        if let (Some(framing), Some(sink)) = (framing, &mut sink) {
+            sink(&framing.finish(&resp));
+        }
+        Ok(resp)
     }
 
     /// Assign user/session ids when absent (paper §3.1).
@@ -548,6 +622,38 @@ mod tests {
         assert!(resp.session_id.starts_with("s-"));
         assert_eq!(resp.turn, 1);
         assert_eq!(resp.tokens_generated, 16);
+    }
+
+    #[test]
+    fn sink_frames_reassemble_to_the_returned_body() {
+        let cm = make_cm(make_kv());
+        let e = engine();
+        let req = CompletionRequest::new(MODEL, "hello robot", 1, ContextMode::Tokenized);
+
+        // Buffered reference: the engine is deterministic in its input
+        // ids, so a fresh session with the same prompt generates the
+        // same text.
+        let buffered = cm.handle(&req, &e).unwrap();
+
+        let mut frames: Vec<String> = Vec::new();
+        let mut sink = |f: &str| frames.push(f.to_string());
+        let resp = cm
+            .handle_with_sink(&req, &e, Some(&mut sink))
+            .unwrap();
+
+        // The concatenated frames are the returned body, byte for byte.
+        let body: String = frames.concat();
+        assert_eq!(body, resp.to_json());
+        assert!(
+            frames.len() >= 3,
+            "expected head + fragments + tail, got {} frames",
+            frames.len()
+        );
+        assert_eq!(resp.text, buffered.text, "streaming must not change the transcript");
+        // And the reassembled body parses back to the same response.
+        let back = CompletionResponse::from_json(&body).unwrap();
+        assert_eq!(back.text, resp.text);
+        assert_eq!(back.tokens_generated, resp.tokens_generated);
     }
 
     #[test]

@@ -225,6 +225,77 @@ impl CompletionResponse {
     }
 }
 
+/// Marker for where the generated text begins inside the serialized
+/// body. The octet run cannot occur earlier inside a field value:
+/// quotes in values are escaped to `\"` by the serializer.
+const TEXT_MARK: &str = "\"text\":\"";
+
+/// Incremental body framing for a streamed `/completion` response.
+///
+/// Contract (pinned by `tests/batching.rs`): concatenating every frame
+/// yields byte-for-byte the buffered [`CompletionResponse::to_json`]
+/// body, so a client that reassembles the chunked stream parses the
+/// exact JSON it would have received unstreamed. Object keys serialize
+/// in sorted order, which places `"text"` mid-object; every field that
+/// sorts before it (`node`, `prefill_tokens`, `session_id`) is final
+/// once prefill has run — before the first token exists. The framer
+/// therefore emits:
+///
+/// 1. [`StreamFraming::begin`] — the serialized head up to and
+///    including `"text":"`, sliced from a probe serialization with
+///    empty text, sent when the first token arrives;
+/// 2. [`StreamFraming::fragment`] — each decoded text fragment escaped
+///    with the serializer's own rules (escaping is per character, so
+///    fragment-wise escaping concatenates exactly);
+/// 3. [`StreamFraming::finish`] — everything past the already-emitted
+///    bytes of the final serialization: any unsent text tail, the
+///    closing quote, and the fields sorted after `text` (timings and
+///    counters, which only exist once generation completes).
+///
+/// Invariants the caller upholds: the `head` passed to `begin` carries
+/// the same `node`, `prefill_tokens`, and `session_id` as the response
+/// passed to `finish`, and the concatenated fragment texts form a
+/// prefix of that response's `text`.
+pub struct StreamFraming {
+    /// Bytes of the final serialization already handed out.
+    emitted: usize,
+}
+
+impl StreamFraming {
+    /// Start a stream: returns the framer and the body head, emitted
+    /// when the first token arrives. `head`'s text, timings, and
+    /// token counters are ignored — only fields sorted before `text`
+    /// reach the wire here.
+    pub fn begin(head: &CompletionResponse) -> (StreamFraming, String) {
+        let probe = CompletionResponse {
+            text: String::new(),
+            ..head.clone()
+        };
+        let full = probe.to_json();
+        let cut = full
+            .find(TEXT_MARK)
+            .expect("serialized completion response has a text field")
+            + TEXT_MARK.len();
+        (StreamFraming { emitted: cut }, full[..cut].to_string())
+    }
+
+    /// Frame one decoded text fragment.
+    pub fn fragment(&mut self, text: &str) -> String {
+        let mut out = String::with_capacity(text.len() + 8);
+        json::escape_fragment(text, &mut out);
+        self.emitted += out.len();
+        out
+    }
+
+    /// Close the stream: the remainder of the final body past the
+    /// bytes already emitted.
+    pub fn finish(self, resp: &CompletionResponse) -> String {
+        let full = resp.to_json();
+        debug_assert!(full.is_char_boundary(self.emitted));
+        full[self.emitted..].to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +366,78 @@ mod tests {
         assert_eq!(back.text, "hi there");
         assert_eq!(back.timings, resp.timings);
         assert_eq!(back.prefill_tokens, 310);
+    }
+
+    fn sample_response(text: &str) -> CompletionResponse {
+        CompletionResponse {
+            text: text.into(),
+            user_id: "u".into(),
+            session_id: "s-1".into(),
+            turn: 3,
+            tokens_generated: 7,
+            prefill_tokens: 12,
+            node: "edge-n1".into(),
+            timings: Timings {
+                tokenize_s: 0.001,
+                prefill_s: 0.05,
+                decode_s: 0.4,
+                fetch_s: 0.0002,
+                retries: 0,
+                total_s: 0.46,
+            },
+        }
+    }
+
+    #[test]
+    fn stream_framing_reassembles_to_the_buffered_body() {
+        // Fragments with every escape class: quote, backslash, newline,
+        // control char, multi-byte unicode.
+        let frags = ["hel", "lo \"wor", "ld\"\\", "\n\u{1} caf\u{e9} ≈", " done"];
+        let resp = sample_response(&frags.concat());
+        let head = CompletionResponse {
+            text: String::new(),
+            ..resp.clone()
+        };
+        let (mut framing, mut body) = StreamFraming::begin(&head);
+        assert!(body.ends_with(TEXT_MARK));
+        for f in frags {
+            body.push_str(&framing.fragment(f));
+        }
+        body.push_str(&framing.finish(&resp));
+        assert_eq!(body, resp.to_json());
+        let back = CompletionResponse::from_json(&body).unwrap();
+        assert_eq!(back.text, resp.text);
+    }
+
+    #[test]
+    fn stream_framing_finish_carries_the_unsent_tail() {
+        // Only a prefix of the text was streamed (e.g. the tail decoded
+        // after the last step); finish must still complete the body.
+        let resp = sample_response("alpha beta");
+        let head = CompletionResponse {
+            text: String::new(),
+            ..resp.clone()
+        };
+        let (mut framing, mut body) = StreamFraming::begin(&head);
+        body.push_str(&framing.fragment("alpha "));
+        body.push_str(&framing.finish(&resp));
+        assert_eq!(body, resp.to_json());
+    }
+
+    #[test]
+    fn stream_framing_head_survives_hostile_ids() {
+        // A session id containing the text marker must not confuse the
+        // head slice: quotes inside values are escaped on the wire.
+        let mut resp = sample_response("ok");
+        resp.session_id = "evil\"text\":\"x".into();
+        let head = CompletionResponse {
+            text: String::new(),
+            ..resp.clone()
+        };
+        let (mut framing, mut body) = StreamFraming::begin(&head);
+        body.push_str(&framing.fragment("ok"));
+        body.push_str(&framing.finish(&resp));
+        assert_eq!(body, resp.to_json());
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -91,15 +92,45 @@ impl Request {
     }
 }
 
+/// Lazily produced body chunks of a streamed response. The connection
+/// thread drains the receiver and writes each buffer as one HTTP/1.1
+/// chunk frame (flushed per chunk); when every sender is dropped it
+/// writes the zero-length terminator, so the concatenated chunks are
+/// exactly the body a buffered response would have carried.
+pub struct BodyStream(pub Receiver<Vec<u8>>);
+
+impl std::fmt::Debug for BodyStream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("BodyStream")
+    }
+}
+
 /// An HTTP response.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Response {
     /// Status code.
     pub status: u16,
     /// Lower-cased header map.
     pub headers: BTreeMap<String, String>,
-    /// Raw body bytes.
+    /// Raw body bytes (buffered responses; empty when streaming).
     pub body: Vec<u8>,
+    /// When set, the body is written as chunked transfer-encoding from
+    /// this receiver instead of `body` — the streamed `/completion`
+    /// path. Server-internal: clients always see a parsed `body`.
+    pub stream: Option<BodyStream>,
+}
+
+impl Clone for Response {
+    /// A body stream is single-consumer and never leaves the serving
+    /// thread; clones carry the buffered fields only.
+    fn clone(&self) -> Response {
+        Response {
+            status: self.status,
+            headers: self.headers.clone(),
+            body: self.body.clone(),
+            stream: None,
+        }
+    }
 }
 
 impl Response {
@@ -111,6 +142,20 @@ impl Response {
             status: 200,
             headers,
             body: json.as_bytes().to_vec(),
+            stream: None,
+        }
+    }
+
+    /// 200 whose JSON body arrives incrementally from `rx`; written as
+    /// chunked transfer-encoding by the connection thread.
+    pub fn streamed_json(rx: Receiver<Vec<u8>>) -> Response {
+        let mut headers = BTreeMap::new();
+        headers.insert("content-type".into(), "application/json".into());
+        Response {
+            status: 200,
+            headers,
+            body: Vec::new(),
+            stream: Some(BodyStream(rx)),
         }
     }
 
@@ -122,6 +167,7 @@ impl Response {
             status: 200,
             headers,
             body: text.as_bytes().to_vec(),
+            stream: None,
         }
     }
 
@@ -134,12 +180,12 @@ impl Response {
             status,
             headers,
             body: body.into_bytes(),
+            stream: None,
         }
     }
 
-    /// Serialize into a single wire buffer.
-    pub fn to_bytes(&self) -> Vec<u8> {
-        let reason = match self.status {
+    fn reason(&self) -> &'static str {
+        match self.status {
             200 => "OK",
             400 => "Bad Request",
             404 => "Not Found",
@@ -149,8 +195,13 @@ impl Response {
             500 => "Internal Server Error",
             503 => "Service Unavailable",
             _ => "Status",
-        };
-        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, reason);
+        }
+    }
+
+    /// Serialize into a single wire buffer (buffered responses — the
+    /// seed wire format, byte for byte).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, self.reason());
         for (k, v) in &self.headers {
             head.push_str(&format!("{k}: {v}\r\n"));
         }
@@ -158,6 +209,17 @@ impl Response {
         let mut out = head.into_bytes();
         out.extend_from_slice(&self.body);
         out
+    }
+
+    /// Head of a streamed response: `transfer-encoding: chunked`, no
+    /// content-length (the body length is unknown until decode ends).
+    fn chunked_head_bytes(&self) -> Vec<u8> {
+        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, self.reason());
+        for (k, v) in &self.headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("transfer-encoding: chunked\r\n\r\n");
+        head.into_bytes()
     }
 
     /// Body as UTF-8.
@@ -252,6 +314,39 @@ fn read_body<R: BufRead>(
     Ok(body)
 }
 
+/// Read a chunked transfer-encoded body to completion (the client side
+/// of a streamed response), enforcing the same [`MAX_BODY`] cap as the
+/// content-length path.
+fn read_chunked<R: BufRead>(r: &mut R) -> std::result::Result<Vec<u8>, ParseAbort> {
+    let mut body = Vec::new();
+    loop {
+        let mut line = String::new();
+        let n = r.read_line(&mut line).map_err(|_| ParseAbort::Closed)?;
+        if n == 0 {
+            return Err(ParseAbort::Closed);
+        }
+        let len = usize::from_str_radix(line.trim_end(), 16)
+            .map_err(|_| ParseAbort::Malformed(format!("bad chunk size {:?}", line.trim_end())))?;
+        if len == 0 {
+            // Trailer-free terminator: consume the final CRLF.
+            let mut end = String::new();
+            r.read_line(&mut end).map_err(|_| ParseAbort::Closed)?;
+            return Ok(body);
+        }
+        if body.len() + len > MAX_BODY {
+            return Err(ParseAbort::BodyTooLarge);
+        }
+        let start = body.len();
+        body.resize(start + len, 0);
+        r.read_exact(&mut body[start..]).map_err(|_| ParseAbort::Closed)?;
+        let mut crlf = [0u8; 2];
+        r.read_exact(&mut crlf).map_err(|_| ParseAbort::Closed)?;
+        if &crlf != b"\r\n" {
+            return Err(ParseAbort::Malformed("chunk missing trailing CRLF".into()));
+        }
+    }
+}
+
 fn read_request_checked<R: BufRead>(r: &mut R) -> std::result::Result<Request, ParseAbort> {
     let (start, headers) = read_head(r)?;
     let mut parts = start.split_whitespace();
@@ -277,7 +372,9 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request> {
     read_request_checked(r).map_err(ParseAbort::into_error)
 }
 
-/// Parse one response from a buffered stream.
+/// Parse one response from a buffered stream. Chunked transfer-encoded
+/// bodies (streamed `/completion`) are reassembled to completion, so
+/// callers see the same `body` either way.
 pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response> {
     let (start, headers) = read_head(r).map_err(ParseAbort::into_error)?;
     let status: u16 = start
@@ -285,11 +382,19 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| Error::Http(format!("bad status line {start:?}")))?;
-    let body = read_body(r, &headers).map_err(ParseAbort::into_error)?;
+    let chunked = headers
+        .get("transfer-encoding")
+        .is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
+    let body = if chunked {
+        read_chunked(r).map_err(ParseAbort::into_error)?
+    } else {
+        read_body(r, &headers).map_err(ParseAbort::into_error)?
+    };
     Ok(Response {
         status,
         headers,
         body,
+        stream: None,
     })
 }
 
@@ -349,6 +454,49 @@ impl Connection {
         self.stream.get_mut().flush()?;
         read_response(&mut self.stream)
     }
+
+    /// [`Connection::round_trip`] that also reports seconds until the
+    /// **first response byte** arrived. Buffered responses go out in one
+    /// write, so first byte ≈ whole response; a streamed response's head
+    /// is only sent once the first token exists, so first byte is the
+    /// time-to-first-token the client actually experienced.
+    pub fn round_trip_ttft(&mut self, req: &Request) -> Result<(Response, f64)> {
+        let bytes = req.to_bytes();
+        self.stream.get_mut().write_all(&bytes)?;
+        self.stream.get_mut().flush()?;
+        let t0 = std::time::Instant::now();
+        if self.stream.fill_buf()?.is_empty() {
+            return Err(Error::Http("connection closed before response".into()));
+        }
+        let ttft_s = t0.elapsed().as_secs_f64();
+        let resp = read_response(&mut self.stream)?;
+        Ok((resp, ttft_s))
+    }
+}
+
+/// Write a streamed response: head first, then one HTTP/1.1 chunk frame
+/// per received buffer (flushed immediately so tokens reach the client
+/// as decode steps complete), then the zero-length terminator once the
+/// producer drops its sender. Each frame goes out in a single write, so
+/// the link model charges one message per chunk. Returns `false` on a
+/// dead connection (the producer then sees send errors and stops).
+fn write_streamed<W: Write>(w: &mut W, resp: &Response, rx: Receiver<Vec<u8>>) -> bool {
+    if w.write_all(&resp.chunked_head_bytes()).is_err() || w.flush().is_err() {
+        return false;
+    }
+    for chunk in rx.iter() {
+        if chunk.is_empty() {
+            // An empty frame would terminate the body early.
+            continue;
+        }
+        let mut frame = format!("{:x}\r\n", chunk.len()).into_bytes();
+        frame.extend_from_slice(&chunk);
+        frame.extend_from_slice(b"\r\n");
+        if w.write_all(&frame).is_err() || w.flush().is_err() {
+            return false;
+        }
+    }
+    w.write_all(b"0\r\n\r\n").is_ok() && w.flush().is_ok()
 }
 
 /// Handler signature for the threaded server.
@@ -698,12 +846,21 @@ fn accept_loop(
                             // duration, so remote work stitches under
                             // the originating turn's trace id.
                             let _trace = crate::obs::enter_inbound(&req);
-                            let resp = handler(&req);
-                            let bytes = resp.to_bytes();
-                            if reader.get_mut().write_all(&bytes).is_err() {
-                                break;
+                            let mut resp = handler(&req);
+                            match resp.stream.take() {
+                                Some(BodyStream(rx)) => {
+                                    if !write_streamed(reader.get_mut(), &resp, rx) {
+                                        break;
+                                    }
+                                }
+                                None => {
+                                    let bytes = resp.to_bytes();
+                                    if reader.get_mut().write_all(&bytes).is_err() {
+                                        break;
+                                    }
+                                    let _ = reader.get_mut().flush();
+                                }
                             }
-                            let _ = reader.get_mut().flush();
                         }
                         Err(ParseAbort::HeadTooLarge) => {
                             let resp = closing(Response::error(431, "request head too large"));
@@ -947,6 +1104,79 @@ mod tests {
         server.request_stop();
         // The "crashed" server must not serve the in-flight connection.
         assert!(conn.round_trip(&Request::post_json("/echo", "{}")).is_err());
+    }
+
+    #[test]
+    fn chunked_response_reassembles_byte_identically() {
+        // A streamed body must parse to exactly the bytes a buffered
+        // response would have carried — the invariant `tests/batching.rs`
+        // pins end-to-end for `/completion`.
+        let full = br#"{"text":"hello streamed world","turn":3}"#.to_vec();
+        let parts = [&full[..9], &full[9..20], &full[20..]];
+        let server = {
+            let full = full.clone();
+            Server::serve(
+                0,
+                LinkModel::ideal(),
+                Arc::new(move |req: &Request| {
+                    if req.path == "/stream" {
+                        let (tx, rx) = std::sync::mpsc::channel();
+                        let full = full.clone();
+                        std::thread::spawn(move || {
+                            tx.send(full[..9].to_vec()).unwrap();
+                            tx.send(full[9..20].to_vec()).unwrap();
+                            tx.send(Vec::new()).unwrap(); // empty frames are skipped
+                            tx.send(full[20..].to_vec()).unwrap();
+                        });
+                        Response::streamed_json(rx)
+                    } else {
+                        Response::json(std::str::from_utf8(&full).unwrap())
+                    }
+                }),
+            )
+            .unwrap()
+        };
+        assert_eq!(parts.concat(), full);
+        let mut conn =
+            Connection::open(server.addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+        let streamed = conn.round_trip(&Request::get("/stream")).unwrap();
+        assert_eq!(streamed.status, 200);
+        assert_eq!(
+            streamed.headers.get("transfer-encoding").map(String::as_str),
+            Some("chunked")
+        );
+        let buffered = conn.round_trip(&Request::get("/full")).unwrap();
+        assert_eq!(streamed.body, buffered.body);
+        // Keep-alive survives a streamed exchange.
+        let again = conn.round_trip(&Request::get("/full")).unwrap();
+        assert_eq!(again.body, full);
+    }
+
+    #[test]
+    fn read_chunked_rejects_garbage() {
+        let mut r = std::io::BufReader::new(std::io::Cursor::new(
+            b"HTTP/1.1 200 OK\r\ntransfer-encoding: chunked\r\n\r\nzz\r\nabc\r\n".to_vec(),
+        ));
+        let err = read_response(&mut r).unwrap_err();
+        assert!(err.to_string().contains("bad chunk size"), "{err}");
+        // Truncated mid-chunk: reported as a closed connection, not a
+        // silent short body.
+        let mut r = std::io::BufReader::new(std::io::Cursor::new(
+            b"HTTP/1.1 200 OK\r\ntransfer-encoding: chunked\r\n\r\nff\r\nabc".to_vec(),
+        ));
+        assert!(read_response(&mut r).is_err());
+    }
+
+    #[test]
+    fn round_trip_ttft_reports_first_byte_time() {
+        let server = echo_server();
+        let mut conn =
+            Connection::open(server.addr, TrafficMeter::new(), LinkModel::ideal()).unwrap();
+        let (resp, ttft_s) = conn
+            .round_trip_ttft(&Request::post_json("/echo", r#"{"x":1}"#))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(ttft_s >= 0.0 && ttft_s < 5.0, "{ttft_s}");
     }
 
     #[test]

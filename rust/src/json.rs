@@ -262,6 +262,17 @@ fn write_i64(mut v: i64, buf: &mut [u8; 20]) -> &str {
 
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
+    escape_fragment(s, out);
+    out.push('"');
+}
+
+/// Escape `s` into `out` with the string-literal escaping rules, minus
+/// the surrounding quotes. Escaping is context-free per character, so
+/// escaping fragments and concatenating equals escaping the
+/// concatenation — the property the streamed `/completion` body writer
+/// relies on to frame generated text incrementally while staying
+/// byte-identical to the buffered [`Value::to_json`] serialization.
+pub(crate) fn escape_fragment(s: &str, out: &mut String) {
     for c in s.chars() {
         match c {
             '"' => out.push_str("\\\""),
@@ -277,7 +288,6 @@ fn write_escaped(s: &str, out: &mut String) {
             c => out.push(c),
         }
     }
-    out.push('"');
 }
 
 impl From<&str> for Value {

@@ -81,6 +81,9 @@ pub enum Error {
     Config(String),
     /// Invalid client request.
     BadRequest(String),
+    /// Node is temporarily over capacity (admission queue full) — maps
+    /// to HTTP 503; the client may retry.
+    Unavailable(String),
 }
 
 impl std::fmt::Display for Error {
@@ -97,6 +100,7 @@ impl std::fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime: {m}"),
             Error::Config(m) => write!(f, "config: {m}"),
             Error::BadRequest(m) => write!(f, "bad request: {m}"),
+            Error::Unavailable(m) => write!(f, "unavailable: {m}"),
         }
     }
 }

@@ -6,10 +6,19 @@
 //! different "nodes") agree — mirroring the paper's fixed seed /
 //! temperature-0 configuration where both edge nodes produce identical
 //! outputs for identical context.
+//!
+//! Cost fidelity matters here: the TTFT benchmarks read this emulation.
+//! Decode cost is charged **per step** (one sleep per generated token,
+//! not one bulk sleep at the end), a single `device` lock serializes
+//! emulated device work exactly like the PJRT engine's single executor
+//! thread, and the step API charges `base_step_ns + per_seq_step_ns *
+//! batch` per decode step — the fixed-cost-dominated step model that
+//! makes continuous batching pay off on real accelerators.
 
-use std::time::Duration;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
-use super::{Engine, GenOutput};
+use super::{Engine, GenOutput, StepInner, StepState};
 use crate::testkit::Rng;
 use crate::Result;
 
@@ -20,10 +29,20 @@ pub struct MockEngine {
     max_context: usize,
     /// Emulated prefill cost per context token.
     pub prefill_ns_per_token: u64,
-    /// Emulated decode cost per generated token.
+    /// Emulated decode cost per generated token (solo: a batch-of-one
+    /// decode step costs exactly this).
     pub decode_ns_per_token: u64,
     /// Fixed number of tokens to generate (None = input-dependent).
     pub fixed_len: Option<usize>,
+    /// Explicit step cost model (`with_step_costs`); derived from
+    /// `decode_ns_per_token` when unset.
+    step_costs: Option<(u64, u64)>,
+    /// Single emulated device: the PJRT engine executes one request at a
+    /// time on its engine thread, so the mock holds this lock for every
+    /// emulated device sleep. Without it, concurrent `generate` calls
+    /// would overlap their sleeps and emulate N free accelerators —
+    /// hiding exactly the queueing the batching scheduler removes.
+    device: Mutex<()>,
 }
 
 impl MockEngine {
@@ -36,6 +55,8 @@ impl MockEngine {
             prefill_ns_per_token: 0,
             decode_ns_per_token: 0,
             fixed_len: None,
+            step_costs: None,
+            device: Mutex::new(()),
         }
     }
 
@@ -57,6 +78,33 @@ impl MockEngine {
         self.max_context = n;
         self
     }
+
+    /// Builder: explicit per-step batch cost model — a decode step over
+    /// `batch` sequences sleeps `base_ns + per_seq_ns * batch`.
+    pub fn with_step_costs(mut self, base_ns: u64, per_seq_ns: u64) -> MockEngine {
+        self.step_costs = Some((base_ns, per_seq_ns));
+        self
+    }
+
+    /// The step cost model `(base_ns, per_seq_ns)`. The default derives
+    /// both from `decode_ns_per_token` with a 31:1 fixed-to-marginal
+    /// split (weight streaming and launch overhead dominate a step on
+    /// small-batch edge accelerators), keeping a batch of one at exactly
+    /// the solo per-token decode cost.
+    fn step_cost_model(&self) -> (u64, u64) {
+        self.step_costs.unwrap_or_else(|| {
+            let per_seq = self.decode_ns_per_token / 32;
+            (self.decode_ns_per_token - per_seq, per_seq)
+        })
+    }
+
+    /// Sleep `ns` while holding the device lock (one emulated device).
+    fn device_sleep(&self, ns: u64) {
+        let _device = self.device.lock().unwrap();
+        if ns > 0 {
+            std::thread::sleep(Duration::from_nanos(ns));
+        }
+    }
 }
 
 /// FNV-1a over token ids: the deterministic "model state".
@@ -71,6 +119,31 @@ fn hash_ids(ids: &[u32]) -> u64 {
     h
 }
 
+/// Incremental sampler state behind a mock [`StepState`].
+pub(crate) struct MockStep {
+    rng: Rng,
+    target_len: usize,
+    stop_id: u32,
+}
+
+impl MockStep {
+    /// Draw the next id with exactly the candidate loop `generate` has
+    /// always used, so stepped and solo outputs stay bit-identical.
+    fn next_id(&mut self, vocab_size: u32) -> u32 {
+        loop {
+            let candidate = if self.rng.chance(0.15) {
+                b' ' as u32
+            } else {
+                // Printable ASCII byte tokens -> valid UTF-8 output.
+                (32 + self.rng.below(95) as u32).min(vocab_size - 1)
+            };
+            if candidate != self.stop_id {
+                return candidate;
+            }
+        }
+    }
+}
+
 impl Engine for MockEngine {
     fn model_name(&self) -> &str {
         &self.model
@@ -80,49 +153,70 @@ impl Engine for MockEngine {
         self.max_context
     }
 
+    /// One full turn through the step API: prefill, then one decode
+    /// step per token — per-token cost timing, so time-to-first-token
+    /// against this engine means what it means against a real one.
     fn generate(&self, input_ids: &[u32], max_tokens: usize, stop_id: u32) -> Result<GenOutput> {
-        let t0 = std::time::Instant::now();
-        if self.prefill_ns_per_token > 0 {
-            std::thread::sleep(Duration::from_nanos(
-                self.prefill_ns_per_token * input_ids.len() as u64,
-            ));
+        let mut state = self.prefill(input_ids, max_tokens, stop_id)?;
+        while !state.done() {
+            self.decode_step(std::slice::from_mut(&mut state))?;
         }
-        let prefill_s = t0.elapsed().as_secs_f64();
+        Ok(state.into_output())
+    }
 
-        let t1 = std::time::Instant::now();
+    fn prefill(&self, input_ids: &[u32], max_tokens: usize, stop_id: u32) -> Result<StepState> {
+        let t0 = Instant::now();
+        self.device_sleep(self.prefill_ns_per_token * input_ids.len() as u64);
         let mut rng = Rng::new(hash_ids(input_ids));
-        let len = self
+        let target_len = self
             .fixed_len
             .unwrap_or_else(|| 40 + (rng.below(89)) as usize)
             .min(max_tokens);
-        let mut ids = Vec::with_capacity(len);
-        // Generate "text-like" ids: byte tokens for printable ASCII so the
-        // decoded response is harmless text; avoid the stop id.
-        for _ in 0..len {
-            let id = loop {
-                let candidate = if rng.chance(0.15) {
-                    b' ' as u32
-                } else {
-                    // Printable ASCII byte tokens -> valid UTF-8 output.
-                    (32 + rng.below(95) as u32).min(self.vocab_size - 1)
-                };
-                if candidate != stop_id {
-                    break candidate;
-                }
-            };
-            ids.push(id);
-        }
-        if self.decode_ns_per_token > 0 {
-            std::thread::sleep(Duration::from_nanos(
-                self.decode_ns_per_token * ids.len() as u64,
-            ));
-        }
-        Ok(GenOutput {
+        Ok(StepState {
             prefill_tokens: input_ids.len(),
-            prefill_s,
-            decode_s: t1.elapsed().as_secs_f64(),
-            ids,
+            prefill_s: t0.elapsed().as_secs_f64(),
+            decode_s: 0.0,
+            ids: Vec::with_capacity(target_len),
+            done: target_len == 0,
+            inner: StepInner::Mock(MockStep {
+                rng,
+                target_len,
+                stop_id,
+            }),
         })
+    }
+
+    fn decode_step(&self, states: &mut [StepState]) -> Result<Vec<Option<u32>>> {
+        let active = states.iter().filter(|s| !s.done).count();
+        if active == 0 {
+            return Ok(vec![None; states.len()]);
+        }
+        let t0 = Instant::now();
+        let (base_ns, per_seq_ns) = self.step_cost_model();
+        self.device_sleep(base_ns + per_seq_ns * active as u64);
+        // Wall-clock attribution: every active sequence waited this
+        // whole step, same as a solo caller waiting out its sleep.
+        let elapsed = t0.elapsed().as_secs_f64();
+        let mut out = Vec::with_capacity(states.len());
+        for s in states.iter_mut() {
+            if s.done {
+                out.push(None);
+                continue;
+            }
+            s.decode_s += elapsed;
+            match &mut s.inner {
+                StepInner::Mock(m) => {
+                    let id = m.next_id(self.vocab_size);
+                    s.ids.push(id);
+                    if s.ids.len() >= m.target_len {
+                        s.done = true;
+                    }
+                    out.push(Some(id));
+                }
+                StepInner::Buffered(_) => out.push(s.pop_buffered()),
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -173,5 +267,96 @@ mod tests {
         for &id in &out.ids {
             assert!((32..127).contains(&id), "id {id} not a printable byte token");
         }
+    }
+
+    #[test]
+    fn decode_cost_is_charged_per_step_not_in_bulk() {
+        // The satellite fix: one sleep per generated token. After a
+        // single decode step exactly one id exists and roughly one
+        // token's cost has elapsed — under the old bulk-sleep model the
+        // first id only became visible after the entire decode cost.
+        let per_token_s = 0.002;
+        let e = MockEngine::new("m", 512)
+            .with_costs(0, 2_000_000)
+            .with_fixed_len(5);
+        let mut state = e.prefill(&[1, 2], 128, 509).unwrap();
+        let toks = e.decode_step(std::slice::from_mut(&mut state)).unwrap();
+        assert_eq!(state.ids.len(), 1, "first token after one step");
+        assert_eq!(toks[0], Some(state.ids[0]));
+        assert!(state.decode_s >= per_token_s * 0.9, "{}", state.decode_s);
+        while !state.done() {
+            e.decode_step(std::slice::from_mut(&mut state)).unwrap();
+        }
+        let out = state.into_output();
+        assert_eq!(out.ids.len(), 5);
+        assert!(
+            out.decode_s >= 5.0 * per_token_s * 0.9,
+            "accumulated decode_s {} below 5 per-token sleeps",
+            out.decode_s
+        );
+    }
+
+    #[test]
+    fn step_api_matches_generate_under_batching() {
+        // Two sequences decoded jointly must reproduce their solo
+        // transcripts bit for bit — the invariant that makes batched
+        // and unbatched serving interchangeable.
+        let e = MockEngine::new("m", 512);
+        let solo_a = e.generate(&[1, 2, 3], 64, 509).unwrap();
+        let solo_b = e.generate(&[7, 8], 64, 509).unwrap();
+        let mut states = vec![
+            e.prefill(&[1, 2, 3], 64, 509).unwrap(),
+            e.prefill(&[7, 8], 64, 509).unwrap(),
+        ];
+        while states.iter().any(|s| !s.done()) {
+            e.decode_step(&mut states).unwrap();
+        }
+        let b = states.pop().unwrap().into_output();
+        let a = states.pop().unwrap().into_output();
+        assert_eq!(a.ids, solo_a.ids);
+        assert_eq!(b.ids, solo_b.ids);
+        assert_eq!(a.prefill_tokens, 3);
+        assert_eq!(b.prefill_tokens, 2);
+    }
+
+    #[test]
+    fn batched_step_cost_is_base_plus_per_seq() {
+        let e = MockEngine::new("m", 512)
+            .with_step_costs(1_000_000, 250_000)
+            .with_fixed_len(4);
+        let mut states = vec![
+            e.prefill(&[1], 16, 509).unwrap(),
+            e.prefill(&[2], 16, 509).unwrap(),
+            e.prefill(&[3], 16, 509).unwrap(),
+        ];
+        let t0 = Instant::now();
+        let toks = e.decode_step(&mut states).unwrap();
+        // base 1ms + 3 * 0.25ms = 1.75ms for the whole batch.
+        assert!(t0.elapsed() >= Duration::from_micros(1575), "{:?}", t0.elapsed());
+        assert!(toks.iter().all(Option::is_some));
+        assert!(states.iter().all(|s| s.ids.len() == 1));
+    }
+
+    #[test]
+    fn concurrent_generates_serialize_on_the_device() {
+        // Like the PJRT engine thread, the mock owns one device: two
+        // concurrent generates queue, they do not overlap their sleeps.
+        let e = std::sync::Arc::new(
+            MockEngine::new("m", 512)
+                .with_costs(0, 2_000_000)
+                .with_fixed_len(5),
+        );
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..2)
+            .map(|i| {
+                let e = e.clone();
+                std::thread::spawn(move || e.generate(&[i], 16, 509).unwrap())
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 2 requests x 5 tokens x 2ms, serialized: >= ~20ms wall.
+        assert!(t0.elapsed() >= Duration::from_millis(18), "{:?}", t0.elapsed());
     }
 }

@@ -21,6 +21,7 @@ pub mod pjrt;
 pub use mock::MockEngine;
 pub use pjrt::PjrtEngine;
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::tokenizer::Tokenizer;
@@ -61,6 +62,77 @@ pub struct GenOutput {
     pub decode_s: f64,
 }
 
+/// Per-sequence decode state for the step API ([`Engine::prefill`] /
+/// [`Engine::decode_step`]): everything one in-flight sequence carries
+/// between decode steps of the continuous-batching scheduler.
+pub struct StepState {
+    /// Number of context tokens processed by prefill.
+    pub prefill_tokens: usize,
+    /// Seconds spent in the prefill call. For engines on the buffered
+    /// sequential fallback this covers the whole fused generation.
+    pub prefill_s: f64,
+    /// Wall seconds this sequence has spent inside decode steps.
+    pub decode_s: f64,
+    /// Generated ids so far.
+    pub ids: Vec<u32>,
+    pub(crate) done: bool,
+    pub(crate) inner: StepInner,
+}
+
+/// Engine-private half of a [`StepState`].
+pub(crate) enum StepInner {
+    /// Pre-generated ids replayed one per step — the sequential fallback
+    /// every engine inherits from [`Engine::generate`] (the PJRT
+    /// executable fuses prefill and decode, so it cannot step).
+    Buffered(VecDeque<u32>),
+    /// The mock engine's incremental sampler state.
+    Mock(mock::MockStep),
+}
+
+impl StepState {
+    /// True once the sequence finished (stop condition or `max_tokens`).
+    pub fn done(&self) -> bool {
+        self.done
+    }
+
+    /// Collapse into the [`GenOutput`] an equivalent solo
+    /// [`Engine::generate`] call would have returned.
+    pub fn into_output(self) -> GenOutput {
+        GenOutput {
+            ids: self.ids,
+            prefill_tokens: self.prefill_tokens,
+            prefill_s: self.prefill_s,
+            decode_s: self.decode_s,
+        }
+    }
+
+    /// Advance a buffered sequence by one replayed id (the default
+    /// [`Engine::decode_step`]); marks non-buffered states done so a
+    /// mismatched engine/state pairing degrades instead of spinning.
+    pub(crate) fn pop_buffered(&mut self) -> Option<u32> {
+        if self.done {
+            return None;
+        }
+        let StepInner::Buffered(queue) = &mut self.inner else {
+            self.done = true;
+            return None;
+        };
+        match queue.pop_front() {
+            Some(id) => {
+                self.ids.push(id);
+                if queue.is_empty() {
+                    self.done = true;
+                }
+                Some(id)
+            }
+            None => {
+                self.done = true;
+                None
+            }
+        }
+    }
+}
+
 /// An inference engine serving one model.
 pub trait Engine: Send + Sync {
     /// Model identifier (the KV keygroup name).
@@ -70,6 +142,54 @@ pub trait Engine: Send + Sync {
     fn generate(&self, input_ids: &[u32], max_tokens: usize, stop_id: u32) -> Result<GenOutput>;
     /// Longest context (in tokens) the engine accepts.
     fn max_context(&self) -> usize;
+
+    /// Start one sequence for step-granular decoding: process
+    /// `input_ids` (prefill) and return its per-sequence decode state.
+    ///
+    /// The default implementation is the **sequential fallback** for
+    /// engines whose executable fuses prefill and decode (the PJRT
+    /// engine): it runs the whole [`Engine::generate`] call eagerly and
+    /// replays the generated ids one per [`Engine::decode_step`].
+    /// Engines that can decode incrementally (the mock engine) override
+    /// both methods.
+    fn prefill(&self, input_ids: &[u32], max_tokens: usize, stop_id: u32) -> Result<StepState> {
+        let out = self.generate(input_ids, max_tokens, stop_id)?;
+        Ok(StepState {
+            prefill_tokens: out.prefill_tokens,
+            prefill_s: out.prefill_s,
+            decode_s: out.decode_s,
+            done: out.ids.is_empty(),
+            inner: StepInner::Buffered(out.ids.into()),
+            ids: Vec::new(),
+        })
+    }
+
+    /// Advance every unfinished sequence in `states` by one decode
+    /// step. Returns the token appended to each sequence, index-aligned
+    /// with `states` (`None` for sequences that are already done).
+    fn decode_step(&self, states: &mut [StepState]) -> Result<Vec<Option<u32>>> {
+        Ok(states.iter_mut().map(StepState::pop_buffered).collect())
+    }
+
+    /// Generate like [`Engine::generate`], reporting each id to
+    /// `on_token` as it is produced. The default delegates to
+    /// `generate` and replays the ids afterwards — no early tokens,
+    /// matching the buffered behaviour of engines without incremental
+    /// decode. The batching scheduler overrides this to forward tokens
+    /// as decode steps complete.
+    fn generate_streamed(
+        &self,
+        input_ids: &[u32],
+        max_tokens: usize,
+        stop_id: u32,
+        on_token: &mut dyn FnMut(u32),
+    ) -> Result<GenOutput> {
+        let out = self.generate(input_ids, max_tokens, stop_id)?;
+        for &id in &out.ids {
+            on_token(id);
+        }
+        Ok(out)
+    }
 }
 
 /// ChatML template in token and text forms.
@@ -298,6 +418,77 @@ mod tests {
     fn sample_temperature_zero_is_argmax() {
         let mut rng = Rng::new(1);
         assert_eq!(sample(&[0.0, 3.0, 1.0], 0.0, &mut rng), 1);
+    }
+
+    /// Engine that only implements `generate` — the shape of the PJRT
+    /// engine, exercising the default buffered step fallback.
+    struct FixedEngine;
+
+    impl Engine for FixedEngine {
+        fn model_name(&self) -> &str {
+            "fixed"
+        }
+
+        fn max_context(&self) -> usize {
+            64
+        }
+
+        fn generate(
+            &self,
+            _input_ids: &[u32],
+            max_tokens: usize,
+            _stop_id: u32,
+        ) -> Result<GenOutput> {
+            Ok(GenOutput {
+                ids: (0..max_tokens as u32).collect(),
+                prefill_tokens: 3,
+                prefill_s: 0.25,
+                decode_s: 0.5,
+            })
+        }
+    }
+
+    #[test]
+    fn buffered_fallback_replays_generate_step_by_step() {
+        let e = FixedEngine;
+        let mut state = e.prefill(&[1, 2, 3], 4, 99).unwrap();
+        assert!(!state.done());
+        let mut seen = Vec::new();
+        while !state.done() {
+            let toks = e.decode_step(std::slice::from_mut(&mut state)).unwrap();
+            seen.push(toks[0].expect("one token per step until done"));
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        let out = state.into_output();
+        assert_eq!(out.ids, vec![0, 1, 2, 3]);
+        assert_eq!(out.prefill_tokens, 3);
+        assert_eq!(out.prefill_s, 0.25);
+        assert_eq!(out.decode_s, 0.5, "buffered decode cost was paid at prefill");
+    }
+
+    #[test]
+    fn finished_states_yield_none_not_tokens() {
+        let e = FixedEngine;
+        let mut state = e.prefill(&[1], 1, 99).unwrap();
+        assert_eq!(
+            e.decode_step(std::slice::from_mut(&mut state)).unwrap(),
+            vec![Some(0)]
+        );
+        assert!(state.done());
+        assert_eq!(
+            e.decode_step(std::slice::from_mut(&mut state)).unwrap(),
+            vec![None]
+        );
+    }
+
+    #[test]
+    fn streamed_default_replays_all_ids() {
+        let e = FixedEngine;
+        let mut got = Vec::new();
+        let out = e
+            .generate_streamed(&[1], 3, 99, &mut |id| got.push(id))
+            .unwrap();
+        assert_eq!(got, out.ids);
     }
 
     #[test]

@@ -58,6 +58,10 @@ fn main() {
                  \u{20}             --fleet (fleet aggregator: poll nodes, append health CSV)\n\
                  \u{20}             --fleet-poll-ms N (aggregator period, default 1000)\n\
                  \u{20}             --fleet-out P (health CSV path, default results/fleet_health.csv)\n\
+                 \u{20}             --batching (continuous batching: admission queue + batch scheduler)\n\
+                 \u{20}             --max-batch N (sequences decoded together per step, default 8)\n\
+                 \u{20}             --queue-depth N (admission bound, 503 past it, default 64)\n\
+                 \u{20}             --stream (chunked /completion: tokens stream as steps complete)\n\
                  run-scenario  --mode tokenized|raw|client_side (default tokenized)\n\
                  \u{20}             --mobility sticky|paper (default sticky)\n\
                  \u{20}             --engine mock|pjrt (default pjrt)\n\
@@ -200,6 +204,24 @@ fn load_config(args: &Args) -> Result<ClusterConfig, String> {
         .map_err(|e| e.to_string())?
     {
         cfg.observability.window_ms = ms;
+    }
+    if args.flag("batching") {
+        cfg.inference.enabled = true;
+    }
+    if let Some(n) = args
+        .opt_parse::<usize>("max-batch")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.inference.max_batch = n;
+    }
+    if let Some(n) = args
+        .opt_parse::<usize>("queue-depth")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.inference.queue_depth = n;
+    }
+    if args.flag("stream") {
+        cfg.inference.stream = true;
     }
     if args.flag("fleet") {
         cfg.fleet.enabled = true;

@@ -24,6 +24,8 @@
 //! every protocol-level test and bench — build and run with zero external
 //! dependencies. [`pjrt_available`] lets callers skip real-model work.
 
+pub mod scheduler;
+
 #[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -1,0 +1,534 @@
+//! Continuous-batching inference scheduler: an admission queue in front
+//! of the engine plus a step-granular batch loop.
+//!
+//! The seed serving path runs every `/completion` solo through
+//! [`Engine::generate`] — under concurrent load the device serializes
+//! whole turns and time-to-first-token (TTFT) grows with queue depth.
+//! [`BatchScheduler`] wraps an engine and coalesces concurrent requests
+//! at **decode-step granularity** instead:
+//!
+//! - **admit** — requests enter a bounded admission queue; beyond
+//!   `queue_depth` they are rejected with [`Error::Unavailable`]
+//!   (HTTP 503) so queue wait cannot grow without bound;
+//! - **join** — the batch loop drains admitted requests whenever the
+//!   running batch has room (`max_batch`), prefills each
+//!   ([`Engine::prefill`]), and adds its [`StepState`] to the batch —
+//!   no waiting for the current batch to finish;
+//! - **step** — one [`Engine::decode_step`] advances every running
+//!   sequence together; each produced token is forwarded to its waiting
+//!   request immediately (this is what the streamed `/completion` path
+//!   sends down the wire as a chunk);
+//! - **leave** — sequences retire individually on stop-token or
+//!   `max_tokens`; the rest of the batch keeps decoding.
+//!
+//! The scheduler itself implements [`Engine`], so the context manager's
+//! request path is unchanged: `generate` submits and blocks for the
+//! full output, `generate_streamed` submits and relays tokens as steps
+//! complete. Engines whose executable fuses prefill and decode (the
+//! PJRT path) fall back to the default buffered step API and still gain
+//! admission control and streaming, just not cross-request batching.
+//!
+//! Metrics (written into the node registry, scraped via `/metrics`):
+//! `llm_queue_wait_s` (admission latency), `llm_ttft_s` (submit to
+//! first token), `llm_batch_size` (batch occupancy per step), and the
+//! `llm_admission_rejects` counter.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::InferenceConfig;
+use crate::llm::{Engine, GenOutput, StepState};
+use crate::metrics::Registry;
+use crate::sync::{classes, OrderedMutex};
+use crate::{Error, Result};
+
+/// What the batch loop reports back to a waiting request.
+enum SeqEvent {
+    /// One decoded token (forwarded as a step completes).
+    Token(u32),
+    /// The sequence finished (or failed); terminal.
+    Done(Result<GenOutput>),
+}
+
+/// One queued request.
+struct Job {
+    input_ids: Vec<u32>,
+    max_tokens: usize,
+    stop_id: u32,
+    events: Sender<SeqEvent>,
+    submitted: Instant,
+}
+
+/// Request-side bookkeeping for a running sequence, index-aligned with
+/// its [`StepState`] in the batch.
+struct SeqMeta {
+    events: Sender<SeqEvent>,
+    submitted: Instant,
+    first_token: bool,
+    /// The waiting request hung up (channel closed); decode stops early
+    /// and the sequence retires without a `Done`.
+    dead: bool,
+}
+
+/// Admission queue state under [`classes::SCHED_ADMISSION`].
+struct AdmissionQueue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    inner: Arc<dyn Engine>,
+    registry: Arc<Registry>,
+    max_batch: usize,
+    queue_depth: usize,
+    admission: OrderedMutex<AdmissionQueue>,
+    cvar: Condvar,
+    /// Running batch size, mirrored for `/status` without touching the
+    /// queue lock.
+    batch: AtomicUsize,
+}
+
+/// Admission queue + continuous-batching loop in front of an engine.
+/// See the module docs for the admit → join → step → leave lifecycle.
+pub struct BatchScheduler {
+    shared: Arc<Shared>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl BatchScheduler {
+    /// Wrap `inner`, spawning the batch loop thread. `registry` receives
+    /// the `llm_*` scheduler metrics.
+    pub fn new(inner: Arc<dyn Engine>, cfg: &InferenceConfig, registry: Arc<Registry>) -> Self {
+        // Pre-register the reject counter so `/metrics` exports it as 0
+        // before the first overload instead of omitting it.
+        registry.incr("llm_admission_rejects", 0);
+        let shared = Arc::new(Shared {
+            inner,
+            registry,
+            max_batch: cfg.max_batch.max(1),
+            queue_depth: cfg.queue_depth.max(1),
+            admission: OrderedMutex::new(
+                &classes::SCHED_ADMISSION,
+                AdmissionQueue {
+                    jobs: VecDeque::new(),
+                    shutdown: false,
+                },
+            ),
+            cvar: Condvar::new(),
+            batch: AtomicUsize::new(0),
+        });
+        let loop_shared = shared.clone();
+        let worker = std::thread::Builder::new()
+            .name("inference-sched".into())
+            .spawn(move || batch_loop(&loop_shared))
+            .expect("spawn inference scheduler thread");
+        BatchScheduler {
+            shared,
+            worker: Mutex::new(Some(worker)),
+        }
+    }
+
+    /// Requests waiting for admission (for `/status`).
+    pub fn queue_len(&self) -> usize {
+        self.shared.admission.lock().unwrap().jobs.len()
+    }
+
+    /// Sequences in the running batch (for `/status`).
+    pub fn batch_size(&self) -> usize {
+        self.shared.batch.load(Ordering::Relaxed)
+    }
+
+    /// Stop the batch loop: queued-but-unadmitted requests fail, running
+    /// sequences decode to completion, then the thread exits. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.shared.admission.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cvar.notify_all();
+        if let Some(handle) = self.worker.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+
+    /// Enqueue one request, rejecting with [`Error::Unavailable`] when
+    /// the admission queue is at `queue_depth`.
+    fn submit(
+        &self,
+        input_ids: &[u32],
+        max_tokens: usize,
+        stop_id: u32,
+        events: Sender<SeqEvent>,
+    ) -> Result<()> {
+        let full = {
+            let mut q = self.shared.admission.lock().unwrap();
+            if q.shutdown {
+                return Err(Error::Engine("inference scheduler is shut down".into()));
+            }
+            if q.jobs.len() >= self.shared.queue_depth {
+                true
+            } else {
+                q.jobs.push_back(Job {
+                    input_ids: input_ids.to_vec(),
+                    max_tokens,
+                    stop_id,
+                    events,
+                    submitted: Instant::now(),
+                });
+                false
+            }
+        };
+        if full {
+            self.shared.registry.incr("llm_admission_rejects", 1);
+            return Err(Error::Unavailable(format!(
+                "admission queue full ({} waiting)",
+                self.shared.queue_depth
+            )));
+        }
+        self.shared.cvar.notify_all();
+        Ok(())
+    }
+}
+
+impl Drop for BatchScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Engine for BatchScheduler {
+    fn model_name(&self) -> &str {
+        self.shared.inner.model_name()
+    }
+
+    fn max_context(&self) -> usize {
+        self.shared.inner.max_context()
+    }
+
+    fn generate(&self, input_ids: &[u32], max_tokens: usize, stop_id: u32) -> Result<GenOutput> {
+        let (tx, rx) = channel();
+        self.submit(input_ids, max_tokens, stop_id, tx)?;
+        loop {
+            match rx.recv() {
+                Ok(SeqEvent::Token(_)) => {}
+                Ok(SeqEvent::Done(res)) => return res,
+                Err(_) => {
+                    return Err(Error::Engine(
+                        "inference scheduler dropped an in-flight sequence".into(),
+                    ))
+                }
+            }
+        }
+    }
+
+    fn generate_streamed(
+        &self,
+        input_ids: &[u32],
+        max_tokens: usize,
+        stop_id: u32,
+        on_token: &mut dyn FnMut(u32),
+    ) -> Result<GenOutput> {
+        let (tx, rx) = channel();
+        self.submit(input_ids, max_tokens, stop_id, tx)?;
+        loop {
+            match rx.recv() {
+                Ok(SeqEvent::Token(id)) => on_token(id),
+                Ok(SeqEvent::Done(res)) => return res,
+                Err(_) => {
+                    return Err(Error::Engine(
+                        "inference scheduler dropped an in-flight sequence".into(),
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// The batch loop: admit up to capacity, prefill joiners, advance the
+/// whole batch one decode step, retire finished sequences — repeat.
+/// The admission lock is held only while draining jobs, never across
+/// engine work.
+fn batch_loop(shared: &Shared) {
+    let mut states: Vec<StepState> = Vec::new();
+    let mut meta: Vec<SeqMeta> = Vec::new();
+    loop {
+        let mut admitted: Vec<Job> = Vec::new();
+        let shutting_down = {
+            let mut q = shared.admission.lock().unwrap();
+            while q.jobs.is_empty() && !q.shutdown && states.is_empty() {
+                q = q.wait(&shared.cvar).unwrap();
+            }
+            if q.shutdown {
+                for job in q.jobs.drain(..) {
+                    let _ = job.events.send(SeqEvent::Done(Err(Error::Engine(
+                        "inference scheduler shut down before the request was admitted".into(),
+                    ))));
+                }
+            } else {
+                while states.len() + admitted.len() < shared.max_batch {
+                    match q.jobs.pop_front() {
+                        Some(job) => admitted.push(job),
+                        None => break,
+                    }
+                }
+            }
+            q.shutdown
+        };
+        if shutting_down && states.is_empty() {
+            shared.batch.store(0, Ordering::Relaxed);
+            return;
+        }
+
+        // Join: prefill the newly admitted sequences (outside the lock —
+        // prefill is real engine work).
+        for job in admitted {
+            shared
+                .registry
+                .observe("llm_queue_wait_s", job.submitted.elapsed().as_secs_f64());
+            match shared
+                .inner
+                .prefill(&job.input_ids, job.max_tokens, job.stop_id)
+            {
+                Ok(state) => {
+                    states.push(state);
+                    meta.push(SeqMeta {
+                        events: job.events,
+                        submitted: job.submitted,
+                        first_token: false,
+                        dead: false,
+                    });
+                }
+                Err(e) => {
+                    let _ = job.events.send(SeqEvent::Done(Err(e)));
+                }
+            }
+        }
+        // A prefill can finish a sequence outright (empty generation).
+        retire_finished(&mut states, &mut meta);
+        shared.batch.store(states.len(), Ordering::Relaxed);
+        if states.is_empty() {
+            continue;
+        }
+
+        // Step: advance every running sequence together.
+        shared
+            .registry
+            .observe("llm_batch_size", states.len() as f64);
+        match shared.inner.decode_step(&mut states) {
+            Ok(tokens) => {
+                for (i, tok) in tokens.iter().enumerate() {
+                    let Some(id) = tok else { continue };
+                    if !meta[i].first_token {
+                        meta[i].first_token = true;
+                        shared
+                            .registry
+                            .observe("llm_ttft_s", meta[i].submitted.elapsed().as_secs_f64());
+                    }
+                    if meta[i].events.send(SeqEvent::Token(*id)).is_err() {
+                        meta[i].dead = true;
+                    }
+                }
+            }
+            Err(e) => {
+                // A whole-batch failure kills every in-flight sequence.
+                let msg = e.to_string();
+                for (_state, m) in states.drain(..).zip(meta.drain(..)) {
+                    let _ = m
+                        .events
+                        .send(SeqEvent::Done(Err(Error::Engine(msg.clone()))));
+                }
+                shared.batch.store(0, Ordering::Relaxed);
+                continue;
+            }
+        }
+
+        // Leave: finished sequences retire individually.
+        retire_finished(&mut states, &mut meta);
+        shared.batch.store(states.len(), Ordering::Relaxed);
+    }
+}
+
+/// Remove finished (or abandoned) sequences, sending each its final
+/// [`GenOutput`]. Both vectors are swap-removed at the same index so
+/// they stay aligned.
+fn retire_finished(states: &mut Vec<StepState>, meta: &mut Vec<SeqMeta>) {
+    let mut i = 0;
+    while i < states.len() {
+        if states[i].done() || meta[i].dead {
+            let state = states.swap_remove(i);
+            let m = meta.swap_remove(i);
+            if !m.dead {
+                let _ = m.events.send(SeqEvent::Done(Ok(state.into_output())));
+            }
+        } else {
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::MockEngine;
+    use std::time::Duration;
+
+    fn scheduler(engine: MockEngine, cfg: &InferenceConfig) -> (Arc<BatchScheduler>, Arc<Registry>) {
+        let registry = Arc::new(Registry::new());
+        let sched = Arc::new(BatchScheduler::new(
+            Arc::new(engine),
+            cfg,
+            registry.clone(),
+        ));
+        (sched, registry)
+    }
+
+    #[test]
+    fn batched_transcripts_match_solo_generate() {
+        // The scheduler must be invisible to outputs: concurrent
+        // requests through the batch loop produce exactly the ids a
+        // solo `generate` produces for the same input.
+        let solo = MockEngine::new("m", 512);
+        let cfg = InferenceConfig {
+            enabled: true,
+            max_batch: 4,
+            queue_depth: 64,
+            stream: false,
+        };
+        let (sched, _reg) = scheduler(MockEngine::new("m", 512), &cfg);
+        let inputs: Vec<Vec<u32>> = (0..8u32).map(|i| vec![i, i + 1, i + 2]).collect();
+        let handles: Vec<_> = inputs
+            .iter()
+            .map(|ids| {
+                let sched = sched.clone();
+                let ids = ids.clone();
+                std::thread::spawn(move || sched.generate(&ids, 16, 9999).unwrap())
+            })
+            .collect();
+        for (ids, h) in inputs.iter().zip(handles) {
+            let batched = h.join().unwrap();
+            let expect = solo.generate(ids, 16, 9999).unwrap();
+            assert_eq!(batched.ids, expect.ids, "input {ids:?}");
+            assert_eq!(batched.prefill_tokens, expect.prefill_tokens);
+        }
+    }
+
+    #[test]
+    fn streamed_tokens_match_the_final_output() {
+        let cfg = InferenceConfig {
+            enabled: true,
+            max_batch: 2,
+            queue_depth: 8,
+            stream: true,
+        };
+        let (sched, _reg) = scheduler(MockEngine::new("m", 512), &cfg);
+        let mut seen = Vec::new();
+        let out = sched
+            .generate_streamed(&[5, 6, 7], 12, 9999, &mut |id| seen.push(id))
+            .unwrap();
+        assert!(!out.ids.is_empty());
+        assert_eq!(seen, out.ids, "every token is forwarded exactly once");
+    }
+
+    #[test]
+    fn admission_queue_bound_rejects_with_unavailable() {
+        // max_batch 1 + queue_depth 1 + a slow engine: one request
+        // runs, one waits, the third must bounce with 503 semantics.
+        let slow = MockEngine::new("m", 512)
+            .with_costs(0, 2_000_000)
+            .with_fixed_len(50);
+        let cfg = InferenceConfig {
+            enabled: true,
+            max_batch: 1,
+            queue_depth: 1,
+            stream: false,
+        };
+        let (sched, reg) = scheduler(slow, &cfg);
+        let a = {
+            let sched = sched.clone();
+            std::thread::spawn(move || sched.generate(&[1], 50, 9999))
+        };
+        // Let A reach the running batch so B occupies the queue slot.
+        std::thread::sleep(Duration::from_millis(30));
+        let b = {
+            let sched = sched.clone();
+            std::thread::spawn(move || sched.generate(&[2], 50, 9999))
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        let err = sched.generate(&[3], 50, 9999).unwrap_err();
+        assert!(
+            matches!(err, Error::Unavailable(_)),
+            "expected Unavailable, got {err:?}"
+        );
+        assert!(reg.counter("llm_admission_rejects") >= 1);
+        assert!(a.join().unwrap().is_ok());
+        assert!(b.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn scheduler_records_ttft_queue_wait_and_batch_size() {
+        let cfg = InferenceConfig {
+            enabled: true,
+            max_batch: 4,
+            queue_depth: 16,
+            stream: false,
+        };
+        let (sched, reg) = scheduler(MockEngine::new("m", 512).with_costs(1000, 10_000), &cfg);
+        sched.generate(&[1, 2, 3], 8, 9999).unwrap();
+        assert!(reg.series("llm_ttft_s").len() >= 1);
+        assert!(reg.series("llm_queue_wait_s").len() >= 1);
+        assert!(reg.series("llm_batch_size").len() >= 1);
+        assert!(reg.series("llm_batch_size").samples().iter().all(|&b| b >= 1.0));
+        assert_eq!(reg.counter("llm_admission_rejects"), 0);
+    }
+
+    #[test]
+    fn shutdown_fails_queued_jobs_and_joins_the_loop() {
+        let slow = MockEngine::new("m", 512)
+            .with_costs(0, 2_000_000)
+            .with_fixed_len(40);
+        let cfg = InferenceConfig {
+            enabled: true,
+            max_batch: 1,
+            queue_depth: 8,
+            stream: false,
+        };
+        let (sched, _reg) = scheduler(slow, &cfg);
+        let a = {
+            let sched = sched.clone();
+            std::thread::spawn(move || sched.generate(&[1], 40, 9999))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        let b = {
+            let sched = sched.clone();
+            std::thread::spawn(move || sched.generate(&[2], 40, 9999))
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        sched.shutdown();
+        // A was running: it decodes to completion. B was queued: it
+        // fails instead of running after shutdown.
+        assert!(a.join().unwrap().is_ok());
+        assert!(b.join().unwrap().is_err());
+        // Idempotent.
+        sched.shutdown();
+    }
+
+    #[test]
+    fn queue_and_batch_snapshots_settle_to_zero() {
+        let cfg = InferenceConfig::default();
+        let (sched, _reg) = scheduler(MockEngine::new("m", 512), &cfg);
+        sched.generate(&[9], 4, 9999).unwrap();
+        assert_eq!(sched.queue_len(), 0);
+        // The loop parks with an empty batch once the request retires.
+        for _ in 0..100 {
+            if sched.batch_size() == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(sched.batch_size(), 0);
+    }
+}

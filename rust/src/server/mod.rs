@@ -20,13 +20,14 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cluster::{ClusterCoordinator, MembershipView};
-use crate::config::{ClusterConfig, EngineKind, NodeConfig};
-use crate::context::{CompletionRequest, ContextManager, TokenCodec};
+use crate::config::{ClusterConfig, EngineKind, InferenceConfig, NodeConfig};
+use crate::context::{CompletionRequest, CompletionResponse, ContextManager, TokenCodec};
 use crate::http::{Handler, Request, Response, Server};
 use crate::json::Value;
 use crate::kvstore::{KvConfig, KvNode, Placement};
 use crate::llm::{ChatTemplate, Engine, MockEngine, PjrtEngine};
 use crate::profile::NodeProfile;
+use crate::runtime::scheduler::BatchScheduler;
 use crate::tokenizer::{train, Tokenizer, TrainConfig, Vocab};
 use crate::{Error, Result};
 
@@ -104,13 +105,46 @@ impl EdgeNode {
         if cluster_cfg.observability.window_ms > 0 {
             cm.registry.enable_windows(cluster_cfg.observability.window_ms);
         }
+        // Continuous batching (default off): wrap every engine in a
+        // per-node [`BatchScheduler`] so concurrent requests coalesce at
+        // decode-step granularity. The wrapper implements [`Engine`], so
+        // the context manager is untouched; with `inference.enabled =
+        // false` the raw engines serve directly and the wire stays
+        // byte-identical to the seed (pinned by `tests/batching.rs`).
+        let (engines, schedulers) = if cluster_cfg.inference.enabled {
+            let mut wrapped: HashMap<String, Arc<dyn Engine>> = HashMap::new();
+            let mut schedulers: HashMap<String, Arc<BatchScheduler>> = HashMap::new();
+            for (model, engine) in engines.iter() {
+                let sched = Arc::new(BatchScheduler::new(
+                    engine.clone(),
+                    &cluster_cfg.inference,
+                    cm.registry.clone(),
+                ));
+                wrapped.insert(model.clone(), sched.clone() as Arc<dyn Engine>);
+                schedulers.insert(model.clone(), sched);
+            }
+            (Arc::new(wrapped), Arc::new(schedulers))
+        } else {
+            (engines, Arc::new(HashMap::new()))
+        };
         let h_cm = cm.clone();
         let h_engines = engines.clone();
         let h_kv = kv.clone();
         let h_membership = membership.clone();
+        let h_schedulers = schedulers.clone();
+        let h_inference = cluster_cfg.inference.clone();
         let started_at = Instant::now();
         let handler: Handler = Arc::new(move |req: &Request| {
-            dispatch(req, &h_cm, &h_engines, &h_kv, &h_membership, started_at)
+            dispatch(
+                req,
+                &h_cm,
+                &h_engines,
+                &h_kv,
+                &h_membership,
+                &h_schedulers,
+                &h_inference,
+                started_at,
+            )
         });
         // The API listener shares the node's transport budget and
         // reports into the same `net_conns_*` stats as the KV pools.
@@ -162,12 +196,15 @@ impl EdgeNode {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatch(
     req: &Request,
     cm: &Arc<ContextManager>,
     engines: &Arc<HashMap<String, Arc<dyn Engine>>>,
     kv: &Arc<KvNode>,
     membership: &Option<Arc<MembershipView>>,
+    schedulers: &Arc<HashMap<String, Arc<BatchScheduler>>>,
+    inference: &InferenceConfig,
     started_at: Instant,
 ) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
@@ -201,6 +238,19 @@ fn dispatch(
             };
             let _trace = crate::obs::set_current(trace);
             let started = Instant::now();
+            // Streaming rides the scheduler: `stream` without `enabled`
+            // is inert, keeping the off-config wire identical to seed.
+            if inference.stream && schedulers.contains_key(&parsed.model) {
+                return stream_completion(
+                    parsed,
+                    engine.clone(),
+                    cm.clone(),
+                    obs.clone(),
+                    trace,
+                    inbound,
+                    started,
+                );
+            }
             match cm.handle(&parsed, engine.as_ref()) {
                 Ok(resp) => {
                     if let Some(ctx) = trace {
@@ -210,6 +260,10 @@ fn dispatch(
                 }
                 Err(Error::BadRequest(m)) => Response::error(400, &m),
                 Err(Error::Consistency(m)) => Response::error(409, &m),
+                // Admission-queue overflow. Unlike the listener's
+                // at-capacity 503 this keeps the connection open — the
+                // client may retry on the same socket after backoff.
+                Err(Error::Unavailable(m)) => Response::error(503, &m),
                 Err(e) => Response::error(500, &e.to_string()),
             }
         }
@@ -408,6 +462,28 @@ fn dispatch(
                         .set("last_round_age_ms", opt_ms(kv.ae_last_round_age_ms())),
                 );
             }
+            if !schedulers.is_empty() {
+                // Inference scheduler (present only with
+                // `inference.enabled`): live queue/batch occupancy
+                // across this node's models plus the TTFT median so
+                // far. No samples yet reads 0.0, not null — a fresh
+                // scheduler is "fast so far", not unmeasured.
+                let queue: u64 = schedulers.values().map(|s| s.queue_len() as u64).sum();
+                let batch: u64 = schedulers.values().map(|s| s.batch_size() as u64).sum();
+                let ttft = cm.registry.series("llm_ttft_s");
+                let p50 = if ttft.is_empty() {
+                    0.0
+                } else {
+                    ttft.percentile(50.0)
+                };
+                v = v.set(
+                    "inference",
+                    Value::obj()
+                        .set("queue", queue)
+                        .set("batch", batch)
+                        .set("ttft_p50_s", p50),
+                );
+            }
             if kv.lag_tracking_enabled() {
                 let peers: Vec<Value> = kv
                     .lag_per_peer()
@@ -533,6 +609,81 @@ fn record_turn_spans(
         started,
         started.elapsed(),
     );
+}
+
+/// Streamed `/completion`: run the turn on a worker thread and relay
+/// framed body bytes to the connection as decode steps complete.
+///
+/// First-event-decides-status: this call blocks until the worker either
+/// produced a first body frame (return a chunked 200 whose first frame
+/// is already queued — the response head reaches the wire only once the
+/// first token exists, so client-measured TTFT is honest), finished
+/// without one (zero-token generation: return the buffered response,
+/// exactly the unstreamed wire shape), or failed before the first token
+/// (normal error mapping). A failure *after* frames went out drops the
+/// chunk sender, truncating the chunked body — the client's JSON parse
+/// fails, so the error is never silent.
+fn stream_completion(
+    req: CompletionRequest,
+    engine: Arc<dyn Engine>,
+    cm: Arc<ContextManager>,
+    obs: Arc<crate::obs::Obs>,
+    trace: Option<crate::obs::TraceCtx>,
+    inbound: Option<crate::obs::TraceCtx>,
+    started: Instant,
+) -> Response {
+    enum First {
+        Fragment,
+        Done(Box<CompletionResponse>),
+        Failed(Error),
+    }
+    let (first_tx, first_rx) = std::sync::mpsc::channel::<First>();
+    let (chunk_tx, chunk_rx) = std::sync::mpsc::channel::<Vec<u8>>();
+    let spawned = std::thread::Builder::new()
+        .name("completion-stream".into())
+        .spawn(move || {
+            // Re-install the turn's trace context: spans recorded by the
+            // KV fetch and the async update must stitch under the same
+            // trace id even though the turn now runs off the conn thread.
+            let _trace = crate::obs::set_current(trace);
+            let mut streaming = false;
+            let mut sink = |frame: &str| {
+                if !streaming {
+                    streaming = true;
+                    let _ = first_tx.send(First::Fragment);
+                }
+                // A send failure means the client went away; finish the
+                // turn anyway so the context update still commits.
+                let _ = chunk_tx.send(frame.as_bytes().to_vec());
+            };
+            match cm.handle_with_sink(&req, engine.as_ref(), Some(&mut sink)) {
+                Ok(resp) => {
+                    if let Some(ctx) = trace {
+                        record_turn_spans(&obs, ctx, inbound, &resp, started);
+                    }
+                    if !streaming {
+                        let _ = first_tx.send(First::Done(Box::new(resp)));
+                    }
+                }
+                Err(e) => {
+                    if !streaming {
+                        let _ = first_tx.send(First::Failed(e));
+                    }
+                }
+            }
+        });
+    if spawned.is_err() {
+        return Response::error(500, "could not spawn stream worker");
+    }
+    match first_rx.recv() {
+        Ok(First::Fragment) => Response::streamed_json(chunk_rx),
+        Ok(First::Done(resp)) => Response::json(&resp.to_json()),
+        Ok(First::Failed(Error::BadRequest(m))) => Response::error(400, &m),
+        Ok(First::Failed(Error::Consistency(m))) => Response::error(409, &m),
+        Ok(First::Failed(Error::Unavailable(m))) => Response::error(503, &m),
+        Ok(First::Failed(e)) => Response::error(500, &e.to_string()),
+        Err(_) => Response::error(500, "stream worker died"),
+    }
 }
 
 /// A launched multi-node cluster.
@@ -1159,6 +1310,7 @@ mod tests {
         cfg.observability.enabled = true;
         cfg.antientropy.enabled = true;
         cfg.storage.enabled = true;
+        cfg.inference.enabled = true;
         let tag = format!("discedge-status-test-{}", std::process::id());
         let dir = std::env::temp_dir().join(tag);
         cfg.storage.dir = dir.clone();
@@ -1186,6 +1338,7 @@ mod tests {
                 "replication",
                 &["max_lag_versions", "lag_keys", "staleness_ms", "peers"][..],
             ),
+            ("inference", &["queue", "batch", "ttft_p50_s"][..]),
         ] {
             let s = v.get(section).unwrap_or_else(|| panic!("{section} missing"));
             for f in fields {
@@ -1222,12 +1375,117 @@ mod tests {
         for always in ["cluster", "net", "obs"] {
             assert!(v.get(always).is_some(), "/status {always} missing");
         }
-        for gated in ["hints", "wal", "ae", "replication"] {
+        for gated in ["hints", "wal", "ae", "replication", "inference"] {
             assert!(
                 v.get(gated).is_none(),
                 "/status {gated} must be absent when its subsystem is off"
             );
         }
+    }
+
+    /// Single-node cluster with the batch scheduler on (optionally
+    /// streaming), over ideal links and a neutral profile.
+    fn batching_cluster(stream: bool) -> EdgeCluster {
+        let mut cfg = ClusterConfig::two_node_testbed();
+        cfg.engine = EngineKind::Mock {
+            prefill_ns_per_token: 0,
+            decode_ns_per_token: 0,
+        };
+        cfg.peer_link = LinkModel::ideal();
+        cfg.client_link = LinkModel::ideal();
+        cfg.nodes.truncate(1);
+        cfg.nodes[0].profile = NodeProfile::m2_native();
+        cfg.inference.enabled = true;
+        cfg.inference.max_batch = 4;
+        cfg.inference.queue_depth = 16;
+        cfg.inference.stream = stream;
+        EdgeCluster::launch(cfg).unwrap()
+    }
+
+    #[test]
+    fn metrics_export_the_llm_set_when_batching() {
+        // With the scheduler on, one served turn must surface the whole
+        // llm_* scrape surface: TTFT / queue-wait / batch-size series
+        // (exported with their aggregate suffixes) and the admission
+        // reject counter, pre-registered so "no rejects yet" reads 0
+        // instead of being absent.
+        let cluster = batching_cluster(false);
+        let req = CompletionRequest::new("discedge/tiny-chat", "hi", 1, ContextMode::Tokenized);
+        let _ = post(cluster.nodes[0].api_addr(), &req);
+        let m = api_pool()
+            .round_trip(cluster.nodes[0].api_addr(), &HttpRequest::get("/metrics"))
+            .unwrap();
+        let body = m.body_str().unwrap().to_string();
+        for key in [
+            "llm_ttft_s_count",
+            "llm_ttft_s_p50",
+            "llm_ttft_s_p99",
+            "llm_queue_wait_s_count",
+            "llm_batch_size_count",
+            "llm_batch_size_mean",
+            "llm_admission_rejects",
+        ] {
+            assert!(
+                body.lines().any(|l| l.starts_with(&format!("{key} "))),
+                "metric {key} missing from /metrics:\n{body}"
+            );
+        }
+    }
+
+    #[test]
+    fn status_reports_inference_when_batching() {
+        let cluster = batching_cluster(false);
+        let addr = cluster.nodes[0].api_addr();
+        let pool = api_pool();
+        // Before any turn: section present, counters at rest, TTFT 0.0
+        // (not null — "fast so far", not unmeasured).
+        let r = pool.round_trip(addr, &HttpRequest::get("/status")).unwrap();
+        let v = crate::json::parse(r.body_str().unwrap()).unwrap();
+        let inf = v.get("inference").expect("inference section missing");
+        assert_eq!(inf.get("queue").and_then(|x| x.as_u64()), Some(0));
+        assert_eq!(inf.get("batch").and_then(|x| x.as_u64()), Some(0));
+        assert_eq!(inf.get("ttft_p50_s").and_then(|x| x.as_f64()), Some(0.0));
+        // After a turn the median TTFT is a real measurement.
+        let req = CompletionRequest::new("discedge/tiny-chat", "hi", 1, ContextMode::Tokenized);
+        let _ = post(addr, &req);
+        let r = pool.round_trip(addr, &HttpRequest::get("/status")).unwrap();
+        let v = crate::json::parse(r.body_str().unwrap()).unwrap();
+        let p50 = v
+            .get("inference")
+            .and_then(|i| i.get("ttft_p50_s"))
+            .and_then(|x| x.as_f64())
+            .unwrap();
+        assert!(p50 >= 0.0 && p50.is_finite());
+    }
+
+    #[test]
+    fn streamed_completion_over_http() {
+        // The full streamed path over a real socket: the response rides
+        // chunked transfer, reassembles into the exact JSON shape, and
+        // the session keeps working for the next turn.
+        let cluster = batching_cluster(true);
+        let addr = cluster.nodes[0].api_addr();
+        let pool = api_pool();
+        let req = CompletionRequest::new("discedge/tiny-chat", "hello", 1, ContextMode::Tokenized);
+        let mut conn = pool.checkout(addr).unwrap();
+        let resp = conn
+            .round_trip(&HttpRequest::post_json("/completion", &req.to_json()))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            resp.headers.get("transfer-encoding").map(String::as_str),
+            Some("chunked")
+        );
+        let r1 = crate::context::CompletionResponse::from_json(resp.body_str().unwrap()).unwrap();
+        assert!(!r1.text.is_empty());
+        drop(conn);
+        // Turn 2 on the same session still works (context committed).
+        let mut req2 = CompletionRequest::new("discedge/tiny-chat", "more", 2, ContextMode::Tokenized);
+        req2.user_id = Some(r1.user_id.clone());
+        req2.session_id = Some(r1.session_id.clone());
+        let r2 = post(addr, &req2);
+        assert_eq!(r2.turn, 2);
+        assert!(r2.prefill_tokens > r1.prefill_tokens);
     }
 
     #[test]

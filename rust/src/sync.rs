@@ -109,6 +109,10 @@ pub mod classes {
     pub static HINT_EVICT: LockClass = LockClass::new("hints.on_evict", 23);
     /// Replicator job queue (the Condvar-coupled sender queue).
     pub static REPL_QUEUE: LockClass = LockClass::new("replicator.queue", 30);
+    /// Inference-scheduler admission queue (Condvar-coupled; the batch
+    /// loop holds it only to drain admitted jobs — never across prefill
+    /// or a decode step).
+    pub static SCHED_ADMISSION: LockClass = LockClass::new("scheduler.admission", 35);
     /// Peer-pool idle connection map (never held across connect or IO).
     pub static POOL_IDLE: LockClass = LockClass::new("pool.idle", 40);
     /// Merkle forest tree table (held across the store digest read).

@@ -413,6 +413,45 @@ impl PooledConn<'_> {
         }
     }
 
+    /// [`PooledConn::round_trip`] that also reports time-to-first-byte:
+    /// seconds between the request hitting the wire and the first byte
+    /// of the response head arriving. With streamed completions the
+    /// server sends nothing until the first token exists, so this is
+    /// the client-side TTFT; buffered responses measure the same thing
+    /// (full-response latency) since the head and body arrive together.
+    /// Same stale-keep-alive retry and trace-header policy as
+    /// [`PooledConn::round_trip`].
+    pub fn round_trip_ttft(&mut self, req: &Request) -> Result<(Response, f64)> {
+        let traced;
+        let req = match crate::obs::current() {
+            Some(ctx) => {
+                traced = crate::obs::with_trace_header(req, ctx);
+                &traced
+            }
+            None => req,
+        };
+        let conn = self.conn.as_mut().expect("pooled connection present");
+        match conn.round_trip_ttft(req) {
+            Ok((resp, ttft)) => {
+                self.unproven_reuse = false;
+                self.healthy = resp.headers.get("connection").map(String::as_str) != Some("close");
+                Ok((resp, ttft))
+            }
+            Err(e) => {
+                self.healthy = false;
+                if !self.unproven_reuse || !self.pool.retry_stale {
+                    return Err(e);
+                }
+                self.unproven_reuse = false;
+                self.pool.stats.evicted.add(1);
+                let conn = self.conn.insert(self.pool.open_fresh(self.addr, self.timeout)?);
+                let (resp, ttft) = conn.round_trip_ttft(req)?;
+                self.healthy = resp.headers.get("connection").map(String::as_str) != Some("close");
+                Ok((resp, ttft))
+            }
+        }
+    }
+
     /// Adjust the hard IO bound mid-checkout (the anti-entropy walk
     /// loosens it for the repair step). The pool default is restored on
     /// return.

@@ -1,0 +1,222 @@
+//! Continuous-batching integration: the scheduler must change *when*
+//! tokens are computed, never *what* they are — and the streamed wire
+//! format must reassemble to exactly the buffered body.
+//!
+//! Four pins:
+//!
+//! (a) **Transcript neutrality**: N concurrent clients see identical
+//!     per-turn texts whether the batch scheduler is off (seed path) or
+//!     on — coalescing at decode-step granularity is invisible in
+//!     content, and per-session turn ordering survives concurrency.
+//! (b) **Stream reassembly**: with `inference.stream`, `/completion`
+//!     arrives chunked and the concatenated chunks are byte-for-byte
+//!     the buffered serialization of the same response.
+//! (c) **Wire neutrality when off**: the default config's response
+//!     carries the seed's exact header set (no `transfer-encoding`)
+//!     and the deterministic serializer's bytes.
+//! (d) **Admission control**: a full queue rejects with 503 and the
+//!     reject is counted on `/metrics`.
+
+use std::time::Duration;
+
+use discedge::client::{Client, MobilityPolicy, TurnResult};
+use discedge::config::{ClusterConfig, ContextMode, EngineKind};
+use discedge::context::CompletionRequest;
+use discedge::http::Request as HttpRequest;
+use discedge::netsim::{LinkModel, TrafficMeter};
+use discedge::server::EdgeCluster;
+use discedge::transport::PeerPool;
+
+const MODEL: &str = "discedge/tiny-chat";
+const CLIENTS: usize = 4;
+const TURNS: u64 = 3;
+
+/// Single mock node; `batch` turns the scheduler on, `stream` chunks
+/// the responses.
+fn cluster(batch: bool, stream: bool) -> EdgeCluster {
+    let mut cfg = ClusterConfig::single_node_mock();
+    cfg.inference.enabled = batch;
+    cfg.inference.max_batch = 4;
+    cfg.inference.queue_depth = 16;
+    cfg.inference.stream = stream;
+    EdgeCluster::launch(cfg).unwrap()
+}
+
+/// Run `CLIENTS` concurrent sessions of `TURNS` turns each; returns
+/// per-client transcripts (the ordered response texts). Panics if any
+/// turn breaks session ordering — the concurrency pin rides along.
+fn concurrent_transcripts(cluster: &EdgeCluster) -> Vec<Vec<String>> {
+    let endpoints = cluster.endpoints();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let endpoints = endpoints.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(endpoints, MobilityPolicy::Sticky(0))
+                    .with_mode(ContextMode::Tokenized)
+                    .with_model(MODEL)
+                    .with_max_tokens(16);
+                let mut texts = Vec::new();
+                let mut last_prefill = 0usize;
+                for t in 1..=TURNS {
+                    let r: TurnResult = client
+                        .chat(&format!("client {c} turn {t}: tell me about rovers"))
+                        .unwrap();
+                    assert_eq!(r.response.turn, t, "client {c} turn counter");
+                    assert!(
+                        r.response.prefill_tokens > last_prefill,
+                        "client {c} turn {t}: context must accrete under concurrency \
+                         ({} <= {last_prefill})",
+                        r.response.prefill_tokens
+                    );
+                    last_prefill = r.response.prefill_tokens;
+                    texts.push(r.response.text);
+                }
+                texts
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[test]
+fn batched_transcripts_match_the_sequential_seed_path() {
+    let off = concurrent_transcripts(&cluster(false, false));
+    let on = concurrent_transcripts(&cluster(true, false));
+    assert_eq!(off, on, "batching must not change a single generated token");
+    // And streaming on top changes the framing, not the text.
+    let streamed = concurrent_transcripts(&cluster(true, true));
+    assert_eq!(off, streamed, "streaming must not change a single generated token");
+}
+
+#[test]
+fn streamed_response_reassembles_to_the_buffered_bytes() {
+    let cluster = cluster(true, true);
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let addr = cluster.nodes[0].api_addr();
+
+    let req = CompletionRequest::new(MODEL, "stream me a story", 1, ContextMode::Tokenized);
+    let resp = pool
+        .round_trip(addr, &HttpRequest::post_json("/completion", &req.to_json()))
+        .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+    assert_eq!(
+        resp.headers.get("transfer-encoding").map(String::as_str),
+        Some("chunked"),
+        "streaming on -> chunked transfer: {:?}",
+        resp.headers
+    );
+    // The de-chunked body is exactly the buffered serializer's output:
+    // parsing and re-serializing it reproduces the wire bytes.
+    let body = resp.body_str().unwrap();
+    let parsed = discedge::context::CompletionResponse::from_json(body).unwrap();
+    assert_eq!(parsed.to_json(), body, "chunks must reassemble to the buffered body");
+    assert!(!parsed.text.is_empty());
+    assert_eq!(parsed.turn, 1);
+}
+
+#[test]
+fn scheduler_off_completion_is_byte_identical_to_seed() {
+    // Default config: no scheduler, no streaming. The response must be
+    // the seed's exact wire shape — buffered, content-length framed,
+    // nothing riding along that a batching-aware build would add.
+    let cluster = cluster(false, false);
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let addr = cluster.nodes[0].api_addr();
+
+    let req = CompletionRequest::new(MODEL, "plain old turn", 1, ContextMode::Tokenized);
+    let resp = pool
+        .round_trip(addr, &HttpRequest::post_json("/completion", &req.to_json()))
+        .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.body_str());
+    let mut keys: Vec<&str> = resp.headers.keys().map(String::as_str).collect();
+    keys.sort_unstable();
+    assert_eq!(
+        keys,
+        ["content-length", "content-type"],
+        "scheduler-off response must carry the seed's exact header set"
+    );
+    assert_eq!(
+        resp.headers.get("content-length").unwrap(),
+        &resp.body.len().to_string()
+    );
+    // Deterministic serializer: the body is exactly what re-serializing
+    // the parsed response produces — the seed's bytes.
+    let body = resp.body_str().unwrap();
+    let parsed = discedge::context::CompletionResponse::from_json(body).unwrap();
+    assert_eq!(parsed.to_json(), body, "wire body must match the seed serializer");
+}
+
+#[test]
+fn full_admission_queue_rejects_with_503_and_counts_it() {
+    // One-deep queue, no coalescing, a deliberately slow mock decode:
+    // eight simultaneous turns cannot all fit, so some must bounce off
+    // admission with 503 while the node keeps serving the rest.
+    let mut cfg = ClusterConfig::single_node_mock();
+    cfg.engine = EngineKind::Mock {
+        prefill_ns_per_token: 0,
+        decode_ns_per_token: 2_000_000,
+    };
+    cfg.inference.enabled = true;
+    cfg.inference.max_batch = 1;
+    cfg.inference.queue_depth = 1;
+    let cluster = EdgeCluster::launch(cfg).unwrap();
+    let endpoints = cluster.endpoints();
+
+    let handles: Vec<_> = (0..8)
+        .map(|c| {
+            let endpoints = endpoints.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(endpoints, MobilityPolicy::Sticky(0))
+                    .with_mode(ContextMode::Tokenized)
+                    .with_model(MODEL)
+                    .with_max_tokens(8);
+                client.chat(&format!("burst {c}")).map(|r| r.response.text)
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    let rejected = results
+        .iter()
+        .filter(|r| matches!(r, Err(e) if e.to_string().contains("503")))
+        .count();
+    assert!(ok >= 1, "the node must keep serving under overload: {results:?}");
+    assert!(
+        rejected >= 1,
+        "an 8-wide burst into a 1-deep queue must trip admission: {results:?}"
+    );
+
+    // The reject is first-class on the scrape surface.
+    let pool = PeerPool::new(TrafficMeter::new(), LinkModel::ideal());
+    let scrape = pool
+        .round_trip(cluster.nodes[0].api_addr(), &HttpRequest::get("/metrics"))
+        .unwrap();
+    assert_eq!(scrape.status, 200);
+    let text = scrape.body_str().unwrap();
+    let counted = text
+        .lines()
+        .find_map(|l| l.strip_prefix("llm_admission_rejects "))
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or_else(|| panic!("llm_admission_rejects missing from scrape:\n{text}"));
+    assert!(
+        counted as usize >= rejected,
+        "metrics must count every reject ({counted} < {rejected})"
+    );
+
+    // Rejected clients retrying after the burst drains succeed — 503 is
+    // backpressure, not a wedged node.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let mut client = Client::connect(endpoints, MobilityPolicy::Sticky(0))
+        .with_mode(ContextMode::Tokenized)
+        .with_model(MODEL)
+        .with_max_tokens(8);
+    loop {
+        match client.chat("after the burst") {
+            Ok(_) => break,
+            Err(_) if std::time::Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => panic!("node must recover after the burst: {e}"),
+        }
+    }
+}
